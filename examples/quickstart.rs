@@ -1,0 +1,80 @@
+//! Quickstart: the one-screen tour of the public API.
+//!
+//! 1. pure-rust spectral-shifting attention vs exact attention,
+//! 2. the Lemma-1 exact-recovery property on a constructed SPSD matrix,
+//! 3. (if `make artifacts` has run) one batched encode through the AOT
+//!    XLA artifact — the actual serving hot path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ssaformer::attention::{
+    softmax_attention, spectral_shift_attention, SpectralShiftConfig, Tensor2,
+};
+use ssaformer::config::Variant;
+use ssaformer::rngx::Rng;
+use ssaformer::runtime::{ArtifactKind, Engine};
+use ssaformer::spsd;
+
+fn main() {
+    // ---- 1. O(n) spectral-shifting attention vs O(n²) exact ----------
+    let (n, d, c) = (1024, 64, 64);
+    let mut rng = Rng::new(0);
+    let q = Tensor2::randn(&mut rng, n, d, 1.0);
+    let k = Tensor2::randn(&mut rng, n, d, 1.0);
+    let v = Tensor2::randn(&mut rng, n, d, 1.0);
+
+    let t0 = std::time::Instant::now();
+    let exact = softmax_attention(&q, &k, &v, None);
+    let t_exact = t0.elapsed();
+
+    let cfg = SpectralShiftConfig::new(c);
+    let t1 = std::time::Instant::now();
+    let approx = spectral_shift_attention(&q, &k, &v, &cfg);
+    let t_ss = t1.elapsed();
+
+    let rel: f32 = {
+        let num: f32 = approx.data.iter().zip(&exact.data)
+            .map(|(a, b)| (a - b).abs()).sum();
+        let den: f32 = exact.data.iter().map(|b| b.abs()).sum();
+        num / den
+    };
+    println!("attention n={n} d={d} c={c}");
+    println!("  exact softmax : {:?}", t_exact);
+    println!("  spectral shift: {:?}  ({:.1}x faster, rel-err {:.3})",
+             t_ss, t_exact.as_secs_f64() / t_ss.as_secs_f64(), rel);
+
+    // ---- 2. Lemma 1: exact recovery on spike+flat-tail SPSD ----------
+    let theta = 0.4;
+    let kmat = spsd::spiked_spsd(&mut rng, 64, 5, 6.0, 4.0, theta);
+    let cols = spsd::sample_columns(&mut rng, 64, 12,
+                                    spsd::ColumnSampling::UniformRandom);
+    let nys = spsd::prototype_model(&kmat, &cols);
+    let mss = spsd::modified_ss_model_shifted(&kmat, &cols, theta, 1e-8);
+    println!("\nSPSD approximation (n=64, 5 spikes, flat tail θ={theta}, c=12):");
+    println!("  Nystrom (prototype) rel error: {:.2e}",
+             spsd::rel_fro_error(&kmat, &nys.approx));
+    println!("  modified spectral shift      : {:.2e}  (Lemma 1: ≈0)",
+             spsd::rel_fro_error(&kmat, &mss.approx));
+
+    // ---- 3. serving hot path through the AOT artifact ----------------
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let engine = Engine::new("artifacts").expect("engine");
+        let model = engine
+            .load(ArtifactKind::Encode, Variant::SpectralShift, 128)
+            .expect("encode artifact");
+        let params = engine.init_params().unwrap();
+        let params = engine.buffer_f32(&params, &[params.len()]).unwrap();
+        let tokens: Vec<i32> = (0..model.entry.batch * 128)
+            .map(|i| 3 + (i as i32 % 2000))
+            .collect();
+        let t2 = std::time::Instant::now();
+        let emb = model.encode(&engine, &params, &tokens).unwrap();
+        println!("\nAOT serving path (XLA artifact, batch={} seq=128):",
+                 model.entry.batch);
+        println!("  encode in {:?}, embedding[0][..4] = {:?}",
+                 t2.elapsed(), &emb[..4]);
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` to see the \
+                  XLA serving path)");
+    }
+}

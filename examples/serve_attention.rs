@@ -1,0 +1,86 @@
+//! Serving demo: starts the full L3 stack (coordinator + TCP server) on
+//! an ephemeral port, replays a Poisson workload trace against it from
+//! client threads, and prints the latency/throughput report — the
+//! paper's sec-9 deployment scenario in miniature.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_attention [variant]`
+
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::Coordinator;
+use ssaformer::runtime::Engine;
+use ssaformer::server::{serve, Client};
+use ssaformer::workload::{generate_trace, LengthDist, TraceConfig};
+use std::sync::Arc;
+
+fn main() {
+    let variant = std::env::args()
+        .nth(1)
+        .and_then(|s| Variant::parse(&s))
+        .unwrap_or(Variant::SpectralShift);
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    println!("== ssaformer serving demo ({}) ==", variant.token());
+    let engine = Arc::new(Engine::new("artifacts").expect("engine"));
+    let cfg = ServingConfig {
+        variant,
+        max_batch: 4,
+        max_wait_ms: 10,
+        queue_capacity: 128,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let coordinator = Arc::new(Coordinator::start(engine, &cfg).expect("start"));
+    println!("warmup (compile all {} artifacts): {:?}",
+             variant.token(), t0.elapsed());
+
+    let (addr, handle) = serve(coordinator.clone(), "127.0.0.1:0", 4)
+        .expect("bind");
+    println!("listening on {addr}");
+
+    // Poisson trace: 60 requests, zipf-skewed lengths over the buckets
+    let trace = generate_trace(&TraceConfig {
+        rate: 40.0,
+        count: 60,
+        lengths: LengthDist::ZipfBuckets(1.1),
+        buckets: vec![128, 256, 512],
+        vocab: 2048,
+        seed: 7,
+    });
+
+    // replay from 4 client threads, honoring arrival offsets
+    let start = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for chunk in trace.chunks(15) {
+        let chunk: Vec<_> = chunk.to_vec();
+        let addr = addr;
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut ok = 0;
+            for req in &chunk {
+                // pace to the trace arrival time
+                let now = start.elapsed();
+                if req.arrival > now {
+                    std::thread::sleep(req.arrival - now);
+                }
+                let reply = client.encode(req.id, &req.tokens).expect("encode");
+                if reply.starts_with("OK") {
+                    ok += 1;
+                } else {
+                    eprintln!("  {reply}");
+                }
+            }
+            ok
+        }));
+    }
+    let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = start.elapsed();
+
+    println!("\nreplayed {} requests ({} ok) in {:?} -> {:.1} req/s",
+             trace.len(), ok, wall, ok as f64 / wall.as_secs_f64());
+    let mut client = Client::connect(&addr).unwrap();
+    println!("\nserver metrics:\n{}", client.stats().unwrap());
+    handle.stop();
+}

@@ -1,0 +1,85 @@
+//! Figure-2 companion example: spectrum analysis of the true softmax
+//! attention matrix vs its Nystrom and spectral-shifting approximations,
+//! on (a) Gaussian q,k and (b) a slow-decay SPSD kernel — prints the
+//! cumulative-eigenvalue series the paper plots plus effective-rank and
+//! tail statistics.
+//!
+//! Run: `cargo run --release --example spectrum_analysis` (no artifacts
+//! needed — pure rust analysis path).
+
+use ssaformer::attention::full::attention_matrix;
+use ssaformer::attention::spectral_shift::{
+    nystrom_matrix_exact, spectral_shift_matrix_exact, MiddleForm,
+};
+use ssaformer::attention::Tensor2;
+use ssaformer::benchkit::Table;
+use ssaformer::rngx::Rng;
+use ssaformer::spectral::{Spectrum, SpectrumComparison};
+use ssaformer::spsd;
+
+fn main() {
+    let (n, d, c) = (256, 64, 32);
+    let mut rng = Rng::new(0);
+
+    println!("== spectrum of softmax attention vs approximations ==");
+    println!("(n={n}, d={d}, c={c} landmarks; rank_rtol=0.05)\n");
+    let q = Tensor2::randn(&mut rng, n, d, 1.0);
+    let k = Tensor2::randn(&mut rng, n, d, 1.0);
+    let s_true = attention_matrix(&q, &k, None);
+    let s_ny = nystrom_matrix_exact(&q, &k, c, None);
+    let (s_ss, delta) = spectral_shift_matrix_exact(
+        &q, &k, c, 0.05, MiddleForm::Eq8, true, None);
+    println!("fitted spectral shift delta = {delta:.5}\n");
+
+    let sp_true = Spectrum::of(&s_true);
+    let sp_ny = Spectrum::of(&s_ny);
+    let sp_ss = Spectrum::of(&s_ss);
+
+    let mut t = Table::new(&["eig index", "cum S (true)", "cum Nystrom", "cum SS"]);
+    let step = n / 16;
+    for i in (0..n).step_by(step) {
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{:.4}", sp_true.cumulative[i]),
+            format!("{:.4}", sp_ny.cumulative[i]),
+            format!("{:.4}", sp_ss.cumulative[i]),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut s = Table::new(&["statistic", "true S", "Nystrom", "spectral shift"]);
+    s.row(&["effective rank".into(),
+            format!("{:.1}", sp_true.effective_rank()),
+            format!("{:.1}", sp_ny.effective_rank()),
+            format!("{:.1}", sp_ss.effective_rank())]);
+    s.row(&["eigs < 1e-8".into(),
+            format!("{}", sp_true.near_zero_count(1e-8)),
+            format!("{}", sp_ny.near_zero_count(1e-8)),
+            format!("{}", sp_ss.near_zero_count(1e-8))]);
+    s.row(&["tail mass after c".into(),
+            format!("{:.4}", sp_true.tail_mass(c)),
+            format!("{:.4}", sp_ny.tail_mass(c)),
+            format!("{:.4}", sp_ss.tail_mass(c))]);
+    println!("{}", s.render());
+    println!("Figure-2 claim: the Nystrom spectrum collapses after index c \
+              (rank ≤ c)\nwhile the spectral-shifting spectrum keeps a δ \
+              floor — no long-tail cliff.\n");
+
+    // (b) slow-decay SPSD kernel — where the paper says Nystrom is weak
+    println!("== SPSD kernel with slow power-law spectrum (λ_i = i^-0.5) ==");
+    let kmat = spsd::power_law_spsd(&mut rng, 128, 0.5);
+    let cols = spsd::sample_columns(&mut rng, 128, 16,
+                                    spsd::ColumnSampling::Strided);
+    let ny = spsd::prototype_model(&kmat, &cols);
+    let ss = spsd::modified_ss_model(&kmat, &cols, 0.3);
+    let cmp_ny = SpectrumComparison::new(&kmat, &ny.approx);
+    let cmp_ss = SpectrumComparison::new(&kmat, &ss.approx);
+    println!("rel fro error: Nystrom {:.4}  SS {:.4}  (fitted δ={:.4})",
+             spsd::rel_fro_error(&kmat, &ny.approx),
+             spsd::rel_fro_error(&kmat, &ss.approx),
+             ss.delta);
+    println!("approx effective rank: Nystrom {:.1}  SS {:.1}  (true {:.1})",
+             cmp_ny.approx_spectrum.effective_rank(),
+             cmp_ss.approx_spectrum.effective_rank(),
+             cmp_ny.true_spectrum.effective_rank());
+}

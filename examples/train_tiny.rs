@@ -1,0 +1,49 @@
+//! E10 end-to-end validation: train the tiny MLM transformer through
+//! the AOT train-step artifact (fwd+bwd+Adam compiled by XLA, driven
+//! entirely from rust) on the synthetic bigram corpus, for both the
+//! exact-attention and spectral-shifting variants, and print the loss
+//! curves recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example train_tiny [steps]`
+
+use ssaformer::config::Variant;
+use ssaformer::runtime::Engine;
+use ssaformer::train::{train, TrainConfig};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+
+    let engine = Engine::new("artifacts").expect("engine");
+    let m = engine.manifest();
+    println!("model: d_model={} layers={} heads={} vocab={} params={}",
+             m.hyper["d_model"], m.hyper["n_layers"], m.hyper["n_heads"],
+             m.hyper["vocab"], m.param_count);
+
+    for variant in [Variant::SpectralShift, Variant::Full] {
+        println!("\n==== training with {} attention ({} steps) ====",
+                 variant.token(), steps);
+        let cfg = TrainConfig {
+            variant,
+            steps,
+            seed: 0,
+            corpus_lines: 2000,
+            log_every: 10,
+        };
+        match train(&engine, &cfg) {
+            Ok(report) => print!("{}", report.render()),
+            Err(e) => {
+                eprintln!("train {}: {e}", variant.token());
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("\n(identical data order per seed: the curves are directly \
+              comparable — see EXPERIMENTS.md §E10)");
+}

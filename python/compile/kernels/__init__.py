@@ -1,0 +1,33 @@
+"""Layer-1 Pallas kernels for ssaformer.
+
+Public surface:
+  segment_means_pallas            — landmark selection (paper eq 1)
+  softmax_attention_pallas        — exact flash-style attention (sec 2.1)
+  landmark_cross_attention_pallas — streamed B·V factor (sec 2.4/5)
+  ns_pinv_pallas                  — eq (11) iterative pseudoinverse
+  spectral_shift_attention_pallas — the paper's contribution (sec 5)
+  nystrom_attention_pallas        — Nystromformer baseline (sec 2.4)
+  ref                             — pure-jnp correctness oracles
+"""
+
+from . import ref
+from .cross_attn import landmark_cross_attention_pallas
+from .landmarks import segment_means_pallas
+from .pinv_iter import ns_pinv_pallas
+from .softmax_attn import softmax_attention_pallas
+from .spectral_shift import (
+    nystrom_attention_pallas,
+    spectral_shift_attention_pallas,
+    ss_middle_factor,
+)
+
+__all__ = [
+    "ref",
+    "segment_means_pallas",
+    "softmax_attention_pallas",
+    "landmark_cross_attention_pallas",
+    "ns_pinv_pallas",
+    "spectral_shift_attention_pallas",
+    "nystrom_attention_pallas",
+    "ss_middle_factor",
+]

@@ -1,0 +1,103 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+``pallas_call`` has no reverse-mode rule (even in interpret mode), so each
+attention variant is wrapped in ``jax.custom_vjp``: the forward pass runs
+the Pallas kernel, the backward pass is the VJP of the pure-jnp reference
+implementation of the *same* iterative algorithm (ref.*_ns — matches the
+kernel to ~1e-7, see python/tests/test_spectral_shift.py), re-running the
+forward inside the VJP. This costs one extra forward in the backward pass
+(standard rematerialization trade: no n×c residuals are stored).
+
+These wrappers are what the L2 model (model.py) calls, so the same code
+path serves both the AOT forward artifacts and the train-step artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .softmax_attn import softmax_attention_pallas
+from .spectral_shift import (
+    nystrom_attention_pallas,
+    spectral_shift_attention_pallas,
+)
+
+__all__ = [
+    "softmax_attention_ad",
+    "nystrom_attention_ad",
+    "spectral_shift_attention_ad",
+]
+
+
+def _make_ad(pallas_fn, ref_fn):
+    """custom_vjp: pallas forward, ref-function VJP backward."""
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return pallas_fn(q, k, v)
+
+    def fwd(q, k, v):
+        return pallas_fn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(ref_fn, q, k, v)
+        return vjp(g)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+@functools.lru_cache(maxsize=None)
+def _softmax_ad_cached(block_q, block_k):
+    return _make_ad(
+        lambda q, k, v: softmax_attention_pallas(q, k, v, block_q=block_q,
+                                                 block_k=block_k),
+        lambda q, k, v: ref.softmax_attention(q, k, v),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _nystrom_ad_cached(c, pinv_iters, block_q, block_k):
+    return _make_ad(
+        lambda q, k, v: nystrom_attention_pallas(
+            q, k, v, c, pinv_iters=pinv_iters, block_q=block_q, block_k=block_k),
+        lambda q, k, v: ref.nystrom_attention_ns(q, k, v, c,
+                                                 pinv_iters=pinv_iters),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _ss_ad_cached(c, pinv_iters, middle_form, add_shift_identity,
+                  block_q, block_k):
+    return _make_ad(
+        lambda q, k, v: spectral_shift_attention_pallas(
+            q, k, v, c, pinv_iters=pinv_iters, middle_form=middle_form,
+            add_shift_identity=add_shift_identity,
+            block_q=block_q, block_k=block_k),
+        lambda q, k, v: ref.spectral_shift_attention_ns(
+            q, k, v, c, pinv_iters=pinv_iters, middle_form=middle_form,
+            add_shift_identity=add_shift_identity),
+    )
+
+
+def softmax_attention_ad(q, k, v, block_q=128, block_k=128):
+    """Differentiable exact attention (Pallas fwd, jnp-ref bwd)."""
+    return _softmax_ad_cached(block_q, block_k)(q, k, v)
+
+
+def nystrom_attention_ad(q, k, v, c, pinv_iters=8, block_q=128, block_k=128):
+    """Differentiable Nystromformer attention."""
+    return _nystrom_ad_cached(c, pinv_iters, block_q, block_k)(q, k, v)
+
+
+def spectral_shift_attention_ad(q, k, v, c, pinv_iters=8, middle_form="eq8",
+                                add_shift_identity=True,
+                                block_q=128, block_k=128):
+    """Differentiable spectral-shifting attention (the paper's method)."""
+    return _ss_ad_cached(c, pinv_iters, middle_form, add_shift_identity,
+                         block_q, block_k)(q, k, v)

@@ -1,0 +1,71 @@
+"""Pallas kernel: landmark cross-attention W = L(Q̃ Kᵀ · scale) · V.
+
+Shared by Nystromformer and spectral shifting: this is the B-factor
+(paper sec 2.4 / sec 5) contracted with V without ever materializing the
+c×n matrix B. The row-wise softmax of B runs over the *full* n key axis,
+so the kernel uses the online-softmax recurrence over block_k chunks —
+this is exactly the constraint Figure 1 of the paper illustrates (row
+softmax needs every column), solved by streaming.
+
+TPU mapping: Q̃ (c×d, ≤ 32 KiB) stays VMEM-resident for the whole grid;
+K/V stream through in block_k chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["landmark_cross_attention_pallas"]
+
+
+def _cross_kernel(qt_ref, k_ref, v_ref, w_ref, *, scale, block_k):
+    qt = qt_ref[...].astype(jnp.float32)  # (c, d)
+    k = k_ref[...].astype(jnp.float32)    # (n, d)
+    v = v_ref[...].astype(jnp.float32)    # (n, dv)
+    c = qt.shape[0]
+    n = k.shape[0]
+    dv = v.shape[1]
+    nk = n // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * block_k, block_k, 0)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * block_k, block_k, 0)
+        s = (qt @ kc.T) * scale                      # (c, bk)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ vc
+        return m_new, l_new, acc
+
+    m0 = jnp.full((c,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((c,), jnp.float32)
+    acc0 = jnp.zeros((c, dv), jnp.float32)
+    _, l_fin, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    w_ref[...] = (acc / l_fin[:, None]).astype(w_ref.dtype)
+
+
+def landmark_cross_attention_pallas(qt, k, v, scale=None, block_k=128):
+    """W = rowsoftmax(qt kᵀ · scale) v, streamed over the key axis.
+
+    qt: (c, d) landmarks, k: (n, d), v: (n, dv) -> (c, dv).
+    """
+    c, d = qt.shape
+    n, dv = v.shape
+    block_k = min(block_k, n)
+    if n % block_k:
+        raise ValueError(f"n={n} not divisible by block_k={block_k}")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_cross_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((c, dv), qt.dtype),
+        interpret=True,
+    )(qt, k, v)

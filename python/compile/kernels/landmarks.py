@@ -1,0 +1,85 @@
+"""Pallas kernel: segment-means landmark selection (paper sec 2.3, eq 1).
+
+TPU mapping: one grid step per landmark segment; each step stages an
+(l, d) row-block of the input in VMEM and reduces it to a single (1, d)
+mean row. l·d·4 bytes per step (e.g. 64·64·4 = 16 KiB) — far below the
+16 MiB VMEM budget, so the HBM↔VMEM schedule is a single streaming pass.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_means_pallas", "segment_means_pair_pallas"]
+
+
+def _segment_mean_kernel(x_ref, o_ref, *, l):
+    # x_ref: (cb·l, d) block of cb whole segments; o_ref: (cb, d).
+    block = x_ref[...].astype(jnp.float32)
+    cb = block.shape[0] // l
+    means = block.reshape(cb, l, block.shape[1]).mean(axis=1)
+    o_ref[...] = means.astype(o_ref.dtype)
+
+
+def segment_means_pallas(x, c, segments_per_step=None):
+    """Segment-means landmarks: (n, d) -> (c, d), n divisible by c.
+
+    ``segments_per_step`` controls the grid granularity: each grid step
+    reduces that many whole segments (VMEM per step = spb·l·d·4 bytes).
+    Default: all c segments in one step when the input fits the 16 MiB
+    VMEM budget (always true for this model family — n·d ≤ 512·256), else
+    one segment per step. Grid-step count is the dominant cost on the
+    interpret/CPU path (§Perf), so fewer, fatter steps win there too.
+    """
+    n, d = x.shape
+    if n % c != 0:
+        raise ValueError(f"n={n} not divisible by c={c}")
+    l = n // c
+    if segments_per_step is None:
+        segments_per_step = c if n * d * 4 <= 16 << 20 else 1
+    if c % segments_per_step != 0:
+        raise ValueError(f"c={c} not divisible by segments_per_step={segments_per_step}")
+    spb = segments_per_step
+    kernel = functools.partial(_segment_mean_kernel, l=l)
+    return pl.pallas_call(
+        kernel,
+        grid=(c // spb,),
+        in_specs=[pl.BlockSpec((spb * l, d), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((spb, d), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, d), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _segment_mean_pair_kernel(q_ref, k_ref, qt_ref, kt_ref, *, l):
+    # both (n, d) inputs reduced in one program — halves the per-call
+    # overhead on the interpret/CPU path (§Perf change #4)
+    for src, dst in ((q_ref, qt_ref), (k_ref, kt_ref)):
+        block = src[...].astype(jnp.float32)
+        c = block.shape[0] // l
+        dst[...] = block.reshape(c, l, block.shape[1]).mean(axis=1).astype(dst.dtype)
+
+
+def segment_means_pair_pallas(q, k, c):
+    """Fused landmark selection for a (q, k) pair: one Pallas call
+    producing both Q̃ and K̃. Same math as two `segment_means_pallas`
+    calls; used by the attention variants on the model path."""
+    n, d = q.shape
+    if q.shape != k.shape:
+        raise ValueError(f"q{q.shape} vs k{k.shape}")
+    if n % c != 0:
+        raise ValueError(f"n={n} not divisible by c={c}")
+    kernel = functools.partial(_segment_mean_pair_kernel, l=n // c)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct((c, d), q.dtype),
+                   jax.ShapeDtypeStruct((c, d), k.dtype)),
+        interpret=True,
+    )(q, k)

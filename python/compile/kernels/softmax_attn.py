@@ -1,0 +1,81 @@
+"""Pallas kernel: exact softmax self-attention, flash-style blocking.
+
+This is the O(n²) ground-truth attention (paper sec 2.1) used as the
+baseline row of Table 1 and as the oracle target in serving comparisons.
+
+TPU mapping: the grid tiles the query axis (block_q rows per step); keys
+and values stream through the kernel in block_k chunks with the standard
+online-softmax recurrence (running max m, running normalizer l, running
+accumulator acc), so peak VMEM is
+  block_q·d + 2·block_k·d + block_q·block_k + block_q·dv  floats
+instead of n² — the Pallas analogue of the CUDA shared-memory staging a
+GPU flash kernel would do with threadblocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["softmax_attention_pallas"]
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k):
+    q = q_ref[...].astype(jnp.float32)  # (bq, d)
+    k = k_ref[...].astype(jnp.float32)  # (n, d) — streamed in bk chunks below
+    v = v_ref[...].astype(jnp.float32)  # (n, dv)
+    bq = q.shape[0]
+    n = k.shape[0]
+    dv = v.shape[1]
+    nk = n // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, i * block_k, block_k, 0)
+        vc = jax.lax.dynamic_slice_in_dim(v, i * block_k, block_k, 0)
+        s = (q @ kc.T) * scale                           # (bq, bk)
+        m_cur = jnp.max(s, axis=-1)                      # (bq,)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])                  # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                   # (bq,)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ vc
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dv), jnp.float32)
+    _, l_fin, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l_fin[:, None]).astype(o_ref.dtype)
+
+
+def softmax_attention_pallas(q, k, v, scale=None, block_q=128, block_k=128):
+    """Exact attention softmax(q kᵀ · scale) v via a blocked Pallas kernel.
+
+    q: (n, d), k: (m, d), v: (m, dv) -> (n, dv). n must divide by block_q
+    and m by block_k (callers pad; the L2 model always uses powers of two).
+    """
+    n, d = q.shape
+    m, dv = v.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, m)
+    if n % block_q or m % block_k:
+        raise ValueError(f"n={n} % block_q={block_q} or m={m} % block_k={block_k} != 0")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_flash_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        interpret=True,
+    )(q, k, v)

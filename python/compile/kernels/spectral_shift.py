@@ -1,0 +1,147 @@
+"""Pallas kernels: modified spectral-shifting attention (paper sec 5).
+
+The full approximation, eq (8) plus the δIₙ add-back from the SS model:
+
+    out = F · [A⁺ (I_c − δ A⁺)] · (B V)  +  δ V
+    F = L(Q K̃ᵀ/√d)   A = L(Q̃ K̃ᵀ/√d)   B = L(Q̃ Kᵀ/√d)
+
+decomposed into four pieces, each sized for VMEM residency:
+
+  1. segment_means_pallas   — landmarks Q̃, K̃ (kernels/landmarks.py)
+  2. A_s + Newton-Schulz Z* + δ̂  — c×c work, ns_pinv_pallas
+     (kernels/pinv_iter.py) + matmul-only δ estimator (ref.delta_ss_iterative)
+  3. landmark_cross_attention_pallas — W = B·V streamed over keys
+     (kernels/cross_attn.py)
+  4. _combine kernel (here)  — per query block: F_blk · (M W) + δ V_blk,
+     where M = Z*(I − δZ*) is precomputed once (c×c).
+
+Nystromformer (paper sec 2.4) is the δ=0 / M=Z* special case and is
+exposed from the same machinery (`nystrom_attention_pallas`).
+
+Everything on the artifact path is matmul/softmax-only — no LAPACK
+custom-calls — so the lowered HLO runs on the rust PJRT CPU client.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .cross_attn import landmark_cross_attention_pallas
+from .landmarks import segment_means_pair_pallas, segment_means_pallas
+from .pinv_iter import ns_pinv_pallas
+
+__all__ = [
+    "spectral_shift_attention_pallas",
+    "nystrom_attention_pallas",
+    "ss_middle_factor",
+]
+
+
+def _combine_kernel(q_ref, kt_ref, mw_ref, v_ref, delta_ref, o_ref, *, scale):
+    """o_blk = rowsoftmax(q_blk k̃ᵀ·scale) @ MW + δ·v_blk.
+
+    The F-factor softmax normalizes over only c landmark columns, so each
+    query block is self-contained (no cross-block recurrence needed).
+    """
+    q = q_ref[...].astype(jnp.float32)      # (bq, d)
+    kt = kt_ref[...].astype(jnp.float32)    # (c, d)
+    mw = mw_ref[...].astype(jnp.float32)    # (c, dv)
+    v = v_ref[...].astype(jnp.float32)      # (bq, dv)
+    delta = delta_ref[0, 0].astype(jnp.float32)
+    s = (q @ kt.T) * scale                  # (bq, c)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    f = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = (f @ mw + delta * v).astype(o_ref.dtype)
+
+
+def _combine(q, kt, mw, v, delta, scale, block_q):
+    n, d = q.shape
+    c = kt.shape[0]
+    dv = v.shape[1]
+    block_q = min(block_q, n)
+    if n % block_q:
+        raise ValueError(f"n={n} not divisible by block_q={block_q}")
+    delta_arr = jnp.reshape(delta.astype(q.dtype), (1, 1))
+    kernel = functools.partial(_combine_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+            pl.BlockSpec((c, dv), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, dv), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), q.dtype),
+        interpret=True,
+    )(q, kt, mw, v, delta_arr)
+
+
+def ss_middle_factor(a, z, delta, middle_form="eq8"):
+    """M = A⁺(I − δA⁺) (eq 8, derivation-consistent) or A⁺(I − δA) (eq 4,
+    as printed). ``z`` is the iterative pseudoinverse standing in for A⁺."""
+    eye = jnp.eye(a.shape[0], dtype=a.dtype)
+    if middle_form == "eq8":
+        return z @ (eye - delta * z)
+    if middle_form == "eq4":
+        return z @ (eye - delta * a)
+    raise ValueError(f"middle_form must be 'eq8' or 'eq4', got {middle_form!r}")
+
+
+def spectral_shift_attention_pallas(
+    q, k, v, c,
+    scale=None,
+    pinv_iters=8,
+    middle_form="eq8",
+    add_shift_identity=True,
+    block_q=128,
+    block_k=128,
+):
+    """Modified spectral-shifting attention, O(n) in sequence length.
+
+    q, k: (n, d); v: (n, dv); c landmarks (n divisible by c). Returns
+    (n, dv). All Pallas pieces run interpret=True (CPU correctness path);
+    see DESIGN.md §Hardware-Adaptation for the real-TPU mapping.
+    """
+    n, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qt, kt = segment_means_pair_pallas(q, k, c)
+    # A_s = L(Q̃K̃ᵀ·scale): c×c, a single fused XLA op — too small to
+    # benefit from a dedicated kernel.
+    a = jax.nn.softmax((qt.astype(jnp.float32) @ kt.astype(jnp.float32).T)
+                       * scale, axis=-1)
+    z = ns_pinv_pallas(a, iters=pinv_iters, order=7)
+    delta = ref.delta_ss_iterative(a, z=z)
+    m = ss_middle_factor(a, z, delta, middle_form)
+    w = landmark_cross_attention_pallas(qt, k, v, scale=scale, block_k=block_k)
+    mw = (m @ w.astype(jnp.float32)).astype(q.dtype)
+    if not add_shift_identity:
+        delta_out = jnp.zeros((), q.dtype)
+    else:
+        delta_out = delta
+    return _combine(q, kt, mw, v, delta_out, scale, block_q)
+
+
+def nystrom_attention_pallas(q, k, v, c, scale=None, pinv_iters=8,
+                             block_q=128, block_k=128):
+    """Nystromformer attention (paper sec 2.4): the δ=0 special case."""
+    n, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qt, kt = segment_means_pair_pallas(q, k, c)
+    a = jax.nn.softmax((qt.astype(jnp.float32) @ kt.astype(jnp.float32).T)
+                       * scale, axis=-1)
+    z = ns_pinv_pallas(a, iters=pinv_iters, order=7)
+    w = landmark_cross_attention_pallas(qt, k, v, scale=scale, block_k=block_k)
+    mw = (z @ w.astype(jnp.float32)).astype(q.dtype)
+    zero = jnp.zeros((), q.dtype)
+    return _combine(q, kt, mw, v, zero, scale, block_q)

@@ -1,0 +1,264 @@
+"""Layer-2: JAX transformer encoder with pluggable attention.
+
+A small BERT-style masked-LM encoder whose attention is one of
+  * "full"    — exact softmax attention (Pallas flash kernel)
+  * "nystrom" — Nystromformer (paper sec 2.4)
+  * "ss"      — modified spectral shifting (paper sec 5, the contribution)
+
+Parameters, Adam state, and activations are all plain f32; the parameter
+pytree is flattened into a SINGLE f32 vector with a static layout
+(`ParamLayout`) so the rust runtime exchanges exactly one params literal
+with the AOT artifacts — no pytree marshalling across the FFI.
+
+Exported artifact entry points (see aot.py):
+  encode_fn      (params, tokens)                    -> pooled embeddings
+  logits_fn      (params, tokens)                    -> MLM logits
+  train_step_fn  (params, m, v, step, tokens,
+                  targets, loss_mask)                -> params', m', v', loss
+
+Everything lowered into artifacts is matmul/softmax-only (no LAPACK
+custom-calls) so the old xla_extension 0.5.1 CPU runtime can execute it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.autodiff import (
+    nystrom_attention_ad,
+    softmax_attention_ad,
+    spectral_shift_attention_ad,
+)
+
+__all__ = ["ModelConfig", "ParamLayout", "init_params", "forward",
+           "encode_fn", "logits_fn", "loss_fn", "train_step_fn",
+           "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static transformer hyperparameters (baked into each artifact)."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+    # pos-embedding capacity: all artifacts share one flat param vector,
+    # so the pos table is sized by max_seq (not seq_len) and forward
+    # slices the first seq_len rows
+    max_seq: int = 1024
+    attention: str = "ss"          # "full" | "nystrom" | "ss"
+    landmarks: int = 32            # c; seq_len must be divisible by it
+    pinv_iters: int = 8
+    middle_form: str = "eq8"
+    add_shift_identity: bool = True
+    block_q: int = 128
+    block_k: int = 128
+    # Adam
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def validate(self) -> "ModelConfig":
+        if self.attention not in ("full", "nystrom", "ss"):
+            raise ValueError(f"unknown attention {self.attention!r}")
+        if self.attention != "full" and self.seq_len % self.landmarks:
+            raise ValueError(
+                f"seq_len={self.seq_len} not divisible by landmarks={self.landmarks}")
+        if self.seq_len > self.max_seq:
+            raise ValueError(
+                f"seq_len={self.seq_len} exceeds max_seq={self.max_seq}")
+        return self
+
+
+class ParamLayout:
+    """Static name -> (offset, shape) layout of the flat parameter vector.
+
+    Layout order is deterministic (insertion order below) and recorded in
+    the artifact manifest so the rust side can introspect params by name.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.entries: list[tuple[str, tuple[int, ...]]] = []
+        d, dff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+        self._add("embed", (v, d))
+        # sized by max_seq so every seq-bucket artifact shares the layout
+        self._add("pos", (cfg.max_seq, d))
+        for i in range(cfg.n_layers):
+            p = f"layer{i}."
+            self._add(p + "ln1_g", (d,))
+            self._add(p + "ln1_b", (d,))
+            self._add(p + "wq", (d, d))
+            self._add(p + "wk", (d, d))
+            self._add(p + "wv", (d, d))
+            self._add(p + "wo", (d, d))
+            self._add(p + "ln2_g", (d,))
+            self._add(p + "ln2_b", (d,))
+            self._add(p + "w_ff1", (d, dff))
+            self._add(p + "b_ff1", (dff,))
+            self._add(p + "w_ff2", (dff, d))
+            self._add(p + "b_ff2", (d,))
+        self._add("ln_f_g", (d,))
+        self._add("ln_f_b", (d,))
+        self._add("head_b", (v,))  # LM head weight is tied to embed
+
+        self.offsets: dict[str, tuple[int, tuple[int, ...]]] = {}
+        off = 0
+        for name, shape in self.entries:
+            size = int(np.prod(shape))
+            self.offsets[name] = (off, shape)
+            off += size
+        self.total = off
+
+    def _add(self, name: str, shape: tuple[int, ...]):
+        self.entries.append((name, shape))
+
+    def slice(self, flat, name: str):
+        """Static slice of the flat vector (lowered to a constant-offset
+        slice op — free after XLA fusion)."""
+        off, shape = self.offsets[name]
+        size = int(np.prod(shape))
+        return jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+
+
+@functools.lru_cache(maxsize=None)
+def _layout(cfg: ModelConfig) -> ParamLayout:
+    return ParamLayout(cfg)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Total number of scalar parameters for this config."""
+    return _layout(cfg).total
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """Initialize the flat parameter vector (numpy, build-time only).
+
+    Scaled-normal init for matmuls (1/sqrt(fan_in)), 0.02-normal for
+    embeddings, ones/zeros for layernorm gains/biases.
+    """
+    lay = _layout(cfg)
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(lay.total, np.float32)
+    for name, shape in lay.entries:
+        off, _ = lay.offsets[name]
+        size = int(np.prod(shape))
+        view = flat[off:off + size]
+        if name.endswith(("_g",)):
+            view[:] = 1.0
+        elif name.endswith(("_b",)) or name.startswith("head_b"):
+            view[:] = 0.0
+        elif name in ("embed", "pos"):
+            view[:] = rng.normal(0.0, 0.02, size).astype(np.float32)
+        else:  # weight matrices
+            fan_in = shape[0]
+            view[:] = rng.normal(0.0, 1.0 / math.sqrt(fan_in), size).astype(np.float32)
+    return flat
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention_one(cfg: ModelConfig, q, k, v):
+    """Single (n, d_head) attention dispatch. q,k,v: (n, dh)."""
+    if cfg.attention == "full":
+        return softmax_attention_ad(q, k, v, block_q=cfg.block_q,
+                                    block_k=cfg.block_k)
+    if cfg.attention == "nystrom":
+        return nystrom_attention_ad(q, k, v, cfg.landmarks,
+                                    pinv_iters=cfg.pinv_iters,
+                                    block_q=cfg.block_q, block_k=cfg.block_k)
+    return spectral_shift_attention_ad(
+        q, k, v, cfg.landmarks, pinv_iters=cfg.pinv_iters,
+        middle_form=cfg.middle_form,
+        add_shift_identity=cfg.add_shift_identity,
+        block_q=cfg.block_q, block_k=cfg.block_k)
+
+
+def _mha(cfg: ModelConfig, lay: ParamLayout, flat, prefix, x):
+    """Multi-head attention over x: (B, n, d). Heads and batch are folded
+    into one leading vmap axis so the Pallas kernel sees (n, dh) blocks."""
+    b, n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    wq = lay.slice(flat, prefix + "wq")
+    wk = lay.slice(flat, prefix + "wk")
+    wv = lay.slice(flat, prefix + "wv")
+    wo = lay.slice(flat, prefix + "wo")
+    q = (x @ wq).reshape(b, n, h, dh).transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    k = (x @ wk).reshape(b, n, h, dh).transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    v = (x @ wv).reshape(b, n, h, dh).transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    o = jax.vmap(lambda qi, ki, vi: _attention_one(cfg, qi, ki, vi))(q, k, v)
+    o = o.reshape(b, h, n, dh).transpose(0, 2, 1, 3).reshape(b, n, d)
+    return o @ wo
+
+
+def forward(cfg: ModelConfig, flat, tokens):
+    """Encoder forward: tokens (B, n) int32 -> hidden states (B, n, d)."""
+    lay = _layout(cfg)
+    embed = lay.slice(flat, "embed")
+    n = tokens.shape[1]
+    pos = lay.slice(flat, "pos")[:n]
+    x = embed[tokens] + pos[None, :, :]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = _layer_norm(x, lay.slice(flat, p + "ln1_g"), lay.slice(flat, p + "ln1_b"))
+        x = x + _mha(cfg, lay, flat, p, h)
+        h = _layer_norm(x, lay.slice(flat, p + "ln2_g"), lay.slice(flat, p + "ln2_b"))
+        h = jax.nn.gelu(h @ lay.slice(flat, p + "w_ff1") + lay.slice(flat, p + "b_ff1"))
+        x = x + h @ lay.slice(flat, p + "w_ff2") + lay.slice(flat, p + "b_ff2")
+    return _layer_norm(x, lay.slice(flat, "ln_f_g"), lay.slice(flat, "ln_f_b"))
+
+
+def encode_fn(cfg: ModelConfig, flat, tokens):
+    """Serving entry point: mean-pooled sequence embedding (B, d)."""
+    h = forward(cfg, flat, tokens)
+    return jnp.mean(h, axis=1)
+
+
+def logits_fn(cfg: ModelConfig, flat, tokens):
+    """MLM logits (B, n, vocab) with the LM head tied to the embedding."""
+    lay = _layout(cfg)
+    h = forward(cfg, flat, tokens)
+    embed = lay.slice(flat, "embed")
+    return h @ embed.T + lay.slice(flat, "head_b")
+
+
+def loss_fn(cfg: ModelConfig, flat, tokens, targets, loss_mask):
+    """Masked cross-entropy: mean over positions where loss_mask==1."""
+    logits = logits_fn(cfg, flat, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum(nll * loss_mask) / denom
+
+
+def train_step_fn(cfg: ModelConfig, flat, m, v, step, tokens, targets, loss_mask):
+    """One Adam step. All state is flat f32 vectors; ``step`` is a f32
+    scalar (1-based) used for bias correction. Returns
+    (params', m', v', loss)."""
+    loss, grad = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets, loss_mask))(flat)
+    m2 = cfg.beta1 * m + (1.0 - cfg.beta1) * grad
+    v2 = cfg.beta2 * v + (1.0 - cfg.beta2) * grad * grad
+    mhat = m2 / (1.0 - cfg.beta1 ** step)
+    vhat = v2 / (1.0 - cfg.beta2 ** step)
+    flat2 = flat - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.adam_eps)
+    return flat2, m2, v2, loss

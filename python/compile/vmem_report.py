@@ -1,0 +1,110 @@
+"""L1 perf analysis: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the
+Pallas kernels are optimized structurally: this tool computes, per kernel
+and blocking configuration, the peak VMEM residency and an MXU
+utilization estimate (fraction of the 128×128 systolic array covered by
+each contraction, times the f32-vs-bf16 issue-rate factor), which is what
+DESIGN.md §Perf targets.
+
+Usage: cd python && python -m compile.vmem_report [--n N] [--c C] [--d D]
+                      [--block-q B] [--block-k B]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+VMEM_BYTES = 16 << 20  # 16 MiB per TensorCore
+MXU = 128              # systolic array dimension
+
+F32 = 4
+
+
+def fmt_bytes(b: float) -> str:
+    if b < 1 << 10:
+        return f"{b:.0f}B"
+    if b < 1 << 20:
+        return f"{b / (1 << 10):.1f}KiB"
+    return f"{b / (1 << 20):.2f}MiB"
+
+
+def mxu_util(m: int, k: int, n: int, dtype_factor: float = 0.5) -> float:
+    """Utilization estimate for an (m×k)·(k×n) contraction on a 128×128
+    MXU: lane coverage of the k (contraction) and n (output) dims, times
+    the dtype issue-rate factor (f32 = 0.5 of bf16 peak)."""
+    cover_k = min(k, MXU) / MXU
+    cover_n = min(n, MXU) / MXU
+    # m only affects pipeline fill, amortized for m >= 128
+    fill = min(m, MXU) / MXU if m < MXU else 1.0
+    return cover_k * cover_n * fill * dtype_factor
+
+
+def kernel_report(n: int, c: int, d: int, dv: int, block_q: int,
+                  block_k: int) -> list[tuple[str, int, str]]:
+    """[(kernel, peak VMEM bytes, MXU note)] for the SS attention path."""
+    bq = min(block_q, n)
+    bk = min(block_k, n)
+    rows = []
+
+    # segment-means pair: both (n,d) inputs + (c,d)x2 outputs resident
+    seg = 2 * n * d * F32 + 2 * c * d * F32
+    rows.append(("segment_means_pair", seg, "reduction only (VPU, no MXU)"))
+
+    # flash exact attention (the full-variant baseline)
+    flash = bq * d * F32 + 2 * bk * d * F32 + bq * bk * F32 + bq * dv * F32
+    rows.append((f"flash attention (bq={bq},bk={bk})", flash,
+                 f"QKᵀ util {mxu_util(bq, d, bk):.2f}, PV util {mxu_util(bq, bk, dv):.2f}"))
+
+    # landmark cross attention: qt resident + k/v chunks + scores + acc
+    cross = c * d * F32 + 2 * bk * d * F32 + c * bk * F32 + c * dv * F32
+    rows.append((f"landmark cross-attn (bk={bk})", cross,
+                 f"Q̃Kᵀ util {mxu_util(c, d, bk):.2f}, PV util {mxu_util(c, bk, dv):.2f}"))
+
+    # NS pinv: 4 c×c buffers
+    ns = 4 * c * c * F32
+    rows.append((f"ns_pinv ord-7 (c={c})", ns,
+                 f"c×c matmul util {mxu_util(c, c, c):.2f} (pad c→128 to raise)"))
+
+    # combine: q block + kt + mw + v block + out
+    comb = bq * d * F32 + c * d * F32 + c * dv * F32 + 2 * bq * dv * F32
+    rows.append((f"ss combine (bq={bq})", comb,
+                 f"QK̃ᵀ util {mxu_util(bq, d, c):.2f}, F·MW util {mxu_util(bq, c, dv):.2f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--c", type=int, default=64)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--dv", type=int, default=None)
+    ap.add_argument("--block-q", type=int, default=512)
+    ap.add_argument("--block-k", type=int, default=512)
+    args = ap.parse_args()
+    dv = args.dv or args.d
+
+    print(f"L1 structural perf report — n={args.n} c={args.c} d={args.d} "
+          f"dv={dv} block_q={args.block_q} block_k={args.block_k}")
+    print(f"VMEM budget {fmt_bytes(VMEM_BYTES)}; MXU {MXU}x{MXU}; "
+          f"f32 issue factor 0.5\n")
+    rows = kernel_report(args.n, args.c, args.d, dv, args.block_q, args.block_k)
+    width = max(len(r[0]) for r in rows)
+    ok_all = True
+    for name, vmem, note in rows:
+        ok = vmem <= VMEM_BYTES
+        ok_all &= ok
+        print(f"  {name:<{width}}  {fmt_bytes(vmem):>10}  "
+              f"{'OK ' if ok else 'OVER'}  {note}")
+    print(f"\nall kernels within VMEM: {'yes' if ok_all else 'NO'}")
+    # headline ratios
+    print("\nheadline: the dominant contractions run at "
+          f"{mxu_util(min(args.block_q, args.n), args.d, args.c):.0%} "
+          "(F factor) and "
+          f"{mxu_util(args.c, args.d, min(args.block_k, args.n)):.0%} "
+          "(B factor) of f32 MXU peak; padding c,d to 128 (bf16) would "
+          "reach ~50-100% — recorded in EXPERIMENTS.md §Perf L1.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Shared fixtures/utilities for the ssaformer python test suite."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_qkv(rng, n, d, dv=None, dtype=np.float32, scale=1.0):
+    """Gaussian q, k, v test tensors."""
+    dv = dv or d
+    q = (rng.normal(size=(n, d)) * scale).astype(dtype)
+    k = (rng.normal(size=(n, d)) * scale).astype(dtype)
+    v = (rng.normal(size=(n, dv)) * scale).astype(dtype)
+    return q, k, v

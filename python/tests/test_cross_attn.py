@@ -1,0 +1,72 @@
+"""Landmark cross-attention kernel W = L(Q̃Kᵀ)V (the streamed B-factor)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import landmark_cross_attention_pallas, ref
+from .conftest import make_qkv
+
+
+def _want(qt, k, v, scale=None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(qt.shape[-1])
+    b = jax.nn.softmax((qt @ k.T) * scale, axis=-1)
+    return b @ v
+
+
+@pytest.mark.parametrize("n,c,d", [(128, 16, 32), (256, 32, 64), (512, 64, 32)])
+@pytest.mark.parametrize("bk", [64, 128])
+def test_matches_dense_composition(rng, n, c, d, bk):
+    q, k, v = make_qkv(rng, n, d)
+    qt = ref.segment_means(jnp.asarray(q), c)
+    got = landmark_cross_attention_pallas(qt, jnp.asarray(k), jnp.asarray(v),
+                                          block_k=bk)
+    want = _want(np.asarray(qt), k, v)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_blocking_invariance(rng):
+    q, k, v = make_qkv(rng, 256, 16)
+    qt = ref.segment_means(jnp.asarray(q), 8)
+    outs = [np.asarray(landmark_cross_attention_pallas(
+        qt, jnp.asarray(k), jnp.asarray(v), block_k=bk))
+        for bk in (32, 64, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-5)
+
+
+def test_figure1_constraint(rng):
+    """Figure 1 of the paper: row softmax needs ALL columns. Computing
+    softmax over only a key subset then averaging does NOT equal the
+    streamed full-row result — this is why the kernel must accumulate
+    the online normalizer across every block."""
+    q, k, v = make_qkv(rng, 128, 16)
+    qt = np.asarray(ref.segment_means(jnp.asarray(q), 8))
+    full = _want(qt, k, v)
+    half = _want(qt, k[:64], v[:64])  # softmax over half the columns
+    assert np.max(np.abs(np.asarray(full) - np.asarray(half))) > 1e-2
+
+
+def test_large_scores_stable(rng):
+    q, k, v = make_qkv(rng, 128, 8, scale=25.0)
+    qt = ref.segment_means(jnp.asarray(q), 8)
+    out = np.asarray(landmark_cross_attention_pallas(qt, jnp.asarray(k),
+                                                     jnp.asarray(v)))
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(5, 9), c=st.sampled_from([4, 16, 32]),
+       d=st.sampled_from([8, 32]))
+def test_hypothesis(logn, c, d):
+    n = 2 ** logn
+    rng = np.random.default_rng(n + c + d)
+    q, k, v = make_qkv(rng, n, d)
+    qt = ref.segment_means(jnp.asarray(q), c)
+    got = np.asarray(landmark_cross_attention_pallas(qt, jnp.asarray(k),
+                                                     jnp.asarray(v)))
+    want = np.asarray(_want(np.asarray(qt), k, v))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-5)

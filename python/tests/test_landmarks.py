@@ -1,0 +1,119 @@
+"""segment_means_pallas vs the pure-jnp oracle (paper eq 1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, segment_means_pallas
+from .conftest import make_qkv
+
+
+@pytest.mark.parametrize("n,c,d", [(64, 8, 16), (128, 32, 64), (256, 64, 32),
+                                   (96, 12, 8), (512, 64, 64)])
+def test_matches_ref(rng, n, c, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    got = segment_means_pallas(jnp.asarray(x), c)
+    want = ref.segment_means(jnp.asarray(x), c)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_rejects_indivisible(rng):
+    x = jnp.asarray(rng.normal(size=(100, 8)), jnp.float32)
+    with pytest.raises(ValueError):
+        segment_means_pallas(x, 7)
+    with pytest.raises(ValueError):
+        ref.segment_means(x, 7)
+
+
+def test_constant_input_gives_constant_landmarks():
+    x = jnp.full((64, 4), 3.5, jnp.float32)
+    out = segment_means_pallas(x, 8)
+    np.testing.assert_allclose(out, np.full((8, 4), 3.5), rtol=1e-6)
+
+
+def test_segment_structure(rng):
+    """Each landmark must equal the mean of exactly its own segment."""
+    n, c, d = 64, 4, 8
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    out = np.asarray(segment_means_pallas(jnp.asarray(x), c))
+    l = n // c
+    for j in range(c):
+        np.testing.assert_allclose(out[j], x[j * l:(j + 1) * l].mean(0),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_c_equals_n_is_identity(rng):
+    x = rng.normal(size=(32, 8)).astype(np.float32)
+    out = segment_means_pallas(jnp.asarray(x), 32)
+    np.testing.assert_allclose(out, x, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    logn=st.integers(3, 8),
+    logc=st.integers(0, 4),
+    d=st.sampled_from([1, 3, 8, 17, 64]),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_hypothesis_shapes(logn, logc, d, dtype):
+    n = 2 ** logn
+    c = 2 ** min(logc, logn)
+    rng = np.random.default_rng(logn * 100 + logc * 10 + d)
+    x = rng.normal(size=(n, d)).astype(dtype)
+    got = np.asarray(segment_means_pallas(jnp.asarray(x), c))
+    want = x.reshape(c, n // c, d).mean(1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(logn=st.integers(3, 7))
+def test_hypothesis_bf16(logn):
+    n = 2 ** logn
+    rng = np.random.default_rng(logn)
+    x = jnp.asarray(rng.normal(size=(n, 16)), jnp.bfloat16)
+    got = np.asarray(segment_means_pallas(x, 4), np.float32)
+    want = np.asarray(ref.segment_means(x.astype(jnp.float32), 4))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_segments_per_step_equivalent(rng):
+    """Any grid granularity must give identical landmarks."""
+    from compile.kernels.landmarks import segment_means_pallas
+    x = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
+    base = segment_means_pallas(x, 16, segments_per_step=1)
+    for spb in (2, 4, 8, 16):
+        got = segment_means_pallas(x, 16, segments_per_step=spb)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_segments_per_step_must_divide(rng):
+    from compile.kernels.landmarks import segment_means_pallas
+    x = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    with pytest.raises(ValueError):
+        segment_means_pallas(x, 8, segments_per_step=3)
+
+
+def test_pair_kernel_matches_two_calls(rng):
+    """The fused q/k landmark kernel (§Perf change 4) must equal two
+    independent segment-means calls."""
+    from compile.kernels.landmarks import (
+        segment_means_pair_pallas, segment_means_pallas)
+    q = jnp.asarray(rng.normal(size=(96, 12)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(96, 12)), jnp.float32)
+    qt, kt = segment_means_pair_pallas(q, k, 8)
+    np.testing.assert_allclose(np.asarray(qt),
+                               np.asarray(segment_means_pallas(q, 8)),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kt),
+                               np.asarray(segment_means_pallas(k, 8)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pair_kernel_shape_mismatch(rng):
+    from compile.kernels.landmarks import segment_means_pair_pallas
+    q = jnp.zeros((64, 8), jnp.float32)
+    k = jnp.zeros((32, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        segment_means_pair_pallas(q, k, 8)

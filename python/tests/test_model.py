@@ -1,0 +1,137 @@
+"""L2 model: layout, forward shapes, loss behaviour, Adam step."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def tiny_cfg(attention="ss"):
+    return M.ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2,
+                         d_ff=64, seq_len=32, attention=attention,
+                         landmarks=8, pinv_iters=6,
+                         block_q=32, block_k=32).validate()
+
+
+def test_layout_covers_vector_exactly():
+    cfg = tiny_cfg()
+    lay = M._layout(cfg)
+    sizes = sum(int(np.prod(s)) for _, s in lay.entries)
+    assert sizes == lay.total == M.count_params(cfg)
+    # offsets are contiguous & non-overlapping
+    off = 0
+    for name, shape in lay.entries:
+        o, s = lay.offsets[name]
+        assert o == off and s == shape
+        off += int(np.prod(shape))
+
+
+def test_layout_slice_roundtrip():
+    cfg = tiny_cfg()
+    lay = M._layout(cfg)
+    flat = jnp.arange(lay.total, dtype=jnp.float32)
+    w = lay.slice(flat, "layer1.wq")
+    o, shape = lay.offsets["layer1.wq"]
+    np.testing.assert_array_equal(
+        np.asarray(w).ravel(), np.arange(o, o + int(np.prod(shape))))
+
+
+def test_init_params_stats():
+    cfg = tiny_cfg()
+    flat = M.init_params(cfg, seed=0)
+    lay = M._layout(cfg)
+    o, s = lay.offsets["layer0.ln1_g"]
+    np.testing.assert_array_equal(flat[o:o + 32], np.ones(32, np.float32))
+    o, s = lay.offsets["layer0.wq"]
+    w = flat[o:o + 32 * 32]
+    assert 0.5 / np.sqrt(32) < w.std() < 2.0 / np.sqrt(32)
+
+
+def test_init_deterministic():
+    cfg = tiny_cfg()
+    np.testing.assert_array_equal(M.init_params(cfg, 7), M.init_params(cfg, 7))
+    assert not np.array_equal(M.init_params(cfg, 7), M.init_params(cfg, 8))
+
+
+@pytest.mark.parametrize("attention", ["full", "nystrom", "ss"])
+def test_forward_shapes(attention):
+    cfg = tiny_cfg(attention)
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    tokens = jnp.zeros((3, cfg.seq_len), jnp.int32)
+    h = M.forward(cfg, flat, tokens)
+    assert h.shape == (3, cfg.seq_len, cfg.d_model)
+    emb = M.encode_fn(cfg, flat, tokens)
+    assert emb.shape == (3, cfg.d_model)
+    logits = M.logits_fn(cfg, flat, tokens)
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    cfg = tiny_cfg()
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (4, cfg.seq_len)), jnp.int32)
+    mask = jnp.ones((4, cfg.seq_len), jnp.float32)
+    loss = M.loss_fn(cfg, flat, tokens, tokens, mask)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_loss_mask_zero_positions_ignored():
+    cfg = tiny_cfg()
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, cfg.seq_len)), jnp.int32)
+    bad_targets = (tokens + 13) % cfg.vocab
+    mask_first = jnp.concatenate(
+        [jnp.ones((2, 1)), jnp.zeros((2, cfg.seq_len - 1))], axis=1)
+    l1 = M.loss_fn(cfg, flat, tokens, bad_targets, mask_first)
+    # changing masked-out targets must not change the loss
+    worse = bad_targets.at[:, 1:].set(0)
+    l2 = M.loss_fn(cfg, flat, tokens, worse, mask_first)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("attention", ["full", "ss"])
+def test_train_step_reduces_loss(attention):
+    """A few Adam steps on a fixed batch must reduce the loss."""
+    cfg = tiny_cfg(attention)
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (4, cfg.seq_len)), jnp.int32)
+    mask = jnp.ones((4, cfg.seq_len), jnp.float32)
+    step_fn = jax.jit(lambda p, m, v, s: M.train_step_fn(
+        cfg, p, m, v, s, tokens, tokens, mask))
+    losses = []
+    for s in range(1, 13):
+        flat, m, v, loss = step_fn(flat, m, v, jnp.float32(s))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+def test_train_step_finite_updates():
+    cfg = tiny_cfg()
+    flat = jnp.asarray(M.init_params(cfg, 0))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, cfg.seq_len)), jnp.int32)
+    mask = jnp.ones((2, cfg.seq_len), jnp.float32)
+    p2, m2, v2, loss = M.train_step_fn(cfg, flat, m, v, jnp.float32(1),
+                                       tokens, tokens, mask)
+    for arr in (p2, m2, v2):
+        assert np.isfinite(np.asarray(arr)).all()
+    assert float(jnp.max(jnp.abs(p2 - flat))) > 0
+    # Adam first-step magnitude ≈ lr
+    assert float(jnp.max(jnp.abs(p2 - flat))) < 10 * cfg.lr
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        M.ModelConfig(attention="fancy").validate()
+    with pytest.raises(ValueError):
+        M.ModelConfig(attention="ss", seq_len=100, landmarks=32).validate()

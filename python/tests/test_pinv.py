@@ -1,0 +1,117 @@
+"""Newton-Schulz iterative pseudoinverse (paper sec 7 eq 11) tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ns_pinv_pallas, ref
+
+
+def _softmax_block(rng, c, d=32):
+    q = rng.normal(size=(c, d)).astype(np.float32)
+    k = rng.normal(size=(c, d)).astype(np.float32)
+    return np.asarray(jax.nn.softmax(q @ k.T / np.sqrt(d), axis=-1))
+
+
+def test_pallas_matches_ref_iteration(rng):
+    a = jnp.asarray(_softmax_block(rng, 32))
+    got = ns_pinv_pallas(a, iters=8, order=7)
+    want = ref.ns_pinv_ord7(a, iters=8)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_ord3_matches_ref(rng):
+    a = jnp.asarray(_softmax_block(rng, 16))
+    got = ns_pinv_pallas(a, iters=12, order=3)
+    want = ref.ns_pinv_ord3(a, iters=12)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_converges_to_inverse_well_conditioned(rng):
+    """A + I is well conditioned: few ord-7 iterations reach machine eps."""
+    c = 24
+    a = jnp.asarray(_softmax_block(rng, c) + np.eye(c, dtype=np.float32))
+    z = ns_pinv_pallas(a, iters=6, order=7)
+    np.testing.assert_allclose(np.asarray(a @ z), np.eye(c), atol=1e-4)
+
+
+def test_converges_on_softmax_block(rng):
+    """Landmark softmax blocks (cond ~1e3-1e4) converge by ~20 iterations."""
+    a = jnp.asarray(_softmax_block(rng, 32))
+    z = ns_pinv_pallas(a, iters=24, order=7)
+    resid = float(jnp.max(jnp.abs(a @ z - jnp.eye(32))))
+    assert resid < 1e-3, resid
+
+
+def test_rank_deficient_converges_to_pinv(rng):
+    """On singular SPSD input NS converges to the Moore-Penrose pinv on
+    the range space. NOTE: in f32 the iteration converges and then
+    DIVERGES (rounding noise in the null space gets inverted once
+    amplified past σ_min ≈ eps), so we stop at 8 iterations — the
+    converged regime. The divergence itself is asserted below."""
+    c, r = 16, 5
+    u = np.linalg.qr(rng.normal(size=(c, c)))[0][:, :r].astype(np.float32)
+    lam = np.linspace(2.0, 1.0, r).astype(np.float32)
+    a = jnp.asarray(u @ np.diag(lam) @ u.T)
+    z = ns_pinv_pallas(a, iters=8, order=7)
+    want = jnp.linalg.pinv(a)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rank_deficient_overiteration_diverges(rng):
+    """Documents the finite-precision failure mode that motivates the
+    fixed small iteration count used in the artifacts: on singular input,
+    over-iterating NS in f32 amplifies null-space rounding noise."""
+    c, r = 16, 5
+    u = np.linalg.qr(rng.normal(size=(c, c)))[0][:, :r].astype(np.float32)
+    lam = np.linspace(2.0, 1.0, r).astype(np.float32)
+    a = jnp.asarray(u @ np.diag(lam) @ u.T)
+    z30 = ns_pinv_pallas(a, iters=30, order=7)
+    err30 = float(jnp.max(jnp.abs(z30 - jnp.linalg.pinv(a))))
+    assert err30 > 1.0, "expected f32 divergence on singular input"
+
+
+def test_ord7_faster_than_ord3(rng):
+    """Same residual with ~3x fewer iterations (7th vs 3rd order)."""
+    c = 24
+    a = jnp.asarray(_softmax_block(rng, c) + 0.1 * np.eye(c, dtype=np.float32))
+    eye = jnp.eye(c)
+    def resid(z):
+        return float(jnp.max(jnp.abs(a @ z - eye)))
+    r7 = resid(ref.ns_pinv_ord7(a, iters=6))
+    r3 = resid(ref.ns_pinv_ord3(a, iters=6))
+    assert r7 < r3
+
+
+def test_ns_init_satisfies_precondition(rng):
+    """‖I − A Z₀‖₂ < 1 must hold for the scaled-transpose init."""
+    for c in (8, 16, 48):
+        a = _softmax_block(rng, c)
+        z0 = np.asarray(ref.ns_init(jnp.asarray(a)))
+        s = np.linalg.svd(np.eye(c) - a @ z0, compute_uv=False)
+        assert s[0] < 1.0 + 1e-6
+
+
+def test_delta_iterative_matches_exact_on_deficient(rng):
+    """On a matrix with a genuinely flat discarded tail the iterative δ̂
+    approaches the SVD-exact δ."""
+    c, r, theta = 32, 6, 0.05
+    u = np.linalg.qr(rng.normal(size=(c, c)))[0].astype(np.float32)
+    lam = np.concatenate([np.linspace(3, 2, r), np.full(c - r, theta)]).astype(np.float32)
+    a = jnp.asarray(u @ np.diag(lam) @ u.T)
+    # rank tolerance chosen between theta and the spike block
+    d_exact = float(ref.delta_ss_exact(a, rank_rtol=0.1))
+    assert abs(d_exact - theta) < 2e-2, d_exact
+
+
+@settings(max_examples=10, deadline=None)
+@given(c=st.sampled_from([4, 8, 16, 32, 64]), seed=st.integers(0, 100))
+def test_hypothesis_pallas_ref_agree(c, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(_softmax_block(rng, c))
+    got = np.asarray(ns_pinv_pallas(a, iters=6, order=7))
+    want = np.asarray(ref.ns_pinv_ord7(a, iters=6))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,91 @@
+"""Flash-style exact attention kernel vs the jnp oracle (paper sec 2.1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, softmax_attention_pallas
+from .conftest import make_qkv
+
+
+@pytest.mark.parametrize("n,d", [(64, 16), (128, 64), (256, 32), (512, 64)])
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_matches_ref(rng, n, d, bq, bk):
+    if n % bq or n % bk:
+        pytest.skip("block must divide n")
+    q, k, v = make_qkv(rng, n, d)
+    got = softmax_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                   jnp.asarray(v), block_q=bq, block_k=bk)
+    want = ref.softmax_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_block_size_invariance(rng):
+    """Output must be identical (up to fp assoc) across blockings."""
+    q, k, v = make_qkv(rng, 256, 32)
+    outs = [np.asarray(softmax_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), block_q=bq, block_k=bk))
+        for bq, bk in [(32, 32), (64, 64), (128, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-5)
+
+
+def test_rows_are_convex_combinations(rng):
+    """softmax rows sum to 1 ⇒ outputs lie inside the convex hull of v."""
+    q, k, v = make_qkv(rng, 128, 16)
+    out = np.asarray(softmax_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                              jnp.asarray(v)))
+    assert out.min() >= v.min() - 1e-4
+    assert out.max() <= v.max() + 1e-4
+
+
+def test_large_logits_stable(rng):
+    """Online-softmax must survive large score magnitudes (no inf/nan)."""
+    q, k, v = make_qkv(rng, 128, 16, scale=30.0)
+    out = np.asarray(softmax_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                              jnp.asarray(v)))
+    assert np.isfinite(out).all()
+    want = np.asarray(ref.softmax_attention(jnp.asarray(q), jnp.asarray(k),
+                                            jnp.asarray(v)))
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-4)
+
+
+def test_custom_scale(rng):
+    q, k, v = make_qkv(rng, 64, 8)
+    got = softmax_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                   jnp.asarray(v), scale=0.25)
+    want = ref.softmax_attention(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), scale=0.25)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_rejects_bad_blocking(rng):
+    q, k, v = make_qkv(rng, 96, 8)
+    with pytest.raises(ValueError):
+        softmax_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                 jnp.asarray(v), block_q=64, block_k=64)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    logn=st.integers(4, 9),
+    d=st.sampled_from([8, 16, 64]),
+    dv=st.sampled_from([8, 32]),
+    dtype=st.sampled_from(["f32", "bf16"]),
+)
+def test_hypothesis_shapes_dtypes(logn, d, dv, dtype):
+    n = 2 ** logn
+    rng = np.random.default_rng(n + d + dv)
+    q, k, v = make_qkv(rng, n, d, dv=dv)
+    if dtype == "bf16":
+        qj, kj, vj = (jnp.asarray(x, jnp.bfloat16) for x in (q, k, v))
+        tol = dict(rtol=3e-2, atol=3e-2)
+    else:
+        qj, kj, vj = (jnp.asarray(x) for x in (q, k, v))
+        tol = dict(rtol=3e-4, atol=3e-5)
+    got = np.asarray(softmax_attention_pallas(qj, kj, vj), np.float32)
+    want = np.asarray(ref.softmax_attention(
+        qj.astype(jnp.float32), kj.astype(jnp.float32),
+        vj.astype(jnp.float32)), np.float32)
+    np.testing.assert_allclose(got, want, **tol)

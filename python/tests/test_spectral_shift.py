@@ -1,0 +1,241 @@
+"""The paper's contribution: modified spectral-shifting attention (sec 4-5).
+
+Covers: pallas-vs-oracle agreement, the eq4/eq8 middle-factor variants,
+the δIₙ add-back, δ estimators, Lemma 1 / Theorem 1 exact recovery, and
+the Figure-2 spectrum property (no long low-rank tail).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    nystrom_attention_pallas,
+    ref,
+    spectral_shift_attention_pallas,
+)
+from .conftest import make_qkv
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,c,d", [(128, 16, 32), (256, 32, 64), (512, 64, 32)])
+def test_ss_pallas_matches_ns_ref(rng, n, c, d):
+    q, k, v = make_qkv(rng, n, d)
+    got = spectral_shift_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                          jnp.asarray(v), c)
+    want = ref.spectral_shift_attention_ns(jnp.asarray(q), jnp.asarray(k),
+                                           jnp.asarray(v), c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,c,d", [(128, 16, 32), (256, 32, 64)])
+def test_nystrom_pallas_matches_ns_ref(rng, n, c, d):
+    q, k, v = make_qkv(rng, n, d)
+    got = nystrom_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                   jnp.asarray(v), c)
+    want = ref.nystrom_attention_ns(jnp.asarray(q), jnp.asarray(k),
+                                    jnp.asarray(v), c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_converged_pinv_matches_svd_ref(rng):
+    """With enough NS iterations the kernel path reproduces the SVD-pinv
+    reference (ties the iterative implementation to the paper's math).
+
+    Gaussian q,k give landmark blocks with seed-dependent condition
+    numbers up to ~1e5, where f32 NS needs 25+ iterations (see
+    test_pinv); to test *implementation equivalence at convergence* we
+    construct segment-aligned q,k so A_s is diagonally dominant and
+    well-conditioned by design."""
+    n, c, d = 128, 16, 32
+    l = n // c
+    basis = np.zeros((c, d), np.float32)
+    basis[np.arange(c), np.arange(c)] = 2.0  # segment j ↦ 2·e_j
+    noise = np.random.default_rng(0).normal(size=(n, d)).astype(np.float32)
+    q = np.repeat(basis, l, axis=0) + 0.2 * noise
+    k = np.repeat(basis, l, axis=0) + 0.2 * noise[::-1]
+    v = np.random.default_rng(1).normal(size=(n, d)).astype(np.float32)
+    got = spectral_shift_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                          jnp.asarray(v), c, pinv_iters=12)
+    want = ref.spectral_shift_attention(jnp.asarray(q), jnp.asarray(k),
+                                        jnp.asarray(v), c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("middle_form", ["eq8", "eq4"])
+@pytest.mark.parametrize("add_id", [True, False])
+def test_variant_flags(rng, middle_form, add_id):
+    q, k, v = make_qkv(rng, 128, 16, 16)
+    got = spectral_shift_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), 16,
+        middle_form=middle_form, add_shift_identity=add_id)
+    want = ref.spectral_shift_attention_ns(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), 16,
+        middle_form=middle_form, add_shift_identity=add_id)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_bad_middle_form(rng):
+    q, k, v = make_qkv(rng, 64, 8)
+    with pytest.raises(ValueError):
+        spectral_shift_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                        jnp.asarray(v), 8, middle_form="eq5")
+
+
+# ---------------------------------------------------------------------------
+# semantics of the approximation
+# ---------------------------------------------------------------------------
+
+
+def test_delta_zero_reduces_to_nystrom(rng):
+    """When A_s is numerically full rank δ̂≈0 and SS ≡ Nystromformer."""
+    q, k, v = make_qkv(rng, 128, 16)
+    ss = spectral_shift_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                         jnp.asarray(v), 16)
+    ny = nystrom_attention_pallas(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v), 16)
+    # δ̂ is tiny but nonzero (unconverged pinv) — outputs nearly equal
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ny),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_close_to_exact_attention_large_c(rng):
+    """With c = n/2 landmarks the approximation should track exact
+    attention closely (sanity bound, not a paper claim)."""
+    q, k, v = make_qkv(rng, 128, 32, scale=0.5)
+    approx = spectral_shift_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), 64, pinv_iters=24)
+    exact = ref.softmax_attention(jnp.asarray(q), jnp.asarray(k),
+                                  jnp.asarray(v))
+    err = float(jnp.mean(jnp.abs(approx - exact)) / jnp.mean(jnp.abs(exact)))
+    assert err < 0.5, err
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 / Theorem 1: exact recovery on spike+flat-tail SPSD matrices
+# ---------------------------------------------------------------------------
+
+
+def _spiked_spsd(rng, n, kspikes, theta):
+    """SPSD K with λ₁..λ_k spikes > θ and a perfectly flat θ tail."""
+    u = np.linalg.qr(rng.normal(size=(n, n)))[0].astype(np.float64)
+    lam = np.concatenate([np.linspace(5.0, 3.0, kspikes),
+                          np.full(n - kspikes, theta)])
+    return (u * lam) @ u.T
+
+
+def _ss_spsd_approx(kmat, cols, rank_rtol):
+    """Full SS model on an explicit SPSD matrix using column selection P
+    (paper sec 4 closed form, C = K P, A_s = Pᵀ K P)."""
+    c_sub = kmat[:, cols]
+    a_s = kmat[np.ix_(cols, cols)]
+    s = np.linalg.svd(a_s, compute_uv=False)
+    r = int((s > rank_rtol * s[0]).sum())
+    pinv = np.linalg.pinv(a_s, rcond=rank_rtol)
+    delta = 0.0
+    if len(cols) - r > 0:
+        delta = (np.trace(a_s) - np.trace(pinv @ a_s @ a_s)) / (len(cols) - r)
+    pinv2 = np.linalg.pinv(a_s @ a_s, rcond=rank_rtol)
+    u_ss = pinv - delta * pinv2
+    return c_sub @ u_ss @ c_sub.T + delta * np.eye(kmat.shape[0]), delta
+
+
+def _nystrom_spsd_approx(kmat, cols):
+    c_sub = kmat[:, cols]
+    a_s = kmat[np.ix_(cols, cols)]
+    return c_sub @ np.linalg.pinv(a_s) @ c_sub.T
+
+
+def test_theorem1_exact_recovery(rng):
+    """Lemma 1: with the spike space inside the sampled columns' span and
+    δ capturing the flat tail, ‖K − K̃ˢˢ‖ ≈ 0 while Nystrom keeps Θ(θ)
+    error. We shift by δ=θ: K−θI has rank k, so ANY c≥k independent
+    columns span it (the paper's near-optimal sampling achieves this)."""
+    n, kspikes, theta = 96, 6, 0.5
+    kmat = _spiked_spsd(rng, n, kspikes, theta)
+    cols = list(range(0, n, n // 16))  # c=16 ≥ k=6 columns
+    # spectral shifting on the shifted matrix K̃ = K − θ Iₙ (sec 3: K−δI)
+    kshift = kmat - theta * np.eye(n)
+    approx_lowrank, _ = _ss_spsd_approx(kshift, cols, rank_rtol=1e-8)
+    # K̃ is exactly rank k ⇒ the prototype part alone recovers it; add tail back
+    approx = approx_lowrank + theta * np.eye(n)
+    err_ss = np.linalg.norm(kmat - approx, 2)
+    err_ny = np.linalg.norm(kmat - _nystrom_spsd_approx(kmat, cols), 2)
+    assert err_ss < 1e-6 * np.linalg.norm(kmat, 2), err_ss
+    assert err_ny > 0.1 * theta, err_ny  # Nystrom cannot represent the tail
+
+
+def test_modified_ss_objective_zero_on_sampled_block(rng):
+    """Theorem 1's proof step: the modified objective
+    ‖Pᵀ(K − CUCᵀ − δI)P‖ is (near) zero at the closed-form solution."""
+    n, kspikes, theta = 64, 4, 0.3
+    kmat = _spiked_spsd(rng, n, kspikes, theta)
+    cols = list(range(0, n, 8))
+    approx, _ = _ss_spsd_approx(kmat, cols, rank_rtol=1e-2)
+    sub = (kmat - approx)[np.ix_(cols, cols)]
+    assert np.linalg.norm(sub, 2) < 0.05 * np.linalg.norm(
+        kmat[np.ix_(cols, cols)], 2)
+
+
+# ---------------------------------------------------------------------------
+# Figure 2: spectrum of the approximation has no long tail
+# ---------------------------------------------------------------------------
+
+
+def test_figure2_spectrum_no_long_tail(rng):
+    """The SS approximation's spectrum keeps a flat δ floor (every
+    eigenvalue ≥ δ−ε), unlike Nystrom whose eigenvalues collapse to 0
+    after index c — the paper's Figure 2 claim, on an explicit SPSD K."""
+    n, kspikes, theta = 96, 5, 0.4
+    kmat = _spiked_spsd(rng, n, kspikes, theta)
+    cols = list(range(0, n, 6))
+    # In the c×c principal submatrix the spikes are diluted (σmax ≈ 1.45)
+    # while the flat tail stays at θ=0.4, so tail/top ≈ 0.28. The rank
+    # tolerance must sit above that ratio to classify the tail as
+    # "discarded" — the hyperparameter the paper leaves unstated (we
+    # expose it as rank_rtol; see the ablation bench E9).
+    approx_ss, delta = _ss_spsd_approx(kmat, cols, rank_rtol=0.35)
+    approx_ny = _nystrom_spsd_approx(kmat, cols)
+    ev_ss = np.sort(np.linalg.eigvalsh((approx_ss + approx_ss.T) / 2))
+    ev_ny = np.sort(np.linalg.eigvalsh((approx_ny + approx_ny.T) / 2))
+    assert delta > 0.05, delta
+    # Nystrom: rank ≤ c ⇒ at least n−c near-zero eigenvalues
+    assert np.sum(np.abs(ev_ny) < 1e-8) >= n - len(cols)
+    # SS: the shifted identity lifts the entire tail to ≈ δ
+    assert ev_ss[0] > 0.5 * delta
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(5, 8), c=st.sampled_from([8, 16, 32]),
+       d=st.sampled_from([8, 32]), dtype=st.sampled_from(["f32", "bf16"]))
+def test_hypothesis_ss(logn, c, d, dtype):
+    n = 2 ** logn
+    rng = np.random.default_rng(n * 3 + c + d)
+    q, k, v = make_qkv(rng, n, d)
+    if dtype == "bf16":
+        qj, kj, vj = (jnp.asarray(x, jnp.bfloat16) for x in (q, k, v))
+        tol = dict(rtol=5e-2, atol=5e-2)
+    else:
+        qj, kj, vj = (jnp.asarray(x) for x in (q, k, v))
+        tol = dict(rtol=2e-4, atol=2e-4)
+    got = np.asarray(spectral_shift_attention_pallas(qj, kj, vj, c),
+                     np.float32)
+    want = np.asarray(ref.spectral_shift_attention_ns(
+        qj.astype(jnp.float32), kj.astype(jnp.float32),
+        vj.astype(jnp.float32), c), np.float32)
+    np.testing.assert_allclose(got, want, **tol)

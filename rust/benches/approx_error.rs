@@ -1,0 +1,134 @@
+//! E4 — Lemma 1 / Theorem 1: approximation error of the three SPSD
+//! models (prototype/Nystrom, full SS, modified SS) across matrix
+//! families, landmark counts, and tail levels.
+//!
+//! The paper's claim: modified spectral shifting has a "much stronger
+//! error bound than the Nystrom method", exactly recovering matrices
+//! with k spikes + flat tail from c = O(k) columns (Lemma 1), at O(c³)
+//! fitting cost vs the full model's O(n²c) (sec 3 vs sec 4).
+//!
+//! Run: cargo bench --bench approx_error
+
+use ssaformer::benchkit::{banner, bench, fmt_duration, Table};
+use ssaformer::rngx::Rng;
+use ssaformer::spsd::*;
+use std::time::Duration;
+
+fn crate_matrix_randn(rng: &mut Rng, rows: usize, cols: usize)
+                      -> ssaformer::linalg::Matrix {
+    ssaformer::linalg::Matrix::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn main() {
+    banner("E4a — spiked spectrum: error vs tail level θ (n=96, k=5, c=16)",
+           "modified SS fitted on the shifted matrix (Lemma 1 config);\n\
+            errors are relative Frobenius.");
+    let mut t = Table::new(&["theta", "Nystrom", "full SS", "modified SS",
+                             "mss delta"]);
+    let n = 96;
+    for &theta in &[0.05, 0.2, 0.5, 1.0] {
+        let mut rng = Rng::new(42);
+        let k = spiked_spsd(&mut rng, n, 5, 6.0, 4.0, theta);
+        let cols = sample_columns(&mut rng, n, 16, ColumnSampling::UniformRandom);
+        let ny = prototype_model(&k, &cols);
+        let fss = full_ss_model(&k, &cols, 1e-10);
+        let mss = modified_ss_model_shifted(&k, &cols, theta, 1e-8);
+        t.row(&[
+            format!("{theta}"),
+            format!("{:.2e}", rel_fro_error(&k, &ny.approx)),
+            format!("{:.2e}", rel_fro_error(&k, &fss.approx)),
+            format!("{:.2e}", rel_fro_error(&k, &mss.approx)),
+            format!("{:.3}", mss.delta),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("shape check: Nystrom error grows ∝ θ (it cannot represent the \
+              tail);\nmodified SS stays at numerical zero — Lemma 1.\n");
+
+    banner("E4b — error vs landmark count c (spiked, θ=0.4)", "");
+    let mut t = Table::new(&["c", "Nystrom", "modified SS", "exact from c≥k?"]);
+    for &c in &[4usize, 6, 8, 16, 32] {
+        let mut rng = Rng::new(7);
+        let k = spiked_spsd(&mut rng, n, 5, 6.0, 4.0, 0.4);
+        let cols = sample_columns(&mut rng, n, c, ColumnSampling::UniformRandom);
+        let ny = prototype_model(&k, &cols);
+        let mss = modified_ss_model_shifted(&k, &cols, 0.4, 1e-8);
+        let e = rel_fro_error(&k, &mss.approx);
+        t.row(&[
+            c.to_string(),
+            format!("{:.2e}", rel_fro_error(&k, &ny.approx)),
+            format!("{:.2e}", e),
+            if c >= 5 { format!("yes ({e:.1e})") } else { "no (c<k)".into() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    banner("E4c-i — noisy flat tail: spikes + θ(1±25%) tail (n=96, c=16)",
+           "the realistic version of Lemma 1's spectrum; SS wins, not \
+            exactly zero");
+    let mut t = Table::new(&["theta", "Nystrom", "modified SS", "ss delta"]);
+    for &theta in &[0.1, 0.3, 0.6] {
+        let mut rng = Rng::new(13);
+        // flat tail perturbed ±25%: build spiked then jitter eigenvalues
+        // by adding a small random SPSD correction of norm 0.25θ
+        let k0 = spiked_spsd(&mut rng, n, 5, 6.0, 4.0, theta);
+        let jit = {
+            let b = crate_matrix_randn(&mut rng, n, n);
+            let g = ssaformer::linalg::gram(&b); // PSD
+            let s = ssaformer::linalg::norms::spectral(&g, 40);
+            g.scale(0.25 * theta / s)
+        };
+        let k = k0.add(&jit);
+        let cols = sample_columns(&mut rng, n, 16, ColumnSampling::UniformRandom);
+        let ny = prototype_model(&k, &cols);
+        let mss = modified_ss_model_shifted(&k, &cols, theta, 1e-3);
+        t.row(&[
+            format!("{theta}"),
+            format!("{:.3}", rel_fro_error(&k, &ny.approx)),
+            format!("{:.3}", rel_fro_error(&k, &mss.approx)),
+            format!("{:.3}", mss.delta),
+        ]);
+    }
+    println!("{}", t.render());
+
+    banner("E4c-ii — power-law spectra (NEGATIVE control)",
+           "λ_i = i^-decay has no flat tail, so the δI term cannot model \
+            it;\nmodified SS ≈ Nystrom (or slightly worse when δ \
+            misfires). The paper's\nadvantage requires a near-flat \
+            discarded tail — documented in DESIGN.md.");
+    let mut t = Table::new(&["decay", "Nystrom", "modified SS", "ss delta"]);
+    for &decay in &[0.25, 0.5, 1.0, 2.0] {
+        let mut rng = Rng::new(3);
+        let k = power_law_spsd(&mut rng, n, decay);
+        let cols = sample_columns(&mut rng, n, 16, ColumnSampling::Strided);
+        let ny = prototype_model(&k, &cols);
+        let mss = modified_ss_model(&k, &cols, 0.3);
+        t.row(&[
+            format!("{decay}"),
+            format!("{:.3}", rel_fro_error(&k, &ny.approx)),
+            format!("{:.3}", rel_fro_error(&k, &mss.approx)),
+            format!("{:.4}", mss.delta),
+        ]);
+    }
+    println!("{}", t.render());
+
+    banner("E4d — fitting cost: modified O(c³) vs full O(n²c) (sec 3 vs 4)",
+           "wall-clock of the model fit, n=192, c=24");
+    let mut rng = Rng::new(9);
+    let k = spiked_spsd(&mut rng, 192, 5, 6.0, 4.0, 0.3);
+    let cols = sample_columns(&mut rng, 192, 24, ColumnSampling::UniformRandom);
+    let budget = Duration::from_millis(400);
+    let mut t = Table::new(&["model", "fit+reconstruct time"]);
+    let s_full = bench(|| { std::hint::black_box(
+        full_ss_model(&k, &cols, 1e-10)); }, budget, 12);
+    let s_mod = bench(|| { std::hint::black_box(
+        modified_ss_model(&k, &cols, 1e-8)); }, budget, 12);
+    let s_ny = bench(|| { std::hint::black_box(
+        prototype_model(&k, &cols)); }, budget, 12);
+    t.row(&["prototype (Nystrom)".into(), fmt_duration(s_ny.median)]);
+    t.row(&["full SS (sec 3)".into(), fmt_duration(s_full.median)]);
+    t.row(&["modified SS (sec 4)".into(), fmt_duration(s_mod.median)]);
+    t.row(&["full/modified ratio".into(), format!(
+        "{:.1}x", s_full.median.as_secs_f64() / s_mod.median.as_secs_f64())]);
+    println!("{}", t.render());
+}

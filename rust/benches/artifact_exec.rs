@@ -1,0 +1,52 @@
+//! §Perf probe: raw execution time of every encode artifact
+//! (variant × seq), excluding batching/queueing — the L1/L2 hot-path
+//! metric the optimization pass iterates on.
+//!
+//! Run: cargo bench --bench artifact_exec
+
+use ssaformer::benchkit::{banner, bench, fmt_duration, Table};
+use ssaformer::config::Variant;
+use ssaformer::runtime::{ArtifactKind, Engine};
+use std::time::Duration;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP artifact_exec: artifacts/ not built");
+        return;
+    }
+    banner("perf probe — encode artifact execution time",
+           "batch=4, params resident on device; median of repeated runs");
+    let engine = Engine::new("artifacts").expect("engine");
+    let params_host = engine.init_params().unwrap();
+    let params = engine
+        .buffer_f32(&params_host, &[params_host.len()])
+        .unwrap();
+
+    let mut t = Table::new(&["variant", "n=128", "n=256", "n=512", "n=1024"]);
+    for variant in [Variant::Full, Variant::Nystrom, Variant::SpectralShift] {
+        let mut row = vec![variant.token().to_string()];
+        for seq in [128usize, 256, 512, 1024] {
+            match engine.load(ArtifactKind::Encode, variant, seq) {
+                Ok(model) => {
+                    let b = model.entry.batch;
+                    let tokens: Vec<i32> =
+                        (0..b * seq).map(|i| 3 + (i as i32 % 2000)).collect();
+                    // warmup
+                    let _ = model.encode(&engine, &params, &tokens).unwrap();
+                    let s = bench(
+                        || {
+                            std::hint::black_box(
+                                model.encode(&engine, &params, &tokens).unwrap());
+                        },
+                        Duration::from_secs(2),
+                        7,
+                    );
+                    row.push(fmt_duration(s.median));
+                }
+                Err(_) => row.push("-".into()),
+            }
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+}

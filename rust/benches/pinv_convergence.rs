@@ -1,0 +1,93 @@
+//! E6 — sec 7 eq 11: convergence of the iterative pseudoinverse.
+//!
+//! Compares the paper's order-7 iteration against the cubic order-3
+//! baseline and the exact SVD pinv: residual ‖AZ−I‖ per iteration,
+//! iterations-to-tolerance, and wall-clock per target accuracy, on
+//! landmark softmax blocks of varying conditioning.
+//!
+//! Run: cargo bench --bench pinv_convergence
+
+use ssaformer::benchkit::{banner, bench, fmt_duration, Table};
+use ssaformer::linalg::{self, Matrix};
+use ssaformer::rngx::Rng;
+use std::time::Duration;
+
+fn softmax_block(rng: &mut Rng, c: usize, d: usize, ridge: f64) -> Matrix {
+    let q = Matrix::from_fn(c, d, |_, _| rng.normal());
+    let k = Matrix::from_fn(c, d, |_, _| rng.normal());
+    let mut s = linalg::matmul(&q, &k.transpose()).scale(1.0 / (d as f64).sqrt());
+    linalg::row_softmax_inplace(&mut s);
+    s.add_scaled_identity(ridge)
+}
+
+fn cond(a: &Matrix) -> f64 {
+    let s = linalg::singular_values(a);
+    s[0] / s[s.len() - 1].max(1e-300)
+}
+
+fn main() {
+    banner("E6a — residual ‖AZ−I‖max per iteration (c=32 softmax block)",
+           "order-7 (paper eq 11) vs order-3 Newton-Schulz");
+    let mut rng = Rng::new(1);
+    let a = softmax_block(&mut rng, 32, 32, 0.0);
+    println!("condition number: {:.1e}\n", cond(&a));
+    let mut t = Table::new(&["iter", "ord-7 residual", "ord-3 residual"]);
+    for iters in [1usize, 2, 4, 6, 8, 12, 16, 20, 24] {
+        let r7 = linalg::ns_residual(&a, &linalg::ns_pinv_ord7(&a, iters));
+        let r3 = linalg::ns_residual(&a, &linalg::ns_pinv_ord3(&a, iters));
+        t.row(&[iters.to_string(), format!("{r7:.3e}"), format!("{r3:.3e}")]);
+    }
+    println!("{}", t.render());
+
+    banner("E6b — iterations to reach 1e-6 residual vs conditioning",
+           "ridge added to the softmax block controls cond(A)");
+    let mut t = Table::new(&["cond(A)", "ord-7 iters", "ord-3 iters"]);
+    for &ridge in &[1.0, 0.1, 0.01, 0.0] {
+        let mut rng = Rng::new(2);
+        let a = softmax_block(&mut rng, 32, 32, ridge);
+        let to_tol = |ord7: bool| -> String {
+            for it in 1..=80 {
+                let z = if ord7 {
+                    linalg::ns_pinv_ord7(&a, it)
+                } else {
+                    linalg::ns_pinv_ord3(&a, it)
+                };
+                if linalg::ns_residual(&a, &z) < 1e-6 {
+                    return it.to_string();
+                }
+            }
+            ">80".into()
+        };
+        t.row(&[format!("{:.1e}", cond(&a)), to_tol(true), to_tol(false)]);
+    }
+    println!("{}", t.render());
+
+    banner("E6c — wall-clock to 1e-6 residual (c sweep)",
+           "ord-7 with the iteration count from E6b vs exact SVD pinv");
+    let mut t = Table::new(&["c", "ord-7 (8 iters)", "SVD pinv", "speedup"]);
+    let budget = Duration::from_millis(300);
+    for &c in &[16usize, 32, 64, 128] {
+        let mut rng = Rng::new(3);
+        let a = softmax_block(&mut rng, c, 32, 0.1);
+        let s_ns = bench(|| { std::hint::black_box(
+            linalg::ns_pinv_ord7(&a, 8)); }, budget, 20);
+        let s_svd = bench(|| { std::hint::black_box(
+            linalg::pinv(&a, 1e-12)); }, budget, 20);
+        t.row(&[
+            c.to_string(),
+            fmt_duration(s_ns.median),
+            fmt_duration(s_svd.median),
+            format!("{:.1}x", s_svd.median.as_secs_f64()
+                    / s_ns.median.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("reading: both iterations spend most steps escaping the \
+              conservative Z₀ =\nAᵀ/(‖A‖₁‖A‖∞) init (residual ≈1), then \
+              ord-7 collapses the residual in one\nor two steps where \
+              ord-3 needs several. On this f64 CPU path the wall-clock\n\
+              is roughly at parity with one-sided-Jacobi SVD (crossing \
+              over at c≈64);\nthe iteration's real value is being \
+              matmul-only — it lowers into the AOT\nartifact and maps to \
+              the MXU, where an SVD cannot go (DESIGN.md §Hardware).\n");
+}

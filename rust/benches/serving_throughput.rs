@@ -1,0 +1,139 @@
+//! E8 — sec 9 deployment claim: end-to-end serving latency/throughput
+//! of the full L3 stack (router → batcher → PJRT encode artifact) for
+//! the exact, Nystromformer and spectral-shifting variants.
+//!
+//! Needs `make artifacts`. For each variant, replays the same Poisson
+//! trace through a fresh coordinator and reports throughput, mean/p99
+//! e2e latency, queue latency, execution latency, and coordinator
+//! overhead (e2e − exec − queue).
+//!
+//! Run: cargo bench --bench serving_throughput
+
+use ssaformer::benchkit::{banner, Table};
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::Coordinator;
+use ssaformer::runtime::Engine;
+use ssaformer::workload::{generate_trace, LengthDist, TraceConfig};
+use std::sync::Arc;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP serving_throughput: artifacts/ not built");
+        return;
+    }
+    banner("E8 — serving throughput/latency per attention variant",
+           "trace: 48 requests, Poisson λ=30/s, zipf lengths over \
+            {128,256,512};\nbatch≤4, max-wait 10ms; same trace for every \
+            variant.");
+
+    let trace = generate_trace(&TraceConfig {
+        rate: 30.0,
+        count: 48,
+        lengths: LengthDist::ZipfBuckets(1.1),
+        buckets: vec![128, 256, 512],
+        vocab: 2048,
+        seed: 11,
+    });
+
+    let mut t = Table::new(&["variant", "warmup", "wall", "req/s",
+                             "e2e p50", "e2e p99", "exec mean",
+                             "queue mean", "batches"]);
+    for variant in [Variant::Full, Variant::Nystrom, Variant::SpectralShift] {
+        let engine = Arc::new(Engine::new("artifacts").expect("engine"));
+        let cfg = ServingConfig {
+            variant,
+            max_batch: 4,
+            max_wait_ms: 10,
+            queue_capacity: 128,
+            ..Default::default()
+        };
+        let t_warm = std::time::Instant::now();
+        let coordinator = Arc::new(Coordinator::start(engine, &cfg).unwrap());
+        let warmup = t_warm.elapsed();
+
+        let start = std::time::Instant::now();
+        // replay with arrival pacing from 3 threads
+        let mut joins = Vec::new();
+        for chunk in trace.chunks(16) {
+            let chunk: Vec<_> = chunk.to_vec();
+            let c = coordinator.clone();
+            joins.push(std::thread::spawn(move || {
+                let t0 = std::time::Instant::now();
+                for req in &chunk {
+                    let now = t0.elapsed();
+                    if req.arrival > now {
+                        std::thread::sleep(req.arrival - now);
+                    }
+                    let resp = c.submit_blocking(req.tokens.clone()).unwrap();
+                    assert!(resp.embedding.is_ok());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = start.elapsed();
+        let m = &coordinator.metrics;
+        t.row(&[
+            variant.token().to_string(),
+            format!("{:.1}s", warmup.as_secs_f64()),
+            format!("{:.2}s", wall.as_secs_f64()),
+            format!("{:.1}", m.requests_done.get() as f64 / wall.as_secs_f64()),
+            format!("{}ms", m.e2e_latency.quantile_us(0.5) / 1000),
+            format!("{}ms", m.e2e_latency.quantile_us(0.99) / 1000),
+            format!("{:.0}ms", m.exec_latency.mean_us() / 1000.0),
+            format!("{:.0}ms", m.queue_latency.mean_us() / 1000.0),
+            m.batches_executed.get().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("shape check (paper sec 9): ss/nystrom execute faster than \
+              full at the\nlonger buckets; the gap widens with sequence \
+              length (see table1 bench for\nthe kernel-level scaling).\n");
+
+    // single-bucket saturated-load comparison at the longest bucket
+    banner("E8b — saturated offered load per bucket (crossover check)",
+           "24 back-to-back requests per cell, batch 4 — isolates encode \
+            cost.\nAlso reports coordinator overhead = e2e − exec − queue \
+            (the L3 §Perf target).");
+    let mut t = Table::new(&["variant", "bucket", "total", "req/s",
+                             "exec mean", "coord overhead"]);
+    for &(len, bucket) in &[(500usize, 512usize), (1000, 1024)] {
+        for variant in [Variant::Full, Variant::Nystrom, Variant::SpectralShift] {
+            let engine = Arc::new(Engine::new("artifacts").expect("engine"));
+            let cfg = ServingConfig {
+                variant,
+                max_batch: 4,
+                max_wait_ms: 2,
+                queue_capacity: 128,
+                ..Default::default()
+            };
+            let coordinator = Arc::new(Coordinator::start(engine, &cfg).unwrap());
+            let toks: Vec<i32> = (0..len).map(|i| 3 + (i as i32 % 2000)).collect();
+            let start = std::time::Instant::now();
+            let rxs: Vec<_> = (0..24)
+                .map(|_| coordinator.submit(toks.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                assert!(rx.recv().unwrap().embedding.is_ok());
+            }
+            let wall = start.elapsed();
+            let m = &coordinator.metrics;
+            // per-request coordinator overhead: e2e minus the time the
+            // request spent waiting for or inside the executor
+            let overhead_us = (m.e2e_latency.mean_us()
+                - m.exec_latency.mean_us()
+                - m.queue_latency.mean_us()).max(0.0);
+            t.row(&[
+                variant.token().to_string(),
+                bucket.to_string(),
+                format!("{:.2}s", wall.as_secs_f64()),
+                format!("{:.1}", 24.0 / wall.as_secs_f64()),
+                format!("{:.0}ms", m.exec_latency.mean_us() / 1000.0),
+                format!("{:.1}ms ({:.1}%)", overhead_us / 1000.0,
+                        100.0 * overhead_us / m.e2e_latency.mean_us().max(1.0)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,100 @@
+//! E1 — Table 1: measured complexity scaling of every attention variant.
+//!
+//! The paper's Table 1 cites asymptotic classes; this bench regenerates
+//! it empirically: wall-clock per call vs sequence length n, plus the
+//! fitted log-log scaling exponent per method. Expected shape:
+//!   Transformer ≈ 2.0, Sparse ≈ 1.5, LSH(Reformer) ≈ 1+, Linformer /
+//!   Nystromformer / Spectral Shifting ≈ 1.0.
+//!
+//! Also prints the E7 (sec-8) component-cost breakdown for the SS path.
+//!
+//! Run: cargo bench --bench table1_complexity
+
+use ssaformer::attention::*;
+use ssaformer::benchkit::{banner, bench, fmt_duration, scaling_exponent, Table};
+use ssaformer::rngx::Rng;
+use std::time::Duration;
+
+fn main() {
+    banner("Table 1 — complexity of attention variants (measured)",
+           "wall-clock per attention call, d=64, c=64 landmarks, f32.\n\
+            Rightmost column: fitted exponent b in time ∝ n^b.");
+
+    let sizes = [256usize, 512, 1024, 2048, 4096];
+    let d = 64;
+    let c = 64;
+    let budget = Duration::from_millis(300);
+
+    type AttnFn<'a> = Box<dyn Fn(&Tensor2, &Tensor2, &Tensor2) -> Tensor2 + 'a>;
+    let variants: Vec<(&str, &str, AttnFn)> = vec![
+        ("Transformer (exact)", "O(n^2)",
+         Box::new(|q: &Tensor2, k: &Tensor2, v: &Tensor2| softmax_attention(q, k, v, None))),
+        ("Sparse Transformer", "O(n*sqrt n)",
+         Box::new(|q: &Tensor2, k: &Tensor2, v: &Tensor2| sparse_attention(q, k, v, None, None, None))),
+        ("Reformer (LSH)", "O(n log n)",
+         Box::new(|q: &Tensor2, k: &Tensor2, v: &Tensor2| lsh_attention(q, k, v, 2, None, 7, None))),
+        ("Linformer", "O(n)",
+         Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| linformer_attention(q, k, v, c, 7, None))),
+        ("Nystromformer", "O(n)",
+         Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| nystrom_attention(q, k, v, c, 8, None))),
+        ("Spectral Shifting", "O(n)",
+         Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| {
+             spectral_shift_attention(q, k, v, &SpectralShiftConfig::new(c))
+         })),
+    ];
+
+    let mut headers: Vec<String> = vec!["variant".into(), "paper".into()];
+    headers.extend(sizes.iter().map(|n| format!("n={n}")));
+    headers.push("fit n^b".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+
+    for (name, paper, f) in &variants {
+        let mut times = Vec::new();
+        let mut row = vec![name.to_string(), paper.to_string()];
+        for &n in &sizes {
+            let mut rng = Rng::new(n as u64);
+            let q = Tensor2::randn(&mut rng, n, d, 1.0);
+            let k = Tensor2::randn(&mut rng, n, d, 1.0);
+            let v = Tensor2::randn(&mut rng, n, d, 1.0);
+            let stats = bench(|| { std::hint::black_box(f(&q, &k, &v)); },
+                              budget, 30);
+            times.push(stats.median.as_secs_f64());
+            row.push(fmt_duration(stats.median));
+        }
+        let xs: Vec<f64> = sizes.iter().map(|&n| n as f64).collect();
+        table.row(&{
+            let mut r = row.clone();
+            r.push(format!("{:.2}", scaling_exponent(&xs, &times)));
+            r
+        });
+    }
+    println!("{}", table.render());
+
+    // ---- E7 / sec 8: component breakdown of the SS path at n=4096 ----
+    banner("sec 8 — component cost breakdown (spectral shifting, n=4096)",
+           "predicted: landmarks O(n), factors O(nc(d+dv)), pinv O(c^3), \
+            combine O(ncd)");
+    let n = 4096;
+    let mut rng = Rng::new(1);
+    let q = Tensor2::randn(&mut rng, n, d, 1.0);
+    let k = Tensor2::randn(&mut rng, n, d, 1.0);
+    let v = Tensor2::randn(&mut rng, n, d, 1.0);
+    let mut t = Table::new(&["component", "median"]);
+    let s = bench(|| { std::hint::black_box(segment_means(&q, c)); },
+                  budget, 50);
+    t.row(&["segment-means landmarks".into(), fmt_duration(s.median)]);
+    let nys = bench(|| {
+        std::hint::black_box(nystrom_attention(&q, &k, &v, c, 8, None));
+    }, budget, 20);
+    let full_ss = bench(|| {
+        std::hint::black_box(spectral_shift_attention(
+            &q, &k, &v, &SpectralShiftConfig::new(c)));
+    }, budget, 20);
+    t.row(&["nystrom total".into(), fmt_duration(nys.median)]);
+    t.row(&["spectral shift total".into(), fmt_duration(full_ss.median)]);
+    t.row(&["SS overhead vs nystrom".into(), format!(
+        "{:.1}%",
+        100.0 * (full_ss.median.as_secs_f64() / nys.median.as_secs_f64() - 1.0))]);
+    println!("{}", t.render());
+}

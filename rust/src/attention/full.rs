@@ -1,0 +1,156 @@
+//! Exact softmax self-attention — the O(n²) Table-1 baseline.
+//!
+//! Blocked over queries with an online-softmax accumulation over keys,
+//! mirroring the L1 Pallas flash kernel's structure (one row of scores
+//! never materializes more than a block at a time).
+
+use super::{axpy_f32, default_scale, dot_f32, Tensor2};
+
+/// Exact attention out = softmax(q kᵀ · scale) v.
+///
+/// q: (n, d), k: (m, d), v: (m, dv). `scale` defaults to 1/√d.
+pub fn softmax_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                         scale: Option<f32>) -> Tensor2 {
+    assert_eq!(q.cols, k.cols, "q/k width mismatch");
+    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+    let scale = scale.unwrap_or_else(|| default_scale(q.cols));
+    let n = q.rows;
+    let m = k.rows;
+    let dv = v.cols;
+    let block_k = 128.min(m.max(1));
+
+    let mut out = Tensor2::zeros(n, dv);
+    let mut scores = vec![0.0f32; block_k];
+    for i in 0..n {
+        let qi = q.row(i);
+        let mut m_run = f32::NEG_INFINITY;
+        let mut l_run = 0.0f32;
+        let orow = out.row_mut(i);
+        let mut start = 0;
+        while start < m {
+            let end = (start + block_k).min(m);
+            let len = end - start;
+            let mut m_cur = f32::NEG_INFINITY;
+            for (jj, j) in (start..end).enumerate() {
+                let s = dot_f32(qi, k.row(j)) * scale;
+                scores[jj] = s;
+                m_cur = m_cur.max(s);
+            }
+            let m_new = m_run.max(m_cur);
+            let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
+            l_run *= corr;
+            for o in orow.iter_mut() {
+                *o *= corr;
+            }
+            for (jj, j) in (start..end).enumerate() {
+                let p = (scores[jj] - m_new).exp();
+                l_run += p;
+                axpy_f32(orow, p, v.row(j));
+            }
+            m_run = m_new;
+            let _ = len;
+            start = end;
+        }
+        let inv = 1.0 / l_run;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Dense n×n attention matrix S = softmax(q kᵀ · scale) — analysis only
+/// (used by the Figure-2 spectrum study and error benches).
+pub fn attention_matrix(q: &Tensor2, k: &Tensor2, scale: Option<f32>) -> crate::linalg::Matrix {
+    let scale = scale.unwrap_or_else(|| default_scale(q.cols)) as f64;
+    let qm = q.to_matrix();
+    let km = k.to_matrix();
+    let mut s = crate::linalg::matmul(&qm, &km.transpose()).scale(scale);
+    crate::linalg::row_softmax_inplace(&mut s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::qkv;
+
+    /// Unblocked naive reference.
+    fn naive(q: &Tensor2, k: &Tensor2, v: &Tensor2) -> Tensor2 {
+        let scale = default_scale(q.cols);
+        let mut out = Tensor2::zeros(q.rows, v.cols);
+        for i in 0..q.rows {
+            let mut s: Vec<f32> = (0..k.rows)
+                .map(|j| dot_f32(q.row(i), k.row(j)) * scale)
+                .collect();
+            let m = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for x in s.iter_mut() {
+                *x = (*x - m).exp();
+                sum += *x;
+            }
+            for x in s.iter_mut() {
+                *x /= sum;
+            }
+            for (j, &w) in s.iter().enumerate() {
+                axpy_f32(out.row_mut(i), w, v.row(j));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let (q, k, v) = qkv(1, 50, 8);
+        let got = softmax_attention(&q, &k, &v, None);
+        let want = naive(&q, &k, &v);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn matches_naive_across_block_boundary() {
+        // n = 300 spans multiple 128-key blocks
+        let (q, k, v) = qkv(2, 300, 16);
+        let got = softmax_attention(&q, &k, &v, None);
+        let want = naive(&q, &k, &v);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn output_in_value_hull() {
+        let (q, k, v) = qkv(3, 128, 8);
+        let got = softmax_attention(&q, &k, &v, None);
+        let vmin = v.data.iter().copied().fold(f32::INFINITY, f32::min);
+        let vmax = v.data.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        assert!(got.data.iter().all(|&x| x >= vmin - 1e-4 && x <= vmax + 1e-4));
+    }
+
+    #[test]
+    fn large_logits_stable() {
+        let mut rng = crate::rngx::Rng::new(4);
+        let q = Tensor2::randn(&mut rng, 64, 8, 30.0);
+        let k = Tensor2::randn(&mut rng, 64, 8, 30.0);
+        let v = Tensor2::randn(&mut rng, 64, 8, 1.0);
+        let got = softmax_attention(&q, &k, &v, None);
+        assert!(got.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn attention_matrix_rows_sum_to_one() {
+        let (q, k, _) = qkv(5, 40, 8);
+        let s = attention_matrix(&q, &k, None);
+        for i in 0..40 {
+            let sum: f64 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cross_attention_shapes() {
+        // m != n (key length differs from query length)
+        let (q, _, _) = qkv(6, 32, 8);
+        let (_, k, v) = qkv(7, 80, 8);
+        let out = softmax_attention(&q, &k, &v, None);
+        assert_eq!((out.rows, out.cols), (32, 8));
+    }
+}

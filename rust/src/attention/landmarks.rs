@@ -1,0 +1,84 @@
+//! Segment-means landmark selection (paper sec 2.3 eq 1) — f32 path.
+
+use super::Tensor2;
+
+/// (n, d) -> (c, d) per-segment means. n must be divisible by c.
+pub fn segment_means(x: &Tensor2, c: usize) -> Tensor2 {
+    assert!(c > 0 && x.rows % c == 0,
+            "n={} not divisible by c={c}", x.rows);
+    let l = x.rows / c;
+    let inv = 1.0 / l as f32;
+    let mut out = Tensor2::zeros(c, x.cols);
+    for j in 0..c {
+        let orow = out.row_mut(j);
+        for i in j * l..(j + 1) * l {
+            for (o, v) in orow.iter_mut().zip(x.row(i)) {
+                *o += v;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Random-column landmark selection (the E9 ablation alternative):
+/// picks c distinct rows of x.
+pub fn random_landmarks(rng: &mut crate::rngx::Rng, x: &Tensor2, c: usize) -> Tensor2 {
+    assert!(c <= x.rows);
+    let idx = rng.sample_indices(x.rows, c);
+    let mut out = Tensor2::zeros(c, x.cols);
+    for (jj, &i) in idx.iter().enumerate() {
+        out.row_mut(jj).copy_from_slice(x.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    #[test]
+    fn matches_manual_means() {
+        let x = Tensor2::from_vec(4, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let lm = segment_means(&x, 2);
+        assert_eq!(lm.data, vec![2., 3., 6., 7.]);
+    }
+
+    #[test]
+    fn c_equals_n_identity() {
+        let mut rng = Rng::new(1);
+        let x = Tensor2::randn(&mut rng, 16, 4, 1.0);
+        let lm = segment_means(&x, 16);
+        assert!(lm.max_abs_diff(&x) < 1e-7);
+    }
+
+    #[test]
+    fn c_equals_one_is_global_mean() {
+        let x = Tensor2::from_vec(4, 1, vec![1., 2., 3., 6.]);
+        let lm = segment_means(&x, 1);
+        assert_eq!(lm.data, vec![3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_panics() {
+        let x = Tensor2::zeros(10, 2);
+        segment_means(&x, 3);
+    }
+
+    #[test]
+    fn random_landmarks_are_rows_of_input() {
+        let mut rng = Rng::new(2);
+        let x = Tensor2::randn(&mut rng, 20, 3, 1.0);
+        let lm = random_landmarks(&mut rng, &x, 5);
+        for j in 0..5 {
+            let found = (0..20).any(|i| {
+                x.row(i).iter().zip(lm.row(j)).all(|(a, b)| a == b)
+            });
+            assert!(found, "landmark {j} is not an input row");
+        }
+    }
+}

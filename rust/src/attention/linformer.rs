@@ -1,0 +1,79 @@
+//! Linformer attention — the Table-1 O(n) projection baseline
+//! (Wang et al. 2020): project keys/values along the sequence axis with
+//! a fixed k×n matrix E, then run exact attention against the k
+//! projected rows.
+//!
+//! The original learns E; as a serving-side baseline we use a fixed
+//! random Gaussian projection (seeded), which preserves the complexity
+//! and the JL-style approximation character.
+
+use super::{default_scale, full::softmax_attention, Tensor2};
+use crate::rngx::Rng;
+
+/// Linformer attention with projection dimension `kdim`.
+pub fn linformer_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                           kdim: usize, seed: u64,
+                           scale: Option<f32>) -> Tensor2 {
+    assert_eq!(q.cols, k.cols);
+    assert_eq!(k.rows, v.rows);
+    let m = k.rows;
+    let mut rng = Rng::new(seed);
+    // E: (kdim, m) Gaussian / sqrt(kdim)
+    let std = 1.0 / (kdim as f32).sqrt();
+    let mut e = vec![0.0f32; kdim * m];
+    rng.fill_normal_f32(&mut e, 0.0, std);
+
+    // K' = E K (kdim, d); V' = E V (kdim, dv)
+    let mut kp = Tensor2::zeros(kdim, k.cols);
+    let mut vp = Tensor2::zeros(kdim, v.cols);
+    for r in 0..kdim {
+        let erow = &e[r * m..(r + 1) * m];
+        let krow = kp.row_mut(r);
+        for (j, &w) in erow.iter().enumerate() {
+            for (o, x) in krow.iter_mut().zip(k.row(j)) {
+                *o += w * x;
+            }
+        }
+        let vrow = vp.row_mut(r);
+        for (j, &w) in erow.iter().enumerate() {
+            for (o, x) in vrow.iter_mut().zip(v.row(j)) {
+                *o += w * x;
+            }
+        }
+    }
+    let scale = scale.unwrap_or_else(|| default_scale(q.cols));
+    softmax_attention(q, &kp, &vp, Some(scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::qkv;
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let (q, k, v) = qkv(1, 128, 16);
+        let got = linformer_attention(&q, &k, &v, 32, 7, None);
+        assert_eq!((got.rows, got.cols), (128, 16));
+        assert!(got.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (q, k, v) = qkv(2, 64, 8);
+        let a = linformer_attention(&q, &k, &v, 16, 9, None);
+        let b = linformer_attention(&q, &k, &v, 16, 9, None);
+        assert_eq!(a.data, b.data);
+        let c = linformer_attention(&q, &k, &v, 16, 10, None);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn projection_dim_controls_cost_not_shape() {
+        let (q, k, v) = qkv(3, 96, 8);
+        for kd in [8, 24, 48] {
+            let got = linformer_attention(&q, &k, &v, kd, 1, None);
+            assert_eq!((got.rows, got.cols), (96, 8));
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Attention variants (S2-S4, S8-S10 in DESIGN.md) — f32 fast path.
+//!
+//! Every row of the paper's Table 1 is implemented here so the
+//! `table1_complexity` bench can *measure* the scaling claims instead of
+//! citing them:
+//!
+//! | variant                  | module            | paper complexity |
+//! |--------------------------|-------------------|------------------|
+//! | exact softmax            | `full`            | O(n²)            |
+//! | sparse/strided           | `sparse`          | O(n√n)           |
+//! | LSH (Reformer-style)     | `lsh`             | O(n log n)       |
+//! | Linformer projection     | `linformer`       | O(n)             |
+//! | Nystromformer            | `nystrom`         | O(n)             |
+//! | spectral shifting (ours) | `spectral_shift`  | O(n)             |
+//!
+//! These are CPU reference implementations used for analysis and the
+//! scaling benches; the serving hot path executes the AOT-compiled XLA
+//! artifacts through `runtime::` instead.
+
+pub mod full;
+pub mod landmarks;
+pub mod linformer;
+pub mod lsh;
+pub mod nystrom;
+pub mod spectral_shift;
+pub mod sparse;
+
+pub use full::softmax_attention;
+pub use landmarks::segment_means;
+pub use linformer::linformer_attention;
+pub use lsh::lsh_attention;
+pub use nystrom::nystrom_attention;
+pub use spectral_shift::{spectral_shift_attention, SpectralShiftConfig};
+pub use sparse::sparse_attention;
+
+/// A (rows × cols) f32 row-major tensor view used across the variants.
+#[derive(Clone, Debug)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Tensor2 { rows, cols, data }
+    }
+
+    /// Gaussian-filled tensor (test/bench workloads).
+    pub fn randn(rng: &mut crate::rngx::Rng, rows: usize, cols: usize, std: f32) -> Self {
+        let mut t = Self::zeros(rows, cols);
+        rng.fill_normal_f32(&mut t.data, 0.0, std);
+        t
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor2) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean |x| — used for relative-error reporting in benches.
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn to_matrix(&self) -> crate::linalg::Matrix {
+        crate::linalg::Matrix::from_f32(self.rows, self.cols, &self.data)
+    }
+}
+
+/// f32 dot product, 4-way unrolled.
+#[inline]
+pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// C += alpha * row_a ⊗ row_b accumulation helper: out[j] += w * v[j].
+#[inline]
+pub(crate) fn axpy_f32(out: &mut [f32], w: f32, v: &[f32]) {
+    debug_assert_eq!(out.len(), v.len());
+    for (o, x) in out.iter_mut().zip(v) {
+        *o += w * x;
+    }
+}
+
+/// C = A · B for Tensor2 (small/medium sizes; transposes B for locality).
+pub(crate) fn matmul_f32(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+    assert_eq!(a.cols, b.rows);
+    // transpose b
+    let mut bt = vec![0.0f32; b.rows * b.cols];
+    for i in 0..b.rows {
+        for j in 0..b.cols {
+            bt[j * b.rows + i] = b.data[i * b.cols + j];
+        }
+    }
+    let mut c = Tensor2::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.cols {
+            crow[j] = dot_f32(arow, &bt[j * b.rows..(j + 1) * b.rows]);
+        }
+    }
+    c
+}
+
+/// Default attention scale 1/√d.
+#[inline]
+pub fn default_scale(d: usize) -> f32 {
+    1.0 / (d as f32).sqrt()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::Tensor2;
+    use crate::rngx::Rng;
+
+    /// Standard q,k,v triple for variant tests.
+    pub fn qkv(seed: u64, n: usize, d: usize) -> (Tensor2, Tensor2, Tensor2) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor2::randn(&mut rng, n, d, 1.0),
+            Tensor2::randn(&mut rng, n, d, 1.0),
+            Tensor2::randn(&mut rng, n, d, 1.0),
+        )
+    }
+
+    /// Relative mean-abs error between two tensors.
+    pub fn rel_err(a: &Tensor2, b: &Tensor2) -> f32 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            num += (x - y).abs() as f64;
+            den += y.abs() as f64;
+        }
+        (num / den.max(1e-30)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor2_basics() {
+        let t = Tensor2::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.mean_abs(), 3.5);
+    }
+
+    #[test]
+    fn matmul_f32_known() {
+        let a = Tensor2::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Tensor2::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = matmul_f32(&a, &b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_f32_matches_f64_matrix() {
+        let mut rng = crate::rngx::Rng::new(21);
+        let a = Tensor2::randn(&mut rng, 7, 5, 1.0);
+        let b = Tensor2::randn(&mut rng, 5, 9, 1.0);
+        let c = matmul_f32(&a, &b);
+        let cm = crate::linalg::matmul(&a.to_matrix(), &b.to_matrix());
+        for i in 0..7 {
+            for j in 0..9 {
+                assert!((c.data[i * 9 + j] as f64 - cm[(i, j)]).abs() < 1e-4);
+            }
+        }
+    }
+}

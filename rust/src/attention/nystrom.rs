@@ -1,0 +1,230 @@
+//! Nystromformer attention (paper sec 2.4) — O(n) f32 path.
+//!
+//!   out = L(QK̃ᵀ) · A⁺ · (L(Q̃Kᵀ) V)
+//!
+//! with segment-means landmarks and the eq-11 order-7 Newton-Schulz
+//! pseudoinverse (same iteration count semantics as the Pallas kernel).
+
+use super::landmarks::segment_means;
+use super::{axpy_f32, default_scale, dot_f32, matmul_f32, Tensor2};
+
+/// The three softmax factors. Returns (F, A, W=B·V) with B never stored:
+/// B's rows are streamed against V with an online softmax, so memory is
+/// O(nc + c² + c·dv).
+pub(crate) fn factors(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
+                      scale: f32) -> (Tensor2, Tensor2, Tensor2) {
+    let qt = segment_means(q, c);
+    let kt = segment_means(k, c);
+    // F = rowsoftmax(q k̃ᵀ): (n, c) — softmax over c entries, local per row
+    let mut f = Tensor2::zeros(q.rows, c);
+    for i in 0..q.rows {
+        let qi = q.row(i);
+        let frow = f.row_mut(i);
+        for j in 0..c {
+            frow[j] = dot_f32(qi, kt.row(j)) * scale;
+        }
+    }
+    crate::linalg::row_softmax_f32(&mut f.data, q.rows, c);
+    // A = rowsoftmax(q̃ k̃ᵀ): (c, c)
+    let mut a = Tensor2::zeros(c, c);
+    for i in 0..c {
+        let qi = qt.row(i);
+        let arow = a.row_mut(i);
+        for j in 0..c {
+            arow[j] = dot_f32(qi, kt.row(j)) * scale;
+        }
+    }
+    crate::linalg::row_softmax_f32(&mut a.data, c, c);
+    // W = rowsoftmax(q̃ kᵀ) V: (c, dv), streamed over the n keys with the
+    // online-softmax recurrence (the Figure-1 constraint: the row softmax
+    // needs every column, so the normalizer accumulates across blocks).
+    let mut w = Tensor2::zeros(c, v.cols);
+    let block = 128.min(k.rows.max(1));
+    let mut scores = vec![0.0f32; block];
+    for i in 0..c {
+        let qi = qt.row(i);
+        let wrow = w.row_mut(i);
+        let mut m_run = f32::NEG_INFINITY;
+        let mut l_run = 0.0f32;
+        let mut start = 0;
+        while start < k.rows {
+            let end = (start + block).min(k.rows);
+            let mut m_cur = f32::NEG_INFINITY;
+            for (jj, j) in (start..end).enumerate() {
+                let s = dot_f32(qi, k.row(j)) * scale;
+                scores[jj] = s;
+                m_cur = m_cur.max(s);
+            }
+            let m_new = m_run.max(m_cur);
+            let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
+            l_run *= corr;
+            for o in wrow.iter_mut() {
+                *o *= corr;
+            }
+            for (jj, j) in (start..end).enumerate() {
+                let p = (scores[jj] - m_new).exp();
+                l_run += p;
+                axpy_f32(wrow, p, v.row(j));
+            }
+            m_run = m_new;
+            start = end;
+        }
+        let inv = 1.0 / l_run;
+        for o in wrow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    (f, a, w)
+}
+
+/// f32 order-7 Newton-Schulz pinv (eq 11), mirroring kernels/pinv_iter.py.
+pub(crate) fn ns_pinv_f32(a: &Tensor2, iters: usize) -> Tensor2 {
+    let c = a.rows;
+    assert_eq!(a.rows, a.cols);
+    // Z0 = Aᵀ / (‖A‖₁‖A‖∞)
+    let mut n1 = 0.0f32;
+    for j in 0..c {
+        let s: f32 = (0..c).map(|i| a.data[i * c + j].abs()).sum();
+        n1 = n1.max(s);
+    }
+    let ninf = (0..c)
+        .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+        .fold(0.0f32, f32::max);
+    let denom = (n1 * ninf).max(f32::MIN_POSITIVE);
+    let mut z = Tensor2::zeros(c, c);
+    for i in 0..c {
+        for j in 0..c {
+            z.data[i * c + j] = a.data[j * c + i] / denom;
+        }
+    }
+    let eye = |s: f32| {
+        let mut m = Tensor2::zeros(c, c);
+        for i in 0..c {
+            m.data[i * c + i] = s;
+        }
+        m
+    };
+    for _ in 0..iters {
+        let az = matmul_f32(a, &z);
+        // inner1 = 7I − AZ
+        let mut inner1 = eye(7.0);
+        for (x, y) in inner1.data.iter_mut().zip(&az.data) {
+            *x -= y;
+        }
+        // inner2 = 15I − AZ·inner1
+        let t = matmul_f32(&az, &inner1);
+        let mut inner2 = eye(15.0);
+        for (x, y) in inner2.data.iter_mut().zip(&t.data) {
+            *x -= y;
+        }
+        // inner3 = 13I − AZ·inner2
+        let t = matmul_f32(&az, &inner2);
+        let mut inner3 = eye(13.0);
+        for (x, y) in inner3.data.iter_mut().zip(&t.data) {
+            *x -= y;
+        }
+        z = matmul_f32(&z, &inner3);
+        for x in z.data.iter_mut() {
+            *x *= 0.25;
+        }
+    }
+    z
+}
+
+/// Nystromformer attention: out = F · (Z · W). O(n·c·(d+dv) + c³).
+pub fn nystrom_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
+                         pinv_iters: usize, scale: Option<f32>) -> Tensor2 {
+    let scale = scale.unwrap_or_else(|| default_scale(q.cols));
+    let (f, a, w) = factors(q, k, v, c, scale);
+    let z = ns_pinv_f32(&a, pinv_iters);
+    let zw = matmul_f32(&z, &w);
+    matmul_f32(&f, &zw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::softmax_attention;
+    use crate::attention::testutil::{qkv, rel_err};
+
+    #[test]
+    fn c_equals_n_recovers_exact_attention() {
+        // with one landmark per token, F = L(QKᵀ̃)=… and A is invertible:
+        // Nystrom is exact when c = n (landmarks are the tokens).
+        let (q, k, v) = qkv(1, 32, 8);
+        let approx = nystrom_attention(&q, &k, &v, 32, 30, None);
+        let exact = softmax_attention(&q, &k, &v, None);
+        assert!(rel_err(&approx, &exact) < 0.05,
+                "rel={}", rel_err(&approx, &exact));
+    }
+
+    #[test]
+    fn reasonable_approximation_quality() {
+        let (q, k, v) = qkv(2, 256, 32);
+        let approx = nystrom_attention(&q, &k, &v, 64, 12, None);
+        let exact = softmax_attention(&q, &k, &v, None);
+        let e = rel_err(&approx, &exact);
+        assert!(e < 1.0, "rel err too large: {e}");
+        // and it must beat a trivial all-zeros baseline by a wide margin
+        assert!(approx.mean_abs() > 0.1 * exact.mean_abs());
+    }
+
+    #[test]
+    fn more_landmarks_do_not_hurt() {
+        let (q, k, v) = qkv(3, 128, 16);
+        let exact = softmax_attention(&q, &k, &v, None);
+        let e8 = rel_err(&nystrom_attention(&q, &k, &v, 8, 12, None), &exact);
+        let e64 = rel_err(&nystrom_attention(&q, &k, &v, 64, 12, None), &exact);
+        assert!(e64 < e8 * 1.2, "e8={e8} e64={e64}");
+    }
+
+    #[test]
+    fn ns_pinv_inverts_well_conditioned() {
+        let mut rng = crate::rngx::Rng::new(4);
+        let mut a = Tensor2::randn(&mut rng, 12, 12, 0.1);
+        for i in 0..12 {
+            a.data[i * 12 + i] += 1.0;
+        }
+        let z = ns_pinv_f32(&a, 10);
+        let az = matmul_f32(&a, &z);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((az.data[i * 12 + j] - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn factors_rows_are_distributions() {
+        let (q, k, v) = qkv(5, 64, 8);
+        let (f, a, _w) = factors(&q, &k, &v, 8, default_scale(8));
+        for i in 0..f.rows {
+            let s: f32 = f.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        for i in 0..a.rows {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn w_factor_matches_dense_composition() {
+        let (q, k, v) = qkv(6, 96, 8);
+        let c = 12;
+        let scale = default_scale(8);
+        let (_f, _a, w) = factors(&q, &k, &v, c, scale);
+        // dense: B = rowsoftmax(q̃ kᵀ); W = B V
+        let qt = segment_means(&q, c);
+        let mut b = Tensor2::zeros(c, 96);
+        for i in 0..c {
+            for j in 0..96 {
+                b.data[i * 96 + j] = dot_f32(qt.row(i), k.row(j)) * scale;
+            }
+        }
+        crate::linalg::row_softmax_f32(&mut b.data, c, 96);
+        let want = matmul_f32(&b, &v);
+        assert!(w.max_abs_diff(&want) < 1e-4);
+    }
+}

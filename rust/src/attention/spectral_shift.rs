@@ -1,0 +1,287 @@
+//! Modified spectral-shifting attention — the paper's contribution
+//! (sec 4-5), O(n) f32 path.
+//!
+//!   out = F · [Z (I − δZ)] · W  +  δ V         (eq 8 + δIₙ add-back)
+//!   δ̂  = max(0, (tr A − tr(ZA²)) / max(c − tr(ZA), ε))
+//!
+//! with F, A, W = B·V shared with the Nystromformer implementation and
+//! Z the eq-11 iterative pseudoinverse. `middle_form` switches between
+//! the derivation-consistent eq-8 factor and the as-printed eq-4 factor
+//! (see DESIGN.md §1 note); `rank_rtol` only affects the exact/SVD path
+//! used for analysis (`spectral_shift_matrix`).
+
+use super::nystrom::{factors, ns_pinv_f32};
+use super::{default_scale, matmul_f32, Tensor2};
+use crate::linalg::{self, Matrix};
+
+/// Which middle factor to build (paper inconsistency; eq8 is primary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MiddleForm {
+    /// A⁺(I − δA⁺) — from the derivation, eqs (6)-(8).
+    Eq8,
+    /// A⁺(I − δA) — as printed in eqs (4)/(10).
+    Eq4,
+}
+
+/// Tunables for the spectral-shifting approximation.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralShiftConfig {
+    /// Number of landmarks c (n must be divisible by it).
+    pub landmarks: usize,
+    /// Newton-Schulz iterations for A⁺.
+    pub pinv_iters: usize,
+    /// eq8 (derivation) vs eq4 (as printed).
+    pub middle_form: MiddleForm,
+    /// Add the δIₙ term back to the approximation (the actual "spectral
+    /// shift"; turning it off degrades to a rank-c model — E9 ablation).
+    pub add_shift_identity: bool,
+    /// Attention scale; None = 1/√d.
+    pub scale: Option<f32>,
+}
+
+impl SpectralShiftConfig {
+    pub fn new(landmarks: usize) -> Self {
+        SpectralShiftConfig {
+            landmarks,
+            pinv_iters: 8,
+            middle_form: MiddleForm::Eq8,
+            add_shift_identity: true,
+            scale: None,
+        }
+    }
+}
+
+/// The matmul-only δ estimator mirroring `ref.delta_ss_iterative`.
+pub(crate) fn delta_iterative(a: &Tensor2, z: &Tensor2, eps: f32) -> f32 {
+    let c = a.rows;
+    let za = matmul_f32(z, a);
+    let tr_za: f32 = (0..c).map(|i| za.data[i * c + i]).sum();
+    let zaa = matmul_f32(&za, a);
+    let tr_a: f32 = (0..c).map(|i| a.data[i * c + i]).sum();
+    let tr_zaa: f32 = (0..c).map(|i| zaa.data[i * c + i]).sum();
+    let den = (c as f32 - tr_za).max(eps);
+    ((tr_a - tr_zaa) / den).max(0.0)
+}
+
+/// Spectral-shifting attention, O(n·c·(d+dv) + c³).
+pub fn spectral_shift_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                                cfg: &SpectralShiftConfig) -> Tensor2 {
+    let scale = cfg.scale.unwrap_or_else(|| default_scale(q.cols));
+    let c = cfg.landmarks;
+    let (f, a, w) = factors(q, k, v, c, scale);
+    let z = ns_pinv_f32(&a, cfg.pinv_iters);
+    let delta = delta_iterative(&a, &z, 1e-3);
+    // M = Z(I − δZ)  or  Z(I − δA)
+    let other = match cfg.middle_form {
+        MiddleForm::Eq8 => &z,
+        MiddleForm::Eq4 => &a,
+    };
+    let mut inner = Tensor2::zeros(c, c);
+    for i in 0..c {
+        for j in 0..c {
+            let id = if i == j { 1.0 } else { 0.0 };
+            inner.data[i * c + j] = id - delta * other.data[i * c + j];
+        }
+    }
+    let m = matmul_f32(&z, &inner);
+    let mw = matmul_f32(&m, &w);
+    let mut out = matmul_f32(&f, &mw);
+    if cfg.add_shift_identity {
+        for (o, x) in out.data.iter_mut().zip(&v.data) {
+            *o += delta * x;
+        }
+    }
+    out
+}
+
+/// Dense n×n spectral-shifting matrix with the *exact* (SVD, f64)
+/// pseudoinverse and tolerance-rank δ — the analysis path used by the
+/// Figure-2 spectrum bench and the E4/E5 error studies.
+///
+/// Returns (S̃, δ).
+pub fn spectral_shift_matrix_exact(q: &Tensor2, k: &Tensor2, c: usize,
+                                   rank_rtol: f64, middle_form: MiddleForm,
+                                   add_shift_identity: bool,
+                                   scale: Option<f32>) -> (Matrix, f64) {
+    let scale = scale.unwrap_or_else(|| default_scale(q.cols)) as f64;
+    let qm = q.to_matrix();
+    let km = k.to_matrix();
+    let qt = segment_means_f64(&qm, c);
+    let kt = segment_means_f64(&km, c);
+    let f = linalg::row_softmax(&linalg::matmul(&qm, &kt.transpose()).scale(scale));
+    let a = linalg::row_softmax(&linalg::matmul(&qt, &kt.transpose()).scale(scale));
+    let b = linalg::row_softmax(&linalg::matmul(&qt, &km.transpose()).scale(scale));
+    let apinv = linalg::pinv(&a, rank_rtol);
+    let delta = delta_exact(&a, &apinv, rank_rtol);
+    let other = match middle_form {
+        MiddleForm::Eq8 => &apinv,
+        MiddleForm::Eq4 => &a,
+    };
+    let inner = Matrix::eye(c).sub(&other.scale(delta));
+    let mid = linalg::matmul(&apinv, &inner);
+    let mut s = linalg::matmul(&linalg::matmul(&f, &mid), &b);
+    if add_shift_identity {
+        s = s.add_scaled_identity(delta);
+    }
+    (s, delta)
+}
+
+/// Dense Nystromformer matrix (exact pinv) — baseline for the same benches.
+pub fn nystrom_matrix_exact(q: &Tensor2, k: &Tensor2, c: usize,
+                            scale: Option<f32>) -> Matrix {
+    let scale = scale.unwrap_or_else(|| default_scale(q.cols)) as f64;
+    let qm = q.to_matrix();
+    let km = k.to_matrix();
+    let qt = segment_means_f64(&qm, c);
+    let kt = segment_means_f64(&km, c);
+    let f = linalg::row_softmax(&linalg::matmul(&qm, &kt.transpose()).scale(scale));
+    let a = linalg::row_softmax(&linalg::matmul(&qt, &kt.transpose()).scale(scale));
+    let b = linalg::row_softmax(&linalg::matmul(&qt, &km.transpose()).scale(scale));
+    linalg::matmul(&linalg::matmul(&f, &linalg::pinv(&a, 1e-10)), &b)
+}
+
+/// SVD-based δ (paper sec 4 closed form) on f64.
+pub fn delta_exact(a: &Matrix, apinv: &Matrix, rank_rtol: f64) -> f64 {
+    let c = a.rows();
+    let r = linalg::numerical_rank(a, rank_rtol);
+    if c <= r {
+        return 0.0;
+    }
+    let aa = linalg::matmul(a, a);
+    let num = a.trace() - linalg::matmul(apinv, &aa).trace();
+    (num / (c - r) as f64).max(0.0)
+}
+
+/// f64 segment means (analysis path).
+pub fn segment_means_f64(x: &Matrix, c: usize) -> Matrix {
+    assert!(x.rows() % c == 0);
+    let l = x.rows() / c;
+    Matrix::from_fn(c, x.cols(), |j, col| {
+        (0..l).map(|i| x[(j * l + i, col)]).sum::<f64>() / l as f64
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full::{attention_matrix, softmax_attention};
+    use crate::attention::nystrom::nystrom_attention;
+    use crate::attention::testutil::{qkv, rel_err};
+
+    #[test]
+    fn matches_nystrom_when_delta_zero() {
+        // full-rank A ⇒ δ̂≈0 ⇒ SS ≈ Nystrom
+        let (q, k, v) = qkv(1, 128, 16);
+        let ss = spectral_shift_attention(&q, &k, &v,
+                                          &SpectralShiftConfig::new(16));
+        let ny = nystrom_attention(&q, &k, &v, 16, 8, None);
+        assert!(rel_err(&ss, &ny) < 0.1, "{}", rel_err(&ss, &ny));
+    }
+
+    #[test]
+    fn approximates_exact_attention() {
+        let (q, k, v) = qkv(2, 256, 32);
+        let ss = spectral_shift_attention(&q, &k, &v,
+                                          &SpectralShiftConfig::new(64));
+        let exact = softmax_attention(&q, &k, &v, None);
+        assert!(rel_err(&ss, &exact) < 1.0);
+    }
+
+    #[test]
+    fn eq4_and_eq8_agree_when_delta_small() {
+        let (q, k, v) = qkv(3, 128, 16);
+        let mut cfg = SpectralShiftConfig::new(16);
+        cfg.middle_form = MiddleForm::Eq8;
+        let a = spectral_shift_attention(&q, &k, &v, &cfg);
+        cfg.middle_form = MiddleForm::Eq4;
+        let b = spectral_shift_attention(&q, &k, &v, &cfg);
+        assert!(rel_err(&a, &b) < 0.05);
+    }
+
+    #[test]
+    fn shift_identity_changes_output_by_delta_v() {
+        let (q, k, v) = qkv(4, 64, 8);
+        let mut cfg = SpectralShiftConfig::new(8);
+        cfg.add_shift_identity = true;
+        let with = spectral_shift_attention(&q, &k, &v, &cfg);
+        cfg.add_shift_identity = false;
+        let without = spectral_shift_attention(&q, &k, &v, &cfg);
+        // difference must be exactly δ·v (elementwise proportional to v)
+        let mut max_ratio_dev = 0.0f32;
+        let mut delta_est = None;
+        for i in 0..with.data.len() {
+            if v.data[i].abs() > 0.5 {
+                let r = (with.data[i] - without.data[i]) / v.data[i];
+                match delta_est {
+                    None => delta_est = Some(r),
+                    Some(d) => max_ratio_dev = max_ratio_dev.max((r - d).abs()),
+                }
+            }
+        }
+        assert!(max_ratio_dev < 1e-4, "not a uniform δ·v shift: {max_ratio_dev}");
+    }
+
+    #[test]
+    fn exact_matrix_error_shrinks_with_c() {
+        // Gaussian q,k are the hard near-uniform-attention case; the
+        // useful invariant is monotone improvement with landmark count
+        // and a bounded error at c = n/2.
+        let (q, k, _) = qkv(5, 64, 16);
+        let s_true = attention_matrix(&q, &k, None);
+        let err_at = |c: usize| {
+            let (s_apx, _d) = spectral_shift_matrix_exact(
+                &q, &k, c, 1e-6, MiddleForm::Eq8, true, None);
+            crate::linalg::norms::fro(&s_true.sub(&s_apx))
+                / crate::linalg::norms::fro(&s_true)
+        };
+        let e4 = err_at(4);
+        let e32 = err_at(32);
+        assert!(e32 < e4, "e4={e4} e32={e32}");
+        assert!(e32 < 1.5, "fro rel err {e32}");
+    }
+
+    #[test]
+    fn figure1_constraint_postsoftmax_sampling_differs() {
+        // E2: selecting columns AFTER the row softmax is not the same as
+        // landmark-first-then-softmax — the reason sec 5 restructures
+        // the computation (Figure 1).
+        let (q, k, _) = qkv(6, 64, 8);
+        let c = 8;
+        let s_true = attention_matrix(&q, &k, None); // n×n, O(n²)
+        // post-softmax column selection of landmark-mean columns
+        let km = k.to_matrix();
+        let qm = q.to_matrix();
+        let kt = segment_means_f64(&km, c);
+        let qt = segment_means_f64(&qm, c);
+        let scale = 1.0 / (8f64).sqrt();
+        // landmark-first F factor
+        let f_landmark = linalg::row_softmax(
+            &linalg::matmul(&qm, &kt.transpose()).scale(scale));
+        // post-softmax segment means of S's columns (what Figure 1 says
+        // you CANNOT use without computing all of S first)
+        let f_post = segment_means_f64(&s_true.transpose(), c).transpose();
+        let diff = f_landmark.max_abs_diff(&f_post);
+        assert!(diff > 1e-3, "the two orders coincided: {diff}");
+        let _ = qt;
+    }
+
+    #[test]
+    fn delta_exact_on_constructed_block() {
+        // diag(2,2,2,θ,θ,θ) with rtol between θ/2 and 1 ⇒ δ = θ
+        let theta = 0.2;
+        let a = Matrix::diag(&[2.0, 2.0, 2.0, theta, theta, theta]);
+        let apinv = linalg::pinv(&a, 0.5);
+        let d = delta_exact(&a, &apinv, 0.5);
+        assert!((d - theta).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn delta_iterative_near_zero_on_full_rank() {
+        let (q, k, v) = qkv(7, 128, 16);
+        let scale = default_scale(16);
+        let (_f, a, _w) = factors(&q, &k, &v, 16, scale);
+        let z = ns_pinv_f32(&a, 20);
+        let d = delta_iterative(&a, &z, 1e-3);
+        assert!(d < 0.05, "{d}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Bench harness substrate (S22) — the crate cache has no criterion, so
+//! timing, robust statistics, scaling-exponent fits and table printing
+//! live here. Every `rust/benches/*.rs` target is a plain
+//! `harness = false` binary built on this module.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs of a closure.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with warmup; chooses iteration count so total time stays
+/// near `budget` (min 3, max `max_iters` runs).
+pub fn bench<F: FnMut()>(mut f: F, budget: Duration, max_iters: usize) -> Stats {
+    // warmup + calibration run
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed();
+    let iters = if first.is_zero() {
+        max_iters
+    } else {
+        ((budget.as_secs_f64() / first.as_secs_f64()) as usize).clamp(3, max_iters)
+    };
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    Stats {
+        iters: samples.len(),
+        mean,
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        p95: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+    }
+}
+
+/// Least-squares fit of log(y) = a + b·log(x): returns the scaling
+/// exponent b. This is how the Table-1 bench turns measured wall-clock
+/// into an empirical complexity exponent.
+pub fn scaling_exponent(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in lx.iter().zip(&ly) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den.max(1e-300)
+}
+
+/// Fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths; first column left-aligned, rest
+    /// right-aligned (numeric convention).
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    line.push_str(&format!("{:<width$}", c, width = w[i]));
+                } else {
+                    line.push_str(&format!("  {:>width$}", c, width = w[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &w));
+        out.push('\n');
+        let total: usize = w.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a duration human-readably (µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+/// Standard bench header so all bench outputs are greppable.
+pub fn banner(name: &str, what: &str) {
+    println!("\n=== {name} ===");
+    println!("{what}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut x = 0u64;
+        let s = bench(
+            || {
+                for i in 0..10_000 {
+                    x = x.wrapping_add(i);
+                }
+            },
+            Duration::from_millis(20),
+            50,
+        );
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn scaling_exponent_recovers_powers() {
+        let xs = [256.0, 512.0, 1024.0, 2048.0];
+        let quad: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        assert!((scaling_exponent(&xs, &quad) - 2.0).abs() < 1e-9);
+        let lin: Vec<f64> = xs.iter().map(|x| 0.5 * x).collect();
+        assert!((scaling_exponent(&xs, &lin) - 1.0).abs() < 1e-9);
+        let nlogn: Vec<f64> = xs.iter().map(|x| x * x.ln()).collect();
+        let e = scaling_exponent(&xs, &nlogn);
+        assert!(e > 1.05 && e < 1.35, "{e}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["variant", "n=256", "n=512"]);
+        t.row(&["full".into(), "1.0ms".into(), "4.0ms".into()]);
+        t.row(&["ss".into(), "0.2ms".into(), "0.4ms".into()]);
+        let r = t.render();
+        assert!(r.contains("variant"));
+        assert!(r.lines().count() == 4);
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+    }
+}

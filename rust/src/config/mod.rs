@@ -1,0 +1,376 @@
+//! Configuration substrate (S20): a hand-rolled TOML-subset parser (the
+//! crate cache has no serde/toml), typed serving/training configs, and
+//! the artifact-manifest parser shared with `runtime::`.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with
+//! string ("…"), integer, float, and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed flat config: section -> key -> raw value.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A TOML-subset scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Config parsing / validation errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key [{0}] {1}")]
+    Missing(String, String),
+    #[error("type mismatch for [{0}] {1}: expected {2}")]
+    Type(String, String, &'static str),
+    #[error("invalid value for [{0}] {1}: {2}")]
+    Invalid(String, String, String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Config {
+    /// Parse the TOML subset from a string.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(ConfigError::Parse(lineno + 1,
+                        format!("malformed section header {line:?}")));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(ConfigError::Parse(lineno + 1,
+                    format!("expected key = value, got {line:?}")));
+            };
+            let key = line[..eq].trim().to_string();
+            let valstr = line[eq + 1..].trim();
+            if key.is_empty() || valstr.is_empty() {
+                return Err(ConfigError::Parse(lineno + 1,
+                    "empty key or value".into()));
+            }
+            let value = parse_value(valstr)
+                .ok_or_else(|| ConfigError::Parse(lineno + 1,
+                    format!("cannot parse value {valstr:?}")))?;
+            cfg.sections.entry(section.clone()).or_default()
+                .insert(key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config, ConfigError> {
+        Ok(Self::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<&str, ConfigError> {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => Ok(s),
+            Some(_) => Err(ConfigError::Type(section.into(), key.into(), "string")),
+            None => Err(ConfigError::Missing(section.into(), key.into())),
+        }
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Result<i64, ConfigError> {
+        match self.get(section, key) {
+            Some(Value::Int(i)) => Ok(*i),
+            Some(_) => Err(ConfigError::Type(section.into(), key.into(), "integer")),
+            None => Err(ConfigError::Missing(section.into(), key.into())),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<f64, ConfigError> {
+        match self.get(section, key) {
+            Some(Value::Float(x)) => Ok(*x),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(_) => Err(ConfigError::Type(section.into(), key.into(), "float")),
+            None => Err(ConfigError::Missing(section.into(), key.into())),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<bool, ConfigError> {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(_) => Err(ConfigError::Type(section.into(), key.into(), "bool")),
+            None => Err(ConfigError::Missing(section.into(), key.into())),
+        }
+    }
+
+    /// Typed getter with default.
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get_i64(section, key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get_f64(section, key).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get_str(section, key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get_bool(section, key).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no escape handling needed: strings in our subset cannot contain '#'
+    match line.find('#') {
+        Some(i) if !line[..i].contains('"') || line[..i].matches('"').count() % 2 == 0 => &line[..i],
+        _ => line,
+    }
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Some(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Some(Value::Float(x));
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Typed serving configuration
+// ---------------------------------------------------------------------------
+
+/// Attention variant selector shared across the stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Full,
+    Nystrom,
+    SpectralShift,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "full" => Some(Variant::Full),
+            "nystrom" => Some(Variant::Nystrom),
+            "ss" | "spectral_shift" => Some(Variant::SpectralShift),
+            _ => None,
+        }
+    }
+
+    /// The artifact-name token for this variant.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Variant::Full => "full",
+            Variant::Nystrom => "nystrom",
+            Variant::SpectralShift => "ss",
+        }
+    }
+}
+
+/// Serving configuration (coordinator + server).
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Directory holding *.hlo.txt artifacts + manifest.
+    pub artifacts_dir: String,
+    /// Attention variant to serve.
+    pub variant: Variant,
+    /// Max requests per batch (must match the artifact batch dim).
+    pub max_batch: usize,
+    /// Max time a request may wait for batchmates.
+    pub max_wait_ms: u64,
+    /// Bounded queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+    /// TCP bind address for the server example.
+    pub bind_addr: String,
+    /// Sequence buckets to route into (ascending). Must match artifacts.
+    pub seq_buckets: Vec<usize>,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: Variant::SpectralShift,
+            max_batch: 4,
+            max_wait_ms: 20,
+            queue_capacity: 256,
+            bind_addr: "127.0.0.1:7878".into(),
+            seq_buckets: vec![128, 256, 512, 1024],
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Build from a parsed [serving] section, falling back to defaults.
+    pub fn from_config(cfg: &Config) -> Result<ServingConfig, ConfigError> {
+        let d = ServingConfig::default();
+        let variant_s = cfg.str_or("serving", "variant", "ss").to_string();
+        let variant = Variant::parse(&variant_s).ok_or_else(|| {
+            ConfigError::Invalid("serving".into(), "variant".into(), variant_s)
+        })?;
+        let out = ServingConfig {
+            artifacts_dir: cfg.str_or("serving", "artifacts_dir",
+                                      &d.artifacts_dir).to_string(),
+            variant,
+            max_batch: cfg.i64_or("serving", "max_batch", d.max_batch as i64) as usize,
+            max_wait_ms: cfg.i64_or("serving", "max_wait_ms", d.max_wait_ms as i64) as u64,
+            queue_capacity: cfg.i64_or("serving", "queue_capacity",
+                                       d.queue_capacity as i64) as usize,
+            bind_addr: cfg.str_or("serving", "bind_addr", &d.bind_addr).to_string(),
+            seq_buckets: d.seq_buckets,
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_batch == 0 {
+            return Err(ConfigError::Invalid("serving".into(), "max_batch".into(),
+                                            "must be > 0".into()));
+        }
+        if self.queue_capacity < self.max_batch {
+            return Err(ConfigError::Invalid(
+                "serving".into(), "queue_capacity".into(),
+                format!("{} < max_batch {}", self.queue_capacity, self.max_batch)));
+        }
+        if self.seq_buckets.is_empty()
+            || self.seq_buckets.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(ConfigError::Invalid("serving".into(), "seq_buckets".into(),
+                                            "must be ascending, nonempty".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# ssaformer serving config
+[serving]
+variant = "nystrom"
+max_batch = 8
+max_wait_ms = 5
+queue_capacity = 64
+bind_addr = "127.0.0.1:9000"
+
+[train]
+steps = 200
+lr = 0.001
+log_every = 10
+resume = false
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("serving", "variant").unwrap(), "nystrom");
+        assert_eq!(c.get_i64("serving", "max_batch").unwrap(), 8);
+        assert_eq!(c.get_f64("train", "lr").unwrap(), 0.001);
+        assert!(!c.get_bool("train", "resume").unwrap());
+        // int readable as float
+        assert_eq!(c.get_f64("train", "steps").unwrap(), 200.0);
+    }
+
+    #[test]
+    fn missing_and_type_errors() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert!(matches!(c.get_str("serving", "nope"),
+                         Err(ConfigError::Missing(..))));
+        assert!(matches!(c.get_bool("serving", "max_batch"),
+                         Err(ConfigError::Type(..))));
+    }
+
+    #[test]
+    fn defaults_via_or() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64_or("x", "y", 7), 7);
+        assert_eq!(c.str_or("x", "y", "z"), "z");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = Config::parse("[serving]\nbad line").unwrap_err();
+        match err {
+            ConfigError::Parse(line, _) => assert_eq!(line, 2),
+            other => panic!("{other:?}"),
+        }
+        assert!(Config::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let c = Config::parse("[s]\nk = 5 # trailing\n# full line\n").unwrap();
+        assert_eq!(c.get_i64("s", "k").unwrap(), 5);
+    }
+
+    #[test]
+    fn serving_config_from_file_text() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!(s.variant, Variant::Nystrom);
+        assert_eq!(s.max_batch, 8);
+        assert_eq!(s.bind_addr, "127.0.0.1:9000");
+    }
+
+    #[test]
+    fn serving_config_validation() {
+        let mut s = ServingConfig::default();
+        s.max_batch = 0;
+        assert!(s.validate().is_err());
+        let mut s = ServingConfig::default();
+        s.queue_capacity = 1;
+        assert!(s.validate().is_err());
+        let mut s = ServingConfig::default();
+        s.seq_buckets = vec![256, 128];
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in [Variant::Full, Variant::Nystrom, Variant::SpectralShift] {
+            assert_eq!(Variant::parse(v.token()), Some(v));
+        }
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,119 @@
+//! Batch assembly: turns a same-bucket group of requests into the dense
+//! padded token tensor the encode artifact expects, and scatters
+//! per-request results back out. Pure functions — no locks, no I/O —
+//! so the padding/scatter invariants are property-testable.
+
+use crate::text::PAD;
+
+/// A request's tokens plus its slot in the assembled batch.
+pub struct BatchPlan {
+    /// artifact batch capacity (rows)
+    pub capacity: usize,
+    /// bucket sequence length (columns)
+    pub seq: usize,
+    /// number of real requests (≤ capacity); rows beyond are padding
+    pub fill: usize,
+    /// row-major (capacity × seq) token tensor
+    pub tokens: Vec<i32>,
+}
+
+/// Assemble a padded batch. Requests longer than `seq` are a caller bug
+/// (the router must have bucketed them) and panic in debug builds.
+pub fn assemble(requests: &[&[i32]], capacity: usize, seq: usize) -> BatchPlan {
+    assert!(requests.len() <= capacity,
+            "{} requests > batch capacity {capacity}", requests.len());
+    let mut tokens = vec![PAD; capacity * seq];
+    for (row, toks) in requests.iter().enumerate() {
+        debug_assert!(toks.len() <= seq, "request longer than bucket");
+        let take = toks.len().min(seq);
+        tokens[row * seq..row * seq + take].copy_from_slice(&toks[..take]);
+    }
+    BatchPlan { capacity, seq, fill: requests.len(), tokens }
+}
+
+/// Split the artifact's (capacity × width) output into per-request rows,
+/// dropping padding rows.
+pub fn scatter(plan: &BatchPlan, output: &[f32], width: usize) -> Vec<Vec<f32>> {
+    assert_eq!(output.len(), plan.capacity * width,
+               "output len {} != capacity {} × width {width}",
+               output.len(), plan.capacity);
+    (0..plan.fill)
+        .map(|row| output[row * width..(row + 1) * width].to_vec())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_rows_and_tail() {
+        let r1 = vec![5, 6, 7];
+        let r2 = vec![8];
+        let plan = assemble(&[&r1, &r2], 4, 5);
+        assert_eq!(plan.fill, 2);
+        assert_eq!(&plan.tokens[0..5], &[5, 6, 7, PAD, PAD]);
+        assert_eq!(&plan.tokens[5..10], &[8, PAD, PAD, PAD, PAD]);
+        // padding rows all PAD
+        assert!(plan.tokens[10..].iter().all(|&t| t == PAD));
+    }
+
+    #[test]
+    fn scatter_drops_padding_rows() {
+        let r1 = vec![1, 2];
+        let plan = assemble(&[&r1], 3, 2);
+        let out: Vec<f32> = (0..3 * 4).map(|i| i as f32).collect();
+        let rows = scatter(&plan, &out, 4);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0], vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overfull_batch_panics() {
+        let r = vec![1];
+        assemble(&[&r, &r, &r], 2, 4);
+    }
+
+    #[test]
+    fn property_assemble_scatter_roundtrip() {
+        crate::proptest_mini::run(100, |g| {
+            let cap = g.usize_in(1, 8);
+            let seq = g.usize_in(1, 32);
+            let fill = g.usize_in(0, cap);
+            let reqs: Vec<Vec<i32>> = (0..fill)
+                .map(|_| {
+                    let len = g.usize_in(1, seq);
+                    (0..len).map(|i| 3 + (i as i32 % 50)).collect()
+                })
+                .collect();
+            let refs: Vec<&[i32]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let plan = assemble(&refs, cap, seq);
+            crate::proptest_mini::prop_assert(
+                plan.tokens.len() == cap * seq, "tensor size")?;
+            // every request's tokens appear verbatim at its row
+            for (row, r) in reqs.iter().enumerate() {
+                let slice = &plan.tokens[row * seq..row * seq + r.len()];
+                crate::proptest_mini::prop_assert(
+                    slice == r.as_slice(), format!("row {row} corrupted"))?;
+                // remainder of the row is PAD
+                crate::proptest_mini::prop_assert(
+                    plan.tokens[row * seq + r.len()..(row + 1) * seq]
+                        .iter()
+                        .all(|&t| t == PAD),
+                    "row tail not padded")?;
+            }
+            // scatter returns exactly fill rows of the right width
+            let width = g.usize_in(1, 16);
+            let out: Vec<f32> = (0..cap * width).map(|i| i as f32).collect();
+            let rows = scatter(&plan, &out, width);
+            crate::proptest_mini::prop_assert(rows.len() == plan.fill, "fill")?;
+            for (i, r) in rows.iter().enumerate() {
+                crate::proptest_mini::prop_assert(
+                    r.as_slice() == &out[i * width..(i + 1) * width],
+                    "scatter row")?;
+            }
+            Ok(())
+        });
+    }
+}

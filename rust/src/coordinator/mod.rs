@@ -1,0 +1,270 @@
+//! The L3 coordinator (S14): router → bounded bucket queue → dynamic
+//! batcher → PJRT execution, with metrics at every stage.
+//!
+//! Data path (python-free):
+//!   submit(tokens) ──route──▶ BucketQueue ──pop_batch──▶ worker thread
+//!     ──assemble──▶ encode artifact (PJRT) ──scatter──▶ response channel
+//!
+//! The paper's sec-9 deployment claim ("this method can reduce training
+//! and inference time") is exercised by swapping the served attention
+//! variant (full / nystrom / ss) while this coordinator stays fixed —
+//! see the serving_throughput bench (E8).
+
+pub mod batcher;
+pub mod queue;
+pub mod router;
+
+pub use batcher::{assemble, scatter, BatchPlan};
+pub use queue::{BatchPolicy, BucketQueue, PushError, Queued};
+pub use router::{Route, Router};
+
+use crate::config::{ServingConfig, Variant};
+use crate::metrics::ServingMetrics;
+use crate::minirt::CancelToken;
+use crate::runtime::{ArtifactKind, Engine};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A completed request.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    /// pooled embedding (d_model floats) on success
+    pub embedding: Result<Vec<f32>, String>,
+    /// queue wait + execution time
+    pub queue_time: Duration,
+    pub exec_time: Duration,
+}
+
+struct Pending {
+    id: u64,
+    tokens: Vec<i32>,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Why admission failed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    TooLong { len: usize, max: usize },
+    Empty,
+    ShuttingDown,
+}
+
+/// Shared device-resident parameter buffer.
+struct ParamsBuffer(xla::PjRtBuffer);
+unsafe impl Send for ParamsBuffer {}
+unsafe impl Sync for ParamsBuffer {}
+
+/// The serving coordinator. One worker thread per instance executes
+/// batches; admission is lock-light and callers receive responses on
+/// per-request channels.
+pub struct Coordinator {
+    router: Router,
+    queue: Arc<BucketQueue<Pending>>,
+    pub metrics: Arc<ServingMetrics>,
+    cancel: CancelToken,
+    worker: Option<std::thread::JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Coordinator {
+    /// Build and start the coordinator: warms up (compiles) every
+    /// encode artifact for the configured variant, uploads the
+    /// parameters once, and spawns the batch-execution worker.
+    pub fn start(engine: Arc<Engine>, cfg: &ServingConfig)
+                 -> Result<Coordinator, crate::runtime::RuntimeError> {
+        let buckets = engine.manifest().encode_buckets(cfg.variant);
+        assert!(!buckets.is_empty(), "no encode artifacts for {:?}", cfg.variant);
+        let router = Router::new(buckets.clone());
+        let queue = Arc::new(BucketQueue::new(buckets.len(), cfg.queue_capacity));
+        let metrics = Arc::new(ServingMetrics::new());
+        let cancel = CancelToken::new();
+
+        // preload executables + parameters
+        engine.warmup(cfg.variant)?;
+        let init = engine.init_params()?;
+        let params = Arc::new(ParamsBuffer(
+            engine.buffer_f32(&init, &[init.len()])?));
+
+        let worker = {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let cancel = cancel.clone();
+            let engine = engine.clone();
+            let variant = cfg.variant;
+            let policy = BatchPolicy {
+                max_batch: cfg.max_batch,
+                max_wait: Duration::from_millis(cfg.max_wait_ms),
+            };
+            let buckets = buckets.clone();
+            std::thread::Builder::new()
+                .name("ssaformer-coordinator".into())
+                .spawn(move || {
+                    worker_loop(&engine, variant, &buckets, &queue, policy,
+                                &metrics, &cancel, &params);
+                })
+                .expect("spawn coordinator worker")
+        };
+
+        Ok(Coordinator {
+            router,
+            queue,
+            metrics,
+            cancel,
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&self, tokens: Vec<i32>)
+                  -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if self.cancel.is_cancelled() {
+            return Err(SubmitError::ShuttingDown);
+        }
+        self.metrics.requests_in.inc();
+        let bucket = match self.router.route(tokens.len()) {
+            Route::Bucket(b) => b,
+            Route::TooLong { len, max } => {
+                self.metrics.requests_rejected.inc();
+                return Err(SubmitError::TooLong { len, max });
+            }
+            Route::Empty => {
+                self.metrics.requests_rejected.inc();
+                return Err(SubmitError::Empty);
+            }
+        };
+        let idx = self.router.bucket_index(bucket).unwrap();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        match self.queue.push(idx, Pending { id, tokens, tx }) {
+            Ok(()) => Ok(rx),
+            Err(PushError::Full) => {
+                self.metrics.requests_rejected.inc();
+                Err(SubmitError::QueueFull)
+            }
+            Err(_) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn submit_blocking(&self, tokens: Vec<i32>) -> Result<Response, SubmitError> {
+        let rx = self.submit(tokens)?;
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+    }
+
+    /// Graceful shutdown: drain the queue, stop the worker.
+    pub fn shutdown(mut self) {
+        self.cancel.cancel();
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.cancel.cancel();
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(engine: &Engine, variant: Variant, buckets: &[usize],
+               queue: &BucketQueue<Pending>, policy: BatchPolicy,
+               metrics: &ServingMetrics, cancel: &CancelToken,
+               params: &ParamsBuffer) {
+    while !cancel.is_cancelled() || !queue.is_empty() {
+        let Some(batch) = queue.pop_batch(policy) else { break };
+        if batch.is_empty() {
+            continue;
+        }
+        let bucket = buckets[batch[0].bucket];
+        let now = Instant::now();
+        for q in &batch {
+            metrics
+                .queue_latency
+                .record(now.duration_since(q.enqueued));
+        }
+        // load is cached post-warmup; a miss only happens on new buckets
+        let model = match engine.load(ArtifactKind::Encode, variant, bucket) {
+            Ok(m) => m,
+            Err(e) => {
+                fail_batch(batch, &format!("load: {e}"));
+                continue;
+            }
+        };
+        let token_refs: Vec<&[i32]> =
+            batch.iter().map(|q| q.item.tokens.as_slice()).collect();
+        let plan = assemble(&token_refs, model.entry.batch, bucket);
+        metrics
+            .tokens_processed
+            .add(token_refs.iter().map(|t| t.len() as u64).sum());
+        let t_exec = Instant::now();
+        let result = model.encode(engine, &params.0, &plan.tokens);
+        let exec_time = t_exec.elapsed();
+        metrics.exec_latency.record(exec_time);
+        metrics.batches_executed.inc();
+        match result {
+            Ok(flat) => {
+                let d_model = flat.len() / model.entry.batch;
+                let rows = scatter(&plan, &flat, d_model);
+                let finish = Instant::now();
+                for (q, emb) in batch.into_iter().zip(rows) {
+                    metrics.requests_done.inc();
+                    metrics
+                        .e2e_latency
+                        .record(finish.duration_since(q.enqueued));
+                    let _ = q.item.tx.send(Response {
+                        id: q.item.id,
+                        embedding: Ok(emb),
+                        queue_time: now.duration_since(q.enqueued),
+                        exec_time,
+                    });
+                }
+            }
+            Err(e) => fail_batch(batch, &format!("execute: {e}")),
+        }
+    }
+}
+
+fn fail_batch(batch: Vec<Queued<Pending>>, msg: &str) {
+    for q in batch {
+        let _ = q.item.tx.send(Response {
+            id: q.item.id,
+            embedding: Err(msg.to_string()),
+            queue_time: Duration::ZERO,
+            exec_time: Duration::ZERO,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Coordinator logic that needs no PJRT engine is tested here;
+    //! end-to-end serving over real artifacts lives in
+    //! `rust/tests/integration_serving.rs`.
+
+    use super::*;
+
+    #[test]
+    fn submit_error_semantics() {
+        assert_eq!(SubmitError::QueueFull, SubmitError::QueueFull);
+        let e = SubmitError::TooLong { len: 600, max: 512 };
+        match e {
+            SubmitError::TooLong { len, max } => {
+                assert_eq!(len, 600);
+                assert_eq!(max, 512);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

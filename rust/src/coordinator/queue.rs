@@ -1,0 +1,274 @@
+//! Bounded per-bucket request queue with condvar wakeups — the
+//! coordinator's admission + backpressure point.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued item tagged with its bucket and enqueue time.
+pub struct Queued<T> {
+    pub bucket: usize,
+    pub enqueued: Instant,
+    pub item: T,
+}
+
+struct Inner<T> {
+    /// one FIFO per bucket index
+    lanes: Vec<VecDeque<Queued<T>>>,
+    total: usize,
+    closed: bool,
+}
+
+/// Bounded multi-lane FIFO. `push` applies backpressure by rejection
+/// (serving semantics: better to fail fast than stall the socket);
+/// `pop_batch` blocks until a lane is "ready" per the batch policy.
+pub struct BucketQueue<T> {
+    inner: Mutex<Inner<T>>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    Full,
+    Closed,
+    BadBucket,
+}
+
+/// Batch-formation policy: a lane is ready when it has `max_batch`
+/// items, or its head item has waited ≥ `max_wait`.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl<T> BucketQueue<T> {
+    pub fn new(n_buckets: usize, capacity: usize) -> Self {
+        BucketQueue {
+            inner: Mutex::new(Inner {
+                lanes: (0..n_buckets).map(|_| VecDeque::new()).collect(),
+                total: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue into a bucket lane; rejects when at capacity or closed.
+    pub fn push(&self, bucket_idx: usize, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if bucket_idx >= g.lanes.len() {
+            return Err(PushError::BadBucket);
+        }
+        if g.total >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.lanes[bucket_idx].push_back(Queued {
+            bucket: bucket_idx,
+            enqueued: Instant::now(),
+            item,
+        });
+        g.total += 1;
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Total queued items.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: pending pops drain remaining items, further
+    /// pushes fail.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Blocking pop of the next batch per `policy`.
+    ///
+    /// Returns items all from ONE lane (a batch must share its artifact
+    /// bucket), at most `policy.max_batch` of them, or None once closed
+    /// and drained. Lane choice: any full lane first, else the lane with
+    /// the oldest head once it has aged past max_wait.
+    pub fn pop_batch(&self, policy: BatchPolicy) -> Option<Vec<Queued<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            // full lane?
+            if let Some(idx) = (0..g.lanes.len())
+                .find(|&i| g.lanes[i].len() >= policy.max_batch)
+            {
+                return Some(drain(&mut g, idx, policy.max_batch));
+            }
+            // aged lane? pick oldest head across lanes
+            let now = Instant::now();
+            let oldest = (0..g.lanes.len())
+                .filter_map(|i| g.lanes[i].front().map(|q| (q.enqueued, i)))
+                .min();
+            if let Some((head_t, idx)) = oldest {
+                let age = now.duration_since(head_t);
+                if age >= policy.max_wait {
+                    return Some(drain(&mut g, idx, policy.max_batch));
+                }
+                if g.closed {
+                    return Some(drain(&mut g, idx, policy.max_batch));
+                }
+                // wait until the head would age out (or new arrivals)
+                let timeout = policy.max_wait - age;
+                let (ng, _t) = self.ready.wait_timeout(g, timeout).unwrap();
+                g = ng;
+            } else {
+                if g.closed {
+                    return None;
+                }
+                g = self.ready.wait(g).unwrap();
+            }
+        }
+    }
+}
+
+fn drain<T>(inner: &mut Inner<T>, lane: usize, n: usize) -> Vec<Queued<T>> {
+    let take = inner.lanes[lane].len().min(n);
+    let mut out = Vec::with_capacity(take);
+    for _ in 0..take {
+        out.push(inner.lanes[lane].pop_front().unwrap());
+    }
+    inner.total -= take;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_full_batch() {
+        let q: BucketQueue<u32> = BucketQueue::new(2, 16);
+        for i in 0..4 {
+            q.push(1, i).unwrap();
+        }
+        let b = q
+            .pop_batch(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(5) })
+            .unwrap();
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|x| x.bucket == 1));
+        assert_eq!(b.iter().map(|x| x.item).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let q: BucketQueue<u32> = BucketQueue::new(2, 16);
+        q.push(0, 7).unwrap();
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(30),
+            })
+            .unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 2);
+        q.push(0, 1).unwrap();
+        q.push(0, 2).unwrap();
+        assert_eq!(q.push(0, 3), Err(PushError::Full));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn bad_bucket_and_closed() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 4);
+        assert_eq!(q.push(5, 1), Err(PushError::BadBucket));
+        q.close();
+        assert_eq!(q.push(0, 1), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 4);
+        q.push(0, 1).unwrap();
+        q.close();
+        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) };
+        assert_eq!(q.pop_batch(p).unwrap().len(), 1);
+        assert!(q.pop_batch(p).is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_one_consumer() {
+        let q: Arc<BucketQueue<u64>> = Arc::new(BucketQueue::new(3, 1024));
+        let mut handles = Vec::new();
+        for t in 0..3 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    while q.push(t as usize, i).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let p = BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(5),
+                };
+                let mut got = 0usize;
+                while got < 300 {
+                    if let Some(b) = q.pop_batch(p) {
+                        // batch homogeneity invariant
+                        let lane = b[0].bucket;
+                        assert!(b.iter().all(|x| x.bucket == lane));
+                        got += b.len();
+                    }
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), 300);
+    }
+
+    #[test]
+    fn property_fifo_within_lane() {
+        crate::proptest_mini::run(50, |g| {
+            let q: BucketQueue<usize> = BucketQueue::new(2, 256);
+            let n = g.usize_in(1, 50);
+            for i in 0..n {
+                q.push(0, i).map_err(|e| format!("{e:?}"))?;
+            }
+            let p = BatchPolicy {
+                max_batch: g.usize_in(1, 16),
+                max_wait: Duration::from_millis(0),
+            };
+            let mut seen = Vec::new();
+            while seen.len() < n {
+                let b = q.pop_batch(p).ok_or("closed early")?;
+                seen.extend(b.iter().map(|x| x.item));
+            }
+            crate::proptest_mini::prop_assert(
+                seen == (0..n).collect::<Vec<_>>(),
+                format!("not FIFO: {seen:?}"))
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Request router: snaps request lengths to artifact sequence buckets
+//! and validates admissibility. The routing decision is pure (no locks)
+//! so it is unit-testable in isolation.
+
+use crate::workload::bucket_for;
+
+/// Routing outcome for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Request fits bucket with the given sequence length.
+    Bucket(usize),
+    /// Longer than every configured bucket.
+    TooLong { len: usize, max: usize },
+    /// Empty request.
+    Empty,
+}
+
+/// Router over a fixed ascending bucket list.
+#[derive(Clone, Debug)]
+pub struct Router {
+    buckets: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(buckets: Vec<usize>) -> Router {
+        assert!(!buckets.is_empty() && buckets.windows(2).all(|w| w[0] < w[1]),
+                "buckets must be ascending and nonempty");
+        Router { buckets }
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Route a token sequence of length `len`.
+    pub fn route(&self, len: usize) -> Route {
+        if len == 0 {
+            return Route::Empty;
+        }
+        match bucket_for(len, &self.buckets) {
+            Some(b) => Route::Bucket(b),
+            None => Route::TooLong { len, max: *self.buckets.last().unwrap() },
+        }
+    }
+
+    /// Index of a bucket in the configured list.
+    pub fn bucket_index(&self, bucket: usize) -> Option<usize> {
+        self.buckets.iter().position(|&b| b == bucket)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let r = Router::new(vec![128, 256, 512]);
+        assert_eq!(r.route(1), Route::Bucket(128));
+        assert_eq!(r.route(128), Route::Bucket(128));
+        assert_eq!(r.route(129), Route::Bucket(256));
+        assert_eq!(r.route(512), Route::Bucket(512));
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let r = Router::new(vec![128, 256]);
+        assert_eq!(r.route(0), Route::Empty);
+        assert_eq!(r.route(257), Route::TooLong { len: 257, max: 256 });
+    }
+
+    #[test]
+    fn bucket_index() {
+        let r = Router::new(vec![128, 256, 512]);
+        assert_eq!(r.bucket_index(256), Some(1));
+        assert_eq!(r.bucket_index(100), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_buckets_panic() {
+        Router::new(vec![256, 128]);
+    }
+
+    #[test]
+    fn property_route_is_minimal_fitting() {
+        crate::proptest_mini::run(200, |g| {
+            let nb = g.usize_in(1, 4);
+            let mut buckets: Vec<usize> = (0..nb)
+                .map(|i| (i + 1) * g.usize_in(16, 64))
+                .collect();
+            buckets.sort_unstable();
+            buckets.dedup();
+            let r = Router::new(buckets.clone());
+            let len = g.usize_in(1, 400);
+            match r.route(len) {
+                Route::Bucket(b) => {
+                    crate::proptest_mini::prop_assert(
+                        b >= len && buckets.contains(&b),
+                        format!("bucket {b} < len {len}"))?;
+                    // minimality: no smaller bucket fits
+                    crate::proptest_mini::prop_assert(
+                        buckets.iter().all(|&x| x >= b || x < len),
+                        "not minimal")
+                }
+                Route::TooLong { .. } => crate::proptest_mini::prop_assert(
+                    len > *buckets.last().unwrap(), "wrong TooLong"),
+                Route::Empty => crate::proptest_mini::prop_assert(len == 0, "empty"),
+            }
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! # ssaformer
+//!
+//! Production-grade reproduction of *"Beyond Nyströmformer —
+//! Approximation of self-attention by Spectral Shifting"* (Verma, 2021)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for
+//!   segment-means landmarks, flash attention, the streamed landmark
+//!   cross-attention factor, the eq-11 Newton-Schulz pseudoinverse, and
+//!   the fused spectral-shifting combine.
+//! * **L2** (`python/compile/model.py`) — a JAX transformer encoder with
+//!   pluggable attention (full / nystrom / ss), AOT-lowered once to HLO
+//!   text artifacts.
+//! * **L3** (this crate) — the serving/training coordinator: PJRT
+//!   runtime, request router, dynamic batcher, metrics, plus every
+//!   substrate the paper's evaluation needs (dense linear algebra,
+//!   SPSD model zoo, attention baselines, spectrum analysis, workload
+//!   generation).
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index (Table 1, Figure 2, Lemma 1/Theorem 1, eq 11/12, sec 8/9).
+
+pub mod attention;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod linalg;
+pub mod metrics;
+pub mod minirt;
+pub mod proptest_mini;
+pub mod rngx;
+pub mod runtime;
+pub mod server;
+pub mod spectral;
+pub mod spsd;
+pub mod text;
+pub mod train;
+pub mod workload;

@@ -1,0 +1,167 @@
+//! Matrix multiplication kernels (f64 analysis path).
+//!
+//! `matmul` transposes the right operand once and walks both operands
+//! row-major — the classic cache-friendly ikj/dot layout. Good enough
+//! for the c×c / n×c analysis shapes in this crate; the f32 serving path
+//! has its own micro-kernels in `attention::`.
+
+use super::matrix::Matrix;
+
+/// C = A · B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {}x{} · {}x{}",
+               a.rows(), a.cols(), b.rows(), b.cols());
+    let bt = b.transpose();
+    matmul_bt(a, &bt)
+}
+
+/// C = A · Bᵀ where `bt` is given already transposed (both row-major).
+pub fn matmul_bt(a: &Matrix, bt: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), bt.cols());
+    let (m, k, n) = (a.rows(), a.cols(), bt.rows());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = dot(arow, bt.row(j));
+        }
+    }
+    let _ = k;
+    c
+}
+
+/// y = A · x.
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// y = Aᵀ · x.
+pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        let xi = x[i];
+        for (j, &aij) in a.row(i).iter().enumerate() {
+            y[j] += aij * xi;
+        }
+    }
+    y
+}
+
+/// Dot product with 4-way unrolled accumulation.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Gram matrix AᵀA (symmetric; computes upper triangle once).
+pub fn gram(a: &Matrix) -> Matrix {
+    let n = a.cols();
+    let at = a.transpose();
+    let mut g = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = dot(at.row(i), at.row(j));
+            g[(i, j)] = v;
+            g[(j, i)] = v;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Matrix::from_fn(5, 5, |i, j| ((i * 5 + j) as f64).sin());
+        let c = matmul(&a, &Matrix::eye(5));
+        assert!(a.max_abs_diff(&c) < 1e-12);
+        let c2 = matmul(&Matrix::eye(5), &a);
+        assert!(a.max_abs_diff(&c2) < 1e-12);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let a = Matrix::from_fn(3, 7, |i, j| (i + j) as f64);
+        let b = Matrix::from_fn(7, 2, |i, j| (i as f64) - (j as f64));
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (3, 2));
+        // check one entry by hand
+        let want: f64 = (0..7).map(|k| (0 + k) as f64 * (k as f64 - 1.0)).sum();
+        assert!((c[(0, 1)] - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let x = vec![1.0, -1.0, 2.0];
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(3, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..4 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        let a = Matrix::from_fn(4, 3, |i, j| ((i * 3 + j) as f64).cos());
+        let x = vec![0.5, -0.25, 1.5, 2.0];
+        let y1 = matvec_t(&a, &x);
+        let y2 = matvec(&a.transpose(), &x);
+        for (u, v) in y1.iter().zip(&y2) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diag() {
+        let a = Matrix::from_fn(6, 4, |i, j| ((i + 2 * j) as f64).sin());
+        let g = gram(&a);
+        for i in 0..4 {
+            assert!(g[(i, i)] >= 0.0);
+            for j in 0..4 {
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+            }
+        }
+        let want = matmul(&a.transpose(), &a);
+        assert!(g.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for n in [0, 1, 3, 4, 5, 7, 8, 9] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i * 2) as f64).collect();
+            let want: f64 = (0..n).map(|i| (i * i * 2) as f64).sum();
+            assert_eq!(dot(&a, &b), want);
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! Dense row-major f64 matrix — the analysis substrate.
+//!
+//! Used by the spectrum analysis (Figure 2), the SPSD model zoo
+//! (Lemma 1 / Theorem 1 experiments) and the exact-pinv reference path.
+//! The serving hot path uses `attention::*` f32 routines instead; this
+//! type favours numerical robustness over raw speed.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Borrow one row.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Column-subset copy: keep columns listed in `cols` (in order).
+    pub fn select_columns(&self, cols: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, cols.len());
+        for i in 0..self.rows {
+            for (jj, &j) in cols.iter().enumerate() {
+                m[(i, jj)] = self[(i, j)];
+            }
+        }
+        m
+    }
+
+    /// Row-subset copy.
+    pub fn select_rows(&self, rows: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(rows.len(), self.cols);
+        for (ii, &i) in rows.iter().enumerate() {
+            m.row_mut(ii).copy_from_slice(self.row(i));
+        }
+        m
+    }
+
+    /// Principal submatrix on the given indices (rows ∩ cols).
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(idx.len(), idx.len());
+        for (ii, &i) in idx.iter().enumerate() {
+            for (jj, &j) in idx.iter().enumerate() {
+                m[(ii, jj)] = self[(i, j)];
+            }
+        }
+        m
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// self + other.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// self - other.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// alpha * self.
+    pub fn scale(&self, alpha: f64) -> Matrix {
+        self.map(|x| alpha * x)
+    }
+
+    /// self + alpha * I (square only).
+    pub fn add_scaled_identity(&self, alpha: f64) -> Matrix {
+        assert!(self.is_square());
+        let mut m = self.clone();
+        for i in 0..self.rows {
+            m[(i, i)] += alpha;
+        }
+        m
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Symmetrize: (A + Aᵀ)/2.
+    pub fn symmetrize(&self) -> Matrix {
+        assert!(self.is_square());
+        let mut m = self.clone();
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                m[(i, j)] = v;
+                m[(j, i)] = v;
+            }
+        }
+        m
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Convert to f32 row-major buffer (for the serving fast path).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Build from an f32 row-major buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(6);
+        for i in 0..show {
+            let cols = self.cols.min(8);
+            let row: Vec<String> = self.row(i)[..cols]
+                .iter()
+                .map(|x| format!("{x:9.4}"))
+                .collect();
+            writeln!(f, "  [{}{}]", row.join(", "),
+                     if self.cols > 8 { ", ..." } else { "" })?;
+        }
+        if self.rows > show {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(0, 0)], 0.0);
+        assert_eq!(m[(1, 2)], 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i3 = Matrix::eye(3);
+        assert_eq!(i3.trace(), 3.0);
+        let d = Matrix::diag(&[1.0, 2.0, 3.0]);
+        assert_eq!(d[(1, 1)], 2.0);
+        assert_eq!(d[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 7 + j * 3) as f64);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(4, 2)], m[(2, 4)]);
+    }
+
+    #[test]
+    fn select_columns_and_rows() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let c = m.select_columns(&[0, 3]);
+        assert_eq!(c.cols(), 2);
+        assert_eq!(c[(2, 1)], m[(2, 3)]);
+        let r = m.select_rows(&[1, 2]);
+        assert_eq!(r[(0, 0)], m[(1, 0)]);
+        let p = m.principal_submatrix(&[1, 3]);
+        assert_eq!(p[(0, 1)], m[(1, 3)]);
+        assert_eq!(p[(1, 0)], m[(3, 1)]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Matrix::from_fn(2, 2, |i, j| (i + j) as f64);
+        let b = Matrix::eye(2);
+        assert_eq!(a.add(&b)[(0, 0)], 1.0);
+        assert_eq!(a.sub(&b)[(1, 1)], 1.0);
+        assert_eq!(a.scale(2.0)[(0, 1)], 2.0);
+        assert_eq!(a.add_scaled_identity(5.0)[(0, 0)], 5.0);
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * 3 + j * 11) as f64);
+        let s = m.symmetrize();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(s[(i, j)], s[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Matrix::from_fn(3, 3, |i, j| (i + j) as f64 * 0.5);
+        let back = Matrix::from_f32(3, 3, &m.to_f32());
+        assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

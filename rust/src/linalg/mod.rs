@@ -1,0 +1,24 @@
+//! Dense linear-algebra substrate (S7 in DESIGN.md).
+//!
+//! The crate cache ships no BLAS/LAPACK bindings, so everything the
+//! paper's analysis needs is implemented here: matmul, Householder QR,
+//! cyclic-Jacobi symmetric eigen, one-sided Jacobi SVD, tolerance-rank
+//! Moore-Penrose pinv, the eq-11 Newton-Schulz iterations, matrix norms,
+//! and the row-softmax operator `L(·)`.
+
+pub mod eigen;
+pub mod matmul;
+pub mod matrix;
+pub mod norms;
+pub mod pinv;
+pub mod qr;
+pub mod softmax;
+pub mod svd;
+
+pub use eigen::{sym_eigen, sym_eigenvalues, SymEigen};
+pub use matmul::{dot, gram, matmul, matmul_bt, matvec, matvec_t};
+pub use matrix::Matrix;
+pub use pinv::{ns_pinv_ord3, ns_pinv_ord7, ns_residual, pinv};
+pub use qr::{qr, random_orthonormal, Qr};
+pub use softmax::{row_softmax, row_softmax_f32, row_softmax_inplace};
+pub use svd::{numerical_rank, singular_values, svd, Svd};

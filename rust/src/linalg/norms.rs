@@ -1,0 +1,99 @@
+//! Matrix norms used throughout the error analyses.
+
+use super::matmul::matmul;
+use super::matrix::Matrix;
+
+/// Frobenius norm.
+pub fn fro(a: &Matrix) -> f64 {
+    a.data().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// ‖A‖₁: max column absolute sum.
+pub fn one(a: &Matrix) -> f64 {
+    let mut best: f64 = 0.0;
+    for j in 0..a.cols() {
+        let s: f64 = (0..a.rows()).map(|i| a[(i, j)].abs()).sum();
+        best = best.max(s);
+    }
+    best
+}
+
+/// ‖A‖∞: max row absolute sum (the norm in the paper's eq 12 bound).
+pub fn inf(a: &Matrix) -> f64 {
+    a.data()
+        .chunks(a.cols().max(1))
+        .map(|r| r.iter().map(|x| x.abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Spectral norm ‖A‖₂ via power iteration on AᵀA.
+pub fn spectral(a: &Matrix, iters: usize) -> f64 {
+    let g = matmul(&a.transpose(), a); // n×n PSD
+    let n = g.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut x = vec![1.0 / (n as f64).sqrt(); n];
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let y = super::matmul::matvec(&g, &x);
+        let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm < f64::MIN_POSITIVE {
+            return 0.0;
+        }
+        lam = norm;
+        for (xi, yi) in x.iter_mut().zip(&y) {
+            *xi = yi / norm;
+        }
+    }
+    lam.sqrt()
+}
+
+/// Max absolute entry.
+pub fn max_abs(a: &Matrix) -> f64 {
+    a.data().iter().map(|x| x.abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_of_identity() {
+        let i = Matrix::eye(4);
+        assert_eq!(fro(&i), 2.0);
+        assert_eq!(one(&i), 1.0);
+        assert_eq!(inf(&i), 1.0);
+        assert!((spectral(&i, 30) - 1.0).abs() < 1e-10);
+        assert_eq!(max_abs(&i), 1.0);
+    }
+
+    #[test]
+    fn known_asymmetric() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, -2.0, 3.0, 4.0]);
+        assert_eq!(one(&a), 6.0); // col 1: |−2|+|4| = 6
+        assert_eq!(inf(&a), 7.0); // row 1: |3|+|4| = 7
+        assert_eq!(max_abs(&a), 4.0);
+        assert!((fro(&a) - (30.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_matches_largest_singular_value() {
+        let mut rng = crate::rngx::Rng::new(13);
+        let a = Matrix::from_fn(9, 6, |_, _| rng.normal());
+        let s = crate::linalg::svd::singular_values(&a);
+        assert!((spectral(&a, 200) - s[0]).abs() < 1e-6 * s[0]);
+    }
+
+    #[test]
+    fn norm_inequalities() {
+        // ‖A‖₂ ≤ sqrt(‖A‖₁‖A‖∞) — the bound behind the NS init
+        let mut rng = crate::rngx::Rng::new(19);
+        for _ in 0..5 {
+            let a = Matrix::from_fn(7, 7, |_, _| rng.normal());
+            let s2 = spectral(&a, 100);
+            assert!(s2 <= (one(&a) * inf(&a)).sqrt() + 1e-9);
+            assert!(s2 <= fro(&a) + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Pseudoinverse: exact (SVD-based) and iterative (paper sec 7 eq 11).
+//!
+//! The exact path is the analysis ground truth (tolerance-rank
+//! Moore-Penrose). The iterative path mirrors what the Pallas kernel and
+//! the AOT artifacts run: the 7th-order Newton-Schulz iteration
+//!
+//!   Z_{j+1} = ¼ Z_j (13I − A Z_j (15I − A Z_j (7I − A Z_j)))
+//!
+//! with Z₀ = Aᵀ/(‖A‖₁‖A‖∞), plus the cubic order-3 baseline for the
+//! E6 convergence bench.
+
+use super::matmul::matmul;
+use super::matrix::Matrix;
+use super::svd::svd;
+
+/// Moore-Penrose pseudoinverse with relative singular-value tolerance.
+pub fn pinv(a: &Matrix, rtol: f64) -> Matrix {
+    let d = svd(a);
+    let smax = d.s.first().copied().unwrap_or(0.0);
+    let tol = rtol * smax;
+    // A⁺ = V Σ⁺ Uᵀ
+    let k = d.s.len();
+    let mut v_sinv = d.vt.transpose(); // n×k
+    for j in 0..k {
+        let inv = if d.s[j] > tol && d.s[j] > 0.0 { 1.0 / d.s[j] } else { 0.0 };
+        for i in 0..v_sinv.rows() {
+            v_sinv[(i, j)] *= inv;
+        }
+    }
+    matmul(&v_sinv, &d.u.transpose())
+}
+
+/// ‖A‖₁ (max column abs sum).
+fn norm1(a: &Matrix) -> f64 {
+    let mut best: f64 = 0.0;
+    for j in 0..a.cols() {
+        let s: f64 = (0..a.rows()).map(|i| a[(i, j)].abs()).sum();
+        best = best.max(s);
+    }
+    best
+}
+
+/// ‖A‖∞ (max row abs sum).
+fn norm_inf(a: &Matrix) -> f64 {
+    a.data()
+        .chunks(a.cols())
+        .map(|r| r.iter().map(|x| x.abs()).sum::<f64>())
+        .fold(0.0, f64::max)
+}
+
+/// Z₀ = Aᵀ / (‖A‖₁‖A‖∞): satisfies the NS convergence precondition.
+pub fn ns_init(a: &Matrix) -> Matrix {
+    let denom = norm1(a) * norm_inf(a);
+    a.transpose().scale(1.0 / denom.max(f64::MIN_POSITIVE))
+}
+
+/// The paper's order-7 iteration (eq 11), `iters` steps.
+pub fn ns_pinv_ord7(a: &Matrix, iters: usize) -> Matrix {
+    let n = a.rows();
+    let eye = Matrix::eye(n);
+    let mut z = ns_init(a);
+    for _ in 0..iters {
+        let az = matmul(a, &z);
+        let inner1 = eye.scale(7.0).sub(&az);
+        let inner2 = eye.scale(15.0).sub(&matmul(&az, &inner1));
+        let inner3 = eye.scale(13.0).sub(&matmul(&az, &inner2));
+        z = matmul(&z, &inner3).scale(0.25);
+    }
+    z
+}
+
+/// Cubic order-3 Newton-Schulz baseline: Z ← Z(3I − AZ(3I − AZ)).
+pub fn ns_pinv_ord3(a: &Matrix, iters: usize) -> Matrix {
+    let n = a.rows();
+    let eye = Matrix::eye(n);
+    let mut z = ns_init(a);
+    for _ in 0..iters {
+        let az = matmul(a, &z);
+        let inner = eye.scale(3.0).sub(&az);
+        let inner2 = eye.scale(3.0).sub(&matmul(&az, &inner));
+        z = matmul(&z, &inner2);
+    }
+    z
+}
+
+/// Residual ‖AZ − I‖∞-max-entry — the convergence metric used by E6.
+pub fn ns_residual(a: &Matrix, z: &Matrix) -> f64 {
+    let az = matmul(a, z);
+    az.max_abs_diff(&Matrix::eye(a.rows()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn random_softmax_block(rng: &mut Rng, c: usize, d: usize) -> Matrix {
+        let q = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let k = Matrix::from_fn(c, d, |_, _| rng.normal());
+        let mut s = matmul(&q, &k.transpose()).scale(1.0 / (d as f64).sqrt());
+        crate::linalg::softmax::row_softmax_inplace(&mut s);
+        s
+    }
+
+    #[test]
+    fn pinv_of_invertible_is_inverse() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::from_fn(8, 8, |_, _| rng.normal())
+            .add_scaled_identity(5.0);
+        let p = pinv(&a, 1e-12);
+        let ap = matmul(&a, &p);
+        assert!(ap.max_abs_diff(&Matrix::eye(8)) < 1e-8);
+    }
+
+    #[test]
+    fn pinv_penrose_conditions_rank_deficient() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::from_fn(10, 3, |_, _| rng.normal());
+        let a = matmul(&b, &b.transpose()); // rank 3, 10x10
+        let p = pinv(&a, 1e-10);
+        // A P A = A ; P A P = P ; (AP)ᵀ = AP ; (PA)ᵀ = PA
+        let apa = matmul(&matmul(&a, &p), &a);
+        assert!(apa.max_abs_diff(&a) < 1e-7);
+        let pap = matmul(&matmul(&p, &a), &p);
+        assert!(pap.max_abs_diff(&p) < 1e-7);
+        let ap = matmul(&a, &p);
+        assert!(ap.max_abs_diff(&ap.transpose()) < 1e-8);
+    }
+
+    #[test]
+    fn ns_ord7_converges_to_inverse() {
+        let mut rng = Rng::new(3);
+        let a = random_softmax_block(&mut rng, 16, 32)
+            .add_scaled_identity(0.5);
+        let z = ns_pinv_ord7(&a, 8);
+        assert!(ns_residual(&a, &z) < 1e-10, "{}", ns_residual(&a, &z));
+    }
+
+    #[test]
+    fn ns_ord7_on_softmax_block() {
+        let mut rng = Rng::new(4);
+        let a = random_softmax_block(&mut rng, 24, 16);
+        let z = ns_pinv_ord7(&a, 25);
+        assert!(ns_residual(&a, &z) < 1e-6, "{}", ns_residual(&a, &z));
+    }
+
+    #[test]
+    fn ord7_beats_ord3_at_equal_iters() {
+        let mut rng = Rng::new(5);
+        let a = random_softmax_block(&mut rng, 16, 16)
+            .add_scaled_identity(0.2);
+        let r7 = ns_residual(&a, &ns_pinv_ord7(&a, 5));
+        let r3 = ns_residual(&a, &ns_pinv_ord3(&a, 5));
+        assert!(r7 < r3, "r7={r7} r3={r3}");
+    }
+
+    #[test]
+    fn ns_matches_exact_pinv_well_conditioned() {
+        let mut rng = Rng::new(6);
+        let a = random_softmax_block(&mut rng, 12, 8)
+            .add_scaled_identity(1.0);
+        let z = ns_pinv_ord7(&a, 10);
+        let p = pinv(&a, 1e-13);
+        assert!(z.max_abs_diff(&p) < 1e-9);
+    }
+
+    #[test]
+    fn ns_init_precondition() {
+        // spectral radius of (I - A Z0) must be < 1 for convergence;
+        // check via ‖I − AZ₀‖₂ ≤ fro norm proxy on several random blocks
+        let mut rng = Rng::new(7);
+        for c in [4usize, 8, 20] {
+            let a = random_softmax_block(&mut rng, c, 8);
+            let z0 = ns_init(&a);
+            let r = matmul(&a, &z0);
+            let sing = crate::linalg::svd::singular_values(
+                &Matrix::eye(c).sub(&r));
+            assert!(sing[0] < 1.0 + 1e-12, "sigma_max={}", sing[0]);
+        }
+    }
+}

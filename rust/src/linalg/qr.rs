@@ -1,0 +1,134 @@
+//! Householder QR — used for generating random orthonormal bases in the
+//! SPSD matrix generators (spiked-spectrum test matrices) and for rank
+//! computations on tall factors.
+
+use super::matrix::Matrix;
+
+/// Thin QR: a (m×n, m ≥ n) = q (m×n, orthonormal cols) · r (n×n upper).
+pub struct Qr {
+    pub q: Matrix,
+    pub r: Matrix,
+}
+
+/// Householder QR with column-by-column reflectors.
+pub fn qr(a: &Matrix) -> Qr {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "qr expects tall/square input, got {m}x{n}");
+    let mut r = a.clone();
+    // store reflectors
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // build reflector for column k below the diagonal
+        let mut v = vec![0.0; m - k];
+        let mut norm = 0.0;
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+            norm += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm.sqrt();
+        if norm < f64::MIN_POSITIVE {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if v[0] >= 0.0 { -norm } else { norm };
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > f64::MIN_POSITIVE {
+            // apply H = I − 2vvᵀ/‖v‖² to R[k.., k..]
+            for j in k..n {
+                let mut dotv = 0.0;
+                for i in k..m {
+                    dotv += v[i - k] * r[(i, j)];
+                }
+                let s = 2.0 * dotv / vnorm2;
+                for i in k..m {
+                    r[(i, j)] -= s * v[i - k];
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // form thin Q by applying reflectors to the first n identity columns
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < f64::MIN_POSITIVE {
+            continue;
+        }
+        for j in 0..n {
+            let mut dotv = 0.0;
+            for i in k..m {
+                dotv += v[i - k] * q[(i, j)];
+            }
+            let s = 2.0 * dotv / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= s * v[i - k];
+            }
+        }
+    }
+
+    // truncate R to n×n upper triangle
+    let mut rn = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rn[(i, j)] = r[(i, j)];
+        }
+    }
+    Qr { q, r: rn }
+}
+
+/// Random matrix with orthonormal columns (Haar-ish via QR of Gaussian).
+pub fn random_orthonormal(rng: &mut crate::rngx::Rng, m: usize, n: usize) -> Matrix {
+    let g = Matrix::from_fn(m, n, |_, _| rng.normal());
+    qr(&g).q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = crate::rngx::Rng::new(3);
+        let a = Matrix::from_fn(10, 6, |_, _| rng.normal());
+        let d = qr(&a);
+        let back = matmul(&d.q, &d.r);
+        assert!(a.max_abs_diff(&back) < 1e-10);
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = crate::rngx::Rng::new(4);
+        let a = Matrix::from_fn(12, 5, |_, _| rng.normal());
+        let d = qr(&a);
+        let qtq = matmul(&d.q.transpose(), &d.q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(5)) < 1e-10);
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = crate::rngx::Rng::new(5);
+        let a = Matrix::from_fn(8, 8, |_, _| rng.normal());
+        let d = qr(&a);
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(d.r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthonormal_has_unit_columns() {
+        let mut rng = crate::rngx::Rng::new(6);
+        let q = random_orthonormal(&mut rng, 20, 8);
+        let qtq = matmul(&q.transpose(), &q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(8)) < 1e-10);
+    }
+}

@@ -1,0 +1,91 @@
+//! Row-wise softmax — the `L(·)` operator of the paper.
+
+use super::matrix::Matrix;
+
+/// Numerically-stable row softmax, in place.
+pub fn row_softmax_inplace(a: &mut Matrix) {
+    let cols = a.cols();
+    for i in 0..a.rows() {
+        let row = a.row_mut(i);
+        let m = row.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        debug_assert!(sum > 0.0);
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    let _ = cols;
+}
+
+/// Row softmax, returning a new matrix.
+pub fn row_softmax(a: &Matrix) -> Matrix {
+    let mut out = a.clone();
+    row_softmax_inplace(&mut out);
+    out
+}
+
+/// f32 row softmax over a flat row-major buffer (serving fast path).
+pub fn row_softmax_f32(data: &mut [f32], rows: usize, cols: usize) {
+    debug_assert_eq!(data.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut data[r * cols..(r + 1) * cols];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let mut rng = crate::rngx::Rng::new(1);
+        let a = Matrix::from_fn(6, 9, |_, _| rng.normal() * 3.0);
+        let s = row_softmax(&a);
+        for i in 0..6 {
+            let sum: f64 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            assert!(s.row(i).iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn stable_under_large_logits() {
+        let a = Matrix::from_vec(1, 3, vec![1000.0, 1001.0, 999.0]);
+        let s = row_softmax(&a);
+        assert!(s.data().iter().all(|x| x.is_finite()));
+        assert!(s[(0, 1)] > s[(0, 0)] && s[(0, 0)] > s[(0, 2)]);
+    }
+
+    #[test]
+    fn shift_invariance() {
+        let a = Matrix::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.4]);
+        let b = a.map(|x| x + 100.0);
+        assert!(row_softmax(&a).max_abs_diff(&row_softmax(&b)) < 1e-12);
+    }
+
+    #[test]
+    fn f32_matches_f64() {
+        let mut rng = crate::rngx::Rng::new(2);
+        let a = Matrix::from_fn(4, 5, |_, _| rng.normal());
+        let mut f = a.to_f32();
+        row_softmax_f32(&mut f, 4, 5);
+        let want = row_softmax(&a);
+        for (x, y) in f.iter().zip(want.data()) {
+            assert!((*x as f64 - y).abs() < 1e-6);
+        }
+    }
+}

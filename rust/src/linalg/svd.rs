@@ -1,0 +1,191 @@
+//! Singular value decomposition via one-sided Jacobi (Hestenes).
+//!
+//! Numerically robust for the small/medium matrices this crate analyses
+//! (landmark blocks c ≤ 256, attention matrices n ≤ a few thousand for
+//! the Figure-2 study). Returns the thin SVD A = U Σ Vᵀ with singular
+//! values sorted descending.
+
+use super::matrix::Matrix;
+
+/// Thin SVD: `a == u · diag(s) · vt` with u: m×k, s: k, vt: k×n, k=min(m,n).
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f64>,
+    pub vt: Matrix,
+}
+
+/// One-sided Jacobi SVD. For m < n the decomposition is computed on Aᵀ
+/// and swapped back.
+pub fn svd(a: &Matrix) -> Svd {
+    if a.rows() < a.cols() {
+        let t = svd(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+    let m = a.rows();
+    let n = a.cols();
+    // Work on columns of W (copy of A); V accumulates right rotations.
+    let mut w = a.clone();
+    let mut v = Matrix::eye(n);
+
+    let eps = 1e-13;
+    for _sweep in 0..60 {
+        let mut converged = true;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // column dot products
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let wip = w[(i, p)];
+                    let wiq = w[(i, q)];
+                    app += wip * wip;
+                    aqq += wiq * wiq;
+                    apq += wip * wiq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() + f64::MIN_POSITIVE {
+                    continue;
+                }
+                converged = false;
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let wip = w[(i, p)];
+                    let wiq = w[(i, q)];
+                    w[(i, p)] = c * wip - s * wiq;
+                    w[(i, q)] = s * wip + c * wiq;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+        if converged {
+            break;
+        }
+    }
+
+    // singular values = column norms of W; U = W normalized
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut vt = Matrix::zeros(n, n);
+    let mut s_sorted = vec![0.0; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sv = s[old_j];
+        s_sorted[new_j] = sv;
+        if sv > f64::MIN_POSITIVE {
+            for i in 0..m {
+                u[(i, new_j)] = w[(i, old_j)] / sv;
+            }
+        }
+        for i in 0..n {
+            vt[(new_j, i)] = v[(i, old_j)];
+        }
+    }
+    s = s_sorted;
+    Svd { u, s, vt }
+}
+
+/// Singular values only, descending.
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    svd(a).s
+}
+
+/// Numerical rank: #{σ_i > rtol · σ_max}.
+pub fn numerical_rank(a: &Matrix, rtol: f64) -> usize {
+    let s = singular_values(a);
+    match s.first() {
+        None => 0,
+        Some(&smax) if smax <= 0.0 => 0,
+        Some(&smax) => s.iter().filter(|&&x| x > rtol * smax).count(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+
+    fn reconstruct(d: &Svd) -> Matrix {
+        let k = d.s.len();
+        let mut us = d.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..k {
+                us[(i, j)] *= d.s[j];
+            }
+        }
+        matmul(&us, &d.vt)
+    }
+
+    #[test]
+    fn diagonal_known_singulars() {
+        let a = Matrix::diag(&[-4.0, 2.0, 1.0]);
+        let s = singular_values(&a);
+        assert!((s[0] - 4.0).abs() < 1e-10);
+        assert!((s[1] - 2.0).abs() < 1e-10);
+        assert!((s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstruction_square() {
+        let mut rng = crate::rngx::Rng::new(17);
+        let a = Matrix::from_fn(12, 12, |_, _| rng.normal());
+        let d = svd(&a);
+        assert!(a.max_abs_diff(&reconstruct(&d)) < 1e-9);
+    }
+
+    #[test]
+    fn reconstruction_tall_and_wide() {
+        let mut rng = crate::rngx::Rng::new(23);
+        let tall = Matrix::from_fn(15, 6, |_, _| rng.normal());
+        let d = svd(&tall);
+        assert!(tall.max_abs_diff(&reconstruct(&d)) < 1e-9);
+        let wide = Matrix::from_fn(5, 11, |_, _| rng.normal());
+        let d2 = svd(&wide);
+        assert!(wide.max_abs_diff(&reconstruct(&d2)) < 1e-9);
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = crate::rngx::Rng::new(31);
+        let a = Matrix::from_fn(10, 7, |_, _| rng.normal());
+        let d = svd(&a);
+        let utu = matmul(&d.u.transpose(), &d.u);
+        assert!(utu.max_abs_diff(&Matrix::eye(7)) < 1e-9);
+        let vvt = matmul(&d.vt, &d.vt.transpose());
+        assert!(vvt.max_abs_diff(&Matrix::eye(7)) < 1e-9);
+    }
+
+    #[test]
+    fn rank_detection() {
+        // rank-2 outer product matrix (columns must be independent:
+        // one linear in i, one quadratic)
+        let u = Matrix::from_fn(8, 2, |i, j| {
+            if j == 0 { (i + 1) as f64 } else { (i * i) as f64 + 1.0 }
+        });
+        let a = matmul(&u, &u.transpose());
+        assert_eq!(numerical_rank(&a, 1e-9), 2);
+        assert_eq!(numerical_rank(&Matrix::zeros(4, 4), 1e-9), 0);
+        assert_eq!(numerical_rank(&Matrix::eye(5), 1e-9), 5);
+    }
+
+    #[test]
+    fn singulars_match_eigen_of_gram() {
+        let mut rng = crate::rngx::Rng::new(41);
+        let a = Matrix::from_fn(9, 9, |_, _| rng.normal());
+        let s = singular_values(&a);
+        let g = matmul(&a.transpose(), &a).symmetrize();
+        let ev = crate::linalg::eigen::sym_eigenvalues(&g, 1e-13);
+        for (si, li) in s.iter().zip(&ev) {
+            assert!((si * si - li).abs() < 1e-7, "{si} vs sqrt({li})");
+        }
+    }
+}

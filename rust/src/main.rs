@@ -1,0 +1,212 @@
+//! ssaformer CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve    [--config FILE] [--variant V] [--addr A]   start the TCP server
+//!   train    [--variant V] [--steps N] [--seed S]       run MLM training
+//!   info     [--artifacts DIR]                          inspect artifacts
+//!   spectrum [--n N] [--c C]                            Figure-2 quick look
+//!
+//! (hand-rolled arg parsing: the crate cache has no clap.)
+
+use ssaformer::config::{Config, ServingConfig, Variant};
+use ssaformer::coordinator::Coordinator;
+use ssaformer::runtime::Engine;
+use ssaformer::train::{train, TrainConfig};
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let code = match cmd {
+        "serve" => cmd_serve(&flags),
+        "train" => cmd_train(&flags),
+        "info" => cmd_info(&flags),
+        "spectrum" => cmd_spectrum(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{}", USAGE);
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+ssaformer — spectral-shifting attention serving/training stack
+
+USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
+
+  serve    --config FILE | --variant full|nystrom|ss --addr HOST:PORT
+           --artifacts DIR --max-batch N --max-wait-ms MS
+  train    --variant full|ss --steps N --seed S --artifacts DIR
+  info     --artifacts DIR
+  spectrum --n N --c C  (pure-rust Figure-2 analysis; no artifacts needed)
+";
+
+fn parse_flags(args: &[String]) -> std::collections::HashMap<String, String> {
+    let mut out = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+type Flags = std::collections::HashMap<String, String>;
+
+fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        let parsed = Config::from_file(path).map_err(|e| e.to_string())?;
+        ServingConfig::from_config(&parsed).map_err(|e| e.to_string())?
+    } else {
+        ServingConfig::default()
+    };
+    if let Some(v) = flags.get("variant") {
+        cfg.variant = Variant::parse(v).ok_or(format!("bad variant {v:?}"))?;
+    }
+    if let Some(a) = flags.get("addr") {
+        cfg.bind_addr = a.clone();
+    }
+    if let Some(d) = flags.get("artifacts") {
+        cfg.artifacts_dir = d.clone();
+    }
+    if let Some(b) = flags.get("max-batch") {
+        cfg.max_batch = b.parse().map_err(|_| "bad max-batch")?;
+    }
+    if let Some(w) = flags.get("max-wait-ms") {
+        cfg.max_wait_ms = w.parse().map_err(|_| "bad max-wait-ms")?;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn cmd_serve(flags: &Flags) -> i32 {
+    let cfg = match serving_config(flags) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    println!("loading artifacts from {} ...", cfg.artifacts_dir);
+    let engine = match Engine::new(&cfg.artifacts_dir) {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            eprintln!("engine: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("platform: {}", engine.platform());
+    let coordinator = match Coordinator::start(engine, &cfg) {
+        Ok(c) => Arc::new(c),
+        Err(e) => {
+            eprintln!("coordinator: {e}");
+            return 1;
+        }
+    };
+    match ssaformer::server::serve(coordinator, &cfg.bind_addr, 8) {
+        Ok((addr, _handle)) => {
+            println!("serving {} attention on {addr}", cfg.variant.token());
+            println!("protocol: ENCODE <id> <tok...> | STATS | QUIT");
+            // block forever (ctrl-c to stop)
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {}: {e}", cfg.bind_addr);
+            1
+        }
+    }
+}
+
+fn cmd_train(flags: &Flags) -> i32 {
+    let dir = flags.get("artifacts").map(|s| s.as_str()).unwrap_or("artifacts");
+    let variant = flags
+        .get("variant")
+        .map(|v| Variant::parse(v).expect("bad variant"))
+        .unwrap_or(Variant::SpectralShift);
+    let steps: usize = flags
+        .get("steps")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let seed: u64 = flags.get("seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let engine = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let cfg = TrainConfig { variant, steps, seed, ..Default::default() };
+    println!("training {} for {} steps ...", variant.token(), steps);
+    match train(&engine, &cfg) {
+        Ok(report) => {
+            print!("{}", report.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("train: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info(flags: &Flags) -> i32 {
+    let dir = flags.get("artifacts").map(|s| s.as_str()).unwrap_or("artifacts");
+    match ssaformer::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts dir : {}", m.dir.display());
+            println!("param_count   : {}", m.param_count);
+            for (k, v) in &m.hyper {
+                println!("{k:14}: {v}");
+            }
+            println!("artifacts     :");
+            for a in &m.artifacts {
+                println!("  {:?} {} n={} b={} -> {}", a.kind, a.variant.token(),
+                         a.seq, a.batch, a.file);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("manifest: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_spectrum(flags: &Flags) -> i32 {
+    use ssaformer::attention::spectral_shift::{
+        spectral_shift_matrix_exact, MiddleForm,
+    };
+    use ssaformer::attention::{full::attention_matrix, Tensor2};
+    use ssaformer::spectral::SpectrumComparison;
+    let n: usize = flags.get("n").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let c: usize = flags.get("c").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let mut rng = ssaformer::rngx::Rng::new(0);
+    let q = Tensor2::randn(&mut rng, n, 64, 1.0);
+    let k = Tensor2::randn(&mut rng, n, 64, 1.0);
+    let s_true = attention_matrix(&q, &k, None);
+    let (s_apx, delta) = spectral_shift_matrix_exact(
+        &q, &k, c, 1e-2, MiddleForm::Eq8, true, None);
+    let cmp = SpectrumComparison::new(&s_true, &s_apx);
+    println!("n={n} c={c} delta={delta:.5}");
+    println!("idx  cum_true  cum_approx");
+    for (i, t, a) in cmp.cumulative_series(16) {
+        println!("{i:4}  {t:.4}    {a:.4}");
+    }
+    println!("effective rank: true={:.1} approx={:.1}",
+             cmp.true_spectrum.effective_rank(),
+             cmp.approx_spectrum.effective_rank());
+    0
+}

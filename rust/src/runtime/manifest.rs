@@ -1,0 +1,296 @@
+//! Artifact-manifest parser: reads `artifacts/manifest.txt` written by
+//! `python/compile/aot.py` and exposes typed metadata the router and
+//! training driver need (artifact index, model hyperparameters,
+//! parameter layout).
+
+use crate::config::Variant;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Kind of AOT artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Encode,
+    TrainStep,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "encode" => Some(ArtifactKind::Encode),
+            "train_step" => Some(ArtifactKind::TrainStep),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    pub variant: Variant,
+    pub seq: usize,
+    pub batch: usize,
+    pub file: String,
+}
+
+/// One named parameter region of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub param_count: usize,
+    /// model hyperparameters (vocab, d_model, n_heads, n_layers, d_ff,
+    /// landmarks, pinv_iters) by name
+    pub hyper: HashMap<String, i64>,
+    pub lr: f64,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub params: Vec<ParamEntry>,
+}
+
+/// Manifest loading errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest line {0}: {1}")]
+    Parse(usize, String),
+    #[error("manifest missing field {0}")]
+    Missing(&'static str),
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir recorded for artifact path resolution).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
+        let mut param_count = None;
+        let mut hyper = HashMap::new();
+        let mut lr = 1e-3;
+        let mut artifacts = Vec::new();
+        let mut params = Vec::new();
+
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("artifact ") {
+                let kv = parse_kv(rest);
+                let get = |k: &str| -> Result<&str, ManifestError> {
+                    kv.get(k).map(|s| *s).ok_or_else(|| {
+                        ManifestError::Parse(no + 1, format!("artifact missing {k}"))
+                    })
+                };
+                let kind = ArtifactKind::parse(get("kind")?).ok_or_else(|| {
+                    ManifestError::Parse(no + 1, "bad artifact kind".into())
+                })?;
+                let variant = Variant::parse(get("variant")?).ok_or_else(|| {
+                    ManifestError::Parse(no + 1, "bad variant".into())
+                })?;
+                artifacts.push(ArtifactEntry {
+                    kind,
+                    variant,
+                    seq: parse_usize(get("seq")?, no)?,
+                    batch: parse_usize(get("batch")?, no)?,
+                    file: get("file")?.to_string(),
+                });
+            } else if let Some(rest) = line.strip_prefix("param ") {
+                // "param <name> offset=<o> shape=<a>x<b>"
+                let mut it = rest.split_whitespace();
+                let name = it.next().ok_or_else(|| {
+                    ManifestError::Parse(no + 1, "param missing name".into())
+                })?;
+                let kv = parse_kv(&rest[name.len()..]);
+                let offset = parse_usize(
+                    kv.get("offset").copied().unwrap_or(""), no)?;
+                let shape: Vec<usize> = kv
+                    .get("shape")
+                    .copied()
+                    .unwrap_or("")
+                    .split('x')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| parse_usize(s, no))
+                    .collect::<Result<_, _>>()?;
+                params.push(ParamEntry { name: name.to_string(), offset, shape });
+            } else if let Some(eq) = line.find('=') {
+                let key = &line[..eq];
+                let val = &line[eq + 1..];
+                match key {
+                    "param_count" => param_count = Some(parse_usize(val, no)?),
+                    "lr" => {
+                        lr = val.parse().map_err(|_| {
+                            ManifestError::Parse(no + 1, "bad lr".into())
+                        })?
+                    }
+                    _ => {
+                        if let Ok(v) = val.parse::<i64>() {
+                            hyper.insert(key.to_string(), v);
+                        }
+                    }
+                }
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            param_count: param_count.ok_or(ManifestError::Missing("param_count"))?,
+            hyper,
+            lr,
+            artifacts,
+            params,
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Find an artifact by (kind, variant, seq).
+    pub fn find(&self, kind: ArtifactKind, variant: Variant, seq: usize)
+                -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.variant == variant && a.seq == seq)
+    }
+
+    /// All encode seq buckets available for a variant (ascending).
+    pub fn encode_buckets(&self, variant: Variant) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Encode && a.variant == variant)
+            .map(|a| a.seq)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Path of the initial-parameters binary.
+    pub fn init_params_path(&self) -> PathBuf {
+        self.dir.join("init_params.bin")
+    }
+
+    /// Validate the parameter layout is contiguous and sums to
+    /// param_count.
+    pub fn validate_layout(&self) -> Result<(), ManifestError> {
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                return Err(ManifestError::Parse(
+                    0,
+                    format!("param {} offset {} != expected {off}", p.name, p.offset),
+                ));
+            }
+            off += p.size();
+        }
+        if off != self.param_count {
+            return Err(ManifestError::Parse(
+                0,
+                format!("layout sums to {off}, param_count {}", self.param_count),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn parse_kv(s: &str) -> HashMap<&str, &str> {
+    s.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .collect()
+}
+
+fn parse_usize(s: &str, line: usize) -> Result<usize, ManifestError> {
+    s.parse()
+        .map_err(|_| ManifestError::Parse(line + 1, format!("bad number {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# ssaformer artifact manifest
+vocab=2048
+d_model=256
+param_count=100
+lr=0.001
+artifact kind=encode variant=ss seq=128 batch=4 file=encode_ss_n128_b4.hlo.txt inputs=x outputs=y
+artifact kind=encode variant=ss seq=256 batch=4 file=encode_ss_n256_b4.hlo.txt inputs=x outputs=y
+artifact kind=train_step variant=full seq=128 batch=8 file=train_step_full.hlo.txt inputs=x outputs=y
+param embed offset=0 shape=10x8
+param pos offset=80 shape=20x1
+";
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_scalars_and_hyper() {
+        let m = sample();
+        assert_eq!(m.param_count, 100);
+        assert_eq!(m.lr, 0.001);
+        assert_eq!(m.hyper["vocab"], 2048);
+        assert_eq!(m.hyper["d_model"], 256);
+    }
+
+    #[test]
+    fn parses_artifacts_and_lookup() {
+        let m = sample();
+        assert_eq!(m.artifacts.len(), 3);
+        let e = m.find(ArtifactKind::Encode, Variant::SpectralShift, 256).unwrap();
+        assert_eq!(e.batch, 4);
+        assert!(m.find(ArtifactKind::Encode, Variant::Full, 128).is_none());
+        assert_eq!(m.encode_buckets(Variant::SpectralShift), vec![128, 256]);
+        assert_eq!(m.path_of(e), PathBuf::from("/tmp/artifacts/encode_ss_n256_b4.hlo.txt"));
+    }
+
+    #[test]
+    fn parses_param_layout_and_validates() {
+        let m = sample();
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].size(), 80);
+        assert!(m.validate_layout().is_ok());
+    }
+
+    #[test]
+    fn layout_validation_catches_gaps() {
+        let bad = SAMPLE.replace("offset=80", "offset=81");
+        let m = Manifest::parse(&bad, PathBuf::new()).unwrap();
+        assert!(m.validate_layout().is_err());
+    }
+
+    #[test]
+    fn missing_param_count_is_error() {
+        let bad = SAMPLE.replace("param_count=100", "");
+        assert!(matches!(Manifest::parse(&bad, PathBuf::new()),
+                         Err(ManifestError::Missing("param_count"))));
+    }
+
+    #[test]
+    fn bad_lines_error_with_lineno() {
+        let bad = "param_count=10\nartifact kind=encode variant=zzz seq=1 batch=1 file=f";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! PJRT runtime (S13): loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and executes them from the serving/training hot
+//! path. Python never runs here — the artifacts are self-contained.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥
+//! 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §3).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, ArtifactKind, Manifest, ManifestError, ParamEntry};
+
+use crate::config::Variant;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("manifest: {0}")]
+    Manifest(#[from] ManifestError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("artifact not found: {0}")]
+    NotFound(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// The PJRT engine: one CPU client + a compiled-executable cache.
+///
+/// Thread-safety: the underlying PJRT CPU client serializes compute;
+/// the cache map is mutex-guarded. `Engine` is `Send + Sync` and meant
+/// to sit in an `Arc` shared by coordinator workers.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedModel>>>,
+}
+
+// xla::PjRtClient wraps a thread-safe C++ client; the raw pointer makes
+// the rust type !Send/!Sync by default.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// A compiled artifact plus its metadata.
+pub struct LoadedModel {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+unsafe impl Send for LoadedModel {}
+unsafe impl Sync for LoadedModel {}
+
+impl Engine {
+    /// Create the CPU PJRT client and load the manifest from `dir`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        manifest.validate_layout()?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by file name).
+    pub fn load(&self, kind: ArtifactKind, variant: Variant, seq: usize)
+                -> Result<std::sync::Arc<LoadedModel>> {
+        let entry = self
+            .manifest
+            .find(kind, variant, seq)
+            .ok_or_else(|| RuntimeError::NotFound(format!(
+                "{kind:?}/{}/n={seq}", variant.token())))?
+            .clone();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(m) = cache.get(&entry.file) {
+                return Ok(m.clone());
+            }
+        }
+        let path = self.manifest.path_of(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError::NotFound(
+                path.display().to_string()))?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let model = std::sync::Arc::new(LoadedModel { entry, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(model.entry.file.clone(), model.clone());
+        Ok(model)
+    }
+
+    /// Eagerly compile every encode artifact for `variant` (warmup).
+    pub fn warmup(&self, variant: Variant) -> Result<Vec<usize>> {
+        let buckets = self.manifest.encode_buckets(variant);
+        for &seq in &buckets {
+            self.load(ArtifactKind::Encode, variant, seq)?;
+        }
+        Ok(buckets)
+    }
+
+    /// Read the initial flat parameter vector from the artifacts dir.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.manifest.init_params_path())?;
+        if bytes.len() != 4 * self.manifest.param_count {
+            return Err(RuntimeError::Shape(format!(
+                "init_params.bin has {} bytes, expected {}",
+                bytes.len(), 4 * self.manifest.param_count)));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Host→device transfer of an f32 tensor.
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host→device transfer of an i32 tensor.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+impl LoadedModel {
+    /// Execute with device-resident buffers (no host copies for inputs).
+    /// The artifact returns one tuple; this decomposes it.
+    pub fn execute_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self.exe.execute_b(args)?;
+        let mut lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+
+    /// Execute with device buffers but keep outputs on device.
+    /// Returns the raw tuple buffer(s) of replica 0.
+    pub fn execute_buffers_on_device(&self, args: &[&xla::PjRtBuffer])
+                                     -> Result<Vec<xla::PjRtBuffer>> {
+        let mut outs = self.exe.execute_b(args)?;
+        Ok(outs.remove(0))
+    }
+
+    /// Encode entry point: tokens (batch×seq, row-major i32) -> pooled
+    /// embeddings (batch × d_model, flattened f32).
+    pub fn encode(&self, engine: &Engine, params: &xla::PjRtBuffer,
+                  tokens: &[i32]) -> Result<Vec<f32>> {
+        let b = self.entry.batch;
+        let n = self.entry.seq;
+        if tokens.len() != b * n {
+            return Err(RuntimeError::Shape(format!(
+                "tokens len {} != batch {b} × seq {n}", tokens.len())));
+        }
+        let tok = engine.buffer_i32(tokens, &[b, n])?;
+        let outs = self.execute_buffers(&[params, &tok])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+/// Device-resident training state (params + Adam moments), updated
+/// in place each step by re-binding to the step's output buffers.
+pub struct TrainState {
+    pub params: xla::PjRtBuffer,
+    pub m: xla::PjRtBuffer,
+    pub v: xla::PjRtBuffer,
+    pub step: u64,
+}
+
+unsafe impl Send for TrainState {}
+
+impl TrainState {
+    /// Fresh state from the manifest's initial parameters.
+    pub fn init(engine: &Engine) -> Result<TrainState> {
+        let p = engine.init_params()?;
+        let zeros = vec![0.0f32; p.len()];
+        Ok(TrainState {
+            params: engine.buffer_f32(&p, &[p.len()])?,
+            m: engine.buffer_f32(&zeros, &[zeros.len()])?,
+            v: engine.buffer_f32(&zeros, &[zeros.len()])?,
+            step: 0,
+        })
+    }
+
+    /// Run one train step artifact; returns the loss. Device buffers for
+    /// params/m/v are swapped to the step outputs (no host round-trip).
+    pub fn step(&mut self, engine: &Engine, model: &LoadedModel,
+                tokens: &[i32], targets: &[i32], loss_mask: &[f32])
+                -> Result<f32> {
+        let b = model.entry.batch;
+        let n = model.entry.seq;
+        if tokens.len() != b * n || targets.len() != b * n
+            || loss_mask.len() != b * n {
+            return Err(RuntimeError::Shape(format!(
+                "batch tensors must be {b}×{n}")));
+        }
+        self.step += 1;
+        let step_lit = engine.buffer_f32(&[self.step as f32], &[])?;
+        let tok = engine.buffer_i32(tokens, &[b, n])?;
+        let tgt = engine.buffer_i32(targets, &[b, n])?;
+        let msk = engine.buffer_f32(loss_mask, &[b, n])?;
+        let outs = model.execute_buffers_on_device(&[
+            &self.params, &self.m, &self.v, &step_lit, &tok, &tgt, &msk,
+        ])?;
+        // outputs: tuple(params', m', v', loss) — returned as one tuple
+        // buffer; bring it to host only for the scalar loss, keep the
+        // big tensors by decomposing on device when supported. The CPU
+        // plugin returns the tuple as a single buffer, so decompose via
+        // literal for the scalar and re-upload? No: PJRT CPU untuples
+        // into multiple buffers already (outs.len() == 4).
+        if outs.len() == 4 {
+            let loss = outs[3].to_literal_sync()?.to_vec::<f32>()?[0];
+            // re-bind state to the new device buffers — zero-copy chain
+            let mut it = outs.into_iter();
+            self.params = it.next().unwrap();
+            self.m = it.next().unwrap();
+            self.v = it.next().unwrap();
+            Ok(loss)
+        } else {
+            // single tuple buffer fallback: host round-trip
+            let mut lit = outs[0].to_literal_sync()?;
+            let parts = lit.decompose_tuple()?;
+            let loss = parts[3].to_vec::<f32>()?[0];
+            let pvec = parts[0].to_vec::<f32>()?;
+            let mvec = parts[1].to_vec::<f32>()?;
+            let vvec = parts[2].to_vec::<f32>()?;
+            self.params = engine.buffer_f32(&pvec, &[pvec.len()])?;
+            self.m = engine.buffer_f32(&mvec, &[mvec.len()])?;
+            self.v = engine.buffer_f32(&vvec, &[vvec.len()])?;
+            Ok(loss)
+        }
+    }
+
+    /// Download current parameters to host (checkpointing).
+    pub fn params_to_host(&self) -> Result<Vec<f32>> {
+        Ok(self.params.to_literal_sync()?.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests need built artifacts; they are exercised end-to-end
+    //! by `rust/tests/integration_runtime.rs` (skipped gracefully when
+    //! artifacts/ is absent). Manifest parsing is covered in
+    //! `manifest.rs`.
+
+    use super::*;
+
+    #[test]
+    fn runtime_error_display() {
+        let e = RuntimeError::NotFound("encode/ss/n=64".into());
+        assert!(e.to_string().contains("encode/ss"));
+        let e = RuntimeError::Shape("bad".into());
+        assert!(e.to_string().contains("bad"));
+    }
+}

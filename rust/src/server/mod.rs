@@ -1,0 +1,225 @@
+//! TCP line-protocol server + client (S16).
+//!
+//! Protocol (newline-delimited, ASCII):
+//!   request:  `ENCODE <id> <tok1> <tok2> ...\n`
+//!             `STATS\n`            — metrics report
+//!             `QUIT\n`             — close this connection
+//!   response: `OK <id> <f1> <f2> ... <f8>\n`  (first 8 embedding dims)
+//!             `ERR <id> <message-with-dashes>\n`
+//!             multi-line report terminated by `.` for STATS
+//!
+//! Deliberately minimal — the protocol exists so the serving stack can
+//! be exercised end-to-end over a real socket (examples/serve_attention
+//! + the E8 bench drive it).
+
+use crate::coordinator::{Coordinator, SubmitError};
+use crate::minirt::ThreadPool;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Serve until `coordinator` shuts down or the listener errors.
+/// Returns the bound address (useful with port 0).
+pub fn serve(coordinator: Arc<Coordinator>, bind: &str, pool_size: usize)
+             -> std::io::Result<(std::net::SocketAddr, ServerHandle)> {
+    let listener = TcpListener::bind(bind)?;
+    let addr = listener.local_addr()?;
+    let stop = crate::minirt::CancelToken::new();
+    let accept_stop = stop.clone();
+    let handle_thread = std::thread::Builder::new()
+        .name("ssaformer-acceptor".into())
+        .spawn(move || {
+            let pool = ThreadPool::new(pool_size);
+            listener
+                .set_nonblocking(false)
+                .expect("listener blocking mode");
+            // accept loop with a poll-ish stop check via timeout
+            listener.set_nonblocking(true).ok();
+            loop {
+                if accept_stop.is_cancelled() {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let c = coordinator.clone();
+                        let stop = accept_stop.clone();
+                        pool.execute(move || handle_conn(stream, &c, &stop));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            pool.shutdown();
+        })?;
+    Ok((addr, ServerHandle { stop, thread: Some(handle_thread) }))
+}
+
+/// Handle to stop the acceptor loop.
+pub struct ServerHandle {
+    stop: crate::minirt::CancelToken,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.cancel();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.cancel();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coordinator: &Coordinator,
+               stop: &crate::minirt::CancelToken) {
+    let peer = stream.peer_addr().ok();
+    // Read timeout so handler threads can observe shutdown instead of
+    // blocking forever on an idle connection (ServerHandle::stop joins
+    // the pool — without this, a connected-but-quiet client deadlocks
+    // shutdown).
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    // NOTE: `line` is NOT cleared on timeout — read_line may have
+    // appended a partial line before the timeout fired and the rest
+    // arrives on the next read.
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut => {
+                if stop.is_cancelled() {
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+            Ok(_) if !line.ends_with('\n') => continue, // partial line
+            Ok(_) => {}
+        }
+        let trimmed = line.trim().to_string();
+        line.clear();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = dispatch(&trimmed, coordinator);
+        if writer.write_all(reply.as_bytes()).is_err() {
+            break;
+        }
+        if trimmed == "QUIT" {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Parse + execute one protocol line (pure w.r.t. the socket; separately
+/// unit-tested).
+pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
+    let mut parts = line.split_whitespace();
+    match parts.next() {
+        Some("ENCODE") => {
+            let Some(id) = parts.next().and_then(|s| s.parse::<u64>().ok()) else {
+                return "ERR 0 bad-id\n".into();
+            };
+            let tokens: Vec<i32> = parts.filter_map(|t| t.parse().ok()).collect();
+            match coordinator.submit_blocking(tokens) {
+                Ok(resp) => match resp.embedding {
+                    Ok(emb) => {
+                        let head: Vec<String> = emb
+                            .iter()
+                            .take(8)
+                            .map(|x| format!("{x:.5}"))
+                            .collect();
+                        format!("OK {id} {}\n", head.join(" "))
+                    }
+                    Err(e) => format!("ERR {id} {}\n", sanitize(&e)),
+                },
+                Err(SubmitError::QueueFull) => format!("ERR {id} queue-full\n"),
+                Err(SubmitError::TooLong { len, max }) => {
+                    format!("ERR {id} too-long-{len}-max-{max}\n")
+                }
+                Err(SubmitError::Empty) => format!("ERR {id} empty\n"),
+                Err(SubmitError::ShuttingDown) => format!("ERR {id} shutting-down\n"),
+            }
+        }
+        Some("STATS") => format!("{}\n.\n", coordinator.metrics.report()),
+        Some("QUIT") => "OK 0 bye\n".into(),
+        _ => "ERR 0 unknown-command\n".into(),
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_whitespace() { '-' } else { c })
+        .collect()
+}
+
+/// Minimal blocking client for the line protocol (examples + benches).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Send ENCODE and wait for the reply line.
+    pub fn encode(&mut self, id: u64, tokens: &[i32]) -> std::io::Result<String> {
+        let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+        writeln!(self.writer, "ENCODE {id} {}", toks.join(" "))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+
+    /// Fetch the metrics report.
+    pub fn stats(&mut self) -> std::io::Result<String> {
+        writeln!(self.writer, "STATS")?;
+        let mut out = String::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                break;
+            }
+            if line.trim() == "." {
+                break;
+            }
+            out.push_str(&line);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_replaces_whitespace() {
+        assert_eq!(sanitize("a b\tc"), "a-b-c");
+    }
+
+    // dispatch() against a live coordinator is covered by
+    // rust/tests/integration_serving.rs (needs artifacts + PJRT).
+}

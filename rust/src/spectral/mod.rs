@@ -1,0 +1,189 @@
+//! Spectrum analysis — the machinery behind the paper's Figure 2.
+//!
+//! Computes eigenvalue spectra of (symmetrized) attention matrices and
+//! their approximations, the cumulative-eigenvalue curves the figure
+//! plots, effective rank, and tail-mass summaries.
+
+use crate::linalg::{self, Matrix};
+
+/// Spectrum summary of a (symmetrized) matrix.
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    /// |eigenvalues|, sorted descending.
+    pub values: Vec<f64>,
+    /// Cumulative normalized sums: cum[i] = Σ_{j≤i} |λ_j| / Σ |λ|.
+    pub cumulative: Vec<f64>,
+}
+
+impl Spectrum {
+    /// Spectrum of (A + Aᵀ)/2. Attention matrices are not symmetric;
+    /// the paper's Figure 2 plots eigenvalue magnitude curves — the
+    /// symmetrized spectrum is the standard well-defined surrogate.
+    pub fn of(a: &Matrix) -> Spectrum {
+        let sym = a.symmetrize();
+        let mut values: Vec<f64> = linalg::sym_eigenvalues(&sym, 1e-11)
+            .into_iter()
+            .map(f64::abs)
+            .collect();
+        values.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let total: f64 = values.iter().sum();
+        let mut cumulative = Vec::with_capacity(values.len());
+        let mut run = 0.0;
+        for &v in &values {
+            run += v;
+            cumulative.push(if total > 0.0 { run / total } else { 0.0 });
+        }
+        Spectrum { values, cumulative }
+    }
+
+    /// Smallest index i with cumulative[i] ≥ frac (1-based count).
+    pub fn index_reaching(&self, frac: f64) -> usize {
+        self.cumulative
+            .iter()
+            .position(|&c| c >= frac)
+            .map(|i| i + 1)
+            .unwrap_or(self.cumulative.len())
+    }
+
+    /// Effective rank: exp(entropy of the normalized spectrum)
+    /// (Roy & Vetterli). Low for spiky spectra, ≈n for flat ones.
+    pub fn effective_rank(&self) -> f64 {
+        let total: f64 = self.values.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let mut h = 0.0;
+        for &v in &self.values {
+            let p = v / total;
+            if p > 1e-300 {
+                h -= p * p.ln();
+            }
+        }
+        h.exp()
+    }
+
+    /// Fraction of spectral mass in eigenvalues after index `k`.
+    pub fn tail_mass(&self, k: usize) -> f64 {
+        if k >= self.cumulative.len() {
+            return 0.0;
+        }
+        1.0 - self.cumulative[k.saturating_sub(1).min(self.cumulative.len() - 1)]
+    }
+
+    /// Count of eigenvalues below `eps` (the "collapsed" tail of a
+    /// low-rank approximation).
+    pub fn near_zero_count(&self, eps: f64) -> usize {
+        self.values.iter().filter(|&&v| v < eps).count()
+    }
+}
+
+/// The Figure-2 comparison for one (S, S̃) pair.
+#[derive(Clone, Debug)]
+pub struct SpectrumComparison {
+    pub true_spectrum: Spectrum,
+    pub approx_spectrum: Spectrum,
+    /// eigenvalue count of S (=n)
+    pub n: usize,
+}
+
+impl SpectrumComparison {
+    pub fn new(s_true: &Matrix, s_approx: &Matrix) -> Self {
+        SpectrumComparison {
+            true_spectrum: Spectrum::of(s_true),
+            approx_spectrum: Spectrum::of(s_approx),
+            n: s_true.rows(),
+        }
+    }
+
+    /// Render both cumulative curves at `points` sample indices —
+    /// exactly the two series Figure 2 plots (x: eigen index,
+    /// y: cumulative eigenvalue mass).
+    pub fn cumulative_series(&self, points: usize) -> Vec<(usize, f64, f64)> {
+        let n = self.n.max(1);
+        let step = (n / points.max(1)).max(1);
+        (0..n)
+            .step_by(step)
+            .map(|i| {
+                (
+                    i + 1,
+                    self.true_spectrum.cumulative[i],
+                    self.approx_spectrum.cumulative[i],
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::random_orthonormal;
+    use crate::rngx::Rng;
+
+    fn spiked(rng: &mut Rng, n: usize, k: usize, theta: f64) -> Matrix {
+        let u = random_orthonormal(rng, n, n);
+        let mut lam = vec![theta; n];
+        for (i, l) in lam.iter_mut().take(k).enumerate() {
+            *l = 5.0 - i as f64 * 0.3;
+        }
+        let d = Matrix::diag(&lam);
+        crate::linalg::matmul(&crate::linalg::matmul(&u, &d), &u.transpose())
+    }
+
+    #[test]
+    fn identity_spectrum_flat() {
+        let s = Spectrum::of(&Matrix::eye(10));
+        assert!((s.values[0] - 1.0).abs() < 1e-10);
+        assert!((s.cumulative[4] - 0.5).abs() < 1e-10);
+        assert!((s.effective_rank() - 10.0).abs() < 1e-6);
+        assert_eq!(s.near_zero_count(0.5), 0);
+    }
+
+    #[test]
+    fn rank_one_spectrum_spiky() {
+        let mut m = Matrix::zeros(8, 8);
+        m[(0, 0)] = 4.0;
+        let s = Spectrum::of(&m);
+        assert!((s.cumulative[0] - 1.0).abs() < 1e-12);
+        assert!(s.effective_rank() < 1.01);
+        assert_eq!(s.near_zero_count(1e-9), 7);
+        assert_eq!(s.index_reaching(0.99), 1);
+    }
+
+    #[test]
+    fn spiked_matrix_long_tail_detected() {
+        let mut rng = Rng::new(1);
+        let m = spiked(&mut rng, 40, 3, 0.5);
+        let s = Spectrum::of(&m);
+        // 3 spikes ≈ 14 mass, tail 37·0.5 = 18.5: cumulative reaches 0.99
+        // only deep into the tail ⇒ long tail
+        assert!(s.index_reaching(0.99) > 30);
+        assert!(s.effective_rank() > 10.0);
+        assert_eq!(s.near_zero_count(0.1), 0); // tail is flat, not zero
+    }
+
+    #[test]
+    fn comparison_series_shape() {
+        let mut rng = Rng::new(2);
+        let a = spiked(&mut rng, 24, 2, 0.3);
+        let b = Matrix::eye(24);
+        let cmp = SpectrumComparison::new(&a, &b);
+        let series = cmp.cumulative_series(8);
+        assert!(series.len() >= 8);
+        assert!(series.iter().all(|&(i, t, ap)| {
+            i >= 1 && (0.0..=1.0 + 1e-9).contains(&t) && (0.0..=1.0 + 1e-9).contains(&ap)
+        }));
+        // cumulative curves are nondecreasing
+        for w in series.windows(2) {
+            assert!(w[1].1 >= w[0].1 && w[1].2 >= w[0].2);
+        }
+    }
+
+    #[test]
+    fn tail_mass_consistency() {
+        let s = Spectrum::of(&Matrix::diag(&[4.0, 2.0, 1.0, 1.0]));
+        // total 8; after first eigenvalue tail = 4/8
+        assert!((s.tail_mass(1) - 0.5).abs() < 1e-12);
+        assert_eq!(s.tail_mass(10), 0.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! SPSD matrix-approximation model zoo (Wang, Luo & Zhang JMLR 2016) —
+//! substrate S6 for the Lemma 1 / Theorem 1 experiments (E4).
+//!
+//! Three models over an explicit SPSD matrix K with column selection P:
+//!   * prototype / Nystrom:  K̃ = C A⁺ Cᵀ                (paper sec 2.2)
+//!   * full spectral shift:  K̃ = C Uˢˢ Cᵀ + δˢˢ Iₙ       (paper sec 3,
+//!     fits (U, δ) against the WHOLE matrix — O(n²c))
+//!   * modified spectral shift: same form, fit only on the sampled
+//!     block A_s (paper sec 4 — O(c³))
+//!
+//! plus generators for spiked-spectrum SPSD test matrices and column-
+//! sampling strategies (uniform-random, segment-strided).
+
+use crate::linalg::{self, Matrix};
+use crate::rngx::Rng;
+
+/// SPSD test matrix with k spikes (λ from `spike_hi` down to `spike_lo`)
+/// and an exactly flat tail at θ — the Lemma-1 spectrum shape.
+pub fn spiked_spsd(rng: &mut Rng, n: usize, k: usize, spike_hi: f64,
+                   spike_lo: f64, theta: f64) -> Matrix {
+    assert!(k <= n && spike_lo > theta && theta >= 0.0);
+    let u = linalg::random_orthonormal(rng, n, n);
+    let mut lam = vec![theta; n];
+    for i in 0..k {
+        lam[i] = if k == 1 {
+            spike_hi
+        } else {
+            spike_hi + (spike_lo - spike_hi) * i as f64 / (k - 1) as f64
+        };
+    }
+    let mut ud = u.clone();
+    for i in 0..n {
+        for j in 0..n {
+            ud[(i, j)] *= lam[j];
+        }
+    }
+    linalg::matmul(&ud, &u.transpose()).symmetrize()
+}
+
+/// SPSD matrix with power-law spectrum λ_i = (i+1)^{-decay} — the
+/// slow-decay regime where the paper says Nystrom underperforms.
+pub fn power_law_spsd(rng: &mut Rng, n: usize, decay: f64) -> Matrix {
+    let u = linalg::random_orthonormal(rng, n, n);
+    let lam: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).powf(-decay)).collect();
+    let mut ud = u.clone();
+    for i in 0..n {
+        for j in 0..n {
+            ud[(i, j)] *= lam[j];
+        }
+    }
+    linalg::matmul(&ud, &u.transpose()).symmetrize()
+}
+
+/// Column-selection strategies for the sampling matrix P.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ColumnSampling {
+    /// c distinct uniform-random columns.
+    UniformRandom,
+    /// every (n/c)-th column (the deterministic segment-strided analogue
+    /// of segment-means).
+    Strided,
+}
+
+/// Pick c column indices of an n-column matrix.
+pub fn sample_columns(rng: &mut Rng, n: usize, c: usize,
+                      how: ColumnSampling) -> Vec<usize> {
+    assert!(c <= n && c > 0);
+    match how {
+        ColumnSampling::UniformRandom => {
+            let mut idx = rng.sample_indices(n, c);
+            idx.sort_unstable();
+            idx
+        }
+        ColumnSampling::Strided => {
+            let step = n / c;
+            (0..c).map(|j| j * step).collect()
+        }
+    }
+}
+
+/// Result of fitting one SPSD approximation model.
+pub struct SpsdApprox {
+    /// The reconstructed n×n approximation.
+    pub approx: Matrix,
+    /// The fitted spectral shift (0 for the prototype model).
+    pub delta: f64,
+}
+
+/// Prototype (Nystrom) model: K̃ = C A⁺ Cᵀ.
+pub fn prototype_model(k: &Matrix, cols: &[usize]) -> SpsdApprox {
+    let c = k.select_columns(cols);
+    let a = k.principal_submatrix(cols);
+    let apinv = linalg::pinv(&a, 1e-12);
+    let approx = linalg::matmul(&linalg::matmul(&c, &apinv), &c.transpose());
+    SpsdApprox { approx, delta: 0.0 }
+}
+
+/// Full spectral-shifting model (paper sec 3, Wang 2016): fit against
+/// the whole matrix. O(n²c); the accuracy ceiling the modified model is
+/// compared to.
+///
+///   δ  = (tr K − tr(C⁺ K (C⁺)ᵀ · (CᵀC)) … ) — we use the JMLR closed
+///   form δ = (tr(K) − tr(C⁺KC)) / (n − rank(C)),
+///   U  = C⁺ K (C⁺)ᵀ − δ (CᵀC)⁺.
+pub fn full_ss_model(k: &Matrix, cols: &[usize], rank_rtol: f64) -> SpsdApprox {
+    let n = k.rows();
+    let c = k.select_columns(cols);
+    let cpinv = linalg::pinv(&c, rank_rtol); // (c, n)
+    let rank_c = linalg::numerical_rank(&c, rank_rtol);
+    let delta = if n > rank_c {
+        // tr(C⁺ K C): K projected into the selected column space
+        let proj = linalg::matmul(&linalg::matmul(&cpinv, k), &c);
+        ((k.trace() - proj.trace()) / (n - rank_c) as f64).max(0.0)
+    } else {
+        0.0
+    };
+    let u = {
+        let kc = linalg::matmul(&linalg::matmul(&cpinv, k), &cpinv.transpose());
+        let ctc = linalg::gram(&c);
+        kc.sub(&linalg::pinv(&ctc, rank_rtol).scale(delta))
+    };
+    let approx = linalg::matmul(&linalg::matmul(&c, &u), &c.transpose())
+        .add_scaled_identity(delta);
+    SpsdApprox { approx, delta }
+}
+
+/// Modified spectral-shifting model (paper sec 4): fit (U, δ) only on
+/// the sampled c×c block A_s. O(c³).
+///
+///   δ = (tr A − tr(A⁺A²)) / (c − rank A),  U = A⁺ − δ (A²)⁺
+pub fn modified_ss_model(k: &Matrix, cols: &[usize], rank_rtol: f64) -> SpsdApprox {
+    let c_mat = k.select_columns(cols);
+    let a = k.principal_submatrix(cols);
+    let csz = cols.len();
+    let apinv = linalg::pinv(&a, rank_rtol);
+    let r = linalg::numerical_rank(&a, rank_rtol);
+    let delta = if csz > r {
+        let aa = linalg::matmul(&a, &a);
+        ((a.trace() - linalg::matmul(&apinv, &aa).trace()) / (csz - r) as f64)
+            .max(0.0)
+    } else {
+        0.0
+    };
+    let aa = linalg::matmul(&a, &a);
+    let u = apinv.sub(&linalg::pinv(&aa, rank_rtol).scale(delta));
+    let approx = linalg::matmul(&linalg::matmul(&c_mat, &u), &c_mat.transpose())
+        .add_scaled_identity(delta);
+    SpsdApprox { approx, delta }
+}
+
+/// Modified SS with the sec-3 shift applied first: K̃ = K − θIₙ before
+/// column selection, approximating the rank-k part exactly, then adding
+/// θIₙ back. This is the configuration Lemma 1 speaks about when the
+/// tail level is known (E4 uses it for the exact-recovery check).
+pub fn modified_ss_model_shifted(k: &Matrix, cols: &[usize], shift: f64,
+                                 rank_rtol: f64) -> SpsdApprox {
+    let kshift = k.add_scaled_identity(-shift);
+    let fitted = modified_ss_model(&kshift, cols, rank_rtol);
+    SpsdApprox {
+        approx: fitted.approx.add_scaled_identity(shift),
+        delta: fitted.delta + shift,
+    }
+}
+
+/// Relative spectral error ‖K − K̃‖₂ / ‖K‖₂.
+pub fn rel_spectral_error(k: &Matrix, approx: &Matrix) -> f64 {
+    linalg::norms::spectral(&k.sub(approx), 60) / linalg::norms::spectral(k, 60)
+}
+
+/// Relative Frobenius error.
+pub fn rel_fro_error(k: &Matrix, approx: &Matrix) -> f64 {
+    linalg::norms::fro(&k.sub(approx)) / linalg::norms::fro(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spiked_matrix_has_requested_spectrum() {
+        let mut rng = Rng::new(1);
+        let k = spiked_spsd(&mut rng, 24, 3, 5.0, 3.0, 0.5);
+        let ev = linalg::sym_eigenvalues(&k, 1e-12);
+        assert!((ev[0] - 5.0).abs() < 1e-8);
+        assert!((ev[2] - 3.0).abs() < 1e-8);
+        for &l in &ev[3..] {
+            assert!((l - 0.5).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn power_law_spectrum_decays() {
+        let mut rng = Rng::new(2);
+        let k = power_law_spsd(&mut rng, 16, 1.0);
+        let ev = linalg::sym_eigenvalues(&k, 1e-12);
+        assert!((ev[0] - 1.0).abs() < 1e-8);
+        assert!((ev[15] - 1.0 / 16.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn prototype_exact_on_low_rank() {
+        // K exactly rank 3, c=6 random columns span it (a.s.)
+        let mut rng = Rng::new(3);
+        let b = Matrix::from_fn(20, 3, |_, _| rng.normal());
+        let k = linalg::matmul(&b, &b.transpose());
+        let cols = sample_columns(&mut rng, 20, 6, ColumnSampling::UniformRandom);
+        let fit = prototype_model(&k, &cols);
+        assert!(rel_fro_error(&k, &fit.approx) < 1e-8);
+    }
+
+    #[test]
+    fn lemma1_exact_recovery_modified_ss() {
+        // spikes k=4, flat tail θ; shift by θ ⇒ rank-4 残り; c=10 ≥ k
+        let mut rng = Rng::new(4);
+        let theta = 0.4;
+        let k = spiked_spsd(&mut rng, 40, 4, 6.0, 4.0, theta);
+        let cols = sample_columns(&mut rng, 40, 10, ColumnSampling::UniformRandom);
+        let fit = modified_ss_model_shifted(&k, &cols, theta, 1e-8);
+        assert!(rel_fro_error(&k, &fit.approx) < 1e-7,
+                "err={}", rel_fro_error(&k, &fit.approx));
+    }
+
+    #[test]
+    fn theorem1_ss_beats_prototype_on_flat_tail() {
+        let mut rng = Rng::new(5);
+        let theta = 0.5;
+        let k = spiked_spsd(&mut rng, 48, 4, 6.0, 4.0, theta);
+        let cols = sample_columns(&mut rng, 48, 12, ColumnSampling::Strided);
+        let proto = prototype_model(&k, &cols);
+        let mss = modified_ss_model_shifted(&k, &cols, theta, 1e-8);
+        let e_proto = rel_spectral_error(&k, &proto.approx);
+        let e_mss = rel_spectral_error(&k, &mss.approx);
+        assert!(e_mss < e_proto * 0.1,
+                "mss={e_mss} proto={e_proto}");
+        // prototype's error floor is exactly the dropped tail θ
+        assert!(e_proto > 0.5 * theta / linalg::norms::spectral(&k, 60));
+    }
+
+    #[test]
+    fn full_ss_estimates_tail_level() {
+        let mut rng = Rng::new(6);
+        let theta = 0.3;
+        let k = spiked_spsd(&mut rng, 36, 3, 5.0, 4.0, theta);
+        let cols = sample_columns(&mut rng, 36, 9, ColumnSampling::UniformRandom);
+        let fit = full_ss_model(&k, &cols, 1e-10);
+        // δ from the full model ≈ mean dropped tail ≈ θ (biased slightly
+        // low because the sampled columns carry some tail mass)
+        assert!(fit.delta > 0.1 && fit.delta < 2.0 * theta, "{}", fit.delta);
+    }
+
+    #[test]
+    fn full_ss_more_accurate_than_modified_more_expensive() {
+        // accuracy order: full SS ≥ modified SS (both ≥ prototype on
+        // flat-tail inputs). This is the sec-3 vs sec-4 tradeoff.
+        let mut rng = Rng::new(7);
+        let k = spiked_spsd(&mut rng, 40, 4, 6.0, 3.0, 0.4);
+        let cols = sample_columns(&mut rng, 40, 10, ColumnSampling::UniformRandom);
+        let full = full_ss_model(&k, &cols, 1e-10);
+        let proto = prototype_model(&k, &cols);
+        let e_full = rel_fro_error(&k, &full.approx);
+        let e_proto = rel_fro_error(&k, &proto.approx);
+        assert!(e_full < e_proto, "full={e_full} proto={e_proto}");
+    }
+
+    #[test]
+    fn column_sampling_strategies() {
+        let mut rng = Rng::new(8);
+        let u = sample_columns(&mut rng, 100, 10, ColumnSampling::UniformRandom);
+        assert_eq!(u.len(), 10);
+        assert!(u.windows(2).all(|w| w[0] < w[1]));
+        let s = sample_columns(&mut rng, 100, 10, ColumnSampling::Strided);
+        assert_eq!(s, vec![0, 10, 20, 30, 40, 50, 60, 70, 80, 90]);
+    }
+}

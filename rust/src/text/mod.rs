@@ -1,0 +1,277 @@
+//! Text substrate (S17): word-level tokenizer + synthetic corpus
+//! generator used by the end-to-end training example (E10) and the
+//! serving demo.
+//!
+//! The paper has no dataset; per the substitution rule we train on a
+//! synthetic Markov-bigram corpus whose statistics a small MLM can
+//! actually learn (so the loss curve is meaningful): a vocabulary of
+//! word types with a sparse, skewed bigram transition table.
+
+use crate::rngx::Rng;
+use std::collections::HashMap;
+
+/// Special token ids (match the L2 model's conventions).
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const MASK: i32 = 2;
+pub const FIRST_WORD_ID: i32 = 3;
+
+/// Word-level vocabulary with frequency-ranked ids.
+pub struct Tokenizer {
+    word_to_id: HashMap<String, i32>,
+    id_to_word: Vec<String>,
+    vocab_cap: usize,
+}
+
+impl Tokenizer {
+    /// Build from a corpus, keeping the `vocab_cap - 3` most frequent
+    /// words (ids 0..3 are PAD/UNK/MASK).
+    pub fn fit(corpus: &[String], vocab_cap: usize) -> Self {
+        assert!(vocab_cap > 8);
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for line in corpus {
+            for w in line.split_whitespace() {
+                *freq.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut ranked: Vec<(&str, u64)> = freq.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        ranked.truncate(vocab_cap - FIRST_WORD_ID as usize);
+
+        let mut word_to_id = HashMap::new();
+        let mut id_to_word = vec!["<pad>".to_string(), "<unk>".to_string(),
+                                  "<mask>".to_string()];
+        for (i, (w, _)) in ranked.iter().enumerate() {
+            word_to_id.insert(w.to_string(), FIRST_WORD_ID + i as i32);
+            id_to_word.push(w.to_string());
+        }
+        Tokenizer { word_to_id, id_to_word, vocab_cap }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_word.len()
+    }
+
+    pub fn vocab_cap(&self) -> usize {
+        self.vocab_cap
+    }
+
+    /// Encode to exactly `len` ids, truncating or right-padding with PAD.
+    pub fn encode(&self, textline: &str, len: usize) -> Vec<i32> {
+        let mut out: Vec<i32> = textline
+            .split_whitespace()
+            .take(len)
+            .map(|w| *self.word_to_id.get(w).unwrap_or(&UNK))
+            .collect();
+        out.resize(len, PAD);
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD)
+            .map(|&i| {
+                self.id_to_word
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<unk>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Synthetic Markov-bigram corpus generator.
+///
+/// `types` word types; each word has ~`branching` plausible successors
+/// with Zipf-skewed choice, so bigram statistics are learnable.
+pub struct CorpusGenerator {
+    words: Vec<String>,
+    successors: Vec<Vec<usize>>,
+    rng: Rng,
+}
+
+impl CorpusGenerator {
+    pub fn new(seed: u64, types: usize, branching: usize) -> Self {
+        assert!(types >= 8 && branching >= 2);
+        let mut rng = Rng::new(seed);
+        let words: Vec<String> = (0..types).map(|i| format!("w{i:04}")).collect();
+        let successors: Vec<Vec<usize>> = (0..types)
+            .map(|_| {
+                (0..branching)
+                    .map(|_| rng.below(types as u64) as usize)
+                    .collect()
+            })
+            .collect();
+        CorpusGenerator { words, successors, rng }
+    }
+
+    /// Generate one sentence of `len` words following the bigram chain.
+    pub fn sentence(&mut self, len: usize) -> String {
+        let mut cur = self.rng.below(self.words.len() as u64) as usize;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.words[cur].clone());
+            let succ = &self.successors[cur];
+            // Zipf-skewed successor choice
+            let pick = (self.rng.zipf(succ.len() as u64, 1.3) - 1) as usize;
+            cur = succ[pick];
+        }
+        out.join(" ")
+    }
+
+    /// Generate a corpus of `lines` sentences with lengths in
+    /// [min_len, max_len].
+    pub fn corpus(&mut self, lines: usize, min_len: usize, max_len: usize) -> Vec<String> {
+        (0..lines)
+            .map(|_| {
+                let len = min_len
+                    + self.rng.below((max_len - min_len + 1) as u64) as usize;
+                self.sentence(len)
+            })
+            .collect()
+    }
+}
+
+/// An MLM training batch: tokens with 15% positions replaced by MASK,
+/// original ids as targets, and the loss mask marking masked positions.
+pub struct MlmBatch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Build an MLM batch from encoded sequences (BERT-style 15% masking;
+/// of the masked positions 80% become MASK, 10% random, 10% unchanged).
+pub fn make_mlm_batch(rng: &mut Rng, encoded: &[Vec<i32>], vocab: usize) -> MlmBatch {
+    let batch = encoded.len();
+    let seq = encoded[0].len();
+    let mut tokens = Vec::with_capacity(batch * seq);
+    let mut targets = Vec::with_capacity(batch * seq);
+    let mut loss_mask = Vec::with_capacity(batch * seq);
+    for row in encoded {
+        assert_eq!(row.len(), seq, "ragged batch");
+        for &t in row {
+            targets.push(t);
+            if t != PAD && rng.uniform() < 0.15 {
+                loss_mask.push(1.0);
+                let r = rng.uniform();
+                if r < 0.8 {
+                    tokens.push(MASK);
+                } else if r < 0.9 {
+                    tokens.push(FIRST_WORD_ID
+                        + rng.below((vocab as i64 - FIRST_WORD_ID as i64) as u64) as i32);
+                } else {
+                    tokens.push(t);
+                }
+            } else {
+                loss_mask.push(0.0);
+                tokens.push(t);
+            }
+        }
+    }
+    MlmBatch { tokens, targets, loss_mask, batch, seq }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_corpus() -> Vec<String> {
+        let mut g = CorpusGenerator::new(7, 50, 4);
+        g.corpus(200, 5, 30)
+    }
+
+    #[test]
+    fn tokenizer_roundtrip_frequent_words() {
+        let corpus = small_corpus();
+        let tok = Tokenizer::fit(&corpus, 64);
+        assert!(tok.vocab_size() <= 64);
+        let line = &corpus[0];
+        let ids = tok.encode(line, 32);
+        assert_eq!(ids.len(), 32);
+        let dec = tok.decode(&ids);
+        // every decoded word must appear in the original line (or be unk)
+        for w in dec.split_whitespace() {
+            assert!(line.contains(w) || w == "<unk>");
+        }
+    }
+
+    #[test]
+    fn encode_pads_and_truncates() {
+        let tok = Tokenizer::fit(&["a b c".to_string()], 16);
+        let short = tok.encode("a b", 6);
+        assert_eq!(&short[2..], &[PAD; 4]);
+        let long = tok.encode("a b c a b c a b", 4);
+        assert_eq!(long.len(), 4);
+        assert!(long.iter().all(|&t| t != PAD));
+    }
+
+    #[test]
+    fn unknown_words_map_to_unk() {
+        let tok = Tokenizer::fit(&["hello world".to_string()], 16);
+        let ids = tok.encode("hello mars", 2);
+        assert_ne!(ids[0], UNK);
+        assert_eq!(ids[1], UNK);
+    }
+
+    #[test]
+    fn corpus_is_deterministic_per_seed() {
+        let mut a = CorpusGenerator::new(1, 30, 3);
+        let mut b = CorpusGenerator::new(1, 30, 3);
+        assert_eq!(a.sentence(10), b.sentence(10));
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // successor sets are small ⇒ conditional entropy of the bigram
+        // distribution is far below log2(types)
+        let mut g = CorpusGenerator::new(3, 100, 3);
+        let text = g.corpus(300, 20, 20);
+        let mut pair_counts: HashMap<(String, String), u64> = HashMap::new();
+        let mut uni: HashMap<String, u64> = HashMap::new();
+        for line in &text {
+            let ws: Vec<&str> = line.split_whitespace().collect();
+            for w in ws.windows(2) {
+                *pair_counts.entry((w[0].into(), w[1].into())).or_insert(0) += 1;
+                *uni.entry(w[0].into()).or_insert(0) += 1;
+            }
+        }
+        // average successor fan-out per observed word ≤ branching
+        let mut fanout: HashMap<&String, std::collections::HashSet<&String>> =
+            HashMap::new();
+        for (a, b) in pair_counts.keys() {
+            fanout.entry(a).or_default().insert(b);
+        }
+        let avg: f64 = fanout.values().map(|s| s.len() as f64).sum::<f64>()
+            / fanout.len() as f64;
+        assert!(avg <= 3.01, "fanout {avg}");
+    }
+
+    #[test]
+    fn mlm_batch_invariants() {
+        let corpus = small_corpus();
+        let tok = Tokenizer::fit(&corpus, 64);
+        let encoded: Vec<Vec<i32>> =
+            corpus[..8].iter().map(|l| tok.encode(l, 32)).collect();
+        let mut rng = Rng::new(5);
+        let b = make_mlm_batch(&mut rng, &encoded, tok.vocab_cap());
+        assert_eq!(b.tokens.len(), 8 * 32);
+        assert_eq!(b.batch, 8);
+        assert_eq!(b.seq, 32);
+        let masked: usize = b.loss_mask.iter().filter(|&&m| m == 1.0).count();
+        assert!(masked > 0);
+        for i in 0..b.tokens.len() {
+            if b.loss_mask[i] == 0.0 {
+                // unmasked positions keep their token
+                assert_eq!(b.tokens[i], b.targets[i]);
+            }
+            // PAD positions never selected for loss
+            if b.targets[i] == PAD {
+                assert_eq!(b.loss_mask[i], 0.0);
+            }
+        }
+    }
+}

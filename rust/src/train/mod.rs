@@ -1,0 +1,165 @@
+//! Training driver (S23): runs the AOT train-step artifact over the
+//! synthetic corpus — the E10 end-to-end validation (paper sec 9's
+//! "reduce training time" claim, exercised with full vs ss variants).
+
+use crate::config::Variant;
+use crate::rngx::Rng;
+use crate::runtime::{ArtifactKind, Engine, RuntimeError, TrainState};
+use crate::text::{make_mlm_batch, CorpusGenerator, Tokenizer};
+use std::time::{Duration, Instant};
+
+/// Training run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub variant: Variant,
+    pub steps: usize,
+    pub seed: u64,
+    /// corpus size (sentences) for the synthetic bigram corpus
+    pub corpus_lines: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            variant: Variant::SpectralShift,
+            steps: 100,
+            seed: 0,
+            corpus_lines: 2000,
+            log_every: 10,
+        }
+    }
+}
+
+/// One logged point of the loss curve.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub step_time: Duration,
+}
+
+/// Result of a training run.
+pub struct TrainReport {
+    pub points: Vec<LossPoint>,
+    pub total_time: Duration,
+    pub final_loss: f32,
+    pub initial_loss: f32,
+    pub tokens_per_sec: f64,
+}
+
+impl TrainReport {
+    /// Render the loss curve as an ASCII table (EXPERIMENTS.md format).
+    pub fn render(&self) -> String {
+        let mut t = crate::benchkit::Table::new(&["step", "loss", "step_time"]);
+        for p in &self.points {
+            t.row(&[
+                p.step.to_string(),
+                format!("{:.4}", p.loss),
+                crate::benchkit::fmt_duration(p.step_time),
+            ]);
+        }
+        format!(
+            "{}\ninitial loss {:.4} -> final loss {:.4} ({} steps, {:.1} tok/s, total {})\n",
+            t.render(),
+            self.initial_loss,
+            self.final_loss,
+            self.points.last().map(|p| p.step).unwrap_or(0),
+            self.tokens_per_sec,
+            crate::benchkit::fmt_duration(self.total_time),
+        )
+    }
+}
+
+/// Run MLM training with the given variant's train-step artifact.
+///
+/// The corpus, tokenizer, masking and batch order are all deterministic
+/// in `cfg.seed`, so full-vs-ss runs see identical data.
+pub fn train(engine: &Engine, cfg: &TrainConfig) -> Result<TrainReport, RuntimeError> {
+    // the train artifacts are emitted at one (seq, batch) point
+    let entry = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.kind == ArtifactKind::TrainStep && a.variant == cfg.variant)
+        .cloned()
+        .ok_or_else(|| RuntimeError::NotFound(format!(
+            "train_step for {:?}", cfg.variant)))?;
+    let model = engine.load(ArtifactKind::TrainStep, cfg.variant, entry.seq)?;
+    let (batch, seq) = (entry.batch, entry.seq);
+    let vocab = engine.manifest().hyper.get("vocab").copied().unwrap_or(2048) as usize;
+
+    // deterministic synthetic corpus + tokenizer
+    let mut gen = CorpusGenerator::new(cfg.seed, vocab.saturating_sub(64).max(64), 4);
+    let corpus = gen.corpus(cfg.corpus_lines, seq / 2, seq);
+    let tok = Tokenizer::fit(&corpus, vocab);
+    let encoded: Vec<Vec<i32>> = corpus.iter().map(|l| tok.encode(l, seq)).collect();
+
+    let mut state = TrainState::init(engine)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xA5A5);
+    let mut points = Vec::new();
+    let mut initial_loss = f32::NAN;
+    let mut final_loss = f32::NAN;
+    let t0 = Instant::now();
+    let mut tokens_seen = 0u64;
+
+    for step in 1..=cfg.steps {
+        // sample a batch of sentences
+        let rows: Vec<Vec<i32>> = (0..batch)
+            .map(|_| encoded[rng.below(encoded.len() as u64) as usize].clone())
+            .collect();
+        let mlm = make_mlm_batch(&mut rng, &rows, vocab);
+        let ts = Instant::now();
+        let loss = state.step(engine, &model, &mlm.tokens, &mlm.targets,
+                              &mlm.loss_mask)?;
+        let dt = ts.elapsed();
+        tokens_seen += (batch * seq) as u64;
+        if step == 1 {
+            initial_loss = loss;
+        }
+        final_loss = loss;
+        if step == 1 || step % cfg.log_every == 0 || step == cfg.steps {
+            points.push(LossPoint { step, loss, step_time: dt });
+        }
+    }
+    let total_time = t0.elapsed();
+    Ok(TrainReport {
+        points,
+        total_time,
+        final_loss,
+        initial_loss,
+        tokens_per_sec: tokens_seen as f64 / total_time.as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0 && c.log_every > 0);
+    }
+
+    #[test]
+    fn report_renders_curve() {
+        let r = TrainReport {
+            points: vec![
+                LossPoint { step: 1, loss: 7.6, step_time: Duration::from_millis(100) },
+                LossPoint { step: 10, loss: 6.2, step_time: Duration::from_millis(90) },
+            ],
+            total_time: Duration::from_secs(1),
+            final_loss: 6.2,
+            initial_loss: 7.6,
+            tokens_per_sec: 1024.0,
+        };
+        let s = r.render();
+        assert!(s.contains("7.6"));
+        assert!(s.contains("6.2"));
+        assert!(s.contains("tok/s"));
+    }
+
+    // Full training over a real artifact is exercised by
+    // examples/train_tiny.rs and rust/tests/integration_train.rs.
+}

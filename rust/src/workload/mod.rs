@@ -1,0 +1,184 @@
+//! Workload generation substrate (S18): synthetic request traces for the
+//! serving benches (E8) — Poisson arrivals, configurable length
+//! distributions, and deterministic token content.
+
+use crate::rngx::Rng;
+use std::time::Duration;
+
+/// Request length distribution.
+#[derive(Clone, Copy, Debug)]
+pub enum LengthDist {
+    /// All requests have the same length.
+    Fixed(usize),
+    /// Uniform in [lo, hi].
+    Uniform(usize, usize),
+    /// Zipf-skewed over the bucket list (short requests dominate),
+    /// exponent s.
+    ZipfBuckets(f64),
+}
+
+/// One synthetic request: token ids + arrival offset from trace start.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrival: Duration,
+}
+
+/// Trace generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate (requests/second) for the Poisson process.
+    pub rate: f64,
+    /// Number of requests.
+    pub count: usize,
+    /// Length distribution (drawn lengths are capped to max bucket).
+    pub lengths: LengthDist,
+    /// Allowed sequence buckets (ascending) — lengths snap up to these.
+    pub buckets: Vec<usize>,
+    /// Vocabulary size for token content.
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate: 50.0,
+            count: 200,
+            lengths: LengthDist::ZipfBuckets(1.1),
+            buckets: vec![128, 256, 512],
+            vocab: 2048,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a full trace: arrivals are a Poisson process at `rate`,
+/// lengths drawn from `lengths` (tokens are drawn uniformly over the
+/// word region of the vocabulary, avoiding the PAD/UNK/MASK specials).
+pub fn generate_trace(cfg: &TraceConfig) -> Vec<TraceRequest> {
+    assert!(!cfg.buckets.is_empty());
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = Duration::ZERO;
+    let max_len = *cfg.buckets.last().unwrap();
+    (0..cfg.count)
+        .map(|i| {
+            t += Duration::from_secs_f64(rng.exponential(cfg.rate.max(1e-9)));
+            let raw_len = match cfg.lengths {
+                LengthDist::Fixed(l) => l,
+                LengthDist::Uniform(lo, hi) => {
+                    lo + rng.below((hi - lo + 1) as u64) as usize
+                }
+                LengthDist::ZipfBuckets(s) => {
+                    // zipf over bucket ranks: rank 1 = smallest bucket
+                    let r = rng.zipf(cfg.buckets.len() as u64, s) as usize;
+                    cfg.buckets[r - 1]
+                }
+            }
+            .min(max_len)
+            .max(1);
+            let tokens: Vec<i32> = (0..raw_len)
+                .map(|_| {
+                    crate::text::FIRST_WORD_ID
+                        + rng.below((cfg.vocab as i64
+                            - crate::text::FIRST_WORD_ID as i64)
+                            as u64) as i32
+                })
+                .collect();
+            TraceRequest { id: i as u64, tokens, arrival: t }
+        })
+        .collect()
+}
+
+/// Snap a raw length up to the smallest bucket that fits (None if it
+/// exceeds every bucket) — shared with the router.
+pub fn bucket_for(len: usize, buckets: &[usize]) -> Option<usize> {
+    buckets.iter().copied().find(|&b| b >= len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_rate_sane() {
+        let cfg = TraceConfig { rate: 100.0, count: 500, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        assert_eq!(trace.len(), 500);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        // mean inter-arrival ≈ 1/rate
+        let total = trace.last().unwrap().arrival.as_secs_f64();
+        let mean = total / 500.0;
+        assert!((mean - 0.01).abs() < 0.003, "mean={mean}");
+    }
+
+    #[test]
+    fn lengths_respect_buckets() {
+        let cfg = TraceConfig {
+            lengths: LengthDist::ZipfBuckets(1.2),
+            buckets: vec![64, 128],
+            count: 200,
+            ..Default::default()
+        };
+        let trace = generate_trace(&cfg);
+        for r in &trace {
+            assert!(r.tokens.len() == 64 || r.tokens.len() == 128);
+        }
+        // zipf ⇒ short bucket dominates
+        let short = trace.iter().filter(|r| r.tokens.len() == 64).count();
+        assert!(short > trace.len() / 2);
+    }
+
+    #[test]
+    fn tokens_in_word_region() {
+        let cfg = TraceConfig { count: 50, vocab: 100, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        for r in &trace {
+            assert!(r.tokens.iter().all(|&t| {
+                t >= crate::text::FIRST_WORD_ID && (t as usize) < 100
+            }));
+        }
+    }
+
+    #[test]
+    fn fixed_and_uniform_lengths() {
+        let cfg = TraceConfig {
+            lengths: LengthDist::Fixed(60),
+            count: 10,
+            ..Default::default()
+        };
+        assert!(generate_trace(&cfg).iter().all(|r| r.tokens.len() == 60));
+        let cfg = TraceConfig {
+            lengths: LengthDist::Uniform(10, 20),
+            count: 100,
+            ..Default::default()
+        };
+        assert!(generate_trace(&cfg)
+            .iter()
+            .all(|r| (10..=20).contains(&r.tokens.len())));
+    }
+
+    #[test]
+    fn bucket_snap() {
+        let buckets = [128, 256, 512];
+        assert_eq!(bucket_for(1, &buckets), Some(128));
+        assert_eq!(bucket_for(128, &buckets), Some(128));
+        assert_eq!(bucket_for(129, &buckets), Some(256));
+        assert_eq!(bucket_for(513, &buckets), None);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig { seed: 9, count: 20, ..Default::default() };
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: PJRT runtime over real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run; every test skips gracefully
+//! (with a loud message) when artifacts/ is missing so `cargo test`
+//! stays usable on a fresh checkout.
+
+use ssaformer::config::Variant;
+use ssaformer::runtime::{ArtifactKind, Engine};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_layout_is_consistent() {
+    let Some(e) = engine() else { return };
+    let m = e.manifest();
+    assert!(m.param_count > 1_000_000);
+    m.validate_layout().unwrap();
+    assert!(m.find(ArtifactKind::Encode, Variant::SpectralShift, 128).is_some());
+    // init params exist and match the count
+    let p = e.init_params().unwrap();
+    assert_eq!(p.len(), m.param_count);
+    assert!(p.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn encode_artifact_runs_and_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let model = e
+        .load(ArtifactKind::Encode, Variant::SpectralShift, 128)
+        .expect("load encode_ss");
+    let params_host = e.init_params().unwrap();
+    let params = e.buffer_f32(&params_host, &[params_host.len()]).unwrap();
+    let b = model.entry.batch;
+    let tokens: Vec<i32> = (0..b * 128).map(|i| 3 + (i as i32 % 1000)).collect();
+    let emb1 = model.encode(&e, &params, &tokens).unwrap();
+    let emb2 = model.encode(&e, &params, &tokens).unwrap();
+    let d_model = e.manifest().hyper["d_model"] as usize;
+    assert_eq!(emb1.len(), b * d_model);
+    assert_eq!(emb1, emb2, "encode must be deterministic");
+    assert!(emb1.iter().all(|x| x.is_finite()));
+    // embeddings of different rows differ (model is not collapsing)
+    assert!(emb1[..d_model] != emb1[d_model..2 * d_model]);
+}
+
+#[test]
+fn encode_variants_agree_roughly_at_init() {
+    // At random init all variants encode the same tokens through the
+    // same weights; the approximations should be correlated with the
+    // exact encoder but not identical.
+    let Some(e) = engine() else { return };
+    let params_host = e.init_params().unwrap();
+    let params = e.buffer_f32(&params_host, &[params_host.len()]).unwrap();
+    let tokens: Vec<i32> = (0..4 * 128).map(|i| 3 + (i as i32 * 7 % 2000)).collect();
+    let mut outs = Vec::new();
+    for v in [Variant::Full, Variant::Nystrom, Variant::SpectralShift] {
+        let m = e.load(ArtifactKind::Encode, v, 128).expect("load");
+        outs.push(m.encode(&e, &params, &tokens).unwrap());
+    }
+    let rel = |a: &[f32], b: &[f32]| -> f32 {
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum();
+        let den: f32 = b.iter().map(|y| y.abs()).sum();
+        num / den
+    };
+    let full = &outs[0];
+    assert!(rel(&outs[1], full) < 1.0, "nystrom too far from full");
+    assert!(rel(&outs[2], full) < 1.0, "ss too far from full");
+    assert_ne!(outs[1], *full);
+    // ss and nystrom nearly coincide at δ≈0 (full-rank landmark block)
+    assert!(rel(&outs[2], &outs[1]) < 0.5);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(e) = engine() else { return };
+    let t0 = std::time::Instant::now();
+    let _m1 = e.load(ArtifactKind::Encode, Variant::Full, 128).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let _m2 = e.load(ArtifactKind::Encode, Variant::Full, 128).unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold / 10, "cache miss on second load: {warm:?} vs {cold:?}");
+}
+
+#[test]
+fn missing_artifact_is_not_found() {
+    let Some(e) = engine() else { return };
+    match e.load(ArtifactKind::Encode, Variant::Full, 9999) {
+        Err(err) => assert!(err.to_string().contains("not found")),
+        Ok(_) => panic!("expected NotFound"),
+    }
+}
+
+#[test]
+fn encode_rejects_wrong_token_count() {
+    let Some(e) = engine() else { return };
+    let model = e.load(ArtifactKind::Encode, Variant::Full, 128).unwrap();
+    let params_host = e.init_params().unwrap();
+    let params = e.buffer_f32(&params_host, &[params_host.len()]).unwrap();
+    let bad = vec![0i32; 17];
+    assert!(model.encode(&e, &params, &bad).is_err());
+}

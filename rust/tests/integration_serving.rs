@@ -1,0 +1,119 @@
+//! Integration: full serving stack (coordinator + TCP server) over real
+//! artifacts. Skips when artifacts/ is missing.
+
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::{Coordinator, SubmitError};
+use ssaformer::runtime::Engine;
+use ssaformer::server::{serve, Client};
+use std::sync::Arc;
+
+fn setup(variant: Variant) -> Option<Arc<Coordinator>> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    let engine = Arc::new(Engine::new("artifacts").unwrap());
+    let cfg = ServingConfig {
+        variant,
+        max_batch: 4,
+        max_wait_ms: 5,
+        queue_capacity: 64,
+        ..Default::default()
+    };
+    Some(Arc::new(Coordinator::start(engine, &cfg).unwrap()))
+}
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 31 + seed) % 2000)).collect()
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    let resp = c.submit_blocking(toks(100, 1)).unwrap();
+    let emb = resp.embedding.unwrap();
+    assert!(!emb.is_empty());
+    assert!(emb.iter().all(|x| x.is_finite()));
+    assert_eq!(c.metrics.requests_done.get(), 1);
+}
+
+#[test]
+fn batching_fills_up() {
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    // 8 concurrent same-bucket requests with a 4-slot batch → ≥... ≤ 4 batches
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        rxs.push(c.submit(toks(100 + i, i as i32)).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.embedding.is_ok());
+    }
+    let batches = c.metrics.batches_executed.get();
+    assert!(batches >= 2 && batches <= 8, "batches={batches}");
+    assert_eq!(c.metrics.requests_done.get(), 8);
+    // average fill > 1 proves batching actually happened
+    assert!(c.metrics.requests_done.get() > batches);
+}
+
+#[test]
+fn routes_to_larger_bucket() {
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    let resp = c.submit_blocking(toks(300, 2)).unwrap(); // needs n=512 bucket
+    resp.embedding.expect("512-bucket encode");
+    let too_long = c.submit_blocking(toks(2000, 3));
+    assert!(matches!(too_long, Err(SubmitError::TooLong { .. })));
+    assert!(matches!(c.submit_blocking(vec![]), Err(SubmitError::Empty)));
+}
+
+#[test]
+fn variants_serve_distinct_embeddings() {
+    let Some(c_full) = setup(Variant::Full) else { return };
+    let Some(c_ss) = setup(Variant::SpectralShift) else { return };
+    let t = toks(64, 4);
+    let e_full = c_full.submit_blocking(t.clone()).unwrap().embedding.unwrap();
+    let e_ss = c_ss.submit_blocking(t).unwrap().embedding.unwrap();
+    assert_eq!(e_full.len(), e_ss.len());
+    assert_ne!(e_full, e_ss, "approximation must differ from exact");
+    // but stay correlated
+    let dot: f32 = e_full.iter().zip(&e_ss).map(|(a, b)| a * b).sum();
+    let na: f32 = e_full.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = e_ss.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!(dot / (na * nb) > 0.5, "cosine {}", dot / (na * nb));
+}
+
+#[test]
+fn tcp_server_end_to_end() {
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    let (addr, handle) = serve(c, "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let reply = client.encode(42, &toks(50, 5)).unwrap();
+    assert!(reply.starts_with("OK 42 "), "{reply}");
+    let parts: Vec<&str> = reply.split_whitespace().collect();
+    assert_eq!(parts.len(), 2 + 8); // OK id + 8 dims
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("requests"), "{stats}");
+    handle.stop();
+}
+
+#[test]
+fn tcp_server_error_paths() {
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    let (addr, handle) = serve(c, "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    // too-long request
+    let reply = client.encode(1, &toks(3000, 6)).unwrap();
+    assert!(reply.starts_with("ERR 1 too-long"), "{reply}");
+    handle.stop();
+}
+
+#[test]
+fn graceful_shutdown_drains() {
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    let rx = c.submit(toks(80, 7)).unwrap();
+    let c = Arc::try_unwrap(c).ok().expect("sole owner");
+    c.shutdown();
+    // queued request still answered before shutdown completed
+    let resp = rx.recv().unwrap();
+    assert!(resp.embedding.is_ok());
+}

@@ -1,0 +1,58 @@
+//! Integration: train-step artifact smoke (a short run; the full loss
+//! curve lives in examples/train_tiny.rs → EXPERIMENTS.md E10).
+
+use ssaformer::config::Variant;
+use ssaformer::runtime::Engine;
+use ssaformer::train::{train, TrainConfig};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new("artifacts").unwrap())
+}
+
+#[test]
+fn five_steps_reduce_loss_ss() {
+    let Some(e) = engine() else { return };
+    let cfg = TrainConfig {
+        variant: Variant::SpectralShift,
+        steps: 5,
+        seed: 3,
+        corpus_lines: 300,
+        log_every: 1,
+    };
+    let report = train(&e, &cfg).unwrap();
+    assert_eq!(report.points.len(), 5);
+    // initial loss ≈ ln(vocab) = ln 2048 ≈ 7.62
+    assert!((report.initial_loss - 7.6).abs() < 0.6,
+            "initial {}", report.initial_loss);
+    assert!(report.final_loss < report.initial_loss,
+            "loss did not move: {} -> {}", report.initial_loss, report.final_loss);
+    assert!(report.points.iter().all(|p| p.loss.is_finite()));
+    assert!(report.tokens_per_sec > 0.0);
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    let Some(e) = engine() else { return };
+    let cfg = TrainConfig {
+        variant: Variant::SpectralShift,
+        steps: 2,
+        seed: 11,
+        corpus_lines: 200,
+        log_every: 1,
+    };
+    let a = train(&e, &cfg).unwrap();
+    let b = train(&e, &cfg).unwrap();
+    assert_eq!(a.points[1].loss, b.points[1].loss);
+}
+
+#[test]
+fn missing_variant_errors() {
+    let Some(e) = engine() else { return };
+    // nystrom train artifact is intentionally not emitted
+    let cfg = TrainConfig { variant: Variant::Nystrom, steps: 1, ..Default::default() };
+    assert!(train(&e, &cfg).is_err());
+}
