@@ -1,0 +1,175 @@
+//! Kernel microbench snapshot — machine-readable perf trajectory.
+//!
+//! Runs the kernel-core microbenches at fixed shapes (n ∈ {1024, 4096},
+//! c = 64, d = 64) and writes `BENCH_kernels.json` at the repo root
+//! (falling back to the crate root when run elsewhere): variant →
+//! ns/op, GF/s, threads, plus fast-vs-seed-scalar speedups. CI and
+//! future PRs diff this file to track the hot path.
+//!
+//! Run: cargo bench --bench bench_snapshot
+//! Threads: set SSAFORMER_THREADS to pin the pool size.
+
+use ssaformer::attention::spectral_shift::reference;
+use ssaformer::attention::{
+    matmul_f32, nystrom_attention_with, spectral_shift_attention_with,
+    SpectralShiftConfig, Tensor2,
+};
+use ssaformer::benchkit::{banner, bench, fmt_duration, Table};
+use ssaformer::kernels::{gemm_f32, global_pool, KernelCtx, Workspace};
+use ssaformer::rngx::Rng;
+use std::time::Duration;
+
+struct Entry {
+    name: String,
+    n: usize,
+    ns_per_op: f64,
+    gflops: f64,
+    threads: usize,
+}
+
+fn main() {
+    let threads = global_pool().size() + 1; // workers + contributing caller
+    banner("bench_snapshot — kernel core at fixed shapes",
+           &format!("n ∈ {{1024, 4096}}, c = 64, d = 64, f32; \
+                     {threads} kernel threads.\nWrites BENCH_kernels.json \
+                     (variant → ns/op, GF/s, threads)."));
+
+    let (c, d) = (64usize, 64usize);
+    let budget = Duration::from_millis(700);
+    let seq = KernelCtx::sequential();
+    let par = KernelCtx::global();
+    let mut entries: Vec<Entry> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+
+    let mut table = Table::new(&["kernel", "n", "median", "GF/s", "threads"]);
+    for &n in &[1024usize, 4096] {
+        let mut rng = Rng::new(n as u64);
+        let q = Tensor2::randn(&mut rng, n, d, 1.0);
+        let k = Tensor2::randn(&mut rng, n, d, 1.0);
+        let v = Tensor2::randn(&mut rng, n, d, 1.0);
+        let cfg = SpectralShiftConfig::new(c);
+        let mut ws = Workspace::new();
+
+        // --- GEMM microbench: (n×d)·(d×d), the F/W factor shape class
+        let b = Tensor2::randn(&mut rng, d, d, 1.0);
+        let gemm_flops = (2 * n * d * d) as f64;
+        let s = bench(|| {
+            let out = matmul_f32(&q, &b);
+            std::hint::black_box(&out);
+        }, budget, 40);
+        push(&mut entries, &mut table, "gemm/ref_scalar", n, &s, gemm_flops, 1);
+        let ref_gemm = s.median.as_secs_f64();
+
+        let s = bench(|| {
+            let out = gemm_f32(&seq, &q, &b, &mut ws);
+            std::hint::black_box(&out.data);
+            ws.put(out.data);
+        }, budget, 60);
+        push(&mut entries, &mut table, "gemm/fast_t1", n, &s, gemm_flops, 1);
+
+        let s = bench(|| {
+            let out = gemm_f32(&par, &q, &b, &mut ws);
+            std::hint::black_box(&out.data);
+            ws.put(out.data);
+        }, budget, 60);
+        push(&mut entries, &mut table, "gemm/fast_tN", n, &s, gemm_flops, threads);
+        speedups.push((format!("gemm_n{n}_fast_tN_vs_ref"),
+                       ref_gemm / s.median.as_secs_f64()));
+
+        // --- spectral shifting end-to-end, seed scalar vs kernel core
+        // flop model (approx): F logits + fused combine + W stream
+        // (score dot + value axpy) + pinv iterations
+        let ss_flops = (8 * n * c * d + cfg.pinv_iters * 8 * c * c * c) as f64;
+        let s = bench(|| {
+            let out = reference::spectral_shift_attention_ref(&q, &k, &v, &cfg);
+            std::hint::black_box(&out);
+        }, budget, 20);
+        push(&mut entries, &mut table, "spectral_shift/ref_scalar", n, &s, ss_flops, 1);
+        let ref_ss = s.median.as_secs_f64();
+
+        let s = bench(|| {
+            let out = spectral_shift_attention_with(&q, &k, &v, &cfg, &seq, &mut ws);
+            std::hint::black_box(&out.data);
+            ws.put(out.data);
+        }, budget, 30);
+        push(&mut entries, &mut table, "spectral_shift/fast_t1", n, &s, ss_flops, 1);
+        speedups.push((format!("spectral_shift_n{n}_fast_t1_vs_ref"),
+                       ref_ss / s.median.as_secs_f64()));
+
+        let s = bench(|| {
+            let out = spectral_shift_attention_with(&q, &k, &v, &cfg, &par, &mut ws);
+            std::hint::black_box(&out.data);
+            ws.put(out.data);
+        }, budget, 30);
+        push(&mut entries, &mut table, "spectral_shift/fast_tN", n, &s, ss_flops, threads);
+        speedups.push((format!("spectral_shift_n{n}_fast_tN_vs_ref"),
+                       ref_ss / s.median.as_secs_f64()));
+
+        // --- Nystromformer on the same core (baseline sanity)
+        let s = bench(|| {
+            let out = nystrom_attention_with(&q, &k, &v, c, 8, None, &par, &mut ws);
+            std::hint::black_box(&out.data);
+            ws.put(out.data);
+        }, budget, 30);
+        push(&mut entries, &mut table, "nystrom/fast_tN", n, &s, ss_flops, threads);
+    }
+    println!("{}", table.render());
+
+    let mut spd = Table::new(&["speedup", "×"]);
+    for (name, x) in &speedups {
+        spd.row(&[name.clone(), format!("{x:.2}")]);
+    }
+    println!("{}", spd.render());
+
+    let json = render_json(threads, c, d, &entries, &speedups);
+    // benches run with cwd = rust/; the repo root is one level up
+    let path = if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_kernels.json"
+    } else {
+        "BENCH_kernels.json"
+    };
+    std::fs::write(path, json).expect("write BENCH_kernels.json");
+    println!("wrote {path}");
+}
+
+fn push(entries: &mut Vec<Entry>, table: &mut Table, name: &str, n: usize,
+        s: &ssaformer::benchkit::Stats, flops: f64, threads: usize) {
+    let secs = s.median.as_secs_f64();
+    entries.push(Entry {
+        name: name.to_string(),
+        n,
+        ns_per_op: secs * 1e9,
+        gflops: flops / secs / 1e9,
+        threads,
+    });
+    table.row(&[name.to_string(), n.to_string(), fmt_duration(s.median),
+                format!("{:.2}", flops / secs / 1e9), threads.to_string()]);
+}
+
+fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
+               speedups: &[(String, f64)]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v1\",\n");
+    out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    out.push_str(&format!("  \"c\": {c},\n"));
+    out.push_str(&format!("  \"d\": {d},\n"));
+    out.push_str("  \"entries\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let comma = if i + 1 < entries.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n\": {}, \"ns_per_op\": {:.1}, \
+             \"gflops\": {:.3}, \"threads\": {}}}{comma}\n",
+            e.name, e.n, e.ns_per_op, e.gflops, e.threads));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"speedup\": {\n");
+    for (i, (name, x)) in speedups.iter().enumerate() {
+        let comma = if i + 1 < speedups.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
+    }
+    out.push_str("  }\n");
+    out.push_str("}\n");
+    out
+}

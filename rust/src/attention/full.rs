@@ -2,61 +2,23 @@
 //!
 //! Blocked over queries with an online-softmax accumulation over keys,
 //! mirroring the L1 Pallas flash kernel's structure (one row of scores
-//! never materializes more than a block at a time).
+//! never materializes more than a block at a time). Execution delegates
+//! to `kernels::flash_attention`, which runs the same recurrence
+//! row-parallel on the shared kernel pool.
 
-use super::{axpy_f32, default_scale, dot_f32, Tensor2};
+use super::{default_scale, Tensor2};
+use crate::kernels::{flash_attention, KernelCtx, Workspace};
 
 /// Exact attention out = softmax(q kᵀ · scale) v.
 ///
 /// q: (n, d), k: (m, d), v: (m, dv). `scale` defaults to 1/√d.
+/// Convenience wrapper over [`crate::kernels::flash_attention`]; hot
+/// paths that care about steady-state allocations should call the
+/// kernel directly with their own context and workspace.
 pub fn softmax_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,
                          scale: Option<f32>) -> Tensor2 {
-    assert_eq!(q.cols, k.cols, "q/k width mismatch");
-    assert_eq!(k.rows, v.rows, "k/v length mismatch");
     let scale = scale.unwrap_or_else(|| default_scale(q.cols));
-    let n = q.rows;
-    let m = k.rows;
-    let dv = v.cols;
-    let block_k = 128.min(m.max(1));
-
-    let mut out = Tensor2::zeros(n, dv);
-    let mut scores = vec![0.0f32; block_k];
-    for i in 0..n {
-        let qi = q.row(i);
-        let mut m_run = f32::NEG_INFINITY;
-        let mut l_run = 0.0f32;
-        let orow = out.row_mut(i);
-        let mut start = 0;
-        while start < m {
-            let end = (start + block_k).min(m);
-            let len = end - start;
-            let mut m_cur = f32::NEG_INFINITY;
-            for (jj, j) in (start..end).enumerate() {
-                let s = dot_f32(qi, k.row(j)) * scale;
-                scores[jj] = s;
-                m_cur = m_cur.max(s);
-            }
-            let m_new = m_run.max(m_cur);
-            let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
-            l_run *= corr;
-            for o in orow.iter_mut() {
-                *o *= corr;
-            }
-            for (jj, j) in (start..end).enumerate() {
-                let p = (scores[jj] - m_new).exp();
-                l_run += p;
-                axpy_f32(orow, p, v.row(j));
-            }
-            m_run = m_new;
-            let _ = len;
-            start = end;
-        }
-        let inv = 1.0 / l_run;
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
-    }
-    out
+    flash_attention(&KernelCtx::global(), q, k, v, scale, &mut Workspace::new())
 }
 
 /// Dense n×n attention matrix S = softmax(q kᵀ · scale) — analysis only
@@ -74,6 +36,7 @@ pub fn attention_matrix(q: &Tensor2, k: &Tensor2, scale: Option<f32>) -> crate::
 mod tests {
     use super::*;
     use crate::attention::testutil::qkv;
+    use crate::attention::{axpy_f32, dot_f32};
 
     /// Unblocked naive reference.
     fn naive(q: &Tensor2, k: &Tensor2, v: &Tensor2) -> Tensor2 {

@@ -4,13 +4,23 @@ use super::Tensor2;
 
 /// (n, d) -> (c, d) per-segment means. n must be divisible by c.
 pub fn segment_means(x: &Tensor2, c: usize) -> Tensor2 {
+    segment_means_with(&crate::kernels::KernelCtx::sequential(), x, c,
+                       &mut crate::kernels::Workspace::new())
+}
+
+/// `segment_means` on an explicit kernel context: output rows (one per
+/// segment) fan out over the pool. Each row accumulates its own segment
+/// in input order, so results are identical for any thread count. The
+/// output tensor is backed by `ws` scratch (recycle with
+/// `ws.put(t.data)`), keeping the attention hot paths allocation-free.
+pub fn segment_means_with(ctx: &crate::kernels::KernelCtx, x: &Tensor2, c: usize,
+                          ws: &mut crate::kernels::Workspace) -> Tensor2 {
     assert!(c > 0 && x.rows % c == 0,
             "n={} not divisible by c={c}", x.rows);
     let l = x.rows / c;
     let inv = 1.0 / l as f32;
-    let mut out = Tensor2::zeros(c, x.cols);
-    for j in 0..c {
-        let orow = out.row_mut(j);
+    let mut out = Tensor2 { rows: c, cols: x.cols, data: ws.take(c * x.cols) };
+    crate::kernels::par_rows(ctx, &mut out.data, c, x.cols, |j, orow| {
         for i in j * l..(j + 1) * l {
             for (o, v) in orow.iter_mut().zip(x.row(i)) {
                 *o += v;
@@ -19,7 +29,7 @@ pub fn segment_means(x: &Tensor2, c: usize) -> Tensor2 {
         for o in orow.iter_mut() {
             *o *= inv;
         }
-    }
+    });
     out
 }
 
@@ -67,6 +77,16 @@ mod tests {
     fn indivisible_panics() {
         let x = Tensor2::zeros(10, 2);
         segment_means(&x, 3);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let mut rng = Rng::new(3);
+        let x = Tensor2::randn(&mut rng, 96, 7, 1.0);
+        let seq = segment_means(&x, 12);
+        let par = segment_means_with(&crate::kernels::KernelCtx::global(), &x, 12,
+                                     &mut crate::kernels::Workspace::new());
+        assert_eq!(seq.data, par.data);
     }
 
     #[test]

@@ -7,42 +7,43 @@
 //! random Gaussian projection (seeded), which preserves the complexity
 //! and the JL-style approximation character.
 
-use super::{default_scale, full::softmax_attention, Tensor2};
+use super::{default_scale, Tensor2};
+use crate::kernels::{flash_attention, gemm_f32, KernelCtx, Workspace};
 use crate::rngx::Rng;
 
 /// Linformer attention with projection dimension `kdim`.
 pub fn linformer_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,
                            kdim: usize, seed: u64,
                            scale: Option<f32>) -> Tensor2 {
+    linformer_attention_with(q, k, v, kdim, seed, scale,
+                             &KernelCtx::global(), &mut Workspace::new())
+}
+
+/// `linformer_attention` on an explicit kernel context + workspace: the
+/// projections K' = E·K and V' = E·V run on the blocked parallel GEMM
+/// and the attention over the kdim projected rows streams through the
+/// flash kernel.
+pub fn linformer_attention_with(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                                kdim: usize, seed: u64, scale: Option<f32>,
+                                ctx: &KernelCtx, ws: &mut Workspace) -> Tensor2 {
     assert_eq!(q.cols, k.cols);
     assert_eq!(k.rows, v.rows);
     let m = k.rows;
     let mut rng = Rng::new(seed);
     // E: (kdim, m) Gaussian / sqrt(kdim)
     let std = 1.0 / (kdim as f32).sqrt();
-    let mut e = vec![0.0f32; kdim * m];
-    rng.fill_normal_f32(&mut e, 0.0, std);
+    let mut e = Tensor2 { rows: kdim, cols: m, data: ws.take(kdim * m) };
+    rng.fill_normal_f32(&mut e.data, 0.0, std);
 
     // K' = E K (kdim, d); V' = E V (kdim, dv)
-    let mut kp = Tensor2::zeros(kdim, k.cols);
-    let mut vp = Tensor2::zeros(kdim, v.cols);
-    for r in 0..kdim {
-        let erow = &e[r * m..(r + 1) * m];
-        let krow = kp.row_mut(r);
-        for (j, &w) in erow.iter().enumerate() {
-            for (o, x) in krow.iter_mut().zip(k.row(j)) {
-                *o += w * x;
-            }
-        }
-        let vrow = vp.row_mut(r);
-        for (j, &w) in erow.iter().enumerate() {
-            for (o, x) in vrow.iter_mut().zip(v.row(j)) {
-                *o += w * x;
-            }
-        }
-    }
+    let kp = gemm_f32(ctx, &e, k, ws);
+    let vp = gemm_f32(ctx, &e, v, ws);
     let scale = scale.unwrap_or_else(|| default_scale(q.cols));
-    softmax_attention(q, &kp, &vp, Some(scale))
+    let out = flash_attention(ctx, q, &kp, &vp, scale, ws);
+    ws.put(e.data);
+    ws.put(kp.data);
+    ws.put(vp.data);
+    out
 }
 
 #[cfg(test)]

@@ -13,9 +13,35 @@
 //! | Nystromformer            | `nystrom`         | O(n)             |
 //! | spectral shifting (ours) | `spectral_shift`  | O(n)             |
 //!
-//! These are CPU reference implementations used for analysis and the
-//! scaling benches; the serving hot path executes the AOT-compiled XLA
-//! artifacts through `runtime::` instead.
+//! ## Kernel-layer architecture (fast path vs reference path)
+//!
+//! Since the kernel-core PR the variants are *thin pipelines* over the
+//! [`crate::kernels`] compute layer; the scalar implementations remain
+//! in-tree as the property-test baseline:
+//!
+//! * **Fast path** — every variant's public entry point delegates to a
+//!   `*_with` twin. Signature convention: attention-level `*_with`
+//!   twins append `(ctx: &KernelCtx, ws: &mut Workspace)` after the
+//!   base signature; `crate::kernels` primitives (and the small
+//!   helpers `segment_means_with` / `delta_iterative_with` that follow
+//!   them) take `ctx` first and `ws` last. The twin runs on
+//!   the shared `minirt` pool: tiled parallel GEMM (`kernels::gemm`),
+//!   fused `softmax_gemm` for the F·(M·W) combine (F's n×c logits never
+//!   materialize), the row-parallel flash kernel for exact attention and
+//!   the streamed W = L(Q̃Kᵀ)·V factor, and arena-recycled scratch (zero
+//!   steady-state allocations). Work splits over fixed-size row blocks,
+//!   so outputs are **bitwise identical for any thread count**. Batched
+//!   serving fans heads × requests out via `kernels::batched` (see
+//!   `coordinator::batcher::attention_scatter`).
+//! * **Reference path** — [`matmul_f32`] below plus the seed scalar
+//!   pipeline preserved in [`spectral_shift::reference`]. The fast path
+//!   is property-tested against it (max rel err < 1e-4) in
+//!   `tests/kernel_parity.rs`, and `benches/bench_snapshot.rs` records
+//!   the fast/reference speedup to `BENCH_kernels.json`.
+//!
+//! The serving hot path executes the AOT-compiled XLA artifacts through
+//! `runtime::` when artifacts are present; the kernel layer is the CPU
+//! execution engine and the analysis/bench substrate.
 
 pub mod full;
 pub mod landmarks;
@@ -26,11 +52,13 @@ pub mod spectral_shift;
 pub mod sparse;
 
 pub use full::softmax_attention;
-pub use landmarks::segment_means;
-pub use linformer::linformer_attention;
+pub use landmarks::{segment_means, segment_means_with};
+pub use linformer::{linformer_attention, linformer_attention_with};
 pub use lsh::lsh_attention;
-pub use nystrom::nystrom_attention;
-pub use spectral_shift::{spectral_shift_attention, SpectralShiftConfig};
+pub use nystrom::{nystrom_attention, nystrom_attention_with};
+pub use spectral_shift::{
+    spectral_shift_attention, spectral_shift_attention_with, SpectralShiftConfig,
+};
 pub use sparse::sparse_attention;
 
 /// A (rows × cols) f32 row-major tensor view used across the variants.
@@ -120,8 +148,11 @@ pub(crate) fn axpy_f32(out: &mut [f32], w: f32, v: &[f32]) {
     }
 }
 
-/// C = A · B for Tensor2 (small/medium sizes; transposes B for locality).
-pub(crate) fn matmul_f32(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+/// C = A · B for Tensor2 (transposes B once for locality, per-row dot
+/// products). This is the **reference** matmul the `kernels::` fast
+/// path is property-tested against — keep it naive and obviously
+/// correct; use [`crate::kernels::gemm_f32`] on hot paths.
+pub fn matmul_f32(a: &Tensor2, b: &Tensor2) -> Tensor2 {
     assert_eq!(a.cols, b.rows);
     // transpose b
     let mut bt = vec![0.0f32; b.rows * b.cols];

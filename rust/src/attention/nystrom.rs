@@ -4,81 +4,72 @@
 //!
 //! with segment-means landmarks and the eq-11 order-7 Newton-Schulz
 //! pseudoinverse (same iteration count semantics as the Pallas kernel).
+//!
+//! Execution runs on the `kernels::` blocked/parallel core: the F and A
+//! factors come out of the tiled softmax-GEMM, W streams through the
+//! flash kernel's online softmax, the Newton-Schulz iterations run on
+//! the parallel GEMM, and the final combine uses the fused
+//! `softmax_gemm` so F is never materialized on the attention path.
 
-use super::landmarks::segment_means;
-use super::{axpy_f32, default_scale, dot_f32, matmul_f32, Tensor2};
+use super::landmarks::segment_means_with;
+use super::{default_scale, Tensor2};
+use crate::kernels::{
+    flash_attention, gemm_f32, gemm_into, softmax_gemm, softmax_scores, KernelCtx, Workspace,
+};
 
-/// The three softmax factors. Returns (F, A, W=B·V) with B never stored:
-/// B's rows are streamed against V with an online softmax, so memory is
-/// O(nc + c² + c·dv).
+/// The shared landmark-factor prologue every O(n) variant starts with:
+/// segment-means landmarks q̃/k̃, A = L(q̃k̃ᵀ), and W = L(q̃kᵀ)·V streamed
+/// through the flash kernel's online softmax (B never stored — the
+/// Figure-1 constraint: the row softmax needs every column, so the
+/// normalizer accumulates across key blocks). F is deliberately *not*
+/// here: the attention entry points fuse it via `softmax_gemm`, and
+/// `factors` materializes it only for analysis/tests.
+pub(crate) struct LandmarkFactors {
+    pub qt: Tensor2,
+    pub kt: Tensor2,
+    pub a: Tensor2,
+    pub w: Tensor2,
+}
+
+pub(crate) fn landmark_factors(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
+                               scale: f32, ctx: &KernelCtx, ws: &mut Workspace)
+                               -> LandmarkFactors {
+    let qt = segment_means_with(ctx, q, c, ws);
+    let kt = segment_means_with(ctx, k, c, ws);
+    let a = softmax_scores(ctx, &qt, &kt, scale, ws);
+    let w = flash_attention(ctx, &qt, k, v, scale, ws);
+    LandmarkFactors { qt, kt, a, w }
+}
+
+/// The three softmax factors, materialized. Returns (F, A, W=B·V) with
+/// memory O(nc + c² + c·dv). The attention entry points below skip F
+/// and fuse the combine instead.
 pub(crate) fn factors(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
                       scale: f32) -> (Tensor2, Tensor2, Tensor2) {
-    let qt = segment_means(q, c);
-    let kt = segment_means(k, c);
-    // F = rowsoftmax(q k̃ᵀ): (n, c) — softmax over c entries, local per row
-    let mut f = Tensor2::zeros(q.rows, c);
-    for i in 0..q.rows {
-        let qi = q.row(i);
-        let frow = f.row_mut(i);
-        for j in 0..c {
-            frow[j] = dot_f32(qi, kt.row(j)) * scale;
-        }
-    }
-    crate::linalg::row_softmax_f32(&mut f.data, q.rows, c);
-    // A = rowsoftmax(q̃ k̃ᵀ): (c, c)
-    let mut a = Tensor2::zeros(c, c);
-    for i in 0..c {
-        let qi = qt.row(i);
-        let arow = a.row_mut(i);
-        for j in 0..c {
-            arow[j] = dot_f32(qi, kt.row(j)) * scale;
-        }
-    }
-    crate::linalg::row_softmax_f32(&mut a.data, c, c);
-    // W = rowsoftmax(q̃ kᵀ) V: (c, dv), streamed over the n keys with the
-    // online-softmax recurrence (the Figure-1 constraint: the row softmax
-    // needs every column, so the normalizer accumulates across blocks).
-    let mut w = Tensor2::zeros(c, v.cols);
-    let block = 128.min(k.rows.max(1));
-    let mut scores = vec![0.0f32; block];
-    for i in 0..c {
-        let qi = qt.row(i);
-        let wrow = w.row_mut(i);
-        let mut m_run = f32::NEG_INFINITY;
-        let mut l_run = 0.0f32;
-        let mut start = 0;
-        while start < k.rows {
-            let end = (start + block).min(k.rows);
-            let mut m_cur = f32::NEG_INFINITY;
-            for (jj, j) in (start..end).enumerate() {
-                let s = dot_f32(qi, k.row(j)) * scale;
-                scores[jj] = s;
-                m_cur = m_cur.max(s);
-            }
-            let m_new = m_run.max(m_cur);
-            let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
-            l_run *= corr;
-            for o in wrow.iter_mut() {
-                *o *= corr;
-            }
-            for (jj, j) in (start..end).enumerate() {
-                let p = (scores[jj] - m_new).exp();
-                l_run += p;
-                axpy_f32(wrow, p, v.row(j));
-            }
-            m_run = m_new;
-            start = end;
-        }
-        let inv = 1.0 / l_run;
-        for o in wrow.iter_mut() {
-            *o *= inv;
-        }
-    }
-    (f, a, w)
+    factors_with(q, k, v, c, scale, &KernelCtx::global(), &mut Workspace::new())
+}
+
+/// `factors` on an explicit kernel context + workspace.
+pub(crate) fn factors_with(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
+                           scale: f32, ctx: &KernelCtx, ws: &mut Workspace)
+                           -> (Tensor2, Tensor2, Tensor2) {
+    let lf = landmark_factors(q, k, v, c, scale, ctx, ws);
+    // F = rowsoftmax(q k̃ᵀ): (n, c)
+    let f = softmax_scores(ctx, q, &lf.kt, scale, ws);
+    ws.put(lf.qt.data);
+    ws.put(lf.kt.data);
+    (f, lf.a, lf.w)
 }
 
 /// f32 order-7 Newton-Schulz pinv (eq 11), mirroring kernels/pinv_iter.py.
 pub(crate) fn ns_pinv_f32(a: &Tensor2, iters: usize) -> Tensor2 {
+    ns_pinv_with(a, iters, &KernelCtx::global(), &mut Workspace::new())
+}
+
+/// Newton-Schulz pinv on the blocked parallel GEMM; all five c×c
+/// intermediates live in (and return to) the workspace arena.
+pub(crate) fn ns_pinv_with(a: &Tensor2, iters: usize, ctx: &KernelCtx,
+                           ws: &mut Workspace) -> Tensor2 {
     let c = a.rows;
     assert_eq!(a.rows, a.cols);
     // Z0 = Aᵀ / (‖A‖₁‖A‖∞)
@@ -91,61 +82,84 @@ pub(crate) fn ns_pinv_f32(a: &Tensor2, iters: usize) -> Tensor2 {
         .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
         .fold(0.0f32, f32::max);
     let denom = (n1 * ninf).max(f32::MIN_POSITIVE);
-    let mut z = Tensor2::zeros(c, c);
+    let mut z = ws.take(c * c);
     for i in 0..c {
         for j in 0..c {
-            z.data[i * c + j] = a.data[j * c + i] / denom;
+            z[i * c + j] = a.data[j * c + i] / denom;
         }
     }
-    let eye = |s: f32| {
-        let mut m = Tensor2::zeros(c, c);
-        for i in 0..c {
-            m.data[i * c + i] = s;
-        }
-        m
-    };
+    let mut az = ws.take(c * c);
+    let mut inner = ws.take(c * c);
+    let mut tmp = ws.take(c * c);
+    let mut znew = ws.take(c * c);
     for _ in 0..iters {
-        let az = matmul_f32(a, &z);
+        gemm_into(ctx, &a.data, &z, &mut az, c, c, c);
         // inner1 = 7I − AZ
-        let mut inner1 = eye(7.0);
-        for (x, y) in inner1.data.iter_mut().zip(&az.data) {
-            *x -= y;
-        }
+        scaled_identity_minus(&mut inner, &az, 7.0, c);
         // inner2 = 15I − AZ·inner1
-        let t = matmul_f32(&az, &inner1);
-        let mut inner2 = eye(15.0);
-        for (x, y) in inner2.data.iter_mut().zip(&t.data) {
-            *x -= y;
-        }
+        gemm_into(ctx, &az, &inner, &mut tmp, c, c, c);
+        scaled_identity_minus(&mut inner, &tmp, 15.0, c);
         // inner3 = 13I − AZ·inner2
-        let t = matmul_f32(&az, &inner2);
-        let mut inner3 = eye(13.0);
-        for (x, y) in inner3.data.iter_mut().zip(&t.data) {
-            *x -= y;
-        }
-        z = matmul_f32(&z, &inner3);
-        for x in z.data.iter_mut() {
+        gemm_into(ctx, &az, &inner, &mut tmp, c, c, c);
+        scaled_identity_minus(&mut inner, &tmp, 13.0, c);
+        // Z ← ¼ Z·inner3
+        gemm_into(ctx, &z, &inner, &mut znew, c, c, c);
+        for x in znew.iter_mut() {
             *x *= 0.25;
         }
+        std::mem::swap(&mut z, &mut znew);
     }
-    z
+    ws.put(az);
+    ws.put(inner);
+    ws.put(tmp);
+    ws.put(znew);
+    Tensor2 { rows: c, cols: c, data: z }
+}
+
+/// out = s·I − m (c×c).
+fn scaled_identity_minus(out: &mut [f32], m: &[f32], s: f32, c: usize) {
+    for (o, x) in out.iter_mut().zip(m) {
+        *o = -x;
+    }
+    for i in 0..c {
+        out[i * c + i] += s;
+    }
 }
 
 /// Nystromformer attention: out = F · (Z · W). O(n·c·(d+dv) + c³).
 pub fn nystrom_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
                          pinv_iters: usize, scale: Option<f32>) -> Tensor2 {
+    nystrom_attention_with(q, k, v, c, pinv_iters, scale,
+                           &KernelCtx::global(), &mut Workspace::new())
+}
+
+/// `nystrom_attention` on an explicit kernel context + workspace — the
+/// zero-allocation serving entry point (used per-task by
+/// `kernels::batched`). The combine is fused: F never materializes.
+pub fn nystrom_attention_with(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
+                              pinv_iters: usize, scale: Option<f32>,
+                              ctx: &KernelCtx, ws: &mut Workspace) -> Tensor2 {
     let scale = scale.unwrap_or_else(|| default_scale(q.cols));
-    let (f, a, w) = factors(q, k, v, c, scale);
-    let z = ns_pinv_f32(&a, pinv_iters);
-    let zw = matmul_f32(&z, &w);
-    matmul_f32(&f, &zw)
+    let lf = landmark_factors(q, k, v, c, scale, ctx, ws);
+    let z = ns_pinv_with(&lf.a, pinv_iters, ctx, ws);
+    let zw = gemm_f32(ctx, &z, &lf.w, ws);
+    let out = softmax_gemm(ctx, q, &lf.kt, &zw, scale, ws);
+    ws.put(lf.qt.data);
+    ws.put(lf.kt.data);
+    ws.put(lf.a.data);
+    ws.put(lf.w.data);
+    ws.put(z.data);
+    ws.put(zw.data);
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::full::softmax_attention;
+    use crate::attention::landmarks::segment_means;
     use crate::attention::testutil::{qkv, rel_err};
+    use crate::attention::{dot_f32, matmul_f32};
 
     #[test]
     fn c_equals_n_recovers_exact_attention() {
@@ -226,5 +240,32 @@ mod tests {
         crate::linalg::row_softmax_f32(&mut b.data, c, 96);
         let want = matmul_f32(&b, &v);
         assert!(w.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn fused_path_matches_materialized_composition() {
+        // out = F·(Z·W) assembled with the naive reference kernels must
+        // match the fused softmax_gemm combine
+        let (q, k, v) = qkv(7, 128, 16);
+        let (c, iters) = (16, 8);
+        let scale = default_scale(16);
+        let fast = nystrom_attention(&q, &k, &v, c, iters, None);
+        let (f, a, w) = factors(&q, &k, &v, c, scale);
+        let z = ns_pinv_f32(&a, iters);
+        let zw = matmul_f32(&z, &w);
+        let want = matmul_f32(&f, &zw);
+        let e = rel_err(&fast, &want);
+        assert!(e < 1e-4, "fused vs materialized rel err {e}");
+    }
+
+    #[test]
+    fn thread_counts_are_bitwise_identical() {
+        let (q, k, v) = qkv(8, 128, 16);
+        let mut ws = Workspace::new();
+        let seq = nystrom_attention_with(&q, &k, &v, 16, 8, None,
+                                         &KernelCtx::sequential(), &mut ws);
+        let par = nystrom_attention_with(&q, &k, &v, 16, 8, None,
+                                         &KernelCtx::global(), &mut ws);
+        assert_eq!(seq.data, par.data);
     }
 }

@@ -8,10 +8,17 @@
 //! Z the eq-11 iterative pseudoinverse. `middle_form` switches between
 //! the derivation-consistent eq-8 factor and the as-printed eq-4 factor
 //! (see DESIGN.md §1 note); `rank_rtol` only affects the exact/SVD path
-//! used for analysis (`spectral_shift_matrix`).
+//! used for analysis (`spectral_shift_matrix_exact`).
+//!
+//! The attention entry point executes on the `kernels::` blocked
+//! parallel core (A via tiled softmax-GEMM, W via the flash streaming
+//! kernel, Z on the parallel GEMM, combine fused so F never
+//! materializes). The seed scalar implementation is preserved verbatim
+//! in [`reference`] as the parity/bench baseline.
 
-use super::nystrom::{factors, ns_pinv_f32};
-use super::{default_scale, matmul_f32, Tensor2};
+use super::nystrom::{landmark_factors, ns_pinv_with};
+use super::{default_scale, Tensor2};
+use crate::kernels::{gemm_f32, softmax_gemm, KernelCtx, Workspace};
 use crate::linalg::{self, Matrix};
 
 /// Which middle factor to build (paper inconsistency; eq8 is primary).
@@ -53,12 +60,19 @@ impl SpectralShiftConfig {
 
 /// The matmul-only δ estimator mirroring `ref.delta_ss_iterative`.
 pub(crate) fn delta_iterative(a: &Tensor2, z: &Tensor2, eps: f32) -> f32 {
+    delta_iterative_with(&KernelCtx::global(), a, z, eps, &mut Workspace::new())
+}
+
+pub(crate) fn delta_iterative_with(ctx: &KernelCtx, a: &Tensor2, z: &Tensor2,
+                                   eps: f32, ws: &mut Workspace) -> f32 {
     let c = a.rows;
-    let za = matmul_f32(z, a);
+    let za = gemm_f32(ctx, z, a, ws);
     let tr_za: f32 = (0..c).map(|i| za.data[i * c + i]).sum();
-    let zaa = matmul_f32(&za, a);
+    let zaa = gemm_f32(ctx, &za, a, ws);
     let tr_a: f32 = (0..c).map(|i| a.data[i * c + i]).sum();
     let tr_zaa: f32 = (0..c).map(|i| zaa.data[i * c + i]).sum();
+    ws.put(za.data);
+    ws.put(zaa.data);
     let den = (c as f32 - tr_za).max(eps);
     ((tr_a - tr_zaa) / den).max(0.0)
 }
@@ -66,31 +80,51 @@ pub(crate) fn delta_iterative(a: &Tensor2, z: &Tensor2, eps: f32) -> f32 {
 /// Spectral-shifting attention, O(n·c·(d+dv) + c³).
 pub fn spectral_shift_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,
                                 cfg: &SpectralShiftConfig) -> Tensor2 {
+    spectral_shift_attention_with(q, k, v, cfg, &KernelCtx::global(),
+                                  &mut Workspace::new())
+}
+
+/// `spectral_shift_attention` on an explicit kernel context + workspace
+/// — the zero-allocation serving entry point (used per-task by
+/// `kernels::batched`). The F·(M·W) combine is fused; F never
+/// materializes.
+pub fn spectral_shift_attention_with(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                                     cfg: &SpectralShiftConfig,
+                                     ctx: &KernelCtx, ws: &mut Workspace)
+                                     -> Tensor2 {
     let scale = cfg.scale.unwrap_or_else(|| default_scale(q.cols));
     let c = cfg.landmarks;
-    let (f, a, w) = factors(q, k, v, c, scale);
-    let z = ns_pinv_f32(&a, cfg.pinv_iters);
-    let delta = delta_iterative(&a, &z, 1e-3);
+    let lf = landmark_factors(q, k, v, c, scale, ctx, ws);
+    let z = ns_pinv_with(&lf.a, cfg.pinv_iters, ctx, ws);
+    let delta = delta_iterative_with(ctx, &lf.a, &z, 1e-3, ws);
     // M = Z(I − δZ)  or  Z(I − δA)
     let other = match cfg.middle_form {
         MiddleForm::Eq8 => &z,
-        MiddleForm::Eq4 => &a,
+        MiddleForm::Eq4 => &lf.a,
     };
-    let mut inner = Tensor2::zeros(c, c);
+    let mut inner = Tensor2 { rows: c, cols: c, data: ws.take(c * c) };
     for i in 0..c {
         for j in 0..c {
             let id = if i == j { 1.0 } else { 0.0 };
             inner.data[i * c + j] = id - delta * other.data[i * c + j];
         }
     }
-    let m = matmul_f32(&z, &inner);
-    let mw = matmul_f32(&m, &w);
-    let mut out = matmul_f32(&f, &mw);
+    let m = gemm_f32(ctx, &z, &inner, ws);
+    let mw = gemm_f32(ctx, &m, &lf.w, ws);
+    let mut out = softmax_gemm(ctx, q, &lf.kt, &mw, scale, ws);
     if cfg.add_shift_identity {
         for (o, x) in out.data.iter_mut().zip(&v.data) {
             *o += delta * x;
         }
     }
+    ws.put(lf.qt.data);
+    ws.put(lf.kt.data);
+    ws.put(lf.a.data);
+    ws.put(lf.w.data);
+    ws.put(z.data);
+    ws.put(inner.data);
+    ws.put(m.data);
+    ws.put(mw.data);
     out
 }
 
@@ -161,11 +195,190 @@ pub fn segment_means_f64(x: &Matrix, c: usize) -> Matrix {
     })
 }
 
+/// The seed scalar implementations, preserved byte-for-byte in spirit:
+/// unvectorized per-row dot loops, per-call allocations, single thread.
+/// They are the ground truth the `kernels::` fast path is
+/// property-tested against (`tests/kernel_parity.rs`) and the baseline
+/// the `bench_snapshot` bench reports speedups over.
+pub mod reference {
+    use crate::attention::landmarks::segment_means;
+    use crate::attention::{axpy_f32, default_scale, dot_f32, matmul_f32, Tensor2};
+
+    use super::{MiddleForm, SpectralShiftConfig};
+
+    /// Seed `factors`: per-row dot loops for F/A, blocked online
+    /// softmax for W.
+    pub fn factors_ref(q: &Tensor2, k: &Tensor2, v: &Tensor2, c: usize,
+                       scale: f32) -> (Tensor2, Tensor2, Tensor2) {
+        let qt = segment_means(q, c);
+        let kt = segment_means(k, c);
+        let mut f = Tensor2::zeros(q.rows, c);
+        for i in 0..q.rows {
+            let qi = q.row(i);
+            let frow = f.row_mut(i);
+            for j in 0..c {
+                frow[j] = dot_f32(qi, kt.row(j)) * scale;
+            }
+        }
+        crate::linalg::row_softmax_f32(&mut f.data, q.rows, c);
+        let mut a = Tensor2::zeros(c, c);
+        for i in 0..c {
+            let qi = qt.row(i);
+            let arow = a.row_mut(i);
+            for j in 0..c {
+                arow[j] = dot_f32(qi, kt.row(j)) * scale;
+            }
+        }
+        crate::linalg::row_softmax_f32(&mut a.data, c, c);
+        let mut w = Tensor2::zeros(c, v.cols);
+        let block = 128.min(k.rows.max(1));
+        let mut scores = vec![0.0f32; block];
+        for i in 0..c {
+            let qi = qt.row(i);
+            let wrow = w.row_mut(i);
+            let mut m_run = f32::NEG_INFINITY;
+            let mut l_run = 0.0f32;
+            let mut start = 0;
+            while start < k.rows {
+                let end = (start + block).min(k.rows);
+                let mut m_cur = f32::NEG_INFINITY;
+                for (jj, j) in (start..end).enumerate() {
+                    let s = dot_f32(qi, k.row(j)) * scale;
+                    scores[jj] = s;
+                    m_cur = m_cur.max(s);
+                }
+                let m_new = m_run.max(m_cur);
+                let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
+                l_run *= corr;
+                for o in wrow.iter_mut() {
+                    *o *= corr;
+                }
+                for (jj, j) in (start..end).enumerate() {
+                    let p = (scores[jj] - m_new).exp();
+                    l_run += p;
+                    axpy_f32(wrow, p, v.row(j));
+                }
+                m_run = m_new;
+                start = end;
+            }
+            let inv = 1.0 / l_run;
+            for o in wrow.iter_mut() {
+                *o *= inv;
+            }
+        }
+        (f, a, w)
+    }
+
+    /// Seed order-7 Newton-Schulz pinv over `matmul_f32`.
+    pub fn ns_pinv_ref(a: &Tensor2, iters: usize) -> Tensor2 {
+        let c = a.rows;
+        assert_eq!(a.rows, a.cols);
+        let mut n1 = 0.0f32;
+        for j in 0..c {
+            let s: f32 = (0..c).map(|i| a.data[i * c + j].abs()).sum();
+            n1 = n1.max(s);
+        }
+        let ninf = (0..c)
+            .map(|i| a.row(i).iter().map(|x| x.abs()).sum::<f32>())
+            .fold(0.0f32, f32::max);
+        let denom = (n1 * ninf).max(f32::MIN_POSITIVE);
+        let mut z = Tensor2::zeros(c, c);
+        for i in 0..c {
+            for j in 0..c {
+                z.data[i * c + j] = a.data[j * c + i] / denom;
+            }
+        }
+        let eye = |s: f32| {
+            let mut m = Tensor2::zeros(c, c);
+            for i in 0..c {
+                m.data[i * c + i] = s;
+            }
+            m
+        };
+        for _ in 0..iters {
+            let az = matmul_f32(a, &z);
+            let mut inner1 = eye(7.0);
+            for (x, y) in inner1.data.iter_mut().zip(&az.data) {
+                *x -= y;
+            }
+            let t = matmul_f32(&az, &inner1);
+            let mut inner2 = eye(15.0);
+            for (x, y) in inner2.data.iter_mut().zip(&t.data) {
+                *x -= y;
+            }
+            let t = matmul_f32(&az, &inner2);
+            let mut inner3 = eye(13.0);
+            for (x, y) in inner3.data.iter_mut().zip(&t.data) {
+                *x -= y;
+            }
+            z = matmul_f32(&z, &inner3);
+            for x in z.data.iter_mut() {
+                *x *= 0.25;
+            }
+        }
+        z
+    }
+
+    /// Seed δ estimator over `matmul_f32`.
+    pub fn delta_iterative_ref(a: &Tensor2, z: &Tensor2, eps: f32) -> f32 {
+        let c = a.rows;
+        let za = matmul_f32(z, a);
+        let tr_za: f32 = (0..c).map(|i| za.data[i * c + i]).sum();
+        let zaa = matmul_f32(&za, a);
+        let tr_a: f32 = (0..c).map(|i| a.data[i * c + i]).sum();
+        let tr_zaa: f32 = (0..c).map(|i| zaa.data[i * c + i]).sum();
+        let den = (c as f32 - tr_za).max(eps);
+        ((tr_a - tr_zaa) / den).max(0.0)
+    }
+
+    /// Seed Nystromformer attention (materialized F, naive matmuls).
+    pub fn nystrom_attention_ref(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                                 c: usize, pinv_iters: usize,
+                                 scale: Option<f32>) -> Tensor2 {
+        let scale = scale.unwrap_or_else(|| default_scale(q.cols));
+        let (f, a, w) = factors_ref(q, k, v, c, scale);
+        let z = ns_pinv_ref(&a, pinv_iters);
+        let zw = matmul_f32(&z, &w);
+        matmul_f32(&f, &zw)
+    }
+
+    /// Seed spectral-shifting attention (the scalar hot path this PR's
+    /// kernel core replaces).
+    pub fn spectral_shift_attention_ref(q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                                        cfg: &SpectralShiftConfig) -> Tensor2 {
+        let scale = cfg.scale.unwrap_or_else(|| default_scale(q.cols));
+        let c = cfg.landmarks;
+        let (f, a, w) = factors_ref(q, k, v, c, scale);
+        let z = ns_pinv_ref(&a, cfg.pinv_iters);
+        let delta = delta_iterative_ref(&a, &z, 1e-3);
+        let other = match cfg.middle_form {
+            MiddleForm::Eq8 => &z,
+            MiddleForm::Eq4 => &a,
+        };
+        let mut inner = Tensor2::zeros(c, c);
+        for i in 0..c {
+            for j in 0..c {
+                let id = if i == j { 1.0 } else { 0.0 };
+                inner.data[i * c + j] = id - delta * other.data[i * c + j];
+            }
+        }
+        let m = matmul_f32(&z, &inner);
+        let mw = matmul_f32(&m, &w);
+        let mut out = matmul_f32(&f, &mw);
+        if cfg.add_shift_identity {
+            for (o, x) in out.data.iter_mut().zip(&v.data) {
+                *o += delta * x;
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::full::{attention_matrix, softmax_attention};
-    use crate::attention::nystrom::nystrom_attention;
+    use crate::attention::nystrom::{factors, ns_pinv_f32, nystrom_attention};
     use crate::attention::testutil::{qkv, rel_err};
 
     #[test]
@@ -222,6 +435,50 @@ mod tests {
     }
 
     #[test]
+    fn fast_path_matches_seed_reference() {
+        // the kernels:: fast path must reproduce the preserved seed
+        // implementation to fp-reassociation precision
+        let (q, k, v) = qkv(11, 256, 16);
+        for form in [MiddleForm::Eq8, MiddleForm::Eq4] {
+            let mut cfg = SpectralShiftConfig::new(32);
+            cfg.middle_form = form;
+            let fast = spectral_shift_attention(&q, &k, &v, &cfg);
+            let seed = reference::spectral_shift_attention_ref(&q, &k, &v, &cfg);
+            let e = rel_err(&fast, &seed);
+            assert!(e < 1e-4, "{form:?}: fast vs seed rel err {e}");
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bitwise_identical() {
+        let (q, k, v) = qkv(12, 128, 16);
+        let cfg = SpectralShiftConfig::new(16);
+        let mut ws = Workspace::new();
+        let seq = spectral_shift_attention_with(&q, &k, &v, &cfg,
+                                                &KernelCtx::sequential(), &mut ws);
+        let par = spectral_shift_attention_with(&q, &k, &v, &cfg,
+                                                &KernelCtx::global(), &mut ws);
+        assert_eq!(seq.data, par.data);
+    }
+
+    #[test]
+    fn workspace_reuse_stops_allocating() {
+        let (q, k, v) = qkv(13, 128, 16);
+        let cfg = SpectralShiftConfig::new(16);
+        let ctx = KernelCtx::global();
+        let mut ws = Workspace::new();
+        let out = spectral_shift_attention_with(&q, &k, &v, &cfg, &ctx, &mut ws);
+        ws.put(out.data);
+        let warm = ws.allocations();
+        for _ in 0..4 {
+            let out = spectral_shift_attention_with(&q, &k, &v, &cfg, &ctx, &mut ws);
+            ws.put(out.data);
+        }
+        assert_eq!(ws.allocations(), warm,
+                   "steady-state attention must not allocate from the arena");
+    }
+
+    #[test]
     fn exact_matrix_error_shrinks_with_c() {
         // Gaussian q,k are the hard near-uniform-attention case; the
         // useful invariant is monotone improvement with landmark count
@@ -252,7 +509,6 @@ mod tests {
         let km = k.to_matrix();
         let qm = q.to_matrix();
         let kt = segment_means_f64(&km, c);
-        let qt = segment_means_f64(&qm, c);
         let scale = 1.0 / (8f64).sqrt();
         // landmark-first F factor
         let f_landmark = linalg::row_softmax(
@@ -262,7 +518,6 @@ mod tests {
         let f_post = segment_means_f64(&s_true.transpose(), c).transpose();
         let diff = f_landmark.max_abs_diff(&f_post);
         assert!(diff > 1e-3, "the two orders coincided: {diff}");
-        let _ = qt;
     }
 
     #[test]
@@ -283,5 +538,16 @@ mod tests {
         let z = ns_pinv_f32(&a, 20);
         let d = delta_iterative(&a, &z, 1e-3);
         assert!(d < 0.05, "{d}");
+    }
+
+    #[test]
+    fn delta_estimators_agree() {
+        let (q, k, v) = qkv(14, 128, 16);
+        let scale = default_scale(16);
+        let (_f, a, _w) = factors(&q, &k, &v, 16, scale);
+        let z = ns_pinv_f32(&a, 12);
+        let fast = delta_iterative(&a, &z, 1e-3);
+        let seed = reference::delta_iterative_ref(&a, &z, 1e-3);
+        assert!((fast - seed).abs() < 1e-4, "fast {fast} vs seed {seed}");
     }
 }

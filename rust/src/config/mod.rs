@@ -36,18 +36,40 @@ impl fmt::Display for Value {
 }
 
 /// Config parsing / validation errors.
-#[derive(Debug, thiserror::Error)]
+///
+/// Display/Error/From are hand-written — the crate cache has no
+/// thiserror, and the crate builds with zero external dependencies.
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: {1}")]
     Parse(usize, String),
-    #[error("missing key [{0}] {1}")]
     Missing(String, String),
-    #[error("type mismatch for [{0}] {1}: expected {2}")]
     Type(String, String, &'static str),
-    #[error("invalid value for [{0}] {1}: {2}")]
     Invalid(String, String, String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Parse(line, msg) => write!(f, "line {line}: {msg}"),
+            ConfigError::Missing(sec, key) => write!(f, "missing key [{sec}] {key}"),
+            ConfigError::Type(sec, key, want) => {
+                write!(f, "type mismatch for [{sec}] {key}: expected {want}")
+            }
+            ConfigError::Invalid(sec, key, why) => {
+                write!(f, "invalid value for [{sec}] {key}: {why}")
+            }
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl Config {

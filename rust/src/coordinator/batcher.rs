@@ -2,7 +2,15 @@
 //! padded token tensor the encode artifact expects, and scatters
 //! per-request results back out. Pure functions — no locks, no I/O —
 //! so the padding/scatter invariants are property-testable.
+//!
+//! [`attention_scatter`] is the CPU execution twin of `scatter`: it
+//! takes an assembled plan plus stacked q/k/v activations and executes
+//! every real request's multi-head attention on the `kernels::` core,
+//! heads × requests in parallel over the shared pool — a popped batch
+//! no longer runs its requests serially.
 
+use crate::attention::Tensor2;
+use crate::kernels::{attention_batched, BatchedAttention, BatchedVariant};
 use crate::text::PAD;
 
 /// A request's tokens plus its slot in the assembled batch.
@@ -42,6 +50,53 @@ pub fn scatter(plan: &BatchPlan, output: &[f32], width: usize) -> Vec<Vec<f32>> 
         .collect()
 }
 
+/// Execute per-request self-attention for an assembled batch on the CPU
+/// kernel core. `q`/`k`/`v` are (capacity·seq × d) row-major stacks
+/// aligned with the plan's rows; `lens[r]` is request r's real token
+/// count (≤ `plan.seq`), exactly what the caller handed `assemble`.
+/// Padding is skipped at both granularities: padding *requests* (rows
+/// beyond `fill`) never execute, and the padded tail *positions* of a
+/// short request are excluded from its q/k/v, so pad keys never receive
+/// softmax weight. All heads of all requests fan out over the kernel
+/// pool in parallel. Returns one (lens\[r\] × d) output per real
+/// request, in order — padding dropped exactly as in [`scatter`].
+///
+/// For the landmark variants (`Nystrom` / `SpectralShift`) every
+/// `lens[r]` must be divisible by the landmark count — the router's
+/// bucketing must guarantee that, as it does for artifact shapes.
+pub fn attention_scatter(exec: &mut BatchedAttention, plan: &BatchPlan,
+                         q: &[f32], k: &[f32], v: &[f32], d: usize,
+                         lens: &[usize], n_heads: usize,
+                         variant: BatchedVariant) -> Vec<Tensor2> {
+    let per_req = plan.seq * d;
+    assert_eq!(q.len(), plan.capacity * per_req,
+               "q len {} != capacity {} × seq {} × d {d}",
+               q.len(), plan.capacity, plan.seq);
+    assert_eq!(k.len(), q.len(), "k/q length mismatch");
+    assert_eq!(v.len(), q.len(), "v/q length mismatch");
+    assert_eq!(lens.len(), plan.fill, "one length per real request");
+    let reqs: Vec<(Tensor2, Tensor2, Tensor2)> = (0..plan.fill)
+        .map(|r| {
+            let len = lens[r];
+            assert!(len > 0 && len <= plan.seq,
+                    "request {r} length {len} outside 1..={}", plan.seq);
+            let mut slice = |buf: &[f32]| {
+                let mut data = exec.scratch().take(len * d);
+                data.copy_from_slice(&buf[r * per_req..r * per_req + len * d]);
+                Tensor2 { rows: len, cols: d, data }
+            };
+            (slice(q), slice(k), slice(v))
+        })
+        .collect();
+    let outs = attention_batched(exec, &reqs, n_heads, variant);
+    for (rq, rk, rv) in reqs {
+        exec.scratch().put(rq.data);
+        exec.scratch().put(rk.data);
+        exec.scratch().put(rv.data);
+    }
+    outs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +128,68 @@ mod tests {
     fn overfull_batch_panics() {
         let r = vec![1];
         assemble(&[&r, &r, &r], 2, 4);
+    }
+
+    #[test]
+    fn attention_scatter_skips_padding_and_matches_serial() {
+        use crate::kernels::{flash_attention, KernelCtx, Workspace};
+        let mut rng = crate::rngx::Rng::new(21);
+        let (cap, seq, d, heads) = (4usize, 32usize, 8usize, 2usize);
+        // request 0 fills its bucket, request 1 is short (padded tail)
+        let lens = [seq, 24usize];
+        let fill = lens.len();
+        let mut q = vec![0.0f32; cap * seq * d];
+        let mut k = vec![0.0f32; cap * seq * d];
+        let mut v = vec![0.0f32; cap * seq * d];
+        // fill the real positions; poison every padded position — the
+        // tail of the short request AND the padding requests — with
+        // huge values that would corrupt the result if ever touched
+        for buf in [&mut q, &mut k, &mut v] {
+            for x in buf.iter_mut() {
+                *x = 1e30;
+            }
+            for (r, &len) in lens.iter().enumerate() {
+                rng.fill_normal_f32(
+                    &mut buf[r * seq * d..r * seq * d + len * d], 0.0, 1.0);
+            }
+        }
+        let toks: Vec<Vec<i32>> = lens.iter().map(|&l| vec![5; l]).collect();
+        let refs: Vec<&[i32]> = toks.iter().map(|t| t.as_slice()).collect();
+        let plan = assemble(&refs, cap, seq);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let outs = attention_scatter(&mut exec, &plan, &q, &k, &v, d, &lens,
+                                     heads, BatchedVariant::Full);
+        assert_eq!(outs.len(), fill);
+        // per-request, per-head serial reference over the real positions
+        let mut ws = Workspace::new();
+        for (r, out) in outs.iter().enumerate() {
+            let len = lens[r];
+            assert_eq!((out.rows, out.cols), (len, d));
+            assert!(out.data.iter().all(|x| x.is_finite()),
+                    "padding leaked into request {r}");
+            let dh = d / heads;
+            let base = r * seq * d;
+            for h in 0..heads {
+                let col0 = h * dh;
+                let mut qh = Tensor2::zeros(len, dh);
+                let mut kh = Tensor2::zeros(len, dh);
+                let mut vh = Tensor2::zeros(len, dh);
+                for i in 0..len {
+                    for j in 0..dh {
+                        qh.data[i * dh + j] = q[base + i * d + col0 + j];
+                        kh.data[i * dh + j] = k[base + i * d + col0 + j];
+                        vh.data[i * dh + j] = v[base + i * d + col0 + j];
+                    }
+                }
+                let want = flash_attention(
+                    &KernelCtx::sequential(), &qh, &kh, &vh,
+                    crate::attention::default_scale(dh), &mut ws);
+                for i in 0..len {
+                    assert_eq!(&out.row(i)[col0..col0 + dh], want.row(i),
+                               "req {r} head {h} row {i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Batched multi-head attention: fan a popped serving batch out over
+//! the kernel pool so heads × requests execute in parallel instead of
+//! serially.
+//!
+//! Each in-flight task owns one [`Workspace`] slot (recycled across
+//! batches → zero steady-state allocations inside the kernels) and runs
+//! its head with a *sequential* [`KernelCtx`]: the batch dimension
+//! already saturates the pool, and keeping nested work sequential both
+//! avoids pool-in-pool deadlock and preserves bitwise determinism.
+
+use super::workspace::Workspace;
+use super::{flash_attention, KernelCtx, SendMut};
+use crate::attention::nystrom::nystrom_attention_with;
+use crate::attention::spectral_shift::{spectral_shift_attention_with, SpectralShiftConfig};
+use crate::attention::{default_scale, Tensor2};
+use crate::config::Variant;
+
+/// One attention problem: a single head of a single request.
+pub struct AttnTask {
+    pub q: Tensor2,
+    pub k: Tensor2,
+    pub v: Tensor2,
+}
+
+/// Which attention kernel a batch executes.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchedVariant {
+    /// Exact softmax attention (flash streaming).
+    Full,
+    /// Nystromformer with `landmarks` and `pinv_iters`.
+    Nystrom { landmarks: usize, pinv_iters: usize },
+    /// Spectral shifting (the paper's method).
+    SpectralShift(SpectralShiftConfig),
+}
+
+impl BatchedVariant {
+    /// Map a serving-config variant onto its kernel, with the given
+    /// landmark count / pinv iterations for the O(n) methods.
+    pub fn from_config(variant: Variant, landmarks: usize, pinv_iters: usize) -> Self {
+        match variant {
+            Variant::Full => BatchedVariant::Full,
+            Variant::Nystrom => BatchedVariant::Nystrom { landmarks, pinv_iters },
+            Variant::SpectralShift => {
+                let mut cfg = SpectralShiftConfig::new(landmarks);
+                cfg.pinv_iters = pinv_iters;
+                BatchedVariant::SpectralShift(cfg)
+            }
+        }
+    }
+}
+
+/// Executor that owns the per-slot workspaces between batches.
+pub struct BatchedAttention {
+    ctx: KernelCtx,
+    slots: Vec<Workspace>,
+    /// head split/stitch scratch for [`attention_batched`]
+    ws_main: Workspace,
+}
+
+impl BatchedAttention {
+    pub fn new(ctx: KernelCtx) -> Self {
+        BatchedAttention { ctx, slots: Vec::new(), ws_main: Workspace::new() }
+    }
+
+    /// The executor's split/stitch arena — callers staging per-request
+    /// tensors (e.g. `coordinator::batcher::attention_scatter`) take
+    /// buffers from here and return them after the batch so staging
+    /// stays allocation-free in steady state.
+    pub fn scratch(&mut self) -> &mut Workspace {
+        &mut self.ws_main
+    }
+
+    /// Execute every task in parallel; returns one output per task, in
+    /// order. Deterministic: identical results for any pool size.
+    pub fn run(&mut self, tasks: &[AttnTask], variant: BatchedVariant) -> Vec<Tensor2> {
+        let nt = tasks.len();
+        if nt == 0 {
+            return Vec::new();
+        }
+        while self.slots.len() < nt {
+            self.slots.push(Workspace::new());
+        }
+        let mut outs: Vec<Tensor2> = (0..nt).map(|_| Tensor2::zeros(0, 0)).collect();
+        let obase = SendMut(outs.as_mut_ptr());
+        let sbase = SendMut(self.slots.as_mut_ptr());
+        // chunk tasks into at most `threads` contiguous ranges (like
+        // run_blocks) so the scope_for caller lane stays busy for the
+        // whole batch instead of finishing one task and idling
+        self.ctx.run_blocks(nt, |_chunk, range| {
+            for i in range {
+                // SAFETY: task i exclusively owns slot i and output i;
+                // both vectors outlive the fork-join.
+                let ws = unsafe { &mut *sbase.0.add(i) };
+                let t = &tasks[i];
+                let out = run_one(t, variant, ws);
+                unsafe {
+                    *obase.0.add(i) = out;
+                }
+            }
+        });
+        outs
+    }
+}
+
+fn run_one(t: &AttnTask, variant: BatchedVariant, ws: &mut Workspace) -> Tensor2 {
+    let seq = KernelCtx::sequential();
+    match variant {
+        BatchedVariant::Full => {
+            flash_attention(&seq, &t.q, &t.k, &t.v, default_scale(t.q.cols), ws)
+        }
+        BatchedVariant::Nystrom { landmarks, pinv_iters } => {
+            nystrom_attention_with(&t.q, &t.k, &t.v, landmarks, pinv_iters, None, &seq, ws)
+        }
+        BatchedVariant::SpectralShift(cfg) => {
+            spectral_shift_attention_with(&t.q, &t.k, &t.v, &cfg, &seq, ws)
+        }
+    }
+}
+
+/// Multi-head batched attention over whole requests: each request's
+/// (n_i × h·dh) q/k/v is split into `n_heads` width-dh heads, **all**
+/// heads of **all** requests execute in parallel on the pool, and the
+/// per-head outputs are stitched back into one (n_i × h·dh) tensor per
+/// request.
+pub fn attention_batched(
+    exec: &mut BatchedAttention,
+    reqs: &[(Tensor2, Tensor2, Tensor2)],
+    n_heads: usize,
+    variant: BatchedVariant,
+) -> Vec<Tensor2> {
+    assert!(n_heads > 0, "n_heads must be positive");
+    if reqs.is_empty() {
+        return Vec::new();
+    }
+    let mut tasks = Vec::with_capacity(reqs.len() * n_heads);
+    for (q, k, v) in reqs {
+        assert_eq!(q.cols, k.cols, "q/k width mismatch");
+        assert_eq!(q.cols, v.cols, "q/v width mismatch");
+        assert_eq!(k.rows, v.rows, "k/v length mismatch");
+        assert!(q.cols % n_heads == 0,
+                "model width {} not divisible by {n_heads} heads", q.cols);
+        let dh = q.cols / n_heads;
+        for h in 0..n_heads {
+            tasks.push(AttnTask {
+                q: slice_head(&mut exec.ws_main, q, h, dh),
+                k: slice_head(&mut exec.ws_main, k, h, dh),
+                v: slice_head(&mut exec.ws_main, v, h, dh),
+            });
+        }
+    }
+    let head_outs = exec.run(&tasks, variant);
+    // stitch heads back per request
+    let mut outs = Vec::with_capacity(reqs.len());
+    let mut it = head_outs.into_iter();
+    let mut task_it = tasks.into_iter();
+    let mut slot = 0;
+    for (q, _, _) in reqs {
+        let dh = q.cols / n_heads;
+        let mut merged = Tensor2::zeros(q.rows, q.cols);
+        for h in 0..n_heads {
+            let head = it.next().expect("one output per task");
+            assert_eq!((head.rows, head.cols), (q.rows, dh));
+            for i in 0..q.rows {
+                merged.row_mut(i)[h * dh..(h + 1) * dh]
+                    .copy_from_slice(head.row(i));
+            }
+            // the output buffer was taken from this task's slot arena:
+            // return it there so slots stay allocation-free across
+            // batches; the split copies go back to the stitch arena
+            exec.slots[slot].put(head.data);
+            slot += 1;
+            let task = task_it.next().expect("one task per output");
+            exec.ws_main.put(task.q.data);
+            exec.ws_main.put(task.k.data);
+            exec.ws_main.put(task.v.data);
+        }
+        outs.push(merged);
+    }
+    outs
+}
+
+/// Copy head `h` (columns h·dh .. (h+1)·dh) into a standalone tensor
+/// backed by arena scratch.
+fn slice_head(ws: &mut Workspace, x: &Tensor2, h: usize, dh: usize) -> Tensor2 {
+    let mut data = ws.take(x.rows * dh);
+    for i in 0..x.rows {
+        data[i * dh..(i + 1) * dh]
+            .copy_from_slice(&x.row(i)[h * dh..(h + 1) * dh]);
+    }
+    Tensor2 { rows: x.rows, cols: dh, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn reqs(seed: u64, shapes: &[(usize, usize)]) -> Vec<(Tensor2, Tensor2, Tensor2)> {
+        let mut rng = Rng::new(seed);
+        shapes
+            .iter()
+            .map(|&(n, d)| {
+                (
+                    Tensor2::randn(&mut rng, n, d, 1.0),
+                    Tensor2::randn(&mut rng, n, d, 1.0),
+                    Tensor2::randn(&mut rng, n, d, 1.0),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_full_matches_serial_single_head() {
+        let rs = reqs(1, &[(48, 8), (64, 8), (16, 8)]);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let outs = attention_batched(&mut exec, &rs, 1, BatchedVariant::Full);
+        assert_eq!(outs.len(), 3);
+        let mut ws = Workspace::new();
+        for ((q, k, v), out) in rs.iter().zip(&outs) {
+            let want = flash_attention(&KernelCtx::sequential(), q, k, v,
+                                       default_scale(q.cols), &mut ws);
+            assert_eq!(out.data, want.data, "batched must equal serial bitwise");
+        }
+    }
+
+    #[test]
+    fn multi_head_stitches_back_correctly() {
+        // with h heads, each head must equal single-head attention on
+        // its column slice
+        let rs = reqs(2, &[(32, 16)]);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let outs = attention_batched(&mut exec, &rs, 4, BatchedVariant::Full);
+        let (q, k, v) = &rs[0];
+        let mut ws = Workspace::new();
+        for h in 0..4 {
+            let qh = slice_head(&mut ws, q, h, 4);
+            let kh = slice_head(&mut ws, k, h, 4);
+            let vh = slice_head(&mut ws, v, h, 4);
+            let want = flash_attention(&KernelCtx::sequential(), &qh, &kh, &vh,
+                                       default_scale(4), &mut ws);
+            for i in 0..q.rows {
+                assert_eq!(&outs[0].row(i)[h * 4..(h + 1) * 4], want.row(i));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_spectral_shift_runs_and_is_deterministic() {
+        let rs = reqs(3, &[(64, 16), (64, 16)]);
+        let cfg = SpectralShiftConfig::new(8);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let a = attention_batched(&mut exec, &rs, 2, BatchedVariant::SpectralShift(cfg));
+        let mut exec_seq = BatchedAttention::new(KernelCtx::sequential());
+        let b = attention_batched(&mut exec_seq, &rs, 2, BatchedVariant::SpectralShift(cfg));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn workspace_slots_recycle_across_batches() {
+        let rs = reqs(4, &[(64, 8), (64, 8)]);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let _ = attention_batched(&mut exec, &rs, 2, BatchedVariant::Full);
+        let warm: usize = exec.slots.iter().map(|w| w.allocations()).sum::<usize>()
+            + exec.ws_main.allocations();
+        for _ in 0..3 {
+            let _ = attention_batched(&mut exec, &rs, 2, BatchedVariant::Full);
+        }
+        let after: usize = exec.slots.iter().map(|w| w.allocations()).sum::<usize>()
+            + exec.ws_main.allocations();
+        assert_eq!(warm, after, "steady-state batches must not allocate from arenas");
+    }
+
+    #[test]
+    fn variant_mapping_from_config() {
+        match BatchedVariant::from_config(Variant::Nystrom, 16, 6) {
+            BatchedVariant::Nystrom { landmarks, pinv_iters } => {
+                assert_eq!((landmarks, pinv_iters), (16, 6));
+            }
+            other => panic!("{other:?}"),
+        }
+        match BatchedVariant::from_config(Variant::SpectralShift, 8, 4) {
+            BatchedVariant::SpectralShift(cfg) => {
+                assert_eq!(cfg.landmarks, 8);
+                assert_eq!(cfg.pinv_iters, 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(BatchedVariant::from_config(Variant::Full, 8, 4),
+                         BatchedVariant::Full));
+    }
+}

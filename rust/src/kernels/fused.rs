@@ -1,0 +1,253 @@
+//! Fused softmax/GEMM kernels for the attention factor pipeline.
+//!
+//! All three kernels parallelize over fixed-size query-row blocks (see
+//! the determinism note in the module docs): per output row the
+//! arithmetic is a pure function of the inputs, never of the thread
+//! count.
+
+use super::gemm::{axpy8, gemm_rows};
+use super::workspace::Workspace;
+use super::{par_rows, KernelCtx, SendMut, BLOCK_ROWS};
+use crate::attention::Tensor2;
+use crate::linalg::scaled_softmax_row;
+
+/// Keys streamed per online-softmax block in [`flash_attention`]
+/// (mirrors the L1 Pallas flash kernel's key blocking).
+const KEY_BLOCK: usize = 128;
+
+/// Materialized softmax factor: F = rowsoftmax(scale · q · ktᵀ).
+/// q: (m, d), kt: (c, d) landmarks → (m, c). Used for the c×c A factor
+/// (which `ns_pinv` needs in full) and anywhere F itself is the output;
+/// the combine step should prefer [`softmax_gemm`], which never
+/// materializes F.
+pub fn softmax_scores(ctx: &KernelCtx, q: &Tensor2, kt: &Tensor2, scale: f32,
+                      ws: &mut Workspace) -> Tensor2 {
+    assert_eq!(q.cols, kt.cols, "q/landmark width mismatch");
+    let (m, d, c) = (q.rows, q.cols, kt.rows);
+    let mut ktt = ws.take(d * c);
+    super::gemm::transpose_into(&kt.data, &mut ktt, c, d);
+    let mut f = ws.take(m * c);
+    super::gemm::gemm_into(ctx, &q.data, &ktt, &mut f, m, d, c);
+    ws.put(ktt);
+    let mut out = Tensor2 { rows: m, cols: c, data: f };
+    par_rows(ctx, &mut out.data, m, c, |_r, row| scaled_softmax_row(row, scale));
+    out
+}
+
+/// Fused combine: out = rowsoftmax(scale · q · ktᵀ) · x, blocked over
+/// query rows so the m×c logits never materialize — each task reuses a
+/// `BLOCK_ROWS × c` scratch strip for scores and writes the finished
+/// `BLOCK_ROWS × dv` output rows directly.
+/// q: (m, d), kt: (c, d), x: (c, dv) → (m, dv).
+pub fn softmax_gemm(ctx: &KernelCtx, q: &Tensor2, kt: &Tensor2, x: &Tensor2,
+                    scale: f32, ws: &mut Workspace) -> Tensor2 {
+    assert_eq!(q.cols, kt.cols, "q/landmark width mismatch");
+    assert_eq!(kt.rows, x.rows, "landmark/value length mismatch");
+    let (m, d, c, dv) = (q.rows, q.cols, kt.rows, x.cols);
+    let mut ktt = ws.take(d * c);
+    super::gemm::transpose_into(&kt.data, &mut ktt, c, d);
+    let mut out = ws.take(m * dv);
+    let nblocks = (m + BLOCK_ROWS - 1) / BLOCK_ROWS;
+    let ntasks = ctx.task_count(nblocks);
+    let mut scratch = ws.take(ntasks * BLOCK_ROWS * c);
+    {
+        let obase = SendMut(out.as_mut_ptr());
+        let sbase = SendMut(scratch.as_mut_ptr());
+        ctx.run_blocks(nblocks, |task, blocks| {
+            // SAFETY: one scratch strip per task index, disjoint by
+            // construction; out blocks are disjoint row ranges.
+            let strip = unsafe {
+                std::slice::from_raw_parts_mut(
+                    sbase.0.add(task * BLOCK_ROWS * c), BLOCK_ROWS * c)
+            };
+            for blk in blocks {
+                let r0 = blk * BLOCK_ROWS;
+                let r1 = (r0 + BLOCK_ROWS).min(m);
+                let mb = r1 - r0;
+                let scores = &mut strip[..mb * c];
+                gemm_rows(&q.data[r0 * d..r1 * d], &ktt, scores, mb, d, c);
+                for r in 0..mb {
+                    scaled_softmax_row(&mut scores[r * c..(r + 1) * c], scale);
+                }
+                let oblk = unsafe {
+                    std::slice::from_raw_parts_mut(obase.0.add(r0 * dv), mb * dv)
+                };
+                gemm_rows(scores, &x.data, oblk, mb, c, dv);
+            }
+        });
+    }
+    ws.put(scratch);
+    ws.put(ktt);
+    Tensor2 { rows: m, cols: dv, data: out }
+}
+
+/// Exact attention out = softmax(scale · q · kᵀ) · v with the online
+/// softmax streamed over [`KEY_BLOCK`]-sized key blocks (logits never
+/// materialize beyond one block per row), parallel over query rows.
+/// Doubles as the W = rowsoftmax(q̃ kᵀ)·V factor kernel with q = q̃.
+/// q: (n, d), k: (mkeys, d), v: (mkeys, dv) → (n, dv).
+pub fn flash_attention(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                       scale: f32, ws: &mut Workspace) -> Tensor2 {
+    assert_eq!(q.cols, k.cols, "q/k width mismatch");
+    assert_eq!(k.rows, v.rows, "k/v length mismatch");
+    let (n, dv, mkeys) = (q.rows, v.cols, k.rows);
+    let mut out = Tensor2 { rows: n, cols: dv, data: ws.take(n * dv) };
+    par_rows(ctx, &mut out.data, n, dv, |i, orow| {
+        let qi = q.row(i);
+        let mut scores = [0.0f32; KEY_BLOCK];
+        let mut m_run = f32::NEG_INFINITY;
+        let mut l_run = 0.0f32;
+        let mut start = 0;
+        while start < mkeys {
+            let end = (start + KEY_BLOCK).min(mkeys);
+            let mut m_cur = f32::NEG_INFINITY;
+            for (jj, j) in (start..end).enumerate() {
+                let s = dot8(qi, k.row(j)) * scale;
+                scores[jj] = s;
+                m_cur = m_cur.max(s);
+            }
+            let m_new = m_run.max(m_cur);
+            let corr = if m_run.is_finite() { (m_run - m_new).exp() } else { 0.0 };
+            l_run *= corr;
+            for o in orow.iter_mut() {
+                *o *= corr;
+            }
+            for (jj, j) in (start..end).enumerate() {
+                let p = (scores[jj] - m_new).exp();
+                l_run += p;
+                axpy8(orow, p, v.row(j));
+            }
+            m_run = m_new;
+            start = end;
+        }
+        let inv = 1.0 / l_run;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    });
+    out
+}
+
+/// f32 dot product, 8-wide unrolled (kernel-core counterpart of the
+/// reference `attention::dot_f32`; kept separate so the reference path
+/// stays byte-for-byte the seed implementation).
+#[inline(always)]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        let aj = &a[i..i + 8];
+        let bj = &b[i..i + 8];
+        for t in 0..8 {
+            acc[t] += aj[t] * bj[t];
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::matmul_f32;
+    use crate::linalg::row_softmax_f32;
+    use crate::rngx::Rng;
+
+    fn qkv(seed: u64, n: usize, d: usize) -> (Tensor2, Tensor2, Tensor2) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor2::randn(&mut rng, n, d, 1.0),
+            Tensor2::randn(&mut rng, n, d, 1.0),
+            Tensor2::randn(&mut rng, n, d, 1.0),
+        )
+    }
+
+    /// Reference: materialize F with the naive kernels, then multiply.
+    fn softmax_gemm_ref(q: &Tensor2, kt: &Tensor2, x: &Tensor2, scale: f32) -> Tensor2 {
+        let mut ktt = Tensor2::zeros(kt.cols, kt.rows);
+        super::super::gemm::transpose_into(&kt.data, &mut ktt.data, kt.rows, kt.cols);
+        let mut f = matmul_f32(q, &ktt);
+        for s in f.data.iter_mut() {
+            *s *= scale;
+        }
+        row_softmax_f32(&mut f.data, f.rows, f.cols);
+        matmul_f32(&f, x)
+    }
+
+    #[test]
+    fn softmax_scores_rows_are_distributions() {
+        let (q, k, _) = qkv(1, 97, 16);
+        let mut rng = Rng::new(2);
+        let kt = Tensor2::randn(&mut rng, 8, 16, 1.0);
+        let mut ws = Workspace::new();
+        let f = softmax_scores(&KernelCtx::global(), &q, &kt, 0.25, &mut ws);
+        assert_eq!((f.rows, f.cols), (97, 8));
+        for i in 0..f.rows {
+            let s: f32 = f.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+        let _ = k;
+    }
+
+    #[test]
+    fn softmax_gemm_matches_materialized_reference() {
+        let mut ws = Workspace::new();
+        let ctx = KernelCtx::global();
+        for &(n, d, c, dv) in &[(1usize, 3usize, 2usize, 5usize),
+                                (33, 16, 8, 16), (100, 8, 10, 4)] {
+            let mut rng = Rng::new(n as u64);
+            let q = Tensor2::randn(&mut rng, n, d, 1.0);
+            let kt = Tensor2::randn(&mut rng, c, d, 1.0);
+            let x = Tensor2::randn(&mut rng, c, dv, 1.0);
+            let fast = softmax_gemm(&ctx, &q, &kt, &x, 0.5, &mut ws);
+            let slow = softmax_gemm_ref(&q, &kt, &x, 0.5);
+            assert!(fast.max_abs_diff(&slow) < 1e-4,
+                    "({n},{d},{c},{dv}): {}", fast.max_abs_diff(&slow));
+            ws.put(fast.data);
+        }
+    }
+
+    #[test]
+    fn softmax_gemm_threads_bitwise_identical() {
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(5);
+        let q = Tensor2::randn(&mut rng, 130, 16, 1.0);
+        let kt = Tensor2::randn(&mut rng, 8, 16, 1.0);
+        let x = Tensor2::randn(&mut rng, 8, 12, 1.0);
+        let seq = softmax_gemm(&KernelCtx::sequential(), &q, &kt, &x, 0.3, &mut ws);
+        let par = softmax_gemm(&KernelCtx::global(), &q, &kt, &x, 0.3, &mut ws);
+        assert_eq!(seq.data, par.data);
+    }
+
+    #[test]
+    fn flash_attention_matches_dense_softmax() {
+        let (q, k, v) = qkv(4, 150, 8);
+        let mut ws = Workspace::new();
+        let scale = 1.0 / (8f32).sqrt();
+        let fast = flash_attention(&KernelCtx::global(), &q, &k, &v, scale, &mut ws);
+        // dense reference via softmax_gemm_ref with landmark set = keys
+        let slow = softmax_gemm_ref(&q, &k, &v, scale);
+        assert!(fast.max_abs_diff(&slow) < 1e-4, "{}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn dot8_matches_naive() {
+        let mut rng = Rng::new(6);
+        for n in [0usize, 1, 7, 8, 9, 16, 31] {
+            let a = Tensor2::randn(&mut rng, 1, n.max(1), 1.0);
+            let b = Tensor2::randn(&mut rng, 1, n.max(1), 1.0);
+            let a = &a.data[..n];
+            let b = &b.data[..n];
+            let want: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            assert!((dot8(a, b) as f64 - want).abs() < 1e-4);
+        }
+    }
+}

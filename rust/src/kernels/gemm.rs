@@ -1,0 +1,258 @@
+//! Tiled, multi-threaded f32 GEMM.
+//!
+//! Layout: everything row-major. Parallelism: fixed [`BLOCK_ROWS`]-row
+//! blocks of C fanned out over the pool (M-parallel; K is never split,
+//! so each output element's reduction order is fixed regardless of the
+//! thread count — bitwise-deterministic results). Within a block:
+//!
+//! * the k dimension is walked in [`KC`]-deep cache panels,
+//! * each group of [`MR`] = 4 A-rows is packed into a column-major
+//!   micro-panel (one 4-wide column per k) held on the task's stack,
+//! * the micro-kernel broadcasts the packed A column against a full
+//!   B row with an 8-wide unrolled axpy, accumulating 4 C rows at once.
+//!
+//! B needs no packing: its rows are already contiguous and stream
+//! through the j-unrolled inner loop in order.
+
+use super::workspace::Workspace;
+use super::{KernelCtx, SendMut, BLOCK_ROWS};
+use crate::attention::Tensor2;
+
+/// Rows per micro-kernel (register tile height). Divides [`BLOCK_ROWS`].
+const MR: usize = 4;
+/// k-depth of a cache panel (MR×KC packed panel = 4 KiB, L1-resident).
+const KC: usize = 256;
+
+/// C = A · B on flat row-major slices; `c` is overwritten.
+/// a: m×k, b: k×n, c: m×n.
+pub fn gemm_into(ctx: &KernelCtx, a: &[f32], b: &[f32], c: &mut [f32],
+                 m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "gemm: A is not m×k");
+    assert_eq!(b.len(), k * n, "gemm: B is not k×n");
+    assert_eq!(c.len(), m * n, "gemm: C is not m×n");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let nblocks = (m + BLOCK_ROWS - 1) / BLOCK_ROWS;
+    let cbase = SendMut(c.as_mut_ptr());
+    ctx.run_blocks(nblocks, |_task, blocks| {
+        for blk in blocks {
+            let r0 = blk * BLOCK_ROWS;
+            let r1 = (r0 + BLOCK_ROWS).min(m);
+            // SAFETY: blocks are disjoint row ranges of C and C outlives
+            // the fork-join.
+            let cblk = unsafe {
+                std::slice::from_raw_parts_mut(cbase.0.add(r0 * n), (r1 - r0) * n)
+            };
+            gemm_rows(&a[r0 * k..r1 * k], b, cblk, r1 - r0, k, n);
+        }
+    });
+}
+
+/// Sequential GEMM over `mb` rows: c (mb×n, overwritten) = a (mb×k) ·
+/// b (k×n). This is the per-block body `gemm_into` parallelizes and the
+/// building block the fused kernels reuse on their scratch.
+pub(crate) fn gemm_rows(a: &[f32], b: &[f32], c: &mut [f32],
+                        mb: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), mb * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), mb * n);
+    c.fill(0.0);
+    if k == 0 || n == 0 {
+        return;
+    }
+    let mut apack = [0.0f32; MR * KC];
+    let mut kb = 0;
+    while kb < k {
+        let kc = KC.min(k - kb);
+        let mut i = 0;
+        // 4-row micro-kernel over packed A panels
+        while i + MR <= mb {
+            for p in 0..kc {
+                for r in 0..MR {
+                    apack[p * MR + r] = a[(i + r) * k + kb + p];
+                }
+            }
+            let cblk = &mut c[i * n..(i + MR) * n];
+            let (c0, rest) = cblk.split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3) = rest.split_at_mut(n);
+            for p in 0..kc {
+                let brow = &b[(kb + p) * n..(kb + p + 1) * n];
+                let ap = &apack[p * MR..(p + 1) * MR];
+                micro_axpy4(c0, c1, c2, c3, ap[0], ap[1], ap[2], ap[3], brow);
+            }
+            i += MR;
+        }
+        // remainder rows (mb % 4): single-row axpy, same k order
+        while i < mb {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for p in 0..kc {
+                let w = a[i * k + kb + p];
+                let brow = &b[(kb + p) * n..(kb + p + 1) * n];
+                axpy8(crow, w, brow);
+            }
+            i += 1;
+        }
+        kb += kc;
+    }
+}
+
+/// 4-row rank-1 update: c_r += a_r · b for r in 0..4, 8-wide unrolled.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_axpy4(c0: &mut [f32], c1: &mut [f32], c2: &mut [f32], c3: &mut [f32],
+               a0: f32, a1: f32, a2: f32, a3: f32, b: &[f32]) {
+    let n = b.len();
+    debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+    let mut j = 0;
+    while j + 8 <= n {
+        let bj = &b[j..j + 8];
+        let s0 = &mut c0[j..j + 8];
+        for t in 0..8 {
+            s0[t] += a0 * bj[t];
+        }
+        let s1 = &mut c1[j..j + 8];
+        for t in 0..8 {
+            s1[t] += a1 * bj[t];
+        }
+        let s2 = &mut c2[j..j + 8];
+        for t in 0..8 {
+            s2[t] += a2 * bj[t];
+        }
+        let s3 = &mut c3[j..j + 8];
+        for t in 0..8 {
+            s3[t] += a3 * bj[t];
+        }
+        j += 8;
+    }
+    while j < n {
+        c0[j] += a0 * b[j];
+        c1[j] += a1 * b[j];
+        c2[j] += a2 * b[j];
+        c3[j] += a3 * b[j];
+        j += 1;
+    }
+}
+
+/// Single-row axpy (c += w·b), 8-wide unrolled.
+#[inline(always)]
+pub(crate) fn axpy8(c: &mut [f32], w: f32, b: &[f32]) {
+    let n = b.len();
+    debug_assert_eq!(c.len(), n);
+    let mut j = 0;
+    while j + 8 <= n {
+        let bj = &b[j..j + 8];
+        let cj = &mut c[j..j + 8];
+        for t in 0..8 {
+            cj[t] += w * bj[t];
+        }
+        j += 8;
+    }
+    while j < n {
+        c[j] += w * b[j];
+        j += 1;
+    }
+}
+
+/// C = A · B for [`Tensor2`], scratch from `ws` (recycle the returned
+/// tensor's buffer with `ws.put(t.data)` when done with it).
+pub fn gemm_f32(ctx: &KernelCtx, a: &Tensor2, b: &Tensor2, ws: &mut Workspace) -> Tensor2 {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch: {}x{} · {}x{}",
+               a.rows, a.cols, b.rows, b.cols);
+    let mut data = ws.take(a.rows * b.cols);
+    gemm_into(ctx, &a.data, &b.data, &mut data, a.rows, a.cols, b.cols);
+    Tensor2 { rows: a.rows, cols: b.cols, data }
+}
+
+/// dst (cols×rows) = srcᵀ where src is rows×cols, both row-major.
+pub fn transpose_into(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols);
+    assert_eq!(dst.len(), rows * cols);
+    for i in 0..rows {
+        let srow = &src[i * cols..(i + 1) * cols];
+        for (j, &x) in srow.iter().enumerate() {
+            dst[j * rows + i] = x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::matmul_f32;
+    use crate::rngx::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Tensor2 {
+        Tensor2::randn(rng, r, c, 1.0)
+    }
+
+    #[test]
+    fn known_2x2() {
+        let ctx = KernelCtx::sequential();
+        let mut ws = Workspace::new();
+        let a = Tensor2::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Tensor2::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = gemm_f32(&ctx, &a, &b, &mut ws);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matches_reference_on_odd_shapes() {
+        let ctx = KernelCtx::global();
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 2), (4, 4, 8),
+                            (7, 300, 9), (33, 17, 5), (65, 64, 63), (129, 2, 1)] {
+            let a = randn(&mut rng, m, k);
+            let b = randn(&mut rng, k, n);
+            let fast = gemm_f32(&ctx, &a, &b, &mut ws);
+            let slow = matmul_f32(&a, &b);
+            let mut denom = 0.0f32;
+            for x in &slow.data {
+                denom = denom.max(x.abs());
+            }
+            let err = fast.max_abs_diff(&slow) / denom.max(1e-6);
+            assert!(err < 1e-4, "({m},{k},{n}): rel err {err}");
+            ws.put(fast.data);
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bitwise_identical() {
+        let mut rng = Rng::new(9);
+        let a = randn(&mut rng, 70, 33);
+        let b = randn(&mut rng, 33, 21);
+        let mut ws = Workspace::new();
+        let seq = gemm_f32(&KernelCtx::sequential(), &a, &b, &mut ws);
+        let par = gemm_f32(&KernelCtx::global(), &a, &b, &mut ws);
+        assert_eq!(seq.data, par.data, "reduction order must not depend on threads");
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        let ctx = KernelCtx::sequential();
+        let mut c = vec![5.0f32; 6];
+        // k = 0: C must be zeroed
+        gemm_into(&ctx, &[], &[], &mut c, 2, 0, 3);
+        assert!(c.iter().all(|&x| x == 0.0));
+        // m = 0 / n = 0: no-ops
+        gemm_into(&ctx, &[], &[1.0, 2.0], &mut [], 0, 2, 1);
+        gemm_into(&ctx, &[1.0, 2.0], &[], &mut [], 1, 2, 0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = randn(&mut rng, 5, 7);
+        let mut at = vec![0.0f32; 35];
+        let mut back = vec![0.0f32; 35];
+        transpose_into(&a.data, &mut at, 5, 7);
+        transpose_into(&at, &mut back, 7, 5);
+        assert_eq!(a.data, back);
+    }
+}

@@ -1,0 +1,241 @@
+//! Cache-blocked, multi-threaded f32 compute core — the serving fast
+//! path for every attention variant.
+//!
+//! The paper's O(n) claim only wins wall-clock when the constant
+//! factors are engineered down (the same argument Linformer makes with
+//! benches), so the hot-path kernels live here instead of in per-variant
+//! scalar loops:
+//!
+//! * [`gemm::gemm_into`] — tiled GEMM: fixed 32-row parallel blocks,
+//!   256-deep k panels packed per 4-row micro-panel, 8-wide unrolled
+//!   micro-kernel. Row-major, allocation-free.
+//! * [`fused::softmax_gemm`] — rowsoftmax(scale·Q·K̃ᵀ)·X without
+//!   materializing the n×c logits (per-block scratch only).
+//! * [`fused::flash_attention`] — exact attention with the online
+//!   softmax streamed over key blocks, row-parallel.
+//! * [`batched::BatchedAttention`] — multi-head / multi-request fan-out
+//!   over the pool, one workspace slot per in-flight task.
+//!
+//! Threading runs on the crate's own [`crate::minirt::ThreadPool`]
+//! (shared process-wide handle, see [`global_pool`]); work is split into
+//! *fixed-size row blocks* so the floating-point reduction order per
+//! output row is identical for 1 and N threads — results are bitwise
+//! deterministic across thread counts (property-tested in
+//! `tests/kernel_parity.rs`).
+//!
+//! Scratch memory comes from a caller-provided [`Workspace`] arena:
+//! buffers are recycled across calls, so steady-state serving performs
+//! zero heap allocations inside the kernels.
+//!
+//! The naive scalar kernels ([`crate::attention::matmul_f32`] and the
+//! seed implementations preserved in
+//! [`crate::attention::spectral_shift::reference`]) remain in-tree as
+//! the reference path the fast path is property-tested against.
+
+pub mod batched;
+pub mod fused;
+pub mod gemm;
+pub mod workspace;
+
+pub use batched::{attention_batched, AttnTask, BatchedAttention, BatchedVariant};
+pub use fused::{flash_attention, softmax_gemm, softmax_scores};
+pub use gemm::{gemm_f32, gemm_into, transpose_into};
+pub use workspace::Workspace;
+
+use crate::minirt::ThreadPool;
+use std::sync::{Arc, OnceLock};
+
+/// Rows per parallel block. Fixed (never derived from the thread count)
+/// so block boundaries — and therefore per-row reduction order — do not
+/// depend on parallelism.
+pub const BLOCK_ROWS: usize = 32;
+
+static GLOBAL_POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+
+/// The process-wide kernel pool, shared by every attention variant and
+/// the serving coordinator. Sized from `SSAFORMER_THREADS` when set,
+/// otherwise from the machine's available parallelism. Created lazily
+/// on first use and lives for the life of the process.
+pub fn global_pool() -> Arc<ThreadPool> {
+    GLOBAL_POOL
+        .get_or_init(|| {
+            let threads = std::env::var("SSAFORMER_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|n| n.get())
+                        .unwrap_or(1)
+                });
+            Arc::new(ThreadPool::new(threads))
+        })
+        .clone()
+}
+
+/// Execution context handed to every kernel: either sequential or a
+/// handle to a (shared) thread pool.
+#[derive(Clone)]
+pub struct KernelCtx {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl KernelCtx {
+    /// Single-threaded execution (also used inside batched tasks, where
+    /// the outer fan-out already owns the pool).
+    pub fn sequential() -> Self {
+        KernelCtx { pool: None }
+    }
+
+    /// Run on an explicit pool handle.
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        KernelCtx { pool: Some(pool) }
+    }
+
+    /// Run on the shared process-wide pool.
+    pub fn global() -> Self {
+        KernelCtx::with_pool(global_pool())
+    }
+
+    /// Parallel lanes this context can use (workers + the caller).
+    pub fn threads(&self) -> usize {
+        match &self.pool {
+            Some(pool) => pool.size() + 1,
+            None => 1,
+        }
+    }
+
+    /// Run `tasks` closures, on the pool when available.
+    pub(crate) fn run_tasks(&self, tasks: usize, f: impl Fn(usize) + Sync) {
+        match &self.pool {
+            Some(pool) if tasks > 1 => pool.scope_for(tasks, f),
+            _ => {
+                for i in 0..tasks {
+                    f(i);
+                }
+            }
+        }
+    }
+
+    /// Number of tasks a blocked loop over `nblocks` will fan out to.
+    pub(crate) fn task_count(&self, nblocks: usize) -> usize {
+        self.threads().min(nblocks).max(1)
+    }
+
+    /// Partition `nblocks` fixed-size blocks into contiguous per-task
+    /// ranges and run them. `f` receives `(task_index, block_range)`;
+    /// the task index addresses per-task scratch. Block boundaries are a
+    /// pure function of the problem shape, so per-row arithmetic is
+    /// independent of the thread count.
+    pub(crate) fn run_blocks(
+        &self,
+        nblocks: usize,
+        f: impl Fn(usize, std::ops::Range<usize>) + Sync,
+    ) {
+        if nblocks == 0 {
+            return;
+        }
+        let ntasks = self.task_count(nblocks);
+        let per_task = (nblocks + ntasks - 1) / ntasks;
+        self.run_tasks(ntasks, |t| {
+            let lo = t * per_task;
+            let hi = ((t + 1) * per_task).min(nblocks);
+            if lo < hi {
+                f(t, lo..hi);
+            }
+        });
+    }
+}
+
+/// Covariant `*mut T` wrapper so fork-join tasks can write disjoint
+/// regions of a caller-owned buffer. Soundness contract: tasks touch
+/// non-overlapping index ranges and the buffer outlives the fork-join
+/// (guaranteed by `ThreadPool::scope_for` blocking until completion).
+#[derive(Clone, Copy)]
+pub(crate) struct SendMut<T>(pub *mut T);
+
+unsafe impl<T> Send for SendMut<T> {}
+unsafe impl<T> Sync for SendMut<T> {}
+
+/// Parallel loop over the rows of a row-major `rows × cols` buffer.
+/// Each row is handed to `f` exactly once as `(row_index, row_slice)`;
+/// rows are grouped into [`BLOCK_ROWS`]-sized blocks per task.
+pub(crate) fn par_rows(
+    ctx: &KernelCtx,
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    assert_eq!(data.len(), rows * cols);
+    if rows == 0 {
+        return;
+    }
+    let nblocks = (rows + BLOCK_ROWS - 1) / BLOCK_ROWS;
+    let base = SendMut(data.as_mut_ptr());
+    ctx.run_blocks(nblocks, |_task, blocks| {
+        for b in blocks {
+            let r0 = b * BLOCK_ROWS;
+            let r1 = (r0 + BLOCK_ROWS).min(rows);
+            for r in r0..r1 {
+                // SAFETY: blocks partition 0..rows disjointly; `data`
+                // outlives the fork-join.
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(base.0.add(r * cols), cols)
+                };
+                f(r, row);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global_pool();
+        let b = global_pool();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.size() >= 1);
+    }
+
+    #[test]
+    fn sequential_ctx_has_one_thread() {
+        assert_eq!(KernelCtx::sequential().threads(), 1);
+        assert!(KernelCtx::global().threads() >= 2);
+    }
+
+    #[test]
+    fn par_rows_touches_every_row_once() {
+        for rows in [0usize, 1, 31, 32, 33, 100] {
+            let cols = 5;
+            let mut data = vec![0.0f32; rows * cols];
+            par_rows(&KernelCtx::global(), &mut data, rows, cols, |r, row| {
+                for x in row.iter_mut() {
+                    *x += (r + 1) as f32;
+                }
+            });
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(data[r * cols + c], (r + 1) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_blocks_partitions_disjointly() {
+        let ctx = KernelCtx::global();
+        let nblocks = 37;
+        let hits: Vec<std::sync::atomic::AtomicUsize> =
+            (0..nblocks).map(|_| std::sync::atomic::AtomicUsize::new(0)).collect();
+        ctx.run_blocks(nblocks, |_t, range| {
+            for b in range {
+                hits[b].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(std::sync::atomic::Ordering::Relaxed) == 1));
+    }
+}

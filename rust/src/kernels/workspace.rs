@@ -1,0 +1,109 @@
+//! Reusable scratch-buffer arena for the kernel core.
+//!
+//! Kernels never allocate internally: every intermediate (packed
+//! panels, logits blocks, factor matrices) is taken from a caller-owned
+//! [`Workspace`] and returned to it. After the first call at a given
+//! shape the arena's buffers have converged to their peak capacities and
+//! steady-state serving performs **zero** heap allocations in the hot
+//! path.
+
+/// A pool of recyclable f32 buffers.
+#[derive(Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    allocations: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Take a zero-filled buffer of exactly `len` elements, reusing a
+    /// pooled buffer when one is large enough. Best-fit (smallest
+    /// adequate capacity) so that a fixed take/put sequence replays
+    /// allocation-free: small requests never consume the large buffers
+    /// a later request needs.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut slot: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len
+                && slot.map_or(true, |j| b.capacity() < self.free[j].capacity())
+            {
+                slot = Some(i);
+            }
+        }
+        let mut buf = match slot {
+            Some(i) => self.free.swap_remove(i),
+            None => self.free.pop().unwrap_or_default(),
+        };
+        if buf.capacity() < len {
+            self.allocations += 1;
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of times `take` had to grow or allocate a buffer — stable
+    /// across calls once the arena is warm (asserted in tests).
+    pub fn allocations(&self) -> usize {
+        self.allocations
+    }
+
+    /// Buffers currently pooled (diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zero_filled_even_after_reuse() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take(16);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        ws.put(a);
+        let b = ws.take(8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn steady_state_stops_allocating() {
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let a = ws.take(128);
+            let b = ws.take(64);
+            ws.put(a);
+            ws.put(b);
+        }
+        let warm = ws.allocations();
+        for _ in 0..10 {
+            let a = ws.take(128);
+            let b = ws.take(64);
+            ws.put(a);
+            ws.put(b);
+        }
+        assert_eq!(ws.allocations(), warm, "arena must not allocate once warm");
+    }
+
+    #[test]
+    fn empty_take_works() {
+        let mut ws = Workspace::new();
+        let v = ws.take(0);
+        assert!(v.is_empty());
+        ws.put(v); // zero-capacity buffers are dropped, not pooled
+        assert_eq!(ws.pooled(), 0);
+    }
+}

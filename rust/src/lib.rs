@@ -24,6 +24,7 @@ pub mod attention;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
+pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod minirt;

@@ -18,7 +18,7 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// C = A · Bᵀ where `bt` is given already transposed (both row-major).
 pub fn matmul_bt(a: &Matrix, bt: &Matrix) -> Matrix {
     assert_eq!(a.cols(), bt.cols());
-    let (m, k, n) = (a.rows(), a.cols(), bt.rows());
+    let (m, n) = (a.rows(), bt.rows());
     let mut c = Matrix::zeros(m, n);
     for i in 0..m {
         let arow = a.row(i);
@@ -27,7 +27,6 @@ pub fn matmul_bt(a: &Matrix, bt: &Matrix) -> Matrix {
             crow[j] = dot(arow, bt.row(j));
         }
     }
-    let _ = k;
     c
 }
 

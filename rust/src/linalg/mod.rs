@@ -20,5 +20,5 @@ pub use matmul::{dot, gram, matmul, matmul_bt, matvec, matvec_t};
 pub use matrix::Matrix;
 pub use pinv::{ns_pinv_ord3, ns_pinv_ord7, ns_residual, pinv};
 pub use qr::{qr, random_orthonormal, Qr};
-pub use softmax::{row_softmax, row_softmax_f32, row_softmax_inplace};
+pub use softmax::{row_softmax, row_softmax_f32, row_softmax_inplace, scaled_softmax_row};
 pub use svd::{numerical_rank, singular_values, svd, Svd};

@@ -32,17 +32,30 @@ pub fn row_softmax(a: &Matrix) -> Matrix {
 pub fn row_softmax_f32(data: &mut [f32], rows: usize, cols: usize) {
     debug_assert_eq!(data.len(), rows * cols);
     for r in 0..rows {
-        let row = &mut data[r * cols..(r + 1) * cols];
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for x in row.iter_mut() {
-            *x = (*x - m).exp();
-            sum += *x;
-        }
-        let inv = 1.0 / sum;
-        for x in row.iter_mut() {
-            *x *= inv;
-        }
+        scaled_softmax_row(&mut data[r * cols..(r + 1) * cols], 1.0);
+    }
+}
+
+/// Numerically-stable softmax of one row of pre-scale logits:
+/// row ← softmax(scale · row). Single-row building block shared by
+/// `row_softmax_f32` and the blocked `kernels::` fast path, which
+/// applies it per row inside its logits scratch so the reduction order
+/// is identical on the sequential and parallel paths.
+#[inline]
+pub fn scaled_softmax_row(row: &mut [f32], scale: f32) {
+    let mut m = f32::NEG_INFINITY;
+    for x in row.iter_mut() {
+        *x *= scale;
+        m = m.max(*x);
+    }
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
     }
 }
 

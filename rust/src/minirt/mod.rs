@@ -54,6 +54,56 @@ impl ThreadPool {
         self.shared.queue.lock().unwrap().len()
     }
 
+    /// Number of worker threads in the pool.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fork-join parallel loop: runs `f(i)` for every `i in 0..tasks`
+    /// across the pool and blocks until all of them complete. The caller
+    /// executes one task inline, so a pool of W workers plus the caller
+    /// gives W+1 lanes. Task results must be communicated through the
+    /// closure's captures (e.g. disjoint `&mut` regions behind raw
+    /// pointers); the borrow is safe because this function does not
+    /// return until every task has finished, even when a task panics
+    /// (the panic is re-raised on the caller after the join).
+    ///
+    /// Must not be called from inside a pool job of the same pool: the
+    /// blocked caller would occupy a worker and can deadlock a saturated
+    /// pool. The `kernels::` layer keeps nested work sequential for this
+    /// reason.
+    pub fn scope_for(&self, tasks: usize, f: impl Fn(usize) + Sync) {
+        if tasks == 0 {
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: every job submitted below is awaited via the latch
+        // before this frame returns, so the 'static lifetime is never
+        // actually relied upon past the borrow of `f`.
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let pending = tasks - 1;
+        let latch = Arc::new(Latch::new(pending));
+        for i in 0..pending {
+            let latch = latch.clone();
+            self.execute(move || {
+                let ok = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| f_static(i)))
+                    .is_ok();
+                latch.complete(ok);
+            });
+        }
+        // the caller contributes the last task instead of idling
+        let own = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| f_static(tasks - 1)));
+        latch.wait();
+        match own {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(()) if latch.poisoned() => panic!("scope_for: pooled task panicked"),
+            Ok(()) => {}
+        }
+    }
+
     /// Signal shutdown and join workers, draining remaining jobs.
     pub fn shutdown(mut self) {
         self.begin_shutdown();
@@ -95,6 +145,46 @@ fn worker_loop(shared: &Shared) {
             Some(j) => j(),
             None => return,
         }
+    }
+}
+
+/// Countdown latch for `scope_for`: tracks outstanding pooled tasks and
+/// whether any of them panicked.
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    poisoned: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(count),
+            all_done: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    fn complete(&self, ok: bool) {
+        if !ok {
+            self.poisoned.store(true, Ordering::Release);
+        }
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut rem = self.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = self.all_done.wait(rem).unwrap();
+        }
+    }
+
+    fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
     }
 }
 
@@ -169,6 +259,68 @@ mod tests {
         assert_eq!(done.load(Ordering::Relaxed), 4);
         // 4 × 50ms jobs on 4 workers should take ≈50ms, not 200ms
         assert!(elapsed < Duration::from_millis(150), "{elapsed:?}");
+    }
+
+    #[test]
+    fn scope_for_covers_every_index_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scope_for_writes_borrowed_output() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0usize; 64];
+        // disjoint &mut access through a raw pointer, as the kernels do
+        struct Ptr(*mut usize);
+        unsafe impl Send for Ptr {}
+        unsafe impl Sync for Ptr {}
+        let p = Ptr(out.as_mut_ptr());
+        pool.scope_for(out.len(), |i| unsafe {
+            *p.0.add(i) = i * i;
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn scope_for_zero_and_one_tasks() {
+        let pool = ThreadPool::new(2);
+        pool.scope_for(0, |_| panic!("must not run"));
+        let ran = AtomicUsize::new(0);
+        pool.scope_for(1, |i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn scope_for_propagates_panics_after_join() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_for(8, |i| {
+                if i == 3 {
+                    panic!("task 3 exploded");
+                }
+                d.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err());
+        // all non-panicking tasks still completed before the join returned
+        assert_eq!(done.load(Ordering::Relaxed), 7);
+        // the pool is still usable afterwards
+        pool.scope_for(4, |_| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 11);
     }
 
     #[test]

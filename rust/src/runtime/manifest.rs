@@ -61,15 +61,30 @@ pub struct Manifest {
     pub params: Vec<ParamEntry>,
 }
 
-/// Manifest loading errors.
-#[derive(Debug, thiserror::Error)]
+/// Manifest loading errors (hand-written impls — no thiserror in tree).
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest line {0}: {1}")]
+    Io(std::io::Error),
     Parse(usize, String),
-    #[error("manifest missing field {0}")]
     Missing(&'static str),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "io: {e}"),
+            ManifestError::Parse(line, msg) => write!(f, "manifest line {line}: {msg}"),
+            ManifestError::Missing(field) => write!(f, "manifest missing field {field}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        ManifestError::Io(e)
+    }
 }
 
 impl Manifest {

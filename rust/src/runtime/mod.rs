@@ -16,19 +16,40 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-/// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+/// Runtime errors (hand-written impls — no thiserror in tree).
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("manifest: {0}")]
-    Manifest(#[from] ManifestError),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("artifact not found: {0}")]
+    Manifest(ManifestError),
+    Io(std::io::Error),
     NotFound(String),
-    #[error("shape mismatch: {0}")]
     Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::Manifest(e) => write!(f, "manifest: {e}"),
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+            RuntimeError::NotFound(what) => write!(f, "artifact not found: {what}"),
+            RuntimeError::Shape(what) => write!(f, "shape mismatch: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<ManifestError> for RuntimeError {
+    fn from(e: ManifestError) -> Self {
+        RuntimeError::Manifest(e)
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

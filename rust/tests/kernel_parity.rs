@@ -1,0 +1,197 @@
+//! Parity + determinism property tests for the `kernels::` fast path
+//! against the naive reference kernels (`attention::matmul_f32` and the
+//! seed implementations in `attention::spectral_shift::reference`).
+//!
+//! Invariants:
+//! * max rel err < 1e-4 between fast and reference across odd shapes
+//!   (non-multiples of the 32-row block / 4-row micro-kernel, 1×1,
+//!   tall-skinny, wide-flat),
+//! * 1-thread and N-thread results are **bitwise identical** (fixed
+//!   per-row reduction order).
+
+use ssaformer::attention::spectral_shift::{reference, SpectralShiftConfig};
+use ssaformer::attention::{matmul_f32, nystrom_attention_with, Tensor2};
+use ssaformer::attention::spectral_shift_attention_with;
+use ssaformer::kernels::{
+    attention_batched, flash_attention, gemm_f32, softmax_gemm, transpose_into,
+    BatchedAttention, BatchedVariant, KernelCtx, Workspace,
+};
+use ssaformer::linalg::row_softmax_f32;
+use ssaformer::minirt::ThreadPool;
+use ssaformer::proptest_mini::{prop_assert, run};
+use ssaformer::rngx::Rng;
+use std::sync::Arc;
+
+fn max_rel_err(got: &Tensor2, want: &Tensor2) -> f32 {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+    let mut denom = 0.0f32;
+    for x in &want.data {
+        denom = denom.max(x.abs());
+    }
+    got.max_abs_diff(want) / denom.max(1e-6)
+}
+
+/// Materialized softmax-GEMM reference built from the naive kernels.
+fn softmax_gemm_ref(q: &Tensor2, kt: &Tensor2, x: &Tensor2, scale: f32) -> Tensor2 {
+    let mut ktt = Tensor2::zeros(kt.cols, kt.rows);
+    transpose_into(&kt.data, &mut ktt.data, kt.rows, kt.cols);
+    let mut f = matmul_f32(q, &ktt);
+    for s in f.data.iter_mut() {
+        *s *= scale;
+    }
+    row_softmax_f32(&mut f.data, f.rows, f.cols);
+    matmul_f32(&f, x)
+}
+
+#[test]
+fn gemm_parity_property() {
+    let ctx = KernelCtx::global();
+    let mut ws = Workspace::new();
+    run(60, |g| {
+        let m = g.usize_in(1, 80);
+        let k = g.usize_in(1, 70);
+        let n = g.usize_in(1, 60);
+        let mut rng = Rng::new((m * 10007 + k * 101 + n) as u64);
+        let a = Tensor2::randn(&mut rng, m, k, 1.0);
+        let b = Tensor2::randn(&mut rng, k, n, 1.0);
+        let fast = gemm_f32(&ctx, &a, &b, &mut ws);
+        let slow = matmul_f32(&a, &b);
+        let err = max_rel_err(&fast, &slow);
+        ws.put(fast.data);
+        prop_assert(err < 1e-4, format!("({m},{k},{n}): rel err {err}"))
+    });
+}
+
+#[test]
+fn gemm_parity_extreme_shapes() {
+    let ctx = KernelCtx::global();
+    let mut ws = Workspace::new();
+    // 1×1, tall-skinny, wide-flat, exact block multiples and off-by-one
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (1, 512, 1), (512, 1, 1),
+                        (1, 1, 512), (1000, 3, 2), (2, 3, 1000),
+                        (32, 256, 32), (33, 257, 31), (64, 64, 64)] {
+        let mut rng = Rng::new((m + k * 7 + n * 13) as u64);
+        let a = Tensor2::randn(&mut rng, m, k, 1.0);
+        let b = Tensor2::randn(&mut rng, k, n, 1.0);
+        let fast = gemm_f32(&ctx, &a, &b, &mut ws);
+        let slow = matmul_f32(&a, &b);
+        let err = max_rel_err(&fast, &slow);
+        assert!(err < 1e-4, "({m},{k},{n}): rel err {err}");
+        ws.put(fast.data);
+    }
+}
+
+#[test]
+fn softmax_gemm_parity_property() {
+    let ctx = KernelCtx::global();
+    let mut ws = Workspace::new();
+    run(40, |g| {
+        let n = g.usize_in(1, 90);
+        let d = g.usize_in(1, 24);
+        let c = g.usize_in(1, 24);
+        let dv = g.usize_in(1, 24);
+        let mut rng = Rng::new((n * 31 + d * 7 + c * 3 + dv) as u64);
+        let q = Tensor2::randn(&mut rng, n, d, 1.0);
+        let kt = Tensor2::randn(&mut rng, c, d, 1.0);
+        let x = Tensor2::randn(&mut rng, c, dv, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let fast = softmax_gemm(&ctx, &q, &kt, &x, scale, &mut ws);
+        let slow = softmax_gemm_ref(&q, &kt, &x, scale);
+        let err = max_rel_err(&fast, &slow);
+        ws.put(fast.data);
+        prop_assert(err < 1e-4, format!("({n},{d},{c},{dv}): rel err {err}"))
+    });
+}
+
+#[test]
+fn spectral_shift_fast_matches_seed_reference() {
+    for &(n, c, d) in &[(64usize, 8usize, 8usize), (128, 16, 16), (256, 64, 32)] {
+        let mut rng = Rng::new(n as u64);
+        let q = Tensor2::randn(&mut rng, n, d, 1.0);
+        let k = Tensor2::randn(&mut rng, n, d, 1.0);
+        let v = Tensor2::randn(&mut rng, n, d, 1.0);
+        let cfg = SpectralShiftConfig::new(c);
+        let mut ws = Workspace::new();
+        let fast = spectral_shift_attention_with(&q, &k, &v, &cfg,
+                                                 &KernelCtx::global(), &mut ws);
+        let seed = reference::spectral_shift_attention_ref(&q, &k, &v, &cfg);
+        let err = max_rel_err(&fast, &seed);
+        assert!(err < 1e-4, "(n={n},c={c},d={d}): rel err {err}");
+    }
+}
+
+#[test]
+fn nystrom_fast_matches_seed_reference() {
+    let mut rng = Rng::new(77);
+    let q = Tensor2::randn(&mut rng, 192, 16, 1.0);
+    let k = Tensor2::randn(&mut rng, 192, 16, 1.0);
+    let v = Tensor2::randn(&mut rng, 192, 16, 1.0);
+    let mut ws = Workspace::new();
+    let fast = nystrom_attention_with(&q, &k, &v, 16, 8, None,
+                                      &KernelCtx::global(), &mut ws);
+    let seed = reference::nystrom_attention_ref(&q, &k, &v, 16, 8, None);
+    let err = max_rel_err(&fast, &seed);
+    assert!(err < 1e-4, "rel err {err}");
+}
+
+#[test]
+fn one_and_n_threads_bitwise_identical() {
+    // explicit 1-worker and 4-worker pools, plus the pure-sequential
+    // context: all three must produce byte-identical outputs
+    let pool1 = Arc::new(ThreadPool::new(1));
+    let pool4 = Arc::new(ThreadPool::new(4));
+    let ctxs = [
+        KernelCtx::sequential(),
+        KernelCtx::with_pool(pool1),
+        KernelCtx::with_pool(pool4),
+    ];
+    let mut rng = Rng::new(5);
+    let q = Tensor2::randn(&mut rng, 160, 16, 1.0);
+    let k = Tensor2::randn(&mut rng, 160, 16, 1.0);
+    let v = Tensor2::randn(&mut rng, 160, 16, 1.0);
+    let cfg = SpectralShiftConfig::new(16);
+
+    let mut gemm_outs = Vec::new();
+    let mut flash_outs = Vec::new();
+    let mut ss_outs = Vec::new();
+    for ctx in &ctxs {
+        let mut ws = Workspace::new();
+        gemm_outs.push(gemm_f32(ctx, &q, &k_t(&k), &mut ws).data);
+        flash_outs.push(flash_attention(ctx, &q, &k, &v, 0.25, &mut ws).data);
+        ss_outs.push(spectral_shift_attention_with(&q, &k, &v, &cfg, ctx, &mut ws).data);
+    }
+    for i in 1..ctxs.len() {
+        assert_eq!(gemm_outs[0], gemm_outs[i], "gemm differs at ctx {i}");
+        assert_eq!(flash_outs[0], flash_outs[i], "flash differs at ctx {i}");
+        assert_eq!(ss_outs[0], ss_outs[i], "spectral shift differs at ctx {i}");
+    }
+}
+
+fn k_t(k: &Tensor2) -> Tensor2 {
+    let mut kt = Tensor2::zeros(k.cols, k.rows);
+    transpose_into(&k.data, &mut kt.data, k.rows, k.cols);
+    kt
+}
+
+#[test]
+fn batched_attention_matches_per_head_serial() {
+    let mut rng = Rng::new(9);
+    let reqs: Vec<(Tensor2, Tensor2, Tensor2)> = (0..3)
+        .map(|_| {
+            (
+                Tensor2::randn(&mut rng, 64, 16, 1.0),
+                Tensor2::randn(&mut rng, 64, 16, 1.0),
+                Tensor2::randn(&mut rng, 64, 16, 1.0),
+            )
+        })
+        .collect();
+    let cfg = SpectralShiftConfig::new(8);
+    let mut par = BatchedAttention::new(KernelCtx::global());
+    let mut ser = BatchedAttention::new(KernelCtx::sequential());
+    let a = attention_batched(&mut par, &reqs, 4, BatchedVariant::SpectralShift(cfg));
+    let b = attention_batched(&mut ser, &reqs, 4, BatchedVariant::SpectralShift(cfg));
+    assert_eq!(a.len(), reqs.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.data, y.data, "parallel batch must equal serial batch bitwise");
+    }
+}

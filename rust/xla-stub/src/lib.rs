@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real bindings wrap `xla_extension`'s C++ PJRT CPU client. That
+//! toolchain is not present in every build environment, so this stub
+//! vendors the exact API surface `ssaformer::runtime` uses and makes
+//! every runtime entry point return an "unavailable" error instead of
+//! linking native code. Artifact-driven paths (serving integration
+//! tests, `artifact_exec` / `serving_throughput` benches) already skip
+//! gracefully when `artifacts/` is missing, which is always the case
+//! when this stub is in use; everything else — the CPU kernel core,
+//! attention variants, coordinator logic, analysis benches — is pure
+//! Rust and unaffected.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml` (point the `xla` dependency at the real crate).
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT runtime not available (offline stub build)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device-resident buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with device buffers; outer Vec is replicas, inner the
+    /// (possibly untupled) outputs.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation built from a proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("offline stub"));
+    }
+
+    #[test]
+    fn computation_from_proto_is_constructible() {
+        // from_proto is infallible in the real API; the stub keeps that.
+        let proto = HloModuleProto { _private: () };
+        let _comp = XlaComputation::from_proto(&proto);
+    }
+}
