@@ -3,11 +3,15 @@
 //! client threads, and prints the latency/throughput report — the
 //! paper's sec-9 deployment scenario in miniature.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_attention [variant]`
+//! The execution backend is auto-selected: XLA artifacts when
+//! `artifacts/` is built, otherwise the in-process CPU kernel backend —
+//! so this example serves real embeddings with no artifacts at all.
+//!
+//! Run: `cargo run --release --example serve_attention [variant]`
+//! (optionally `make artifacts` first to exercise the XLA path).
 
 use ssaformer::config::{ServingConfig, Variant};
-use ssaformer::coordinator::Coordinator;
-use ssaformer::runtime::Engine;
+use ssaformer::coordinator::{Coordinator, ExecBackend};
 use ssaformer::server::{serve, Client};
 use ssaformer::workload::{generate_trace, LengthDist, TraceConfig};
 use std::sync::Arc;
@@ -17,13 +21,8 @@ fn main() {
         .nth(1)
         .and_then(|s| Variant::parse(&s))
         .unwrap_or(Variant::SpectralShift);
-    if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(1);
-    }
 
     println!("== ssaformer serving demo ({}) ==", variant.token());
-    let engine = Arc::new(Engine::new("artifacts").expect("engine"));
     let cfg = ServingConfig {
         variant,
         max_batch: 4,
@@ -31,10 +30,11 @@ fn main() {
         queue_capacity: 128,
         ..Default::default()
     };
+    let backend = ExecBackend::auto(&cfg);
     let t0 = std::time::Instant::now();
-    let coordinator = Arc::new(Coordinator::start(engine, &cfg).expect("start"));
-    println!("warmup (compile all {} artifacts): {:?}",
-             variant.token(), t0.elapsed());
+    let coordinator = Arc::new(Coordinator::start(backend, &cfg).expect("start"));
+    let backend_name = coordinator.backend().name();
+    println!("backend: {backend_name} (warmup {:?})", t0.elapsed());
 
     let (addr, handle) = serve(coordinator.clone(), "127.0.0.1:0", 4)
         .expect("bind");
@@ -78,8 +78,10 @@ fn main() {
     let ok: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     let wall = start.elapsed();
 
-    println!("\nreplayed {} requests ({} ok) in {:?} -> {:.1} req/s",
+    println!("\nreplayed {} requests ({} ok, served by {backend_name}) \
+              in {:?} -> {:.1} req/s",
              trace.len(), ok, wall, ok as f64 / wall.as_secs_f64());
+    // the STATS block leads with the backend identification line
     let mut client = Client::connect(&addr).unwrap();
     println!("\nserver metrics:\n{}", client.stats().unwrap());
     handle.stop();

@@ -3,8 +3,11 @@
 //! Runs the kernel-core microbenches at fixed shapes (n ∈ {1024, 4096},
 //! c = 64, d = 64) and writes `BENCH_kernels.json` at the repo root
 //! (falling back to the crate root when run elsewhere): variant →
-//! ns/op, GF/s, threads, plus fast-vs-seed-scalar speedups. CI and
-//! future PRs diff this file to track the hot path.
+//! ns/op, GF/s, threads, fast-vs-seed-scalar speedups, plus the
+//! serving-path entry (CPU-backend coordinator requests/sec at
+//! n ∈ {1024, 4096}, measured at the CPU model defaults — d/heads/
+//! landmarks recorded alongside the rates). CI and future PRs diff
+//! this file to track the hot path.
 //!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
@@ -15,8 +18,13 @@ use ssaformer::attention::{
     SpectralShiftConfig, Tensor2,
 };
 use ssaformer::benchkit::{banner, bench, fmt_duration, Table};
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::{
+    Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
+};
 use ssaformer::kernels::{gemm_f32, global_pool, KernelCtx, Workspace};
 use ssaformer::rngx::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 struct Entry {
@@ -121,7 +129,49 @@ fn main() {
     }
     println!("{}", spd.render());
 
-    let json = render_json(threads, c, d, &entries, &speedups);
+    // --- serving path: requests/sec through the CPU-backend coordinator
+    // (submit → bucket queue → batcher → kernels::batched → pooled
+    // embedding), saturated offered load at a single bucket
+    // serving rows use the CPU model defaults, NOT the kernel-bench
+    // c/d above — record them so the JSON is self-describing
+    let mcfg = CpuModelConfig::default();
+    let mut serving: Vec<(String, f64)> = vec![
+        ("model_d".into(), mcfg.d_model as f64),
+        ("model_heads".into(), mcfg.n_heads as f64),
+        ("model_landmarks".into(), mcfg.landmarks as f64),
+    ];
+    let mut stbl = Table::new(&["serving (cpu backend)", "n", "req/s"]);
+    for &n in &[1024usize, 4096] {
+        let cfg = ServingConfig {
+            variant: Variant::SpectralShift,
+            max_batch: 4,
+            max_wait_ms: 2,
+            queue_capacity: 256,
+            seq_buckets: vec![1024, 4096],
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), cfg.variant)));
+        let coordinator = Arc::new(
+            Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+        let toks: Vec<i32> = (0..n).map(|i| 3 + (i as i32 % 2000)).collect();
+        // warm the kernel arenas before timing
+        coordinator.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
+        let reqs = 24;
+        let start = std::time::Instant::now();
+        let rxs: Vec<_> = (0..reqs)
+            .map(|_| coordinator.submit(toks.clone()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().embedding.unwrap();
+        }
+        let rps = reqs as f64 / start.elapsed().as_secs_f64();
+        stbl.row(&["encode_rps".into(), n.to_string(), format!("{rps:.1}")]);
+        serving.push((format!("cpu_encode_rps_n{n}"), rps));
+    }
+    println!("{}", stbl.render());
+
+    let json = render_json(threads, c, d, &entries, &speedups, &serving);
     // benches run with cwd = rust/; the repo root is one level up
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
         "../BENCH_kernels.json"
@@ -147,10 +197,11 @@ fn push(entries: &mut Vec<Entry>, table: &mut Table, name: &str, n: usize,
 }
 
 fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
-               speedups: &[(String, f64)]) -> String {
+               speedups: &[(String, f64)],
+               serving: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v1\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v2\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"c\": {c},\n"));
@@ -168,6 +219,13 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
     for (i, (name, x)) in speedups.iter().enumerate() {
         let comma = if i + 1 < speedups.len() { "," } else { "" };
         out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
+    }
+    out.push_str("  },\n");
+    // serving-path trajectory: requests/sec through the CPU backend
+    out.push_str("  \"serving\": {\n");
+    for (i, (name, x)) in serving.iter().enumerate() {
+        let comma = if i + 1 < serving.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {x:.2}{comma}\n"));
     }
     out.push_str("  }\n");
     out.push_str("}\n");

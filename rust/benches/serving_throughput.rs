@@ -11,7 +11,7 @@
 
 use ssaformer::benchkit::{banner, Table};
 use ssaformer::config::{ServingConfig, Variant};
-use ssaformer::coordinator::Coordinator;
+use ssaformer::coordinator::{Coordinator, ExecBackend};
 use ssaformer::runtime::Engine;
 use ssaformer::workload::{generate_trace, LengthDist, TraceConfig};
 use std::sync::Arc;
@@ -48,7 +48,7 @@ fn main() {
             ..Default::default()
         };
         let t_warm = std::time::Instant::now();
-        let coordinator = Arc::new(Coordinator::start(engine, &cfg).unwrap());
+        let coordinator = Arc::new(Coordinator::start(ExecBackend::Xla(engine), &cfg).unwrap());
         let warmup = t_warm.elapsed();
 
         let start = std::time::Instant::now();
@@ -108,7 +108,7 @@ fn main() {
                 queue_capacity: 128,
                 ..Default::default()
             };
-            let coordinator = Arc::new(Coordinator::start(engine, &cfg).unwrap());
+            let coordinator = Arc::new(Coordinator::start(ExecBackend::Xla(engine), &cfg).unwrap());
             let toks: Vec<i32> = (0..len).map(|i| 3 + (i as i32 % 2000)).collect();
             let start = std::time::Instant::now();
             let rxs: Vec<_> = (0..24)

@@ -40,8 +40,23 @@
 //!   the fast/reference speedup to `BENCH_kernels.json`.
 //!
 //! The serving hot path executes the AOT-compiled XLA artifacts through
-//! `runtime::` when artifacts are present; the kernel layer is the CPU
-//! execution engine and the analysis/bench substrate.
+//! `runtime::` when artifacts are present; without them the coordinator
+//! serves straight off this layer via `coordinator::cpu_engine`, so the
+//! kernel core is both the CPU execution engine and the analysis/bench
+//! substrate.
+//!
+//! # Invariants
+//!
+//! * **Reference/fast parity** — every `*_with` fast path reproduces
+//!   its preserved seed scalar implementation to max rel err < 1e-4
+//!   (`tests/kernel_parity.rs`); the reference path is never "improved",
+//!   it is the ground truth.
+//! * **Thread-count determinism** — inherited from `crate::kernels`:
+//!   variant outputs are bitwise identical for any pool size.
+//! * **Workspace discipline** — `*_with` twins take every intermediate
+//!   from the caller's `Workspace` and return it before exiting, so
+//!   steady-state calls allocate only their output tensor (and not even
+//!   that when the caller recycles it with `ws.put`).
 
 pub mod full;
 pub mod landmarks;

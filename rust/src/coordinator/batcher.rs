@@ -51,27 +51,34 @@ pub fn scatter(plan: &BatchPlan, output: &[f32], width: usize) -> Vec<Vec<f32>> 
 }
 
 /// Execute per-request self-attention for an assembled batch on the CPU
-/// kernel core. `q`/`k`/`v` are (capacity·seq × d) row-major stacks
-/// aligned with the plan's rows; `lens[r]` is request r's real token
-/// count (≤ `plan.seq`), exactly what the caller handed `assemble`.
-/// Padding is skipped at both granularities: padding *requests* (rows
-/// beyond `fill`) never execute, and the padded tail *positions* of a
-/// short request are excluded from its q/k/v, so pad keys never receive
-/// softmax weight. All heads of all requests fan out over the kernel
-/// pool in parallel. Returns one (lens\[r\] × d) output per real
-/// request, in order — padding dropped exactly as in [`scatter`].
+/// kernel core. `q`/`k`/`v` are row-major (seq × d)-per-request stacks
+/// aligned with the plan's rows and covering at least the `fill` real
+/// requests (capacity-sized stacks also accepted — slots past `fill`
+/// are never read); `lens[r]` is request r's *execution* length
+/// (1..=`plan.seq`): exactly how many leading positions of its slot
+/// participate in attention. Padding *requests* (rows beyond `fill`)
+/// never execute, and positions past `lens[r]` are excluded from the
+/// request's q/k/v entirely. Callers choose what `lens` means: the real
+/// token count gives attention over real keys only, while
+/// `cpu_engine::CpuEngine` passes landmark-*aligned* lengths, whose
+/// short PAD-embedding tail does participate in attention (counted by
+/// the `padded_tokens` metric). All heads of all requests fan out over
+/// the kernel pool in parallel. Returns one (lens\[r\] × d) output per
+/// real request, in order — padding rows dropped exactly as in
+/// [`scatter`].
 ///
 /// For the landmark variants (`Nystrom` / `SpectralShift`) every
-/// `lens[r]` must be divisible by the landmark count — the router's
-/// bucketing must guarantee that, as it does for artifact shapes.
+/// `lens[r]` must be divisible by the landmark count — which is why the
+/// CPU engine aligns them (the artifact path gets the same guarantee
+/// from its bucket shapes).
 pub fn attention_scatter(exec: &mut BatchedAttention, plan: &BatchPlan,
                          q: &[f32], k: &[f32], v: &[f32], d: usize,
                          lens: &[usize], n_heads: usize,
                          variant: BatchedVariant) -> Vec<Tensor2> {
     let per_req = plan.seq * d;
-    assert_eq!(q.len(), plan.capacity * per_req,
-               "q len {} != capacity {} × seq {} × d {d}",
-               q.len(), plan.capacity, plan.seq);
+    assert!(q.len() >= plan.fill * per_req,
+            "q len {} < fill {} × seq {} × d {d}",
+            q.len(), plan.fill, plan.seq);
     assert_eq!(k.len(), q.len(), "k/q length mismatch");
     assert_eq!(v.len(), q.len(), "v/q length mismatch");
     assert_eq!(lens.len(), plan.fill, "one length per real request");

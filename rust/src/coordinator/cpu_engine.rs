@@ -1,0 +1,386 @@
+//! CPU execution backend: serve real embeddings with **no XLA
+//! artifacts**, driving the `kernels::batched` core directly.
+//!
+//! The XLA worker executes an AOT-compiled encode artifact per batch;
+//! this module is its in-process twin. A [`CpuModel`] supplies a
+//! deterministic token→activation map (seeded Gaussian embedding table
+//! plus a sinusoidal position signal), and a [`CpuEngine`] turns one
+//! assembled [`BatchPlan`] into per-request pooled embeddings:
+//!
+//! 1. embed each real request's tokens (plus the landmark-alignment
+//!    padding tail) into a stacked `(capacity·seq × d_model)` buffer,
+//! 2. run every head of every request in parallel through
+//!    [`attention_scatter`] (full / Nyström / spectral-shift kernels),
+//! 3. mean-pool each request's **real** rows into one `d_model` vector.
+//!
+//! Determinism contract: for a fixed [`CpuModelConfig`] and token
+//! sequence the served embedding is a pure function of the inputs —
+//! independent of batch composition, arrival order, and kernel thread
+//! count (the GEMM's fixed-block reduction order guarantees the last
+//! part). The end-to-end test `tests/integration_cpu_serving.rs` pins
+//! this against the seed scalar `attention::spectral_shift::reference`
+//! pipeline.
+//!
+//! Padding discipline: a request of length `len` executes at
+//! `padded_len(len)` positions (`len` rounded up to the landmark count
+//! for the O(n) variants so segment-means stays well-defined; exactly
+//! `len` for full attention). Rows past `padded_len` and slots past
+//! `plan.fill` are never touched — the padding-skip guarantee of
+//! [`attention_scatter`] — and pooled outputs only average real rows.
+
+use super::batcher::{attention_scatter, BatchPlan};
+use crate::attention::Tensor2;
+use crate::config::Variant;
+use crate::kernels::{BatchedAttention, BatchedVariant, KernelCtx, Workspace};
+use crate::rngx::Rng;
+
+/// Hyperparameters of the deterministic CPU serving model.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModelConfig {
+    /// Model width (columns of every activation tensor).
+    pub d_model: usize,
+    /// Attention heads; must divide `d_model`.
+    pub n_heads: usize,
+    /// Landmark count c for the O(n) variants.
+    pub landmarks: usize,
+    /// Newton-Schulz iterations for the A⁺ pseudoinverse.
+    pub pinv_iters: usize,
+    /// Embedding-table rows; token ids are wrapped into this range.
+    pub vocab: usize,
+    /// Seed for the embedding table — fixes the served function.
+    pub seed: u64,
+}
+
+impl Default for CpuModelConfig {
+    fn default() -> Self {
+        CpuModelConfig {
+            d_model: 64,
+            n_heads: 4,
+            landmarks: 16,
+            pinv_iters: 8,
+            vocab: 2048,
+            seed: 42,
+        }
+    }
+}
+
+/// Deterministic token→activation model executed by [`CpuEngine`].
+///
+/// Two instances built from the same config are functionally identical,
+/// which is what lets the end-to-end test rebuild the model and check
+/// served embeddings against the scalar reference pipeline.
+pub struct CpuModel {
+    cfg: CpuModelConfig,
+    serving_variant: Variant,
+    kernel_variant: BatchedVariant,
+    /// vocab × d_model Gaussian embedding table (seeded).
+    embed: Vec<f32>,
+    /// sinusoid frequency per even dimension (d_model/2 entries),
+    /// precomputed so the per-token embed loop never calls `powf`.
+    pos_freqs: Vec<f32>,
+}
+
+impl CpuModel {
+    pub fn new(cfg: CpuModelConfig, variant: Variant) -> CpuModel {
+        assert!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+                "d_model {} must be divisible by n_heads {}",
+                cfg.d_model, cfg.n_heads);
+        assert!(cfg.landmarks > 0 && cfg.vocab > 0, "degenerate model config");
+        let mut rng = Rng::new(cfg.seed);
+        let mut embed = vec![0.0f32; cfg.vocab * cfg.d_model];
+        rng.fill_normal_f32(&mut embed, 0.0, 1.0);
+        let kernel_variant =
+            BatchedVariant::from_config(variant, cfg.landmarks, cfg.pinv_iters);
+        let pos_freqs = (0..cfg.d_model / 2)
+            .map(|h| 10_000f32.powf(-((2 * h) as f32) / cfg.d_model as f32))
+            .collect();
+        CpuModel { cfg, serving_variant: variant, kernel_variant, embed, pos_freqs }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.cfg.d_model
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.cfg.n_heads
+    }
+
+    pub fn landmarks(&self) -> usize {
+        self.cfg.landmarks
+    }
+
+    pub fn pinv_iters(&self) -> usize {
+        self.cfg.pinv_iters
+    }
+
+    /// The serving-config variant this model executes.
+    pub fn variant(&self) -> Variant {
+        self.serving_variant
+    }
+
+    /// The kernel dispatch the variant maps onto.
+    pub fn kernel_variant(&self) -> BatchedVariant {
+        self.kernel_variant
+    }
+
+    /// `Some(c)` when execution lengths must be divisible by the
+    /// landmark count (Nyström / spectral shift), `None` for full
+    /// attention.
+    pub fn landmark_divisor(&self) -> Option<usize> {
+        match self.kernel_variant {
+            BatchedVariant::Full => None,
+            _ => Some(self.cfg.landmarks),
+        }
+    }
+
+    /// The sequence length a `len`-token request executes at: `len`
+    /// rounded up to the landmark count for the landmark variants
+    /// (segment means require divisibility), unchanged for full.
+    pub fn padded_len(&self, len: usize) -> usize {
+        match self.landmark_divisor() {
+            Some(c) => (len + c - 1) / c * c,
+            None => len,
+        }
+    }
+
+    /// Embed `tokens` into `out` (`tokens.len() × d_model`, row-major):
+    /// table row for the (range-wrapped) token id plus a sinusoidal
+    /// position signal so repeated tokens at different positions map to
+    /// distinct activations.
+    pub fn embed_into(&self, tokens: &[i32], out: &mut [f32]) {
+        let d = self.cfg.d_model;
+        assert_eq!(out.len(), tokens.len() * d, "embed buffer shape");
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = (tok as i64).rem_euclid(self.cfg.vocab as i64) as usize;
+            let orow = &mut out[i * d..(i + 1) * d];
+            orow.copy_from_slice(&self.embed[row * d..(row + 1) * d]);
+            let pos = i as f32;
+            for (h, &freq) in self.pos_freqs.iter().enumerate() {
+                let j = 2 * h;
+                orow[j] += (pos * freq).sin();
+                orow[j + 1] += (pos * freq).cos();
+            }
+        }
+    }
+
+    /// `(len × d_model)` activations for `tokens`, truncated or
+    /// right-padded with the PAD token to exactly `len` rows — the
+    /// standalone twin of the batched staging in
+    /// [`CpuEngine::encode_batch`], used by tests to rebuild the exact
+    /// kernel inputs.
+    pub fn embed_sequence(&self, tokens: &[i32], len: usize) -> Tensor2 {
+        let mut padded: Vec<i32> = tokens.iter().copied().take(len).collect();
+        padded.resize(len, crate::text::PAD);
+        let mut t = Tensor2::zeros(len, self.cfg.d_model);
+        self.embed_into(&padded, &mut t.data);
+        t
+    }
+}
+
+/// Batch executor owned by the coordinator's CPU worker thread. Holds
+/// the model, the multi-head fan-out executor, and a staging arena so
+/// steady-state batches embed + execute with zero heap allocations.
+pub struct CpuEngine {
+    model: CpuModel,
+    exec: BatchedAttention,
+    stage: Workspace,
+}
+
+impl CpuEngine {
+    pub fn new(model: CpuModel) -> CpuEngine {
+        CpuEngine {
+            model,
+            exec: BatchedAttention::new(KernelCtx::global()),
+            stage: Workspace::new(),
+        }
+    }
+
+    pub fn model(&self) -> &CpuModel {
+        &self.model
+    }
+
+    /// Padding positions [`CpuEngine::encode_batch`] will execute on top
+    /// of the real tokens for these request lengths (the CPU path's
+    /// padding-waste metric: landmark-alignment tails only, since
+    /// padding *rows* never execute at all).
+    pub fn padded_positions(&self, lens: &[usize]) -> u64 {
+        lens.iter().map(|&l| (self.model.padded_len(l) - l) as u64).sum()
+    }
+
+    /// Execute one assembled batch: embed every real request, fan all
+    /// heads × requests over the kernel pool, and mean-pool each
+    /// request's real rows. `lens[r]` is request r's true token count,
+    /// exactly what the caller handed `assemble`. Returns one `d_model`
+    /// embedding per real request, in order.
+    pub fn encode_batch(&mut self, plan: &BatchPlan, lens: &[usize]) -> Vec<Vec<f32>> {
+        assert_eq!(lens.len(), plan.fill, "one length per real request");
+        let d = self.model.cfg.d_model;
+        let per_req = plan.seq * d;
+        // stage only the real requests — a 1-request batch in a
+        // capacity-4 plan zero-fills a quarter of the dense tensor
+        let mut x = self.stage.take(plan.fill * per_req);
+        let mut plens = Vec::with_capacity(plan.fill);
+        for (r, &len) in lens.iter().enumerate() {
+            assert!(len > 0 && len <= plan.seq,
+                    "request {r} length {len} outside 1..={}", plan.seq);
+            let plen = self.model.padded_len(len).min(plan.seq);
+            // assemble() already PAD-filled the row tail, so the slice
+            // covers the landmark-alignment padding tokens too
+            let toks = &plan.tokens[r * plan.seq..r * plan.seq + plen];
+            self.model
+                .embed_into(toks, &mut x[r * per_req..r * per_req + plen * d]);
+            plens.push(plen);
+        }
+        let outs = attention_scatter(&mut self.exec, plan, &x, &x, &x, d,
+                                     &plens, self.model.cfg.n_heads,
+                                     self.model.kernel_variant);
+        self.stage.put(x);
+        outs.iter()
+            .zip(lens)
+            .map(|(t, &len)| mean_pool(t, len))
+            .collect()
+    }
+}
+
+/// Mean over the first `len` rows of `t` — pooling only ever sees real
+/// positions, never the landmark-alignment tail.
+fn mean_pool(t: &Tensor2, len: usize) -> Vec<f32> {
+    let len = len.min(t.rows).max(1);
+    let mut out = vec![0.0f32; t.cols];
+    for i in 0..len {
+        for (o, v) in out.iter_mut().zip(t.row(i)) {
+            *o += *v;
+        }
+    }
+    let inv = 1.0 / len as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::spectral_shift::{reference, SpectralShiftConfig};
+    use crate::coordinator::batcher::assemble;
+
+    fn toks(n: usize, seed: i32) -> Vec<i32> {
+        (0..n).map(|i| 3 + ((i as i32 * 17 + seed) % 2000)).collect()
+    }
+
+    #[test]
+    fn padded_len_per_variant() {
+        let m = CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift);
+        assert_eq!(m.padded_len(1), 16);
+        assert_eq!(m.padded_len(16), 16);
+        assert_eq!(m.padded_len(17), 32);
+        assert_eq!(m.landmark_divisor(), Some(16));
+        let m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
+        assert_eq!(m.padded_len(17), 17);
+        assert_eq!(m.landmark_divisor(), None);
+    }
+
+    #[test]
+    fn model_is_deterministic_across_instances() {
+        let a = CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift);
+        let b = CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift);
+        let t = toks(40, 1);
+        let xa = a.embed_sequence(&t, 48);
+        let xb = b.embed_sequence(&t, 48);
+        assert_eq!(xa.data, xb.data);
+        // position signal distinguishes repeated tokens
+        let rep = a.embed_sequence(&[7, 7], 2);
+        assert_ne!(rep.row(0), rep.row(1));
+    }
+
+    #[test]
+    fn out_of_range_tokens_wrap_instead_of_panicking() {
+        let m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
+        let x = m.embed_sequence(&[-5, 9999, i32::MAX], 3);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn encode_batch_matches_per_head_reference() {
+        // engine path (batched kernels) vs the seed scalar pipeline,
+        // per head, then pooled — mixed lengths incl. a padded tail
+        let model = CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift);
+        let verify = CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift);
+        let mut engine = CpuEngine::new(model);
+        let reqs = [toks(100, 1), toks(128, 2), toks(40, 3)];
+        let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+        let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+        let plan = assemble(&refs, 4, 128);
+        let got = engine.encode_batch(&plan, &lens);
+        assert_eq!(got.len(), 3);
+        let (d, h) = (verify.d_model(), verify.n_heads());
+        let dh = d / h;
+        for (r, t) in reqs.iter().enumerate() {
+            let plen = verify.padded_len(t.len());
+            let x = verify.embed_sequence(t, plen);
+            let mut full = Tensor2::zeros(plen, d);
+            for head in 0..h {
+                let mut xs = Tensor2::zeros(plen, dh);
+                for i in 0..plen {
+                    for j in 0..dh {
+                        xs.data[i * dh + j] = x.data[i * d + head * dh + j];
+                    }
+                }
+                let mut cfg = SpectralShiftConfig::new(verify.landmarks());
+                cfg.pinv_iters = verify.pinv_iters();
+                let oh = reference::spectral_shift_attention_ref(&xs, &xs, &xs, &cfg);
+                for i in 0..plen {
+                    for j in 0..dh {
+                        full.data[i * d + head * dh + j] = oh.data[i * dh + j];
+                    }
+                }
+            }
+            let want = mean_pool(&full, t.len());
+            for (j, (a, b)) in got[r].iter().zip(&want).enumerate() {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                        "req {r} dim {j}: engine {a} vs reference {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_batch_is_independent_of_batch_composition() {
+        let mk = || CpuEngine::new(
+            CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift));
+        let t = toks(100, 4);
+        let mut solo = mk();
+        let plan1 = assemble(&[t.as_slice()], 4, 128);
+        let alone = solo.encode_batch(&plan1, &[t.len()]);
+        let mut full = mk();
+        let other = toks(64, 5);
+        let plan2 = assemble(&[other.as_slice(), t.as_slice()], 4, 128);
+        let batched = full.encode_batch(&plan2, &[other.len(), t.len()]);
+        assert_eq!(alone[0], batched[1],
+                   "embedding must not depend on batchmates");
+    }
+
+    #[test]
+    fn steady_state_batches_do_not_allocate_from_stage() {
+        let mut engine = CpuEngine::new(
+            CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift));
+        let reqs = [toks(100, 6), toks(50, 7)];
+        let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+        let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+        let plan = assemble(&refs, 4, 128);
+        let _ = engine.encode_batch(&plan, &lens);
+        let warm = engine.stage.allocations();
+        for _ in 0..3 {
+            let _ = engine.encode_batch(&plan, &lens);
+        }
+        assert_eq!(engine.stage.allocations(), warm);
+    }
+
+    #[test]
+    fn padded_positions_counts_alignment_tails() {
+        let engine = CpuEngine::new(
+            CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift));
+        // 100 → 112 (+12), 128 → 128 (+0), 40 → 48 (+8)
+        assert_eq!(engine.padded_positions(&[100, 128, 40]), 20);
+    }
+}

@@ -1,9 +1,56 @@
 //! The L3 coordinator (S14): router → bounded bucket queue → dynamic
-//! batcher → PJRT execution, with metrics at every stage.
+//! batcher → execution backend, with metrics at every stage.
 //!
-//! Data path (python-free):
+//! Data path (python-free; see `ARCHITECTURE.md` for the full request
+//! lifecycle walkthrough):
+//!
+//! ```text
 //!   submit(tokens) ──route──▶ BucketQueue ──pop_batch──▶ worker thread
-//!     ──assemble──▶ encode artifact (PJRT) ──scatter──▶ response channel
+//!     ──assemble──▶ ExecBackend ──scatter/pool──▶ response channel
+//!                      │
+//!                      ├─ Xla: AOT encode artifact on the PJRT client
+//!                      └─ Cpu: kernels::batched on the minirt pool
+//! ```
+//!
+//! Two execution backends implement the same submit/batch/execute/
+//! respond loop ([`ExecBackend`]): the PJRT worker executes compiled
+//! encode artifacts, and the CPU worker drives the in-process
+//! [`kernels`](crate::kernels) core through
+//! [`batcher::attention_scatter`] via [`cpu_engine::CpuEngine`].
+//! [`ExecBackend::auto`] picks XLA when artifacts + PJRT are available
+//! and falls back to CPU otherwise, so the stack serves real embeddings
+//! even with the offline `xla-stub` build.
+//!
+//! # Invariants
+//!
+//! * **Batch homogeneity** — every popped batch shares one sequence
+//!   bucket ([`queue::BucketQueue::pop_batch`]), so one artifact shape /
+//!   one padded tensor shape covers the whole batch.
+//! * **Padding skip** — [`batcher::attention_scatter`] never executes
+//!   padding *rows* (slots past `fill`) and excludes every position
+//!   beyond the per-request length it is given from attention;
+//!   `scatter` drops the same rows on the artifact path. The CPU engine
+//!   passes landmark-*aligned* lengths, so a short alignment tail of
+//!   PAD embeddings is executed (and metered as `padded_tokens`) —
+//!   pooling still averages only real positions.
+//! * **Order preservation** — responses are delivered on per-request
+//!   channels; within a batch, outputs are scattered back in submission
+//!   order.
+//! * **Backend-independent protocol** — [`Response`] and the serving
+//!   metrics have the same meaning on both backends; which one is live
+//!   is reported via [`Coordinator::backend`] and the server's `STATS`
+//!   report.
+//!
+//! Assemble/scatter are pure and unit-testable:
+//!
+//! ```
+//! use ssaformer::coordinator::{assemble, scatter};
+//! let plan = assemble(&[&[5, 6, 7][..]], /*capacity=*/2, /*seq=*/4);
+//! assert_eq!((plan.fill, plan.tokens.len()), (1, 8));
+//! // an executor output of capacity × width scatters back to fill rows
+//! let rows = scatter(&plan, &vec![1.0; 2 * 3], 3);
+//! assert_eq!(rows, vec![vec![1.0, 1.0, 1.0]]);
+//! ```
 //!
 //! The paper's sec-9 deployment claim ("this method can reduce training
 //! and inference time") is exercised by swapping the served attention
@@ -11,17 +58,19 @@
 //! see the serving_throughput bench (E8).
 
 pub mod batcher;
+pub mod cpu_engine;
 pub mod queue;
 pub mod router;
 
 pub use batcher::{assemble, scatter, BatchPlan};
+pub use cpu_engine::{CpuEngine, CpuModel, CpuModelConfig};
 pub use queue::{BatchPolicy, BucketQueue, PushError, Queued};
 pub use router::{Route, Router};
 
 use crate::config::{ServingConfig, Variant};
 use crate::metrics::ServingMetrics;
 use crate::minirt::CancelToken;
-use crate::runtime::{ArtifactKind, Engine};
+use crate::runtime::{ArtifactKind, BackendKind, Engine};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -57,6 +106,88 @@ struct ParamsBuffer(xla::PjRtBuffer);
 unsafe impl Send for ParamsBuffer {}
 unsafe impl Sync for ParamsBuffer {}
 
+/// The execution engine behind the coordinator's worker loop.
+pub enum ExecBackend {
+    /// AOT-compiled encode artifacts executed on the PJRT runtime.
+    Xla(Arc<Engine>),
+    /// The in-process CPU kernel core — no artifacts required.
+    Cpu(Box<CpuEngine>),
+}
+
+impl ExecBackend {
+    /// Backend auto-selection: XLA when the artifacts directory loads
+    /// and the PJRT client constructs, otherwise the CPU kernel backend
+    /// with the default deterministic model. With the offline
+    /// `xla-stub` build this always selects CPU.
+    pub fn auto(cfg: &ServingConfig) -> ExecBackend {
+        ExecBackend::auto_with_reason(cfg).0
+    }
+
+    /// [`ExecBackend::auto`], also returning *why* XLA was skipped (the
+    /// engine construction error) so entry points can surface a corrupt
+    /// manifest instead of silently serving the CPU demo model.
+    pub fn auto_with_reason(cfg: &ServingConfig)
+                            -> (ExecBackend, Option<crate::runtime::RuntimeError>) {
+        match Engine::new(&cfg.artifacts_dir) {
+            Ok(engine) => (ExecBackend::Xla(Arc::new(engine)), None),
+            Err(e) => (
+                ExecBackend::Cpu(Box::new(CpuEngine::new(CpuModel::new(
+                    CpuModelConfig::default(),
+                    cfg.variant,
+                )))),
+                Some(e),
+            ),
+        }
+    }
+
+    /// Which backend this is, for manifest/metrics reporting.
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            ExecBackend::Xla(_) => BackendKind::Xla,
+            ExecBackend::Cpu(_) => BackendKind::Cpu,
+        }
+    }
+}
+
+/// Admission scaffolding shared by both backends — router, bounded
+/// queue, metrics, cancel token, batch policy — built in one place so
+/// the XLA and CPU start paths cannot diverge.
+struct Scaffold {
+    router: Router,
+    queue: Arc<BucketQueue<Pending>>,
+    metrics: Arc<ServingMetrics>,
+    cancel: CancelToken,
+    policy: BatchPolicy,
+}
+
+impl Scaffold {
+    fn new(buckets: &[usize], cfg: &ServingConfig) -> Scaffold {
+        Scaffold {
+            router: Router::new(buckets.to_vec()),
+            queue: Arc::new(BucketQueue::new(buckets.len(), cfg.queue_capacity)),
+            metrics: Arc::new(ServingMetrics::new()),
+            cancel: CancelToken::new(),
+            policy: BatchPolicy {
+                max_batch: cfg.max_batch,
+                max_wait: Duration::from_millis(cfg.max_wait_ms),
+            },
+        }
+    }
+
+    fn into_coordinator(self, worker: std::thread::JoinHandle<()>,
+                        kind: BackendKind) -> Coordinator {
+        Coordinator {
+            router: self.router,
+            queue: self.queue,
+            metrics: self.metrics,
+            cancel: self.cancel,
+            worker: Some(worker),
+            next_id: std::sync::atomic::AtomicU64::new(0),
+            backend_kind: kind,
+        }
+    }
+}
+
 /// The serving coordinator. One worker thread per instance executes
 /// batches; admission is lock-light and callers receive responses on
 /// per-request channels.
@@ -67,20 +198,28 @@ pub struct Coordinator {
     cancel: CancelToken,
     worker: Option<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
+    backend_kind: BackendKind,
 }
 
 impl Coordinator {
-    /// Build and start the coordinator: warms up (compiles) every
-    /// encode artifact for the configured variant, uploads the
-    /// parameters once, and spawns the batch-execution worker.
-    pub fn start(engine: Arc<Engine>, cfg: &ServingConfig)
+    /// Build and start the coordinator on the given execution backend.
+    /// The XLA backend warms up (compiles) every encode artifact for
+    /// the configured variant and uploads the parameters once; the CPU
+    /// backend validates the bucket list against the model's landmark
+    /// count. Either way a single batch-execution worker is spawned.
+    pub fn start(backend: ExecBackend, cfg: &ServingConfig)
+                 -> Result<Coordinator, crate::runtime::RuntimeError> {
+        match backend {
+            ExecBackend::Xla(engine) => Coordinator::start_xla(engine, cfg),
+            ExecBackend::Cpu(engine) => Coordinator::start_cpu(engine, cfg),
+        }
+    }
+
+    fn start_xla(engine: Arc<Engine>, cfg: &ServingConfig)
                  -> Result<Coordinator, crate::runtime::RuntimeError> {
         let buckets = engine.manifest().encode_buckets(cfg.variant);
         assert!(!buckets.is_empty(), "no encode artifacts for {:?}", cfg.variant);
-        let router = Router::new(buckets.clone());
-        let queue = Arc::new(BucketQueue::new(buckets.len(), cfg.queue_capacity));
-        let metrics = Arc::new(ServingMetrics::new());
-        let cancel = CancelToken::new();
+        let s = Scaffold::new(&buckets, cfg);
 
         // preload executables + parameters
         engine.warmup(cfg.variant)?;
@@ -89,33 +228,58 @@ impl Coordinator {
             engine.buffer_f32(&init, &[init.len()])?));
 
         let worker = {
-            let queue = queue.clone();
-            let metrics = metrics.clone();
-            let cancel = cancel.clone();
+            let queue = s.queue.clone();
+            let metrics = s.metrics.clone();
+            let cancel = s.cancel.clone();
             let engine = engine.clone();
             let variant = cfg.variant;
-            let policy = BatchPolicy {
-                max_batch: cfg.max_batch,
-                max_wait: Duration::from_millis(cfg.max_wait_ms),
-            };
-            let buckets = buckets.clone();
+            let policy = s.policy;
             std::thread::Builder::new()
                 .name("ssaformer-coordinator".into())
                 .spawn(move || {
-                    worker_loop(&engine, variant, &buckets, &queue, policy,
-                                &metrics, &cancel, &params);
+                    worker_loop_xla(&engine, variant, &buckets, &queue, policy,
+                                    &metrics, &cancel, &params);
                 })
                 .expect("spawn coordinator worker")
         };
+        Ok(s.into_coordinator(worker, BackendKind::Xla))
+    }
 
-        Ok(Coordinator {
-            router,
-            queue,
-            metrics,
-            cancel,
-            worker: Some(worker),
-            next_id: std::sync::atomic::AtomicU64::new(0),
-        })
+    fn start_cpu(engine: Box<CpuEngine>, cfg: &ServingConfig)
+                 -> Result<Coordinator, crate::runtime::RuntimeError> {
+        let buckets = cfg.seq_buckets.clone();
+        assert!(!buckets.is_empty(), "serving config must define seq buckets");
+        // landmark variants execute at lengths rounded up to c, which
+        // must still fit the bucket — require bucket % c == 0 up front
+        if let Some(c) = engine.model().landmark_divisor() {
+            if let Some(&bad) = buckets.iter().find(|&&b| b % c != 0) {
+                return Err(crate::runtime::RuntimeError::Shape(format!(
+                    "seq bucket {bad} not divisible by landmark count {c}")));
+            }
+        }
+        let s = Scaffold::new(&buckets, cfg);
+
+        let worker = {
+            let queue = s.queue.clone();
+            let metrics = s.metrics.clone();
+            let cancel = s.cancel.clone();
+            let policy = s.policy;
+            let capacity = cfg.max_batch;
+            let mut engine = engine;
+            std::thread::Builder::new()
+                .name("ssaformer-cpu-coordinator".into())
+                .spawn(move || {
+                    worker_loop_cpu(&mut engine, capacity, &buckets, &queue,
+                                    policy, &metrics, &cancel);
+                })
+                .expect("spawn coordinator worker")
+        };
+        Ok(s.into_coordinator(worker, BackendKind::Cpu))
+    }
+
+    /// The execution backend serving this coordinator's requests.
+    pub fn backend(&self) -> BackendKind {
+        self.backend_kind
     }
 
     /// Submit a request; returns the receiver for its response.
@@ -178,10 +342,10 @@ impl Drop for Coordinator {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(engine: &Engine, variant: Variant, buckets: &[usize],
-               queue: &BucketQueue<Pending>, policy: BatchPolicy,
-               metrics: &ServingMetrics, cancel: &CancelToken,
-               params: &ParamsBuffer) {
+fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
+                   queue: &BucketQueue<Pending>, policy: BatchPolicy,
+                   metrics: &ServingMetrics, cancel: &CancelToken,
+                   params: &ParamsBuffer) {
     while !cancel.is_cancelled() || !queue.is_empty() {
         let Some(batch) = queue.pop_batch(policy) else { break };
         if batch.is_empty() {
@@ -205,9 +369,14 @@ fn worker_loop(engine: &Engine, variant: Variant, buckets: &[usize],
         let token_refs: Vec<&[i32]> =
             batch.iter().map(|q| q.item.tokens.as_slice()).collect();
         let plan = assemble(&token_refs, model.entry.batch, bucket);
+        let real_tokens: u64 = token_refs.iter().map(|t| t.len() as u64).sum();
+        metrics.tokens_processed.add(real_tokens);
+        metrics.batch_slots.add(model.entry.batch as u64);
+        // the artifact executes the whole dense capacity×bucket tensor,
+        // so every non-real position is executed padding
         metrics
-            .tokens_processed
-            .add(token_refs.iter().map(|t| t.len() as u64).sum());
+            .padded_tokens
+            .add((model.entry.batch * bucket) as u64 - real_tokens);
         let t_exec = Instant::now();
         let result = model.encode(engine, &params.0, &plan.tokens);
         let exec_time = t_exec.elapsed();
@@ -236,6 +405,58 @@ fn worker_loop(engine: &Engine, variant: Variant, buckets: &[usize],
     }
 }
 
+/// The CPU twin of [`worker_loop_xla`]: same pop → assemble → execute →
+/// respond cycle, but the "artifact" is [`CpuEngine::encode_batch`]
+/// running on the in-process kernel core. Batch capacity is the
+/// configured `max_batch` (there is no artifact batch dimension to
+/// match).
+fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
+                   queue: &BucketQueue<Pending>, policy: BatchPolicy,
+                   metrics: &ServingMetrics, cancel: &CancelToken) {
+    while !cancel.is_cancelled() || !queue.is_empty() {
+        let Some(batch) = queue.pop_batch(policy) else { break };
+        if batch.is_empty() {
+            continue;
+        }
+        let bucket = buckets[batch[0].bucket];
+        let now = Instant::now();
+        for q in &batch {
+            metrics
+                .queue_latency
+                .record(now.duration_since(q.enqueued));
+        }
+        let token_refs: Vec<&[i32]> =
+            batch.iter().map(|q| q.item.tokens.as_slice()).collect();
+        let lens: Vec<usize> = token_refs.iter().map(|t| t.len()).collect();
+        let plan = assemble(&token_refs, capacity, bucket);
+        metrics
+            .tokens_processed
+            .add(lens.iter().map(|&l| l as u64).sum());
+        metrics.batch_slots.add(capacity as u64);
+        // CPU path skips padding rows entirely; only the
+        // landmark-alignment tails are executed padding
+        metrics.padded_tokens.add(engine.padded_positions(&lens));
+        let t_exec = Instant::now();
+        let rows = engine.encode_batch(&plan, &lens);
+        let exec_time = t_exec.elapsed();
+        metrics.exec_latency.record(exec_time);
+        metrics.batches_executed.inc();
+        let finish = Instant::now();
+        for (q, emb) in batch.into_iter().zip(rows) {
+            metrics.requests_done.inc();
+            metrics
+                .e2e_latency
+                .record(finish.duration_since(q.enqueued));
+            let _ = q.item.tx.send(Response {
+                id: q.item.id,
+                embedding: Ok(emb),
+                queue_time: now.duration_since(q.enqueued),
+                exec_time,
+            });
+        }
+    }
+}
+
 fn fail_batch(batch: Vec<Queued<Pending>>, msg: &str) {
     for q in batch {
         let _ = q.item.tx.send(Response {
@@ -249,8 +470,9 @@ fn fail_batch(batch: Vec<Queued<Pending>>, msg: &str) {
 
 #[cfg(test)]
 mod tests {
-    //! Coordinator logic that needs no PJRT engine is tested here;
-    //! end-to-end serving over real artifacts lives in
+    //! Coordinator logic that needs no execution engine is tested here;
+    //! end-to-end CPU serving lives in
+    //! `rust/tests/integration_cpu_serving.rs` and the artifact path in
     //! `rust/tests/integration_serving.rs`.
 
     use super::*;
@@ -266,5 +488,26 @@ mod tests {
             }
             _ => unreachable!(),
         }
+    }
+
+    #[test]
+    fn auto_backend_falls_back_to_cpu_without_artifacts() {
+        let cfg = ServingConfig {
+            artifacts_dir: "definitely/not/a/real/artifacts/dir".into(),
+            ..Default::default()
+        };
+        let backend = ExecBackend::auto(&cfg);
+        assert_eq!(backend.kind(), BackendKind::Cpu);
+    }
+
+    #[test]
+    fn cpu_backend_rejects_misaligned_buckets() {
+        let cfg = ServingConfig {
+            seq_buckets: vec![100], // not divisible by the 16 landmarks
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        assert!(Coordinator::start(ExecBackend::Cpu(engine), &cfg).is_err());
     }
 }

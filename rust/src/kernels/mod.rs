@@ -31,6 +31,33 @@
 //! seed implementations preserved in
 //! [`crate::attention::spectral_shift::reference`]) remain in-tree as
 //! the reference path the fast path is property-tested against.
+//!
+//! # Invariants
+//!
+//! * **Bitwise thread-count determinism** — work splits into
+//!   [`BLOCK_ROWS`]-sized blocks whose boundaries are a pure function
+//!   of the problem shape (never the pool size), and the k dimension is
+//!   never split, so each output element's floating-point reduction
+//!   order — and therefore every bit of the result — is identical for 1
+//!   and N threads (`tests/kernel_parity.rs`).
+//! * **Zero steady-state allocation** — all scratch comes from a
+//!   caller-owned [`Workspace`]; after a warmup call at a given shape,
+//!   repeated calls allocate nothing (asserted by `allocations()`
+//!   plateau tests across the kernel and serving layers):
+//!
+//! ```
+//! use ssaformer::kernels::Workspace;
+//! let mut ws = Workspace::new();
+//! for _ in 0..3 { let b = ws.take(256); ws.put(b); } // warm up
+//! let warm = ws.allocations();
+//! for _ in 0..100 { let b = ws.take(256); ws.put(b); }
+//! assert_eq!(ws.allocations(), warm); // steady state: zero new allocs
+//! ```
+//!
+//! * **Sequential nesting under fan-out** — [`batched::BatchedAttention`]
+//!   runs each task with a sequential [`KernelCtx`]: the batch dimension
+//!   saturates the pool, avoiding pool-in-pool deadlock and preserving
+//!   the determinism contract.
 
 pub mod batched;
 pub mod fused;

@@ -11,11 +11,64 @@
 //! * **L2** (`python/compile/model.py`) — a JAX transformer encoder with
 //!   pluggable attention (full / nystrom / ss), AOT-lowered once to HLO
 //!   text artifacts.
-//! * **L3** (this crate) — the serving/training coordinator: PJRT
-//!   runtime, request router, dynamic batcher, metrics, plus every
-//!   substrate the paper's evaluation needs (dense linear algebra,
-//!   SPSD model zoo, attention baselines, spectrum analysis, workload
-//!   generation).
+//! * **L3** (this crate) — the serving/training stack: request router,
+//!   dynamic batcher, dual execution backends (PJRT artifacts or the
+//!   in-process CPU kernel core), metrics, plus every substrate the
+//!   paper's evaluation needs (dense linear algebra, SPSD model zoo,
+//!   attention baselines, spectrum analysis, workload generation).
+//!
+//! ## Request lifecycle (one line)
+//!
+//! socket → [`server`] line protocol → [`coordinator`] route/queue →
+//! `batcher::assemble` → execution backend (XLA artifact **or**
+//! [`kernels`] CPU core) → scatter/pool → response channel. The full
+//! walkthrough, with the data-flow diagram and the paper-symbol →
+//! function table, lives in `ARCHITECTURE.md` at the repo root.
+//!
+//! ## Crate-wide invariants
+//!
+//! * **Bitwise thread-count determinism** — every [`kernels`] primitive
+//!   splits work into fixed-size row blocks, so results are identical
+//!   for 1 and N threads.
+//! * **Zero steady-state allocation** — hot-path scratch comes from
+//!   recycled [`kernels::Workspace`] arenas; once warm, serving a batch
+//!   performs no heap allocation inside the kernels.
+//! * **Padding never reaches responses** — `batcher::scatter` drops
+//!   padding rows before any embedding is returned, and pooling on the
+//!   CPU backend averages only real positions. Executed padding is
+//!   bounded and metered (`padded_tokens`): the CPU backend skips
+//!   padding *requests* outright and computes only the short
+//!   landmark-alignment tail of each request (PAD-token keys inside
+//!   that tail do participate in attention — they are part of the
+//!   served function, deterministically); the XLA artifact executes its
+//!   full dense tensor.
+//!
+//! ## Quick taste
+//!
+//! The paper's O(n) spectral-shifting attention, pure Rust:
+//!
+//! ```
+//! use ssaformer::attention::{spectral_shift_attention, SpectralShiftConfig, Tensor2};
+//! let mut rng = ssaformer::rngx::Rng::new(0);
+//! let q = Tensor2::randn(&mut rng, 64, 16, 1.0); // n=64 tokens, d=16
+//! let k = Tensor2::randn(&mut rng, 64, 16, 1.0);
+//! let v = Tensor2::randn(&mut rng, 64, 16, 1.0);
+//! let out = spectral_shift_attention(&q, &k, &v, &SpectralShiftConfig::new(8));
+//! assert_eq!((out.rows, out.cols), (64, 16));
+//! assert!(out.data.iter().all(|x| x.is_finite()));
+//! ```
+//!
+//! And the CPU serving model that backs artifact-free serving:
+//!
+//! ```
+//! use ssaformer::config::Variant;
+//! use ssaformer::coordinator::{CpuModel, CpuModelConfig};
+//! let model = CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift);
+//! // a 100-token request executes at the next landmark multiple
+//! assert_eq!(model.padded_len(100), 112);
+//! let x = model.embed_sequence(&[5, 6, 7], 3);
+//! assert_eq!((x.rows, x.cols), (3, model.d_model()));
+//! ```
 //!
 //! See DESIGN.md for the full system inventory and the per-experiment
 //! index (Table 1, Figure 2, Lemma 1/Theorem 1, eq 11/12, sec 8/9).

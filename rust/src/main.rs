@@ -9,7 +9,7 @@
 //! (hand-rolled arg parsing: the crate cache has no clap.)
 
 use ssaformer::config::{Config, ServingConfig, Variant};
-use ssaformer::coordinator::Coordinator;
+use ssaformer::coordinator::{Coordinator, ExecBackend};
 use ssaformer::runtime::Engine;
 use ssaformer::train::{train, TrainConfig};
 use std::sync::Arc;
@@ -99,24 +99,29 @@ fn cmd_serve(flags: &Flags) -> i32 {
         }
     };
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
-    let engine = match Engine::new(&cfg.artifacts_dir) {
-        Ok(e) => Arc::new(e),
-        Err(e) => {
-            eprintln!("engine: {e}\nrun `make artifacts` first");
-            return 1;
+    let (backend, skipped) = ExecBackend::auto_with_reason(&cfg);
+    match (&backend, skipped) {
+        (ExecBackend::Xla(engine), _) => {
+            println!("platform: {}", engine.platform());
         }
-    };
-    println!("platform: {}", engine.platform());
-    let coordinator = match Coordinator::start(engine, &cfg) {
+        // a corrupt manifest should be visible, not silently replaced
+        // by the CPU demo model
+        (ExecBackend::Cpu(_), reason) => println!(
+            "xla backend unavailable ({}) — serving on the CPU kernel backend",
+            reason.map(|e| e.to_string()).unwrap_or_default()),
+    }
+    let coordinator = match Coordinator::start(backend, &cfg) {
         Ok(c) => Arc::new(c),
         Err(e) => {
             eprintln!("coordinator: {e}");
             return 1;
         }
     };
+    let backend_name = coordinator.backend().name();
     match ssaformer::server::serve(coordinator, &cfg.bind_addr, 8) {
         Ok((addr, _handle)) => {
-            println!("serving {} attention on {addr}", cfg.variant.token());
+            println!("serving {} attention on {addr} (backend: {backend_name})",
+                     cfg.variant.token());
             println!("protocol: ENCODE <id> <tok...> | STATS | QUIT");
             // block forever (ctrl-c to stop)
             loop {

@@ -112,7 +112,9 @@ impl Counter {
     }
 }
 
-/// Coordinator-wide metrics bundle.
+/// Coordinator-wide metrics bundle. All fields are updated lock-free by
+/// the worker loop and read on demand by `report()` (the server's
+/// `STATS` command).
 #[derive(Default)]
 pub struct ServingMetrics {
     pub requests_in: Counter,
@@ -120,6 +122,14 @@ pub struct ServingMetrics {
     pub requests_rejected: Counter,
     pub batches_executed: Counter,
     pub tokens_processed: Counter,
+    /// Request slots offered across all executed batches (capacity ×
+    /// batches); `requests_done / batch_slots` is batch occupancy.
+    pub batch_slots: Counter,
+    /// Padding positions *executed* on top of real tokens: the whole
+    /// dense remainder of the capacity×bucket tensor on the XLA path,
+    /// only the landmark-alignment tails on the CPU path (padding rows
+    /// there are skipped outright).
+    pub padded_tokens: Counter,
     pub queue_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
     pub e2e_latency: LatencyHistogram,
@@ -130,12 +140,15 @@ impl ServingMetrics {
         Self::default()
     }
 
-    /// Multi-line human-readable report.
+    /// Multi-line human-readable report (the `STATS` body; field
+    /// meanings are specified in `server::` module docs).
     pub fn report(&self) -> String {
+        let real = self.tokens_processed.get();
+        let padded = self.padded_tokens.get();
         format!(
             "requests: in={} done={} rejected={}\n\
-             batches:  {} (avg fill {:.2} req/batch)\n\
-             tokens:   {}\n\
+             batches:  {} (avg fill {:.2} req/batch, occupancy {:.0}%)\n\
+             tokens:   {} (+{} executed padding, {:.0}% waste)\n\
              queue:    {}\n\
              exec:     {}\n\
              e2e:      {}",
@@ -145,7 +158,11 @@ impl ServingMetrics {
             self.batches_executed.get(),
             self.requests_done.get() as f64
                 / self.batches_executed.get().max(1) as f64,
-            self.tokens_processed.get(),
+            100.0 * self.requests_done.get() as f64
+                / self.batch_slots.get().max(1) as f64,
+            real,
+            padded,
+            100.0 * padded as f64 / (real + padded).max(1) as f64,
             self.queue_latency.summary(),
             self.exec_latency.summary(),
             self.e2e_latency.summary(),
@@ -211,9 +228,15 @@ mod tests {
         m.requests_in.add(5);
         m.requests_done.add(4);
         m.batches_executed.add(2);
+        m.batch_slots.add(8);
+        m.tokens_processed.add(300);
+        m.padded_tokens.add(100);
         let r = m.report();
         assert!(r.contains("in=5"));
         assert!(r.contains("done=4"));
         assert!(r.contains("avg fill 2.00"));
+        assert!(r.contains("occupancy 50%"), "{r}");
+        assert!(r.contains("+100 executed padding"), "{r}");
+        assert!(r.contains("25% waste"), "{r}");
     }
 }

@@ -6,10 +6,39 @@
 //! 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md §3).
+//!
+//! This module also owns [`BackendKind`], the runtime's report of which
+//! execution backend is live: serving does not *require* PJRT — when
+//! artifacts or the XLA toolchain are absent the coordinator falls back
+//! to the in-process CPU kernel backend
+//! (`coordinator::cpu_engine`), and `STATS` reports the active kind.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactEntry, ArtifactKind, Manifest, ManifestError, ParamEntry};
+
+/// Which execution backend is serving (reported through the server's
+/// `STATS` command and the CLI banner). Selection lives in
+/// `coordinator::ExecBackend::auto`: XLA when the artifacts directory
+/// loads and the PJRT client constructs, CPU otherwise — with the
+/// offline `xla-stub` build that is always CPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled HLO artifacts on the PJRT runtime.
+    Xla,
+    /// The in-process `kernels::` CPU core (no artifacts).
+    Cpu,
+}
+
+impl BackendKind {
+    /// Stable identifier used on the wire (`STATS` backend line).
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla-pjrt",
+            BackendKind::Cpu => "cpu-kernels",
+        }
+    }
+}
 
 use crate::config::Variant;
 use std::collections::HashMap;
@@ -285,6 +314,12 @@ mod tests {
     //! `manifest.rs`.
 
     use super::*;
+
+    #[test]
+    fn backend_kind_names_are_stable() {
+        assert_eq!(BackendKind::Xla.name(), "xla-pjrt");
+        assert_eq!(BackendKind::Cpu.name(), "cpu-kernels");
+    }
 
     #[test]
     fn runtime_error_display() {

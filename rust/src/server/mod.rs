@@ -1,16 +1,66 @@
 //! TCP line-protocol server + client (S16).
 //!
-//! Protocol (newline-delimited, ASCII):
-//!   request:  `ENCODE <id> <tok1> <tok2> ...\n`
-//!             `STATS\n`            — metrics report
-//!             `QUIT\n`             — close this connection
-//!   response: `OK <id> <f1> <f2> ... <f8>\n`  (first 8 embedding dims)
-//!             `ERR <id> <message-with-dashes>\n`
-//!             multi-line report terminated by `.` for STATS
+//! # Protocol specification
+//!
+//! Newline-delimited ASCII; one request line yields one reply (or one
+//! `.`-terminated block). Backend-agnostic: the same wire format is
+//! served by the XLA and CPU execution backends.
+//!
+//! ## Requests
+//!
+//! ```text
+//! ENCODE <id> <tok1> <tok2> ... \n    encode a token sequence
+//! STATS\n                             metrics + backend report
+//! QUIT\n                              close this connection
+//! ```
+//!
+//! `<id>` is an arbitrary non-negative integer echoed back verbatim —
+//! correlation only, no server-side meaning. Tokens that fail to parse
+//! as `i32` are skipped; out-of-vocabulary ids are accepted (the CPU
+//! model wraps them into range).
+//!
+//! ## Responses
+//!
+//! ```text
+//! OK <id> <f1> ... <f8>\n             first 8 embedding dims, %.5f
+//! ERR <id> <reason>\n                 request failed, see taxonomy
+//! ```
+//!
+//! ## `ERR` taxonomy
+//!
+//! | reason                  | meaning                                      |
+//! |-------------------------|----------------------------------------------|
+//! | `bad-id`                | `ENCODE` id missing or not a `u64`           |
+//! | `empty`                 | no valid tokens in the request               |
+//! | `too-long-<n>-max-<m>`  | length n exceeds the largest bucket m        |
+//! | `queue-full`            | admission backpressure; retry later          |
+//! | `shutting-down`         | coordinator is draining; do not retry here   |
+//! | `unknown-command`       | first word not ENCODE/STATS/QUIT             |
+//! | *anything else*         | execution failure, whitespace dashed         |
+//!
+//! ## `STATS` report
+//!
+//! A multi-line block terminated by a lone `.`:
+//!
+//! ```text
+//! backend:  <cpu-kernels|xla-pjrt>     which execution backend is live
+//! requests: in=N done=N rejected=N     admission counters
+//! batches:  N (avg fill F req/batch, occupancy P%)
+//! tokens:   N (+P executed padding, W% waste)
+//! queue:    n=.. mean=..us p50=..us p99=..us max=..us
+//! exec:     per-batch execution latency histogram (same fields)
+//! e2e:      submit→response latency histogram (same fields)
+//! .
+//! ```
+//!
+//! `occupancy` is requests served per offered batch slot; `executed
+//! padding` counts padding positions the backend actually computed
+//! (dense remainder on XLA, landmark-alignment tails on CPU) — the
+//! padding-waste signal for batcher tuning.
 //!
 //! Deliberately minimal — the protocol exists so the serving stack can
-//! be exercised end-to-end over a real socket (examples/serve_attention
-//! + the E8 bench drive it).
+//! be exercised end-to-end over a real socket (examples/serve_attention,
+//! tests/integration_cpu_serving.rs and the E8 bench drive it).
 
 use crate::coordinator::{Coordinator, SubmitError};
 use crate::minirt::ThreadPool;
@@ -157,7 +207,9 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                 Err(SubmitError::ShuttingDown) => format!("ERR {id} shutting-down\n"),
             }
         }
-        Some("STATS") => format!("{}\n.\n", coordinator.metrics.report()),
+        Some("STATS") => format!("backend:  {}\n{}\n.\n",
+                                 coordinator.backend().name(),
+                                 coordinator.metrics.report()),
         Some("QUIT") => "OK 0 bye\n".into(),
         _ => "ERR 0 unknown-command\n".into(),
     }

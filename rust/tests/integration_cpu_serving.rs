@@ -1,0 +1,215 @@
+//! End-to-end CPU-backend serving: full stack (TCP server → coordinator
+//! → kernels::batched) with **no artifacts**, checked against the seed
+//! scalar `attention::spectral_shift::reference` pipeline.
+//!
+//! Runs unconditionally — this is the path the offline build serves on.
+
+use ssaformer::attention::spectral_shift::{reference, SpectralShiftConfig};
+use ssaformer::attention::{softmax_attention, Tensor2};
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::{
+    Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
+};
+use ssaformer::runtime::BackendKind;
+use ssaformer::server::{serve, Client};
+use std::sync::Arc;
+
+fn cpu_coordinator(variant: Variant) -> Arc<Coordinator> {
+    let cfg = ServingConfig {
+        variant,
+        max_batch: 4,
+        max_wait_ms: 5,
+        queue_capacity: 64,
+        ..Default::default()
+    };
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), variant)));
+    Arc::new(Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap())
+}
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 31 + seed) % 2000)).collect()
+}
+
+/// Reference pipeline, scalar path: embed exactly as the serving model
+/// does, run the seed per-head attention, mean-pool the real rows.
+fn expected_embedding(variant: Variant, tokens: &[i32]) -> Vec<f32> {
+    let m = CpuModel::new(CpuModelConfig::default(), variant);
+    let len = tokens.len();
+    let plen = m.padded_len(len);
+    let x = m.embed_sequence(tokens, plen);
+    let (d, h) = (m.d_model(), m.n_heads());
+    let dh = d / h;
+    let mut full = Tensor2::zeros(plen, d);
+    for head in 0..h {
+        let mut xs = Tensor2::zeros(plen, dh);
+        for i in 0..plen {
+            for j in 0..dh {
+                xs.data[i * dh + j] = x.data[i * d + head * dh + j];
+            }
+        }
+        let oh = match variant {
+            Variant::SpectralShift => {
+                let mut cfg = SpectralShiftConfig::new(m.landmarks());
+                cfg.pinv_iters = m.pinv_iters();
+                reference::spectral_shift_attention_ref(&xs, &xs, &xs, &cfg)
+            }
+            Variant::Nystrom => reference::nystrom_attention_ref(
+                &xs, &xs, &xs, m.landmarks(), m.pinv_iters(), None),
+            Variant::Full => softmax_attention(&xs, &xs, &xs, None),
+        };
+        for i in 0..plen {
+            for j in 0..dh {
+                full.data[i * d + head * dh + j] = oh.data[i * dh + j];
+            }
+        }
+    }
+    let mut out = vec![0.0f32; d];
+    for i in 0..len {
+        for (o, v) in out.iter_mut()
+            .zip(&full.data[i * d..(i + 1) * d]) {
+            *o += *v;
+        }
+    }
+    let inv = 1.0 / len as f32;
+    out.iter_mut().for_each(|v| *v *= inv);
+    out
+}
+
+/// 1e-4 kernel-parity budget plus half an ulp of the %.5f wire format.
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-4 * b.abs().max(1.0) + 6e-6
+}
+
+#[test]
+fn cpu_backend_serves_over_tcp_and_matches_reference() {
+    let c = cpu_coordinator(Variant::SpectralShift);
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 4).unwrap();
+
+    // concurrent clients, mixed lengths spanning several buckets
+    let lengths = [40usize, 100, 128, 200, 300, 500];
+    let mut joins = Vec::new();
+    for (t, chunk) in lengths.chunks(2).enumerate() {
+        let chunk: Vec<usize> = chunk.to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut got = Vec::new();
+            for (i, &len) in chunk.iter().enumerate() {
+                let id = (t * 10 + i) as u64;
+                let tokens = toks(len, len as i32);
+                let reply = client.encode(id, &tokens).unwrap();
+                got.push((id, len, tokens, reply));
+            }
+            got
+        }));
+    }
+    let mut total = 0;
+    for j in joins {
+        for (id, len, tokens, reply) in j.join().unwrap() {
+            let parts: Vec<&str> = reply.split_whitespace().collect();
+            assert_eq!(parts[0], "OK", "len {len}: {reply}");
+            assert_eq!(parts[1], id.to_string());
+            assert_eq!(parts.len(), 2 + 8, "{reply}");
+            let want = expected_embedding(Variant::SpectralShift, &tokens);
+            for (j, p) in parts[2..].iter().enumerate() {
+                let a: f32 = p.parse().unwrap();
+                assert!(close(a, want[j]),
+                        "len {len} dim {j}: served {a} vs reference {}",
+                        want[j]);
+            }
+            total += 1;
+        }
+    }
+    assert_eq!(total, lengths.len());
+
+    // STATS: backend identification + nonzero batched executions
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("backend:  cpu-kernels"), "{stats}");
+    let batches: u64 = stats
+        .lines()
+        .find(|l| l.starts_with("batches:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|n| n.parse().ok())
+        .unwrap_or_else(|| panic!("no batches line in {stats}"));
+    assert!(batches > 0, "{stats}");
+    assert!(batches <= lengths.len() as u64, "{stats}");
+    handle.stop();
+
+    assert_eq!(c.metrics.requests_done.get(), lengths.len() as u64);
+    assert!(c.metrics.batch_slots.get() >= c.metrics.batches_executed.get());
+}
+
+#[test]
+fn full_precision_submit_matches_reference() {
+    // submit_blocking bypasses the %.5f wire truncation: the whole
+    // d_model embedding must sit inside the parity budget
+    for variant in [Variant::SpectralShift, Variant::Full] {
+        let c = cpu_coordinator(variant);
+        let tokens = toks(100, 9);
+        let emb = c.submit_blocking(tokens.clone()).unwrap().embedding.unwrap();
+        let want = expected_embedding(variant, &tokens);
+        assert_eq!(emb.len(), want.len());
+        for (j, (a, b)) in emb.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "{variant:?} dim {j}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn auto_selects_cpu_without_artifacts_and_serves() {
+    let cfg = ServingConfig {
+        artifacts_dir: "no/such/artifacts".into(),
+        max_batch: 2,
+        max_wait_ms: 2,
+        queue_capacity: 16,
+        ..Default::default()
+    };
+    let backend = ExecBackend::auto(&cfg);
+    assert_eq!(backend.kind(), BackendKind::Cpu);
+    let c = Coordinator::start(backend, &cfg).unwrap();
+    assert_eq!(c.backend(), BackendKind::Cpu);
+    let emb = c.submit_blocking(toks(64, 1)).unwrap().embedding.unwrap();
+    assert!(!emb.is_empty());
+    assert!(emb.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn batching_fills_and_padding_is_metered() {
+    // generous max_wait so a descheduled submitter on a loaded CI box
+    // cannot age lanes out into 8 singleton batches
+    let cfg = ServingConfig {
+        variant: Variant::SpectralShift,
+        max_batch: 4,
+        max_wait_ms: 50,
+        queue_capacity: 64,
+        ..Default::default()
+    };
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), cfg.variant)));
+    let c = Arc::new(Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+    // 8 same-bucket requests, batch capacity 4 → at least one multi-fill
+    let mut rxs = Vec::new();
+    for i in 0..8 {
+        rxs.push(c.submit(toks(100 + i, i as i32)).unwrap());
+    }
+    for rx in rxs {
+        assert!(rx.recv().unwrap().embedding.is_ok());
+    }
+    let m = &c.metrics;
+    assert_eq!(m.requests_done.get(), 8);
+    assert!(m.batches_executed.get() < 8, "no batching happened");
+    // lengths 100..108 all pad up to 112 landmark-aligned positions
+    assert!(m.padded_tokens.get() > 0);
+    assert!(m.tokens_processed.get() >= 800);
+}
+
+#[test]
+fn graceful_shutdown_drains_cpu_backend() {
+    let c = cpu_coordinator(Variant::SpectralShift);
+    let rx = c.submit(toks(80, 7)).unwrap();
+    let c = Arc::try_unwrap(c).ok().expect("sole owner");
+    c.shutdown();
+    assert!(rx.recv().unwrap().embedding.is_ok());
+}

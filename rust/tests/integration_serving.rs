@@ -2,7 +2,7 @@
 //! artifacts. Skips when artifacts/ is missing.
 
 use ssaformer::config::{ServingConfig, Variant};
-use ssaformer::coordinator::{Coordinator, SubmitError};
+use ssaformer::coordinator::{Coordinator, ExecBackend, SubmitError};
 use ssaformer::runtime::Engine;
 use ssaformer::server::{serve, Client};
 use std::sync::Arc;
@@ -20,7 +20,8 @@ fn setup(variant: Variant) -> Option<Arc<Coordinator>> {
         queue_capacity: 64,
         ..Default::default()
     };
-    Some(Arc::new(Coordinator::start(engine, &cfg).unwrap()))
+    Some(Arc::new(
+        Coordinator::start(ExecBackend::Xla(engine), &cfg).unwrap()))
 }
 
 fn toks(n: usize, seed: i32) -> Vec<i32> {
