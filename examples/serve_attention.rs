@@ -1,7 +1,9 @@
-//! Serving demo: starts the full L3 stack (coordinator + TCP server) on
-//! an ephemeral port, replays a Poisson workload trace against it from
-//! client threads, and prints the latency/throughput report — the
-//! paper's sec-9 deployment scenario in miniature.
+//! Serving demo: starts the full L3 stack (4-worker coordinator over a
+//! sharded queue, embedding cache, TCP server) on an ephemeral port,
+//! replays a Poisson workload trace against it from client threads —
+//! then replays a slice of it again to light up the cache, fires one
+//! expired-deadline request, and prints the latency/throughput report.
+//! The paper's sec-9 deployment scenario in miniature.
 //!
 //! The execution backend is auto-selected: XLA artifacts when
 //! `artifacts/` is built, otherwise the in-process CPU kernel backend —
@@ -28,13 +30,19 @@ fn main() {
         max_batch: 4,
         max_wait_ms: 10,
         queue_capacity: 128,
+        workers: 4,
+        queue_shards: 2,
+        cache_capacity: 256,
         ..Default::default()
     };
     let backend = ExecBackend::auto(&cfg);
     let t0 = std::time::Instant::now();
     let coordinator = Arc::new(Coordinator::start(backend, &cfg).expect("start"));
     let backend_name = coordinator.backend().name();
-    println!("backend: {backend_name} (warmup {:?})", t0.elapsed());
+    println!("backend: {backend_name} (warmup {:?}); {} workers, {} shards, \
+              cache {} entries",
+             t0.elapsed(), coordinator.workers(), coordinator.queue_shards(),
+             coordinator.cache_capacity());
 
     let (addr, handle) = serve(coordinator.clone(), "127.0.0.1:0", 4)
         .expect("bind");
@@ -81,8 +89,23 @@ fn main() {
     println!("\nreplayed {} requests ({} ok, served by {backend_name}) \
               in {:?} -> {:.1} req/s",
              trace.len(), ok, wall, ok as f64 / wall.as_secs_f64());
-    // the STATS block leads with the backend identification line
+
+    // replay the first few sequences again: identical token content now
+    // hits the embedding cache (visible as `cache: hits=` in STATS)
     let mut client = Client::connect(&addr).unwrap();
+    for req in trace.iter().take(8) {
+        let reply = client.encode(1000 + req.id, &req.tokens).expect("re-encode");
+        assert!(reply.starts_with("OK"), "{reply}");
+    }
+    // and an *uncached* request with an already-blown deadline draws
+    // `ERR deadline` without ever occupying a batch slot (a cached one
+    // would still be served — hits are free)
+    let reply = client
+        .encode_with_deadline(9999, &[1, 2, 3, 4, 5], 0)
+        .expect("deadline encode");
+    println!("expired-deadline request -> {reply}");
+
+    // the STATS block leads with backend + worker-pool identification
     println!("\nserver metrics:\n{}", client.stats().unwrap());
     handle.stop();
 }

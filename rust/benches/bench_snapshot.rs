@@ -4,10 +4,12 @@
 //! c = 64, d = 64) and writes `BENCH_kernels.json` at the repo root
 //! (falling back to the crate root when run elsewhere): variant →
 //! ns/op, GF/s, threads, fast-vs-seed-scalar speedups, plus the
-//! serving-path entry (CPU-backend coordinator requests/sec at
-//! n ∈ {1024, 4096}, measured at the CPU model defaults — d/heads/
-//! landmarks recorded alongside the rates). CI and future PRs diff
-//! this file to track the hot path.
+//! serving-path entries (schema v3): CPU-backend coordinator
+//! requests/sec at n ∈ {1024, 4096}, and a mixed-deadline workload over
+//! a 4-worker pool with the embedding cache on — cache hit rate,
+//! per-request p50/p99 e2e latency, and deadline expiries. Model
+//! defaults (d/heads/landmarks) are recorded alongside the rates. CI
+//! and future PRs diff this file to track the hot path.
 //!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
@@ -148,6 +150,9 @@ fn main() {
             max_wait_ms: 2,
             queue_capacity: 256,
             seq_buckets: vec![1024, 4096],
+            // cache off: this row measures the *encode* path, and the
+            // saturated load replays one token sequence
+            cache_capacity: 0,
             ..Default::default()
         };
         let engine = Box::new(CpuEngine::new(CpuModel::new(
@@ -170,6 +175,90 @@ fn main() {
         serving.push((format!("cpu_encode_rps_n{n}"), rps));
     }
     println!("{}", stbl.render());
+
+    // --- mixed-deadline workload over the sharded worker pool + cache
+    // (schema v3): 16 distinct sequences replayed 3× from 4 client
+    // threads, one deliberately-expired deadline per thread — reports
+    // cache hit rate, per-request p50/p99, and expiry count
+    {
+        let cfg = ServingConfig {
+            variant: Variant::SpectralShift,
+            max_batch: 4,
+            max_wait_ms: 2,
+            queue_capacity: 256,
+            seq_buckets: vec![256, 512],
+            workers: 4,
+            queue_shards: 2,
+            cache_capacity: 64,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), cfg.variant)));
+        let coordinator = Arc::new(
+            Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+        // warm the arenas off the clock; counters are snapshotted after
+        // so the warm-up pollutes neither rates nor percentiles (the
+        // e2e percentiles below are measured client-side, per timed
+        // request, for the same reason — the coordinator histogram is
+        // cumulative and would fold the cold warm-up into p99)
+        let warm: Vec<i32> = (0..256).map(|i| 7 + (i as i32 % 999)).collect();
+        coordinator.submit_blocking(warm).unwrap().embedding.unwrap();
+        let m = &coordinator.metrics;
+        let (hits0, misses0, expired0) =
+            (m.cache_hits.get(), m.cache_misses.get(), m.requests_expired.get());
+
+        let start = std::time::Instant::now();
+        let mut joins = Vec::new();
+        for t in 0..4usize {
+            let c = coordinator.clone();
+            joins.push(std::thread::spawn(move || {
+                // expired on arrival: must cost nothing but a counter
+                let _ = c.submit_with_deadline(
+                    vec![1, 2, 3], Some(Duration::ZERO));
+                let mut lat: Vec<Duration> = Vec::new();
+                for _round in 0..3 {
+                    for s in 0..4 {
+                        let len = 200 + 50 * s;
+                        let toks: Vec<i32> = (0..len)
+                            .map(|i| 3 + ((i * 13 + t * 7 + s) as i32 % 2000))
+                            .collect();
+                        let t_req = std::time::Instant::now();
+                        let rx = c.submit_with_deadline(
+                            toks, Some(Duration::from_secs(30))).unwrap();
+                        rx.recv().unwrap().embedding.unwrap();
+                        lat.push(t_req.elapsed());
+                    }
+                }
+                lat
+            }));
+        }
+        let mut lat: Vec<Duration> = Vec::new();
+        for j in joins {
+            lat.extend(j.join().unwrap());
+        }
+        let wall = start.elapsed();
+        lat.sort();
+        let pct = |q: f64| lat[((q * (lat.len() - 1) as f64).round()) as usize]
+            .as_micros() as f64;
+        let hits = m.cache_hits.get() - hits0;
+        let lookups = hits + (m.cache_misses.get() - misses0);
+        let hit_rate = hits as f64 / lookups.max(1) as f64;
+        let expired = m.requests_expired.get() - expired0;
+        let rps = lat.len() as f64 / wall.as_secs_f64();
+        let mut mtbl = Table::new(&["mixed-deadline serving", "value"]);
+        mtbl.row(&["req/s".into(), format!("{rps:.1}")]);
+        mtbl.row(&["cache hit rate".into(), format!("{:.0}%", 100.0 * hit_rate)]);
+        mtbl.row(&["e2e p50".into(), format!("{:.0}us", pct(0.5))]);
+        mtbl.row(&["e2e p99".into(), format!("{:.0}us", pct(0.99))]);
+        mtbl.row(&["expired".into(), expired.to_string()]);
+        println!("{}", mtbl.render());
+        serving.push(("mixed_workers".into(), 4.0));
+        serving.push(("mixed_cache_hit_rate".into(), hit_rate));
+        serving.push(("mixed_e2e_p50_us".into(), pct(0.5)));
+        serving.push(("mixed_e2e_p99_us".into(), pct(0.99)));
+        serving.push(("mixed_expired".into(), expired as f64));
+        serving.push(("mixed_rps".into(), rps));
+    }
 
     let json = render_json(threads, c, d, &entries, &speedups, &serving);
     // benches run with cwd = rust/; the repo root is one level up
@@ -201,7 +290,7 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                serving: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v2\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v3\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"c\": {c},\n"));

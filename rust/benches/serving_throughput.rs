@@ -45,6 +45,11 @@ fn main() {
             max_batch: 4,
             max_wait_ms: 10,
             queue_capacity: 128,
+            // pool of 2 over 2 shards; cache off so every request pays
+            // the encode cost the bench is comparing across variants
+            workers: 2,
+            queue_shards: 2,
+            cache_capacity: 0,
             ..Default::default()
         };
         let t_warm = std::time::Instant::now();
@@ -106,6 +111,9 @@ fn main() {
                 max_batch: 4,
                 max_wait_ms: 2,
                 queue_capacity: 128,
+                workers: 2,
+                queue_shards: 2,
+                cache_capacity: 0,
                 ..Default::default()
             };
             let coordinator = Arc::new(Coordinator::start(ExecBackend::Xla(engine), &cfg).unwrap());

@@ -239,12 +239,26 @@ pub struct ServingConfig {
     pub max_batch: usize,
     /// Max time a request may wait for batchmates.
     pub max_wait_ms: u64,
-    /// Bounded queue capacity (backpressure beyond this).
+    /// Bounded queue capacity (backpressure beyond this), split evenly
+    /// across the queue shards.
     pub queue_capacity: usize,
     /// TCP bind address for the server example.
     pub bind_addr: String,
     /// Sequence buckets to route into (ascending). Must match artifacts.
     pub seq_buckets: Vec<usize>,
+    /// Batch-executing worker threads per coordinator (≥ 1).
+    pub workers: usize,
+    /// Queue shards (0 = one per worker). Buckets map onto shards
+    /// statically; idle workers steal ready batches across shards.
+    pub queue_shards: usize,
+    /// Embedding-cache entries (0 disables the cache).
+    pub cache_capacity: usize,
+    /// Deadline applied to requests that don't carry their own
+    /// (milliseconds; 0 = no default deadline).
+    pub default_deadline_ms: u64,
+    /// How far before a queued request's deadline the batcher closes
+    /// its bucket early, leaving this margin for execution.
+    pub deadline_margin_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -257,31 +271,68 @@ impl Default for ServingConfig {
             queue_capacity: 256,
             bind_addr: "127.0.0.1:7878".into(),
             seq_buckets: vec![128, 256, 512, 1024],
+            workers: 2,
+            queue_shards: 0,
+            cache_capacity: 1024,
+            default_deadline_ms: 0,
+            deadline_margin_ms: 5,
         }
     }
 }
 
 impl ServingConfig {
     /// Build from a parsed [serving] section, falling back to defaults.
+    /// Negative values for any count/duration key are a `ConfigError`,
+    /// not a silent two's-complement wrap into `usize::MAX`.
     pub fn from_config(cfg: &Config) -> Result<ServingConfig, ConfigError> {
         let d = ServingConfig::default();
         let variant_s = cfg.str_or("serving", "variant", "ss").to_string();
         let variant = Variant::parse(&variant_s).ok_or_else(|| {
             ConfigError::Invalid("serving".into(), "variant".into(), variant_s)
         })?;
+        let unsigned = |key: &str, default: i64| -> Result<u64, ConfigError> {
+            let v = cfg.i64_or("serving", key, default);
+            u64::try_from(v).map_err(|_| ConfigError::Invalid(
+                "serving".into(), key.into(), format!("{v} is negative")))
+        };
         let out = ServingConfig {
             artifacts_dir: cfg.str_or("serving", "artifacts_dir",
                                       &d.artifacts_dir).to_string(),
             variant,
-            max_batch: cfg.i64_or("serving", "max_batch", d.max_batch as i64) as usize,
-            max_wait_ms: cfg.i64_or("serving", "max_wait_ms", d.max_wait_ms as i64) as u64,
-            queue_capacity: cfg.i64_or("serving", "queue_capacity",
-                                       d.queue_capacity as i64) as usize,
+            max_batch: unsigned("max_batch", d.max_batch as i64)? as usize,
+            max_wait_ms: unsigned("max_wait_ms", d.max_wait_ms as i64)?,
+            queue_capacity: unsigned("queue_capacity",
+                                     d.queue_capacity as i64)? as usize,
             bind_addr: cfg.str_or("serving", "bind_addr", &d.bind_addr).to_string(),
             seq_buckets: d.seq_buckets,
+            workers: unsigned("workers", d.workers as i64)? as usize,
+            queue_shards: unsigned("queue_shards", d.queue_shards as i64)? as usize,
+            cache_capacity: unsigned("cache_capacity",
+                                     d.cache_capacity as i64)? as usize,
+            default_deadline_ms: unsigned("default_deadline_ms",
+                                          d.default_deadline_ms as i64)?,
+            deadline_margin_ms: unsigned("deadline_margin_ms",
+                                         d.deadline_margin_ms as i64)?,
         };
         out.validate()?;
         Ok(out)
+    }
+
+    /// The shard count the coordinator will actually build:
+    /// `queue_shards`, or one shard per worker when left at 0 (auto).
+    pub fn effective_shards(&self) -> usize {
+        match self.queue_shards {
+            0 => self.workers.max(1),
+            n => n,
+        }
+    }
+
+    /// The configured default deadline as a duration (None when 0).
+    pub fn default_deadline(&self) -> Option<std::time::Duration> {
+        match self.default_deadline_ms {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        }
     }
 
     pub fn validate(&self) -> Result<(), ConfigError> {
@@ -289,10 +340,17 @@ impl ServingConfig {
             return Err(ConfigError::Invalid("serving".into(), "max_batch".into(),
                                             "must be > 0".into()));
         }
-        if self.queue_capacity < self.max_batch {
+        if self.workers == 0 {
+            return Err(ConfigError::Invalid("serving".into(), "workers".into(),
+                                            "must be > 0".into()));
+        }
+        if self.queue_capacity < self.max_batch * self.effective_shards() {
             return Err(ConfigError::Invalid(
                 "serving".into(), "queue_capacity".into(),
-                format!("{} < max_batch {}", self.queue_capacity, self.max_batch)));
+                format!("{} < max_batch {} × {} shards (each shard must \
+                         hold a full batch)",
+                        self.queue_capacity, self.max_batch,
+                        self.effective_shards())));
         }
         if self.seq_buckets.is_empty()
             || self.seq_buckets.windows(2).any(|w| w[0] >= w[1]) {
@@ -386,6 +444,57 @@ resume = false
         let mut s = ServingConfig::default();
         s.seq_buckets = vec![256, 128];
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn serving_pool_and_deadline_knobs() {
+        let c = Config::parse(
+            "[serving]\nworkers = 4\nqueue_shards = 2\ncache_capacity = 128\n\
+             default_deadline_ms = 250\ndeadline_margin_ms = 10\n\
+             queue_capacity = 64\n").unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.queue_shards, 2);
+        assert_eq!(s.effective_shards(), 2);
+        assert_eq!(s.cache_capacity, 128);
+        assert_eq!(s.default_deadline(),
+                   Some(std::time::Duration::from_millis(250)));
+        assert_eq!(s.deadline_margin_ms, 10);
+    }
+
+    #[test]
+    fn shards_default_to_one_per_worker() {
+        let mut s = ServingConfig::default();
+        s.workers = 3;
+        s.queue_shards = 0;
+        assert_eq!(s.effective_shards(), 3);
+        assert_eq!(s.default_deadline(), None); // 0 = disabled
+        // zero workers is rejected
+        s.workers = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn negative_serving_values_are_config_errors_not_wraps() {
+        for key in ["workers", "cache_capacity", "max_batch",
+                    "default_deadline_ms"] {
+            let c = Config::parse(&format!("[serving]\n{key} = -1\n")).unwrap();
+            assert!(matches!(ServingConfig::from_config(&c),
+                             Err(ConfigError::Invalid(..))),
+                    "{key} = -1 must be rejected");
+        }
+    }
+
+    #[test]
+    fn queue_capacity_must_cover_every_shard() {
+        let mut s = ServingConfig::default();
+        s.workers = 4;
+        s.queue_shards = 4;
+        s.max_batch = 4;
+        s.queue_capacity = 15; // < 4 shards × 4 slots
+        assert!(s.validate().is_err());
+        s.queue_capacity = 16;
+        assert!(s.validate().is_ok());
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! every real request's multi-head attention on the `kernels::` core,
 //! heads × requests in parallel over the shared pool — a popped batch
 //! no longer runs its requests serially.
+//!
+//! Batch *formation* (when a bucket's lane closes: full, aged, or
+//! deadline-pressed) lives upstream in
+//! [`queue`](super::queue::BatchPolicy); by the time a worker calls
+//! [`assemble`] the batch is final and already stripped of expired
+//! requests, so everything in this module stays pure per-batch
+//! shuffling.
 
 use crate::attention::Tensor2;
 use crate::kernels::{attention_batched, BatchedAttention, BatchedVariant};

@@ -1,0 +1,393 @@
+//! Bounded LRU embedding cache for the serving path.
+//!
+//! Repeated token sequences are common in serving traffic (retried
+//! requests, shared prompt prefixes, popular queries); recomputing the
+//! full attention stack for each repeat wastes the exact FLOPs the
+//! paper's O(n) approximation saves. [`EmbeddingCache`] memoizes the
+//! coordinator's *final* pooled embeddings, keyed on the full token
+//! content of the request.
+//!
+//! # Coherence invariant
+//!
+//! A cache hit MUST be **bitwise-equal** to a recompute. This holds
+//! because both execution backends are deterministic functions of the
+//! token sequence alone: the CPU engine's output is independent of
+//! batch composition, arrival order, and kernel thread count (the
+//! determinism contract in [`cpu_engine`](super::cpu_engine)), and the
+//! XLA artifact executes one fixed program per bucket. The cache never
+//! stores anything derived from *how* a request was batched — only the
+//! per-request pooled embedding after padding rows were dropped — so
+//! serving a hit is observationally identical to recomputing, minus
+//! the latency. `tests/integration_cpu_serving.rs` pins hit-vs-
+//! recompute equality end to end.
+//!
+//! The cache is keyed on token content, not request id: two requests
+//! with identical tokens share one entry regardless of who sent them.
+//! Capacity is counted in entries; each entry owns one key copy in the
+//! index, one in the recency list, and a `d_model` embedding
+//! (~`8·seq + 4·d_model` bytes per entry at the default model — the
+//! sizing arithmetic is worked through in `OPERATIONS.md`).
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Mutex;
+
+/// Sentinel for "no node" in the intrusive recency list.
+const NIL: usize = usize::MAX;
+
+struct Slot<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// A bounded least-recently-used map (hand-rolled: the crate builds
+/// with zero external dependencies).
+///
+/// `get` and `insert` are O(1): a `HashMap` indexes into a slot arena
+/// threaded with an intrusive doubly-linked recency list, so eviction
+/// pops the list tail without scanning. Freed slots are recycled, so a
+/// full cache performs no allocation on the replace path beyond the
+/// incoming key/value themselves.
+///
+/// ```
+/// use ssaformer::coordinator::cache::LruCache;
+/// let mut c = LruCache::new(2);
+/// c.insert("a", 1);
+/// c.insert("b", 2);
+/// assert_eq!(c.get(&"a"), Some(&1)); // "a" is now most recent
+/// c.insert("c", 3);                  // evicts "b", the LRU entry
+/// assert_eq!(c.get(&"b"), None);
+/// assert_eq!(c.len(), 2);
+/// ```
+pub struct LruCache<K, V> {
+    capacity: usize,
+    map: HashMap<K, usize>,
+    slots: Vec<Option<Slot<K, V>>>,
+    free: Vec<usize>,
+    /// most recently used
+    head: usize,
+    /// least recently used (eviction candidate)
+    tail: usize,
+}
+
+impl<K: Hash + Eq + Clone, V> LruCache<K, V> {
+    /// Create a cache holding at most `capacity` entries.
+    ///
+    /// # Panics
+    /// When `capacity == 0` — a zero-size cache is "caching disabled"
+    /// and should be expressed by not constructing one (the coordinator
+    /// maps `cache_capacity = 0` to `None`).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "LruCache capacity must be > 0");
+        LruCache {
+            capacity,
+            map: HashMap::with_capacity(capacity),
+            slots: Vec::with_capacity(capacity),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    /// Entries currently cached (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The configured entry bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up `key`, marking the entry most-recently-used on a hit.
+    pub fn get<Q>(&mut self, key: &Q) -> Option<&V>
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        let i = *self.map.get(key)?;
+        self.touch(i);
+        self.slots[i].as_ref().map(|s| &s.value)
+    }
+
+    /// Look up `key` WITHOUT updating recency (diagnostics/tests).
+    pub fn peek<Q>(&self, key: &Q) -> Option<&V>
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        let i = *self.map.get(key)?;
+        self.slots[i].as_ref().map(|s| &s.value)
+    }
+
+    /// Insert `key → value`, evicting the least-recently-used entry if
+    /// the cache is full. Returns the previous value when `key` was
+    /// already present (the entry is refreshed to most-recent either
+    /// way).
+    pub fn insert(&mut self, key: K, value: V) -> Option<V> {
+        if let Some(&i) = self.map.get(&key) {
+            let slot = self.slots[i].as_mut().expect("mapped slot occupied");
+            let old = std::mem::replace(&mut slot.value, value);
+            self.touch(i);
+            return Some(old);
+        }
+        if self.map.len() == self.capacity {
+            self.pop_lru();
+        }
+        let slot = Slot { key: key.clone(), value, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(slot);
+                i
+            }
+            None => {
+                self.slots.push(Some(slot));
+                self.slots.len() - 1
+            }
+        };
+        self.attach_front(i);
+        self.map.insert(key, i);
+        None
+    }
+
+    /// Remove and return the least-recently-used entry.
+    pub fn pop_lru(&mut self) -> Option<(K, V)> {
+        if self.tail == NIL {
+            return None;
+        }
+        let i = self.tail;
+        self.detach(i);
+        let slot = self.slots[i].take().expect("tail slot occupied");
+        self.free.push(i);
+        self.map.remove(&slot.key);
+        Some((slot.key, slot.value))
+    }
+
+    /// Move slot `i` to the front (most-recent) of the recency list.
+    fn touch(&mut self, i: usize) {
+        if self.head == i {
+            return;
+        }
+        self.detach(i);
+        self.attach_front(i);
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (p, n) = {
+            let s = self.slots[i].as_ref().expect("detach occupied slot");
+            (s.prev, s.next)
+        };
+        match p {
+            NIL => self.head = n,
+            p => self.slots[p].as_mut().expect("prev occupied").next = n,
+        }
+        match n {
+            NIL => self.tail = p,
+            n => self.slots[n].as_mut().expect("next occupied").prev = p,
+        }
+        let s = self.slots[i].as_mut().expect("detach occupied slot");
+        s.prev = NIL;
+        s.next = NIL;
+    }
+
+    fn attach_front(&mut self, i: usize) {
+        let old_head = self.head;
+        {
+            let s = self.slots[i].as_mut().expect("attach occupied slot");
+            s.prev = NIL;
+            s.next = old_head;
+        }
+        match old_head {
+            NIL => self.tail = i,
+            h => self.slots[h].as_mut().expect("head occupied").prev = i,
+        }
+        self.head = i;
+    }
+}
+
+/// Thread-safe embedding cache shared by the coordinator's admission
+/// path (lookups) and every worker in the pool (inserts).
+///
+/// One coarse mutex around the [`LruCache`]: a lookup or insert is a
+/// hash + a few pointer swaps, microseconds against the milliseconds an
+/// attention batch costs, so the lock is never the bottleneck — and a
+/// single lock keeps the recency order exact. Hit/miss *counters* live
+/// in [`ServingMetrics`](crate::metrics::ServingMetrics) (lock-free),
+/// not here: the cache stores state, the metrics layer observes it.
+///
+/// ```
+/// use ssaformer::coordinator::cache::EmbeddingCache;
+/// let cache = EmbeddingCache::new(8);
+/// assert_eq!(cache.get(&[5, 6, 7]), None);
+/// cache.insert(&[5, 6, 7], vec![0.25, -1.5]);
+/// // a hit returns exactly the stored embedding, bitwise
+/// assert_eq!(cache.get(&[5, 6, 7]), Some(vec![0.25, -1.5]));
+/// // keyed on full token content: a different sequence is a miss
+/// assert_eq!(cache.get(&[5, 6]), None);
+/// assert_eq!((cache.len(), cache.capacity()), (1, 8));
+/// ```
+pub struct EmbeddingCache {
+    inner: Mutex<LruCache<Box<[i32]>, Vec<f32>>>,
+}
+
+impl EmbeddingCache {
+    /// A cache bounded at `capacity` entries (must be > 0; the
+    /// coordinator expresses "disabled" as the absence of a cache).
+    pub fn new(capacity: usize) -> Self {
+        EmbeddingCache { inner: Mutex::new(LruCache::new(capacity)) }
+    }
+
+    /// The pooled embedding previously served for exactly these tokens,
+    /// if still resident. A hit refreshes the entry's recency.
+    pub fn get(&self, tokens: &[i32]) -> Option<Vec<f32>> {
+        self.inner.lock().unwrap().get(tokens).cloned()
+    }
+
+    /// Record the served embedding for `tokens` (evicting the LRU entry
+    /// when full). Inserting an existing key refreshes it — idempotent
+    /// under the coherence invariant, since a recompute is bitwise
+    /// identical.
+    pub fn insert(&self, tokens: &[i32], embedding: Vec<f32>) {
+        self.inner
+            .lock()
+            .unwrap()
+            .insert(tokens.to_vec().into_boxed_slice(), embedding);
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured entry bound.
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_follows_recency_not_insertion() {
+        let mut c = LruCache::new(3);
+        c.insert(1, "one");
+        c.insert(2, "two");
+        c.insert(3, "three");
+        // touch 1, making 2 the LRU
+        assert_eq!(c.get(&1), Some(&"one"));
+        c.insert(4, "four");
+        assert_eq!(c.get(&2), None, "LRU entry must be the one evicted");
+        assert_eq!(c.get(&1), Some(&"one"));
+        assert_eq!(c.get(&3), Some(&"three"));
+        assert_eq!(c.get(&4), Some(&"four"));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn insert_existing_replaces_and_refreshes() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert_eq!(c.insert("a", 10), Some(1)); // refreshes "a"
+        c.insert("c", 3); // evicts "b"
+        assert_eq!(c.get(&"b"), None);
+        assert_eq!(c.get(&"a"), Some(&10));
+    }
+
+    #[test]
+    fn pop_lru_drains_in_recency_order() {
+        let mut c = LruCache::new(4);
+        for i in 0..4 {
+            c.insert(i, i * 10);
+        }
+        c.get(&0); // 0 becomes most recent: order is now 1,2,3,0
+        let drained: Vec<i32> = std::iter::from_fn(|| c.pop_lru())
+            .map(|(k, _)| k)
+            .collect();
+        assert_eq!(drained, vec![1, 2, 3, 0]);
+        assert!(c.is_empty());
+        assert_eq!(c.pop_lru(), None);
+    }
+
+    #[test]
+    fn capacity_one_always_holds_latest() {
+        let mut c = LruCache::new(1);
+        for i in 0..10 {
+            c.insert(i, i);
+            assert_eq!(c.len(), 1);
+            assert_eq!(c.get(&i), Some(&i));
+        }
+        assert_eq!(c.get(&8), None);
+    }
+
+    #[test]
+    fn freed_slots_are_recycled() {
+        let mut c = LruCache::new(2);
+        for i in 0..100 {
+            c.insert(i, i);
+        }
+        // arena never grows past capacity even after 98 evictions
+        assert!(c.slots.len() <= 2, "slots grew to {}", c.slots.len());
+    }
+
+    #[test]
+    fn peek_does_not_refresh() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert_eq!(c.peek(&"a"), Some(&1)); // no recency update
+        c.insert("c", 3); // evicts "a" — peek did not protect it
+        assert_eq!(c.get(&"a"), None);
+    }
+
+    #[test]
+    fn embedding_cache_hit_is_bitwise_and_bounded() {
+        let cache = EmbeddingCache::new(2);
+        let emb = vec![1.0f32, -0.0, f32::MIN_POSITIVE, 3.5e-8];
+        cache.insert(&[1, 2, 3], emb.clone());
+        let hit = cache.get(&[1, 2, 3]).unwrap();
+        // bitwise, not approximate: compare the raw representations
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&hit), bits(&emb));
+        // capacity pressure evicts the LRU key
+        cache.insert(&[4], vec![0.0]);
+        cache.get(&[1, 2, 3]); // refresh
+        cache.insert(&[5], vec![0.0]); // evicts [4]
+        assert_eq!(cache.get(&[4]), None);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn embedding_cache_is_shareable_across_threads() {
+        use std::sync::Arc;
+        let cache = Arc::new(EmbeddingCache::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4i32 {
+            let cache = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let key = [t, i];
+                    cache.insert(&key, vec![t as f32, i as f32]);
+                    assert_eq!(cache.get(&key), Some(vec![t as f32, i as f32]));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(cache.len() <= 64);
+    }
+}

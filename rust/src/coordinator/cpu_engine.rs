@@ -33,6 +33,7 @@ use crate::attention::Tensor2;
 use crate::config::Variant;
 use crate::kernels::{BatchedAttention, BatchedVariant, KernelCtx, Workspace};
 use crate::rngx::Rng;
+use std::sync::Arc;
 
 /// Hyperparameters of the deterministic CPU serving model.
 #[derive(Clone, Copy, Debug)]
@@ -177,22 +178,43 @@ impl CpuModel {
     }
 }
 
-/// Batch executor owned by the coordinator's CPU worker thread. Holds
-/// the model, the multi-head fan-out executor, and a staging arena so
-/// steady-state batches embed + execute with zero heap allocations.
+/// Batch executor owned by one coordinator CPU worker thread. Holds a
+/// shared handle to the model, the multi-head fan-out executor, and a
+/// staging arena so steady-state batches embed + execute with zero heap
+/// allocations.
+///
+/// A worker *pool* runs one `CpuEngine` per thread, all [`fork`]ed from
+/// the same engine: the (read-only) model — embedding table included —
+/// is shared behind an `Arc`, while the executor and staging arena are
+/// per-worker (they are the mutable state). Forked engines compute
+/// bitwise-identical embeddings: the model is literally the same
+/// memory, and the kernels are thread-count deterministic.
+///
+/// [`fork`]: CpuEngine::fork
 pub struct CpuEngine {
-    model: CpuModel,
+    model: Arc<CpuModel>,
     exec: BatchedAttention,
     stage: Workspace,
 }
 
 impl CpuEngine {
     pub fn new(model: CpuModel) -> CpuEngine {
+        CpuEngine::with_model(Arc::new(model))
+    }
+
+    /// Build an engine over an already-shared model.
+    pub fn with_model(model: Arc<CpuModel>) -> CpuEngine {
         CpuEngine {
             model,
             exec: BatchedAttention::new(KernelCtx::global()),
             stage: Workspace::new(),
         }
+    }
+
+    /// A sibling engine over the same shared model, with its own
+    /// executor and staging arena — one per worker-pool thread.
+    pub fn fork(&self) -> CpuEngine {
+        CpuEngine::with_model(self.model.clone())
     }
 
     pub fn model(&self) -> &CpuModel {
@@ -374,6 +396,19 @@ mod tests {
             let _ = engine.encode_batch(&plan, &lens);
         }
         assert_eq!(engine.stage.allocations(), warm);
+    }
+
+    #[test]
+    fn forked_engines_share_the_model_and_agree_bitwise() {
+        let mut a = CpuEngine::new(
+            CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift));
+        let mut b = a.fork();
+        assert!(std::ptr::eq(a.model(), b.model()), "model must be shared");
+        let t = toks(100, 8);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let ea = a.encode_batch(&plan, &[t.len()]);
+        let eb = b.encode_batch(&plan, &[t.len()]);
+        assert_eq!(ea, eb, "forked workers must serve identical embeddings");
     }
 
     #[test]

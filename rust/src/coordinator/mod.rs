@@ -1,31 +1,40 @@
-//! The L3 coordinator (S14): router → bounded bucket queue → dynamic
-//! batcher → execution backend, with metrics at every stage.
+//! The L3 coordinator (S14): router → sharded bucket queue → worker
+//! pool → execution backend, with an embedding cache on the admission
+//! path and metrics at every stage.
 //!
 //! Data path (python-free; see `ARCHITECTURE.md` for the full request
-//! lifecycle walkthrough):
+//! lifecycle walkthrough and `OPERATIONS.md` for the operator's view):
 //!
 //! ```text
-//!   submit(tokens) ──route──▶ BucketQueue ──pop_batch──▶ worker thread
-//!     ──assemble──▶ ExecBackend ──scatter/pool──▶ response channel
-//!                      │
-//!                      ├─ Xla: AOT encode artifact on the PJRT client
-//!                      └─ Cpu: kernels::batched on the minirt pool
+//!   submit(tokens, deadline?) ──route──▶ EmbeddingCache ──hit──▶ response
+//!                                            │ miss
+//!                                            ▼
+//!                      ShardedQueue (bucket → shard, deadline-aware)
+//!                        │              │              │
+//!                   pop/steal      pop/steal      pop/steal
+//!                        ▼              ▼              ▼
+//!                    worker 0       worker 1  ...  worker N-1
+//!                        └── expire → assemble → ExecBackend
+//!                                       ──scatter/pool──▶ cache insert
+//!                                                       ──▶ response
 //! ```
 //!
 //! Two execution backends implement the same submit/batch/execute/
-//! respond loop ([`ExecBackend`]): the PJRT worker executes compiled
-//! encode artifacts, and the CPU worker drives the in-process
+//! respond loop ([`ExecBackend`]): the PJRT workers execute compiled
+//! encode artifacts, and the CPU workers drive the in-process
 //! [`kernels`](crate::kernels) core through
-//! [`batcher::attention_scatter`] via [`cpu_engine::CpuEngine`].
-//! [`ExecBackend::auto`] picks XLA when artifacts + PJRT are available
-//! and falls back to CPU otherwise, so the stack serves real embeddings
-//! even with the offline `xla-stub` build.
+//! [`batcher::attention_scatter`] via [`cpu_engine::CpuEngine`] (one
+//! forked engine per worker, sharing one model). [`ExecBackend::auto`]
+//! picks XLA when artifacts + PJRT are available and falls back to CPU
+//! otherwise, so the stack serves real embeddings even with the offline
+//! `xla-stub` build.
 //!
 //! # Invariants
 //!
 //! * **Batch homogeneity** — every popped batch shares one sequence
 //!   bucket ([`queue::BucketQueue::pop_batch`]), so one artifact shape /
-//!   one padded tensor shape covers the whole batch.
+//!   one padded tensor shape covers the whole batch. Sharding preserves
+//!   this: a bucket lives entirely inside one shard.
 //! * **Padding skip** — [`batcher::attention_scatter`] never executes
 //!   padding *rows* (slots past `fill`) and excludes every position
 //!   beyond the per-request length it is given from attention;
@@ -33,6 +42,17 @@
 //!   passes landmark-*aligned* lengths, so a short alignment tail of
 //!   PAD embeddings is executed (and metered as `padded_tokens`) —
 //!   pooling still averages only real positions.
+//! * **Cache coherence** — a cache hit is bitwise-equal to a recompute:
+//!   both backends are deterministic functions of the token sequence
+//!   (independent of batch composition, worker assignment, and thread
+//!   count), and the cache stores only final per-request embeddings.
+//!   See [`cache`] for the full argument.
+//! * **Deadline honesty** — a request with an already-expired deadline
+//!   is rejected at admission ([`SubmitError::DeadlineExpired`]); one
+//!   that expires while queued is failed by the popping worker *before*
+//!   batch assembly. Expired requests never occupy a batch slot, and
+//!   the batcher closes a bucket early when a queued deadline is within
+//!   `deadline_margin_ms` of expiring.
 //! * **Order preservation** — responses are delivered on per-request
 //!   channels; within a batch, outputs are scattered back in submission
 //!   order.
@@ -58,13 +78,15 @@
 //! see the serving_throughput bench (E8).
 
 pub mod batcher;
+pub mod cache;
 pub mod cpu_engine;
 pub mod queue;
 pub mod router;
 
 pub use batcher::{assemble, scatter, BatchPlan};
+pub use cache::{EmbeddingCache, LruCache};
 pub use cpu_engine::{CpuEngine, CpuModel, CpuModelConfig};
-pub use queue::{BatchPolicy, BucketQueue, PushError, Queued};
+pub use queue::{BatchPolicy, BucketQueue, PushError, Queued, ShardedQueue};
 pub use router::{Route, Router};
 
 use crate::config::{ServingConfig, Variant};
@@ -98,6 +120,9 @@ pub enum SubmitError {
     QueueFull,
     TooLong { len: usize, max: usize },
     Empty,
+    /// The request's deadline had already passed at admission — it was
+    /// rejected without ever occupying a queue or batch slot.
+    DeadlineExpired,
     ShuttingDown,
 }
 
@@ -106,11 +131,12 @@ struct ParamsBuffer(xla::PjRtBuffer);
 unsafe impl Send for ParamsBuffer {}
 unsafe impl Sync for ParamsBuffer {}
 
-/// The execution engine behind the coordinator's worker loop.
+/// The execution engine behind the coordinator's worker pool.
 pub enum ExecBackend {
     /// AOT-compiled encode artifacts executed on the PJRT runtime.
     Xla(Arc<Engine>),
-    /// The in-process CPU kernel core — no artifacts required.
+    /// The in-process CPU kernel core — no artifacts required. The
+    /// worker pool forks one engine per thread off this one.
     Cpu(Box<CpuEngine>),
 }
 
@@ -149,56 +175,72 @@ impl ExecBackend {
     }
 }
 
-/// Admission scaffolding shared by both backends — router, bounded
-/// queue, metrics, cancel token, batch policy — built in one place so
-/// the XLA and CPU start paths cannot diverge.
+/// Admission scaffolding shared by both backends — router, sharded
+/// queue, cache, metrics, cancel token, batch policy — built in one
+/// place so the XLA and CPU start paths cannot diverge.
 struct Scaffold {
     router: Router,
-    queue: Arc<BucketQueue<Pending>>,
+    queue: Arc<ShardedQueue<Pending>>,
+    cache: Option<Arc<EmbeddingCache>>,
     metrics: Arc<ServingMetrics>,
     cancel: CancelToken,
     policy: BatchPolicy,
+    default_deadline: Option<Duration>,
+    n_workers: usize,
 }
 
 impl Scaffold {
     fn new(buckets: &[usize], cfg: &ServingConfig) -> Scaffold {
+        let shards = cfg.effective_shards();
         Scaffold {
             router: Router::new(buckets.to_vec()),
-            queue: Arc::new(BucketQueue::new(buckets.len(), cfg.queue_capacity)),
+            queue: Arc::new(ShardedQueue::new(shards, buckets.len(),
+                                              cfg.queue_capacity)),
+            cache: match cfg.cache_capacity {
+                0 => None,
+                n => Some(Arc::new(EmbeddingCache::new(n))),
+            },
             metrics: Arc::new(ServingMetrics::new()),
             cancel: CancelToken::new(),
             policy: BatchPolicy {
                 max_batch: cfg.max_batch,
                 max_wait: Duration::from_millis(cfg.max_wait_ms),
+                deadline_margin: Duration::from_millis(cfg.deadline_margin_ms),
             },
+            default_deadline: cfg.default_deadline(),
+            n_workers: cfg.workers.max(1),
         }
     }
 
-    fn into_coordinator(self, worker: std::thread::JoinHandle<()>,
+    fn into_coordinator(self, workers: Vec<std::thread::JoinHandle<()>>,
                         kind: BackendKind) -> Coordinator {
         Coordinator {
             router: self.router,
             queue: self.queue,
+            cache: self.cache,
             metrics: self.metrics,
             cancel: self.cancel,
-            worker: Some(worker),
+            workers,
             next_id: std::sync::atomic::AtomicU64::new(0),
             backend_kind: kind,
+            default_deadline: self.default_deadline,
         }
     }
 }
 
-/// The serving coordinator. One worker thread per instance executes
-/// batches; admission is lock-light and callers receive responses on
-/// per-request channels.
+/// The serving coordinator. A pool of worker threads executes batches
+/// pulled (and stolen) from a sharded bucket queue; admission is
+/// lock-light and callers receive responses on per-request channels.
 pub struct Coordinator {
     router: Router,
-    queue: Arc<BucketQueue<Pending>>,
+    queue: Arc<ShardedQueue<Pending>>,
+    cache: Option<Arc<EmbeddingCache>>,
     pub metrics: Arc<ServingMetrics>,
     cancel: CancelToken,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
     backend_kind: BackendKind,
+    default_deadline: Option<Duration>,
 }
 
 impl Coordinator {
@@ -206,7 +248,8 @@ impl Coordinator {
     /// The XLA backend warms up (compiles) every encode artifact for
     /// the configured variant and uploads the parameters once; the CPU
     /// backend validates the bucket list against the model's landmark
-    /// count. Either way a single batch-execution worker is spawned.
+    /// count. Either way `cfg.workers` batch-execution workers are
+    /// spawned over `cfg.effective_shards()` queue shards.
     pub fn start(backend: ExecBackend, cfg: &ServingConfig)
                  -> Result<Coordinator, crate::runtime::RuntimeError> {
         match backend {
@@ -227,22 +270,27 @@ impl Coordinator {
         let params = Arc::new(ParamsBuffer(
             engine.buffer_f32(&init, &[init.len()])?));
 
-        let worker = {
+        let mut workers = Vec::with_capacity(s.n_workers);
+        for w in 0..s.n_workers {
             let queue = s.queue.clone();
+            let cache = s.cache.clone();
             let metrics = s.metrics.clone();
-            let cancel = s.cancel.clone();
             let engine = engine.clone();
+            let params = params.clone();
             let variant = cfg.variant;
             let policy = s.policy;
-            std::thread::Builder::new()
-                .name("ssaformer-coordinator".into())
-                .spawn(move || {
-                    worker_loop_xla(&engine, variant, &buckets, &queue, policy,
-                                    &metrics, &cancel, &params);
-                })
-                .expect("spawn coordinator worker")
-        };
-        Ok(s.into_coordinator(worker, BackendKind::Xla))
+            let buckets = buckets.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ssaformer-xla-worker-{w}"))
+                    .spawn(move || {
+                        worker_loop_xla(&engine, variant, &buckets, &queue, w,
+                                        policy, &metrics, cache.as_deref(),
+                                        &params);
+                    })
+                    .expect("spawn coordinator worker"));
+        }
+        Ok(s.into_coordinator(workers, BackendKind::Xla))
     }
 
     fn start_cpu(engine: Box<CpuEngine>, cfg: &ServingConfig)
@@ -259,22 +307,31 @@ impl Coordinator {
         }
         let s = Scaffold::new(&buckets, cfg);
 
-        let worker = {
+        // one engine per worker, all sharing the model of the one we
+        // were handed
+        let engine = *engine;
+        let mut engines: Vec<CpuEngine> =
+            (1..s.n_workers).map(|_| engine.fork()).collect();
+        engines.insert(0, engine);
+
+        let mut workers = Vec::with_capacity(s.n_workers);
+        for (w, mut eng) in engines.into_iter().enumerate() {
             let queue = s.queue.clone();
+            let cache = s.cache.clone();
             let metrics = s.metrics.clone();
-            let cancel = s.cancel.clone();
             let policy = s.policy;
             let capacity = cfg.max_batch;
-            let mut engine = engine;
-            std::thread::Builder::new()
-                .name("ssaformer-cpu-coordinator".into())
-                .spawn(move || {
-                    worker_loop_cpu(&mut engine, capacity, &buckets, &queue,
-                                    policy, &metrics, &cancel);
-                })
-                .expect("spawn coordinator worker")
-        };
-        Ok(s.into_coordinator(worker, BackendKind::Cpu))
+            let buckets = buckets.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("ssaformer-cpu-worker-{w}"))
+                    .spawn(move || {
+                        worker_loop_cpu(&mut eng, capacity, &buckets, &queue, w,
+                                        policy, &metrics, cache.as_deref());
+                    })
+                    .expect("spawn coordinator worker"));
+        }
+        Ok(s.into_coordinator(workers, BackendKind::Cpu))
     }
 
     /// The execution backend serving this coordinator's requests.
@@ -282,9 +339,67 @@ impl Coordinator {
         self.backend_kind
     }
 
-    /// Submit a request; returns the receiver for its response.
+    /// Batch-execution worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue shards the worker pool pulls from.
+    pub fn queue_shards(&self) -> usize {
+        self.queue.shard_count()
+    }
+
+    /// Embedding-cache entry bound (0 when the cache is disabled).
+    pub fn cache_capacity(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.capacity())
+    }
+
+    /// Embedding-cache entries currently resident.
+    pub fn cache_len(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.len())
+    }
+
+    /// Submit a request; returns the receiver for its response. The
+    /// configured default deadline (if any) applies.
     pub fn submit(&self, tokens: Vec<i32>)
                   -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit_with_deadline(tokens, None)
+    }
+
+    /// Submit a request with an optional deadline *budget* (time from
+    /// now until the response is useless to the caller). `None` falls
+    /// back to the configured default deadline.
+    ///
+    /// Deadline semantics: an already-expired deadline is rejected here
+    /// with [`SubmitError::DeadlineExpired`] (never occupying a batch
+    /// slot); a request that expires while queued is answered with an
+    /// `Err("deadline")` embedding by the worker that pops it, again
+    /// before batch assembly. A cache hit is served even under an
+    /// expired deadline — it costs nothing.
+    ///
+    /// ```
+    /// use ssaformer::config::{ServingConfig, Variant};
+    /// use ssaformer::coordinator::{
+    ///     Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
+    ///     SubmitError,
+    /// };
+    /// use std::time::Duration;
+    /// let cfg = ServingConfig::default();
+    /// let engine = Box::new(CpuEngine::new(CpuModel::new(
+    ///     CpuModelConfig::default(), Variant::SpectralShift)));
+    /// let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+    /// // a zero budget has always already expired at admission
+    /// assert_eq!(c.submit_with_deadline(vec![5, 6, 7], Some(Duration::ZERO))
+    ///                .err(),
+    ///            Some(SubmitError::DeadlineExpired));
+    /// assert_eq!(c.metrics.requests_expired.get(), 1);
+    /// // a generous budget serves normally
+    /// let rx = c.submit_with_deadline(vec![5, 6, 7],
+    ///                                 Some(Duration::from_secs(30))).unwrap();
+    /// assert!(rx.recv().unwrap().embedding.is_ok());
+    /// ```
+    pub fn submit_with_deadline(&self, tokens: Vec<i32>, budget: Option<Duration>)
+                                -> Result<mpsc::Receiver<Response>, SubmitError> {
         if self.cancel.is_cancelled() {
             return Err(SubmitError::ShuttingDown);
         }
@@ -304,8 +419,40 @@ impl Coordinator {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // cache fast path: serve a known embedding instantly (even a
+        // tight deadline is met by a hit)
+        if let Some(cache) = &self.cache {
+            let t0 = Instant::now();
+            if let Some(emb) = cache.get(&tokens) {
+                self.metrics.cache_hits.inc();
+                self.metrics.requests_done.inc();
+                self.metrics.e2e_latency.record(t0.elapsed());
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Response {
+                    id,
+                    embedding: Ok(emb),
+                    queue_time: Duration::ZERO,
+                    exec_time: Duration::ZERO,
+                });
+                return Ok(rx);
+            }
+        }
+        // checked: an absurd budget that overflows Instant (e.g. a wire
+        // DEADLINE_MS of u64::MAX) degrades to "no deadline", not a panic
+        let deadline = budget
+            .or(self.default_deadline)
+            .and_then(|b| Instant::now().checked_add(b));
+        if let Some(d) = deadline {
+            if d <= Instant::now() {
+                self.metrics.requests_expired.inc();
+                return Err(SubmitError::DeadlineExpired);
+            }
+        }
         let (tx, rx) = mpsc::channel();
-        match self.queue.push(idx, Pending { id, tokens, tx }) {
+        // cache_misses is counted by the worker when the batch reaches
+        // compute — never here, so rejected or queued-then-expired
+        // requests cannot deflate the hit rate
+        match self.queue.push(idx, Pending { id, tokens, tx }, deadline) {
             Ok(()) => Ok(rx),
             Err(PushError::Full) => {
                 self.metrics.requests_rejected.inc();
@@ -321,11 +468,11 @@ impl Coordinator {
         rx.recv().map_err(|_| SubmitError::ShuttingDown)
     }
 
-    /// Graceful shutdown: drain the queue, stop the worker.
+    /// Graceful shutdown: drain the queue, stop the worker pool.
     pub fn shutdown(mut self) {
         self.cancel.cancel();
         self.queue.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -335,21 +482,61 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.cancel.cancel();
         self.queue.close();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// Fail every already-expired request in the batch with an
+/// `Err("deadline")` response (the wire's `ERR <id> deadline`) and
+/// return the still-live remainder. Runs on the popping worker *before*
+/// batch assembly, so expired requests never occupy batch slots.
+fn split_expired(batch: Vec<Queued<Pending>>,
+                 metrics: &ServingMetrics) -> Vec<Queued<Pending>> {
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for q in batch {
+        if q.deadline.map_or(false, |d| d <= now) {
+            metrics.requests_expired.inc();
+            let _ = q.item.tx.send(Response {
+                id: q.item.id,
+                embedding: Err("deadline".to_string()),
+                queue_time: now.duration_since(q.enqueued),
+                exec_time: Duration::ZERO,
+            });
+        } else {
+            live.push(q);
+        }
+    }
+    live
+}
+
+/// Record the served embedding for each request so an identical token
+/// sequence hits on the next admission.
+fn cache_batch(cache: Option<&EmbeddingCache>, batch: &[Queued<Pending>],
+               rows: &[Vec<f32>]) {
+    if let Some(cache) = cache {
+        for (q, emb) in batch.iter().zip(rows) {
+            cache.insert(&q.item.tokens, emb.clone());
         }
     }
 }
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
-                   queue: &BucketQueue<Pending>, policy: BatchPolicy,
-                   metrics: &ServingMetrics, cancel: &CancelToken,
-                   params: &ParamsBuffer) {
-    while !cancel.is_cancelled() || !queue.is_empty() {
-        let Some(batch) = queue.pop_batch(policy) else { break };
+                   queue: &ShardedQueue<Pending>, home: usize,
+                   policy: BatchPolicy, metrics: &ServingMetrics,
+                   cache: Option<&EmbeddingCache>, params: &ParamsBuffer) {
+    while let Some(batch) = queue.pop_batch_worker(home, policy) {
+        let batch = split_expired(batch, metrics);
         if batch.is_empty() {
             continue;
+        }
+        // a cache miss = a looked-up request that reached compute
+        // (expired/rejected ones never count against the hit rate)
+        if cache.is_some() {
+            metrics.cache_misses.add(batch.len() as u64);
         }
         let bucket = buckets[batch[0].bucket];
         let now = Instant::now();
@@ -386,6 +573,7 @@ fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
             Ok(flat) => {
                 let d_model = flat.len() / model.entry.batch;
                 let rows = scatter(&plan, &flat, d_model);
+                cache_batch(cache, &batch, &rows);
                 let finish = Instant::now();
                 for (q, emb) in batch.into_iter().zip(rows) {
                     metrics.requests_done.inc();
@@ -405,26 +593,33 @@ fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
     }
 }
 
-/// The CPU twin of [`worker_loop_xla`]: same pop → assemble → execute →
-/// respond cycle, but the "artifact" is [`CpuEngine::encode_batch`]
-/// running on the in-process kernel core. Batch capacity is the
-/// configured `max_batch` (there is no artifact batch dimension to
-/// match).
+/// The CPU twin of [`worker_loop_xla`]: same pop/steal → expire →
+/// assemble → execute → respond cycle, but the "artifact" is
+/// [`CpuEngine::encode_batch`] running on the in-process kernel core.
+/// Batch capacity is the configured `max_batch` (there is no artifact
+/// batch dimension to match). Every worker in the pool runs this loop
+/// with its own forked engine.
 fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
-                   queue: &BucketQueue<Pending>, policy: BatchPolicy,
-                   metrics: &ServingMetrics, cancel: &CancelToken) {
-    while !cancel.is_cancelled() || !queue.is_empty() {
-        let Some(batch) = queue.pop_batch(policy) else { break };
+                   queue: &ShardedQueue<Pending>, home: usize,
+                   policy: BatchPolicy, metrics: &ServingMetrics,
+                   cache: Option<&EmbeddingCache>) {
+    while let Some(batch) = queue.pop_batch_worker(home, policy) {
+        let batch = split_expired(batch, metrics);
         if batch.is_empty() {
             continue;
         }
-        let bucket = buckets[batch[0].bucket];
+        // a cache miss = a looked-up request that reached compute
+        // (expired/rejected ones never count against the hit rate)
+        if cache.is_some() {
+            metrics.cache_misses.add(batch.len() as u64);
+        }
         let now = Instant::now();
         for q in &batch {
             metrics
                 .queue_latency
                 .record(now.duration_since(q.enqueued));
         }
+        let bucket = buckets[batch[0].bucket];
         let token_refs: Vec<&[i32]> =
             batch.iter().map(|q| q.item.tokens.as_slice()).collect();
         let lens: Vec<usize> = token_refs.iter().map(|t| t.len()).collect();
@@ -441,6 +636,7 @@ fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
         let exec_time = t_exec.elapsed();
         metrics.exec_latency.record(exec_time);
         metrics.batches_executed.inc();
+        cache_batch(cache, &batch, &rows);
         let finish = Instant::now();
         for (q, emb) in batch.into_iter().zip(rows) {
             metrics.requests_done.inc();
@@ -471,15 +667,16 @@ fn fail_batch(batch: Vec<Queued<Pending>>, msg: &str) {
 #[cfg(test)]
 mod tests {
     //! Coordinator logic that needs no execution engine is tested here;
-    //! end-to-end CPU serving lives in
-    //! `rust/tests/integration_cpu_serving.rs` and the artifact path in
-    //! `rust/tests/integration_serving.rs`.
+    //! end-to-end CPU serving (worker pool, cache, deadlines over TCP)
+    //! lives in `rust/tests/integration_cpu_serving.rs` and the
+    //! artifact path in `rust/tests/integration_serving.rs`.
 
     use super::*;
 
     #[test]
     fn submit_error_semantics() {
         assert_eq!(SubmitError::QueueFull, SubmitError::QueueFull);
+        assert_eq!(SubmitError::DeadlineExpired, SubmitError::DeadlineExpired);
         let e = SubmitError::TooLong { len: 600, max: 512 };
         match e {
             SubmitError::TooLong { len, max } => {
@@ -509,5 +706,49 @@ mod tests {
         let engine = Box::new(CpuEngine::new(CpuModel::new(
             CpuModelConfig::default(), Variant::SpectralShift)));
         assert!(Coordinator::start(ExecBackend::Cpu(engine), &cfg).is_err());
+    }
+
+    #[test]
+    fn split_expired_fails_only_expired_requests() {
+        let metrics = ServingMetrics::new();
+        let now = Instant::now();
+        let mk = |id: u64, deadline: Option<Instant>| {
+            let (tx, rx) = mpsc::channel();
+            (Queued {
+                bucket: 0,
+                enqueued: now,
+                deadline,
+                item: Pending { id, tokens: vec![1, 2, 3], tx },
+            }, rx)
+        };
+        let (expired, rx_expired) = mk(0, Some(now)); // already past
+        let (live_dl, _rx_live_dl) =
+            mk(1, Some(now + Duration::from_secs(60)));
+        let (no_dl, _rx_no_dl) = mk(2, None);
+        let live = split_expired(vec![expired, live_dl, no_dl], &metrics);
+        // expired request got its ERR-deadline response...
+        let resp = rx_expired.try_recv().expect("expired request answered");
+        assert_eq!(resp.embedding.unwrap_err(), "deadline");
+        assert_eq!(metrics.requests_expired.get(), 1);
+        // ...and the survivors continue toward assembly, in order
+        let ids: Vec<u64> = live.iter().map(|q| q.item.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn pool_and_cache_report_their_shape() {
+        let cfg = ServingConfig {
+            workers: 3,
+            queue_shards: 2,
+            cache_capacity: 16,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        assert_eq!(c.workers(), 3);
+        assert_eq!(c.queue_shards(), 2);
+        assert_eq!(c.cache_capacity(), 16);
+        assert_eq!(c.cache_len(), 0);
     }
 }

@@ -1,20 +1,48 @@
-//! Bounded per-bucket request queue with condvar wakeups — the
+//! Bounded per-bucket request queues with condvar wakeups — the
 //! coordinator's admission + backpressure point.
+//!
+//! Two layers:
+//!
+//! * [`BucketQueue`] — one mutex-protected set of per-bucket FIFO
+//!   lanes. Batch formation is *deadline-aware*: a lane becomes ready
+//!   when it is full, when its head has aged past `max_wait`, **or**
+//!   when any queued item's deadline is within `deadline_margin` of
+//!   expiring (so a batch is closed early rather than letting its
+//!   members blow their deadlines waiting for batchmates).
+//! * [`ShardedQueue`] — N independent `BucketQueue` shards. Buckets are
+//!   assigned to shards statically (`bucket_idx % shards`), which keeps
+//!   every batch bucket-homogeneous *and* keeps same-bucket requests in
+//!   one lane so batches still fill. Each worker in the pool has a home
+//!   shard it blocks on, and **steals** a ready batch from any other
+//!   shard when its home has nothing to do — so one hot bucket is
+//!   drained by every idle worker, not just the shard's "owner".
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// A queued item tagged with its bucket and enqueue time.
+/// A queued item tagged with its bucket, enqueue time, and optional
+/// absolute deadline (requests past it are expired by the worker, not
+/// by the queue — the queue only uses deadlines for early batch close).
 pub struct Queued<T> {
     pub bucket: usize,
     pub enqueued: Instant,
+    pub deadline: Option<Instant>,
     pub item: T,
+}
+
+struct Lane<T> {
+    items: VecDeque<Queued<T>>,
+    /// Earliest deadline among queued items (None when no item carries
+    /// one). Maintained incrementally on push, recomputed on drain, so
+    /// the readiness/wake paths — which run on every worker poll, under
+    /// the shard mutex — stay O(lanes) instead of O(queued items).
+    min_deadline: Option<Instant>,
 }
 
 struct Inner<T> {
     /// one FIFO per bucket index
-    lanes: Vec<VecDeque<Queued<T>>>,
+    lanes: Vec<Lane<T>>,
     total: usize,
     closed: bool,
 }
@@ -37,18 +65,23 @@ pub enum PushError {
 }
 
 /// Batch-formation policy: a lane is ready when it has `max_batch`
-/// items, or its head item has waited ≥ `max_wait`.
+/// items, its head item has waited ≥ `max_wait`, or any queued item's
+/// deadline is within `deadline_margin` of now (early close — leave
+/// the margin for execution itself).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    pub deadline_margin: Duration,
 }
 
 impl<T> BucketQueue<T> {
     pub fn new(n_buckets: usize, capacity: usize) -> Self {
         BucketQueue {
             inner: Mutex::new(Inner {
-                lanes: (0..n_buckets).map(|_| VecDeque::new()).collect(),
+                lanes: (0..n_buckets)
+                    .map(|_| Lane { items: VecDeque::new(), min_deadline: None })
+                    .collect(),
                 total: 0,
                 closed: false,
             }),
@@ -59,6 +92,13 @@ impl<T> BucketQueue<T> {
 
     /// Enqueue into a bucket lane; rejects when at capacity or closed.
     pub fn push(&self, bucket_idx: usize, item: T) -> Result<(), PushError> {
+        self.push_with_deadline(bucket_idx, item, None)
+    }
+
+    /// [`BucketQueue::push`] with an absolute deadline the batcher may
+    /// close the lane early for.
+    pub fn push_with_deadline(&self, bucket_idx: usize, item: T,
+                              deadline: Option<Instant>) -> Result<(), PushError> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(PushError::Closed);
@@ -69,11 +109,17 @@ impl<T> BucketQueue<T> {
         if g.total >= self.capacity {
             return Err(PushError::Full);
         }
-        g.lanes[bucket_idx].push_back(Queued {
+        let lane = &mut g.lanes[bucket_idx];
+        lane.items.push_back(Queued {
             bucket: bucket_idx,
             enqueued: Instant::now(),
+            deadline,
             item,
         });
+        lane.min_deadline = match (lane.min_deadline, deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
         g.total += 1;
         drop(g);
         self.ready.notify_one();
@@ -96,56 +142,242 @@ impl<T> BucketQueue<T> {
         self.ready.notify_all();
     }
 
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
     /// Blocking pop of the next batch per `policy`.
     ///
     /// Returns items all from ONE lane (a batch must share its artifact
     /// bucket), at most `policy.max_batch` of them, or None once closed
-    /// and drained. Lane choice: any full lane first, else the lane with
-    /// the oldest head once it has aged past max_wait.
+    /// and drained. Lane choice: the oldest-head lane among every ready
+    /// lane — full, aged past `max_wait`, under deadline pressure, or
+    /// (once closed) simply nonempty. Oldest-head selection is the
+    /// anti-starvation rule: younger full lanes cannot starve a
+    /// deadline-pressed or aged lane.
     pub fn pop_batch(&self, policy: BatchPolicy) -> Option<Vec<Queued<T>>> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            // full lane?
-            if let Some(idx) = (0..g.lanes.len())
-                .find(|&i| g.lanes[i].len() >= policy.max_batch)
-            {
+            let now = Instant::now();
+            if let Some(idx) = ready_lane(&g, policy, now) {
                 return Some(drain(&mut g, idx, policy.max_batch));
             }
-            // aged lane? pick oldest head across lanes
-            let now = Instant::now();
-            let oldest = (0..g.lanes.len())
-                .filter_map(|i| g.lanes[i].front().map(|q| (q.enqueued, i)))
-                .min();
-            if let Some((head_t, idx)) = oldest {
-                let age = now.duration_since(head_t);
-                if age >= policy.max_wait {
-                    return Some(drain(&mut g, idx, policy.max_batch));
-                }
-                if g.closed {
-                    return Some(drain(&mut g, idx, policy.max_batch));
-                }
-                // wait until the head would age out (or new arrivals)
-                let timeout = policy.max_wait - age;
-                let (ng, _t) = self.ready.wait_timeout(g, timeout).unwrap();
-                g = ng;
-            } else {
-                if g.closed {
-                    return None;
-                }
-                g = self.ready.wait(g).unwrap();
+            // a closed queue with items always has a ready lane, so
+            // reaching here closed means fully drained
+            if g.closed {
+                return None;
             }
+            match next_wake(&g, policy, now) {
+                Some(wait) => {
+                    let (ng, _t) = self.ready.wait_timeout(g, wait).unwrap();
+                    g = ng;
+                }
+                None => g = self.ready.wait(g).unwrap(),
+            }
+        }
+    }
+
+    /// Non-blocking pop: a ready batch if some lane is ready right now,
+    /// else None. This is the work-stealing probe — it never waits.
+    pub fn try_pop_batch(&self, policy: BatchPolicy) -> Option<Vec<Queued<T>>> {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        ready_lane(&g, policy, now).map(|idx| drain(&mut g, idx, policy.max_batch))
+    }
+
+    /// [`BucketQueue::pop_batch`] bounded to block at most `max_block`.
+    /// Returns None on timeout *or* once closed and drained (callers in
+    /// a steal loop re-check [`BucketQueue::is_closed`] to tell the two
+    /// apart).
+    pub fn pop_batch_timeout(&self, policy: BatchPolicy,
+                             max_block: Duration) -> Option<Vec<Queued<T>>> {
+        let start = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            if let Some(idx) = ready_lane(&g, policy, now) {
+                return Some(drain(&mut g, idx, policy.max_batch));
+            }
+            if g.closed {
+                return None;
+            }
+            let elapsed = now.duration_since(start);
+            if elapsed >= max_block {
+                return None;
+            }
+            let budget = max_block - elapsed;
+            let wait = next_wake(&g, policy, now).map_or(budget, |w| w.min(budget));
+            let (ng, _t) = self.ready.wait_timeout(g, wait).unwrap();
+            g = ng;
         }
     }
 }
 
+/// The lane to drain right now, if any: the **oldest-head** lane among
+/// every ready lane (full, aged out, deadline-pressed, or — once the
+/// queue is closed — simply nonempty). Oldest-head selection is the
+/// anti-starvation rule: a stream of younger full lanes cannot starve a
+/// deadline-pressed (or aged) lane past its deadline, because the
+/// pressed lane's head is older and wins the pop.
+fn ready_lane<T>(inner: &Inner<T>, policy: BatchPolicy, now: Instant) -> Option<usize> {
+    let mut best: Option<(Instant, usize)> = None;
+    for (i, lane) in inner.lanes.iter().enumerate() {
+        let Some(head) = lane.items.front() else { continue };
+        let full = lane.items.len() >= policy.max_batch;
+        let aged = now.duration_since(head.enqueued) >= policy.max_wait;
+        let pressed = lane.min_deadline.map_or(false, |d| {
+            d.checked_sub(policy.deadline_margin)
+                .map_or(true, |close_at| close_at <= now)
+        });
+        if full || aged || pressed || inner.closed {
+            let key = (head.enqueued, i);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+/// How long a popper may sleep before some lane could become ready by
+/// aging or deadline pressure (None when the queue is empty).
+fn next_wake<T>(inner: &Inner<T>, policy: BatchPolicy, now: Instant) -> Option<Duration> {
+    let mut wake: Option<Instant> = None;
+    let mut min = |t: Instant| wake = Some(wake.map_or(t, |w| w.min(t)));
+    for lane in &inner.lanes {
+        if let Some(head) = lane.items.front() {
+            min(head.enqueued + policy.max_wait);
+        }
+        if let Some(d) = lane.min_deadline {
+            min(d.checked_sub(policy.deadline_margin).unwrap_or(now));
+        }
+    }
+    // floor the wait so a boundary race cannot hot-spin the condvar
+    wake.map(|w| w.saturating_duration_since(now).max(Duration::from_micros(100)))
+}
+
 fn drain<T>(inner: &mut Inner<T>, lane: usize, n: usize) -> Vec<Queued<T>> {
-    let take = inner.lanes[lane].len().min(n);
+    let lane = &mut inner.lanes[lane];
+    let take = lane.items.len().min(n);
     let mut out = Vec::with_capacity(take);
     for _ in 0..take {
-        out.push(inner.lanes[lane].pop_front().unwrap());
+        out.push(lane.items.pop_front().unwrap());
+    }
+    // the drained prefix may have carried the minimum; recompute over
+    // the remainder (once per popped batch, not per poll)
+    if lane.min_deadline.is_some() {
+        lane.min_deadline = lane.items.iter().filter_map(|q| q.deadline).min();
     }
     inner.total -= take;
     out
+}
+
+// ---------------------------------------------------------------------------
+// Sharding
+// ---------------------------------------------------------------------------
+
+/// How long a worker blocks on its home shard between steal scans.
+/// Bounds steal-discovery latency; an idle worker wakes ~1000×/s, which
+/// is noise next to a single attention batch.
+const STEAL_POLL: Duration = Duration::from_millis(1);
+
+/// N independent [`BucketQueue`] shards with static bucket→shard
+/// assignment and work-stealing pops.
+///
+/// Sharding is about *lock* pressure, not parallelism — any number of
+/// workers can pop concurrently from one shard (the mutex serializes
+/// only batch formation, which is microseconds). Assigning whole
+/// buckets to shards (`bucket % shards`) rather than spraying requests
+/// round-robin keeps each bucket's traffic in a single lane, so batch
+/// fill does not degrade as shards are added.
+pub struct ShardedQueue<T> {
+    shards: Vec<BucketQueue<T>>,
+}
+
+impl<T> ShardedQueue<T> {
+    /// `n_shards` shards over `n_buckets` buckets, splitting
+    /// `total_capacity` evenly (each shard holds at least `max(cap/n,
+    /// 1)` items; backpressure is per-shard). The shard count is
+    /// clamped to the bucket count: with a static `bucket % shards`
+    /// map, any shard beyond `n_buckets` could never receive a push and
+    /// would silently strand its slice of the capacity split.
+    pub fn new(n_shards: usize, n_buckets: usize, total_capacity: usize) -> Self {
+        let n_shards = n_shards.clamp(1, n_buckets.max(1));
+        let per_shard = (total_capacity / n_shards).max(1);
+        ShardedQueue {
+            shards: (0..n_shards)
+                .map(|_| BucketQueue::new(n_buckets, per_shard))
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, bucket_idx: usize) -> usize {
+        bucket_idx % self.shards.len()
+    }
+
+    /// Enqueue into the bucket's shard.
+    pub fn push(&self, bucket_idx: usize, item: T,
+                deadline: Option<Instant>) -> Result<(), PushError> {
+        self.shards[self.shard_of(bucket_idx)]
+            .push_with_deadline(bucket_idx, item, deadline)
+    }
+
+    /// Total items across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// Close every shard: pending pops drain, further pushes fail.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.close();
+        }
+    }
+
+    /// True once **every** shard is closed. Deliberately all-shards,
+    /// not a single-shard probe: close() is not atomic across shards,
+    /// and a push can still be accepted by a not-yet-closed shard while
+    /// close() is mid-iteration. Requiring all shards closed before
+    /// workers may exit guarantees any such accepted item is observed
+    /// by `is_empty()` (its shard's close — and therefore this check —
+    /// happens after the push landed) and drained, preserving the
+    /// "accepted implies answered" shutdown contract.
+    pub fn is_closed(&self) -> bool {
+        self.shards.iter().all(|s| s.is_closed())
+    }
+
+    /// Blocking pop for worker `home`: take a ready batch from the home
+    /// shard if there is one, else *steal* from the first other shard
+    /// with a ready batch, else block briefly on the home shard and
+    /// rescan. Returns None only once the queue is closed and fully
+    /// drained.
+    pub fn pop_batch_worker(&self, home: usize,
+                            policy: BatchPolicy) -> Option<Vec<Queued<T>>> {
+        let n = self.shards.len();
+        let home = home % n;
+        loop {
+            for k in 0..n {
+                let s = (home + k) % n;
+                if let Some(batch) = self.shards[s].try_pop_batch(policy) {
+                    return Some(batch);
+                }
+            }
+            if self.is_closed() && self.is_empty() {
+                return None;
+            }
+            if let Some(batch) = self.shards[home].pop_batch_timeout(policy, STEAL_POLL) {
+                return Some(batch);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -153,15 +385,21 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    fn pol(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            deadline_margin: Duration::from_millis(5),
+        }
+    }
+
     #[test]
     fn push_pop_full_batch() {
         let q: BucketQueue<u32> = BucketQueue::new(2, 16);
         for i in 0..4 {
             q.push(1, i).unwrap();
         }
-        let b = q
-            .pop_batch(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(5) })
-            .unwrap();
+        let b = q.pop_batch(pol(4, 5000)).unwrap();
         assert_eq!(b.len(), 4);
         assert!(b.iter().all(|x| x.bucket == 1));
         assert_eq!(b.iter().map(|x| x.item).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
@@ -173,14 +411,77 @@ mod tests {
         let q: BucketQueue<u32> = BucketQueue::new(2, 16);
         q.push(0, 7).unwrap();
         let t0 = Instant::now();
-        let b = q
-            .pop_batch(BatchPolicy {
-                max_batch: 8,
-                max_wait: Duration::from_millis(30),
-            })
-            .unwrap();
+        let b = q.pop_batch(pol(8, 30)).unwrap();
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn deadline_pressure_closes_lane_early() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 16);
+        // head has no deadline; the SECOND item's deadline must still
+        // close the lane (pressure scans the whole lane, not the head)
+        q.push(0, 1).unwrap();
+        q.push_with_deadline(0, 2,
+            Some(Instant::now() + Duration::from_millis(40))).unwrap();
+        let t0 = Instant::now();
+        // max_wait of 10s would otherwise hold the partial batch
+        let b = q.pop_batch(pol(8, 10_000)).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(b.len(), 2);
+        // closed at ~deadline - margin (40-5 ms), far before max_wait
+        assert!(waited < Duration::from_secs(5), "waited {waited:?}");
+        assert!(waited >= Duration::from_millis(20), "closed too early: {waited:?}");
+    }
+
+    #[test]
+    fn pressed_lane_preempts_younger_full_lane() {
+        let q: BucketQueue<u32> = BucketQueue::new(2, 64);
+        // older, deadline-pressed singleton in lane 1 ...
+        q.push_with_deadline(1, 99, Some(Instant::now())).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        // ... must win the pop over a younger but full lane 0
+        for i in 0..4 {
+            q.push(0, i).unwrap();
+        }
+        let b = q.try_pop_batch(pol(4, 10_000)).unwrap();
+        assert!(b.iter().all(|x| x.bucket == 1),
+                "deadline-pressed lane starved behind a full lane");
+    }
+
+    #[test]
+    fn already_expired_deadline_pops_immediately() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 16);
+        q.push_with_deadline(0, 9, Some(Instant::now())).unwrap();
+        // delivered (not dropped): expiry handling is the worker's job
+        let b = q.try_pop_batch(pol(8, 10_000)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(b[0].deadline.unwrap() <= Instant::now());
+    }
+
+    #[test]
+    fn try_pop_is_nonblocking() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 16);
+        assert!(q.try_pop_batch(pol(4, 1000)).is_none());
+        q.push(0, 1).unwrap();
+        // young, below max_batch, no deadline → not ready
+        assert!(q.try_pop_batch(pol(4, 1000)).is_none());
+        for i in 0..3 {
+            q.push(0, i).unwrap();
+        }
+        assert_eq!(q.try_pop_batch(pol(4, 1000)).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn pop_batch_timeout_times_out_then_pops() {
+        let q: BucketQueue<u32> = BucketQueue::new(1, 16);
+        let t0 = Instant::now();
+        assert!(q.pop_batch_timeout(pol(4, 1000), Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        for i in 0..4 {
+            q.push(0, i).unwrap();
+        }
+        assert!(q.pop_batch_timeout(pol(4, 1000), Duration::from_millis(20)).is_some());
     }
 
     #[test]
@@ -205,7 +506,7 @@ mod tests {
         let q: BucketQueue<u32> = BucketQueue::new(1, 4);
         q.push(0, 1).unwrap();
         q.close();
-        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) };
+        let p = pol(4, 1000);
         assert_eq!(q.pop_batch(p).unwrap().len(), 1);
         assert!(q.pop_batch(p).is_none());
     }
@@ -227,10 +528,7 @@ mod tests {
         let consumer = {
             let q = q.clone();
             std::thread::spawn(move || {
-                let p = BatchPolicy {
-                    max_batch: 8,
-                    max_wait: Duration::from_millis(5),
-                };
+                let p = pol(8, 5);
                 let mut got = 0usize;
                 while got < 300 {
                     if let Some(b) = q.pop_batch(p) {
@@ -257,10 +555,7 @@ mod tests {
             for i in 0..n {
                 q.push(0, i).map_err(|e| format!("{e:?}"))?;
             }
-            let p = BatchPolicy {
-                max_batch: g.usize_in(1, 16),
-                max_wait: Duration::from_millis(0),
-            };
+            let p = pol(g.usize_in(1, 16), 0);
             let mut seen = Vec::new();
             while seen.len() < n {
                 let b = q.pop_batch(p).ok_or("closed early")?;
@@ -270,5 +565,118 @@ mod tests {
                 seen == (0..n).collect::<Vec<_>>(),
                 format!("not FIFO: {seen:?}"))
         });
+    }
+
+    // --- sharded queue ---
+
+    #[test]
+    fn sharded_routes_buckets_to_fixed_shards() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 4, 64);
+        // buckets 0,2 → shard 0; buckets 1,3 → shard 1
+        q.push(0, 10, None).unwrap();
+        q.push(1, 11, None).unwrap();
+        q.push(2, 12, None).unwrap();
+        assert_eq!(q.shards[0].len(), 2);
+        assert_eq!(q.shards[1].len(), 1);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn worker_steals_ready_batch_from_other_shard() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 2, 64);
+        // a full batch lands in shard 1 (bucket 1); worker 0's home is
+        // shard 0, which stays empty — it must steal
+        for i in 0..4 {
+            q.push(1, i, None).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = q.pop_batch_worker(0, pol(4, 10_000)).unwrap();
+        assert_eq!(b.len(), 4);
+        assert!(b.iter().all(|x| x.bucket == 1));
+        // stolen promptly (full lane is ready immediately), not after
+        // the 10s aging flush
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn sharded_close_drains_all_shards_then_none() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(3, 3, 64);
+        for b in 0..3 {
+            q.push(b, b as u32, None).unwrap();
+        }
+        q.close();
+        assert!(q.is_closed());
+        let p = pol(4, 1000);
+        let mut got = 0;
+        while let Some(b) = q.pop_batch_worker(0, p) {
+            got += b.len();
+        }
+        assert_eq!(got, 3);
+        assert!(q.pop_batch_worker(1, p).is_none());
+        assert_eq!(q.push(0, 9, None), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn shards_clamp_to_bucket_count() {
+        // 8 requested shards over 3 buckets → only 3 reachable; the
+        // clamp keeps the full capacity usable instead of stranding
+        // 5/8 of it in unreachable shards
+        let q: ShardedQueue<u32> = ShardedQueue::new(8, 3, 24);
+        assert_eq!(q.shard_count(), 3);
+        // per-shard capacity is 24/3 = 8, not 24/8 = 3
+        for i in 0..8 {
+            q.push(0, i, None).unwrap();
+        }
+        assert_eq!(q.push(0, 99, None), Err(PushError::Full));
+    }
+
+    #[test]
+    fn sharded_capacity_is_split() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 2, 4);
+        // shard capacity = 4/2 = 2
+        q.push(0, 1, None).unwrap();
+        q.push(0, 2, None).unwrap();
+        assert_eq!(q.push(0, 3, None), Err(PushError::Full));
+        // the other shard still accepts
+        q.push(1, 4, None).unwrap();
+    }
+
+    #[test]
+    fn sharded_concurrent_workers_drain_everything() {
+        let q: Arc<ShardedQueue<u64>> = Arc::new(ShardedQueue::new(2, 4, 2048));
+        let n_items = 400u64;
+        let producer = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..n_items {
+                    let bucket = (i % 4) as usize;
+                    while q.push(bucket, i, None).is_err() {
+                        std::thread::yield_now();
+                    }
+                }
+                q.close();
+            })
+        };
+        let drained = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for w in 0..4 {
+            let q = q.clone();
+            let drained = drained.clone();
+            workers.push(std::thread::spawn(move || {
+                let p = pol(8, 2);
+                while let Some(b) = q.pop_batch_worker(w, p) {
+                    let lane = b[0].bucket;
+                    assert!(b.iter().all(|x| x.bucket == lane), "mixed batch");
+                    drained.fetch_add(b.len() as u64,
+                                      std::sync::atomic::Ordering::Relaxed);
+                }
+            }));
+        }
+        producer.join().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(drained.load(std::sync::atomic::Ordering::Relaxed), n_items);
+        assert!(q.is_empty());
     }
 }

@@ -19,11 +19,15 @@
 //!
 //! ## Request lifecycle (one line)
 //!
-//! socket → [`server`] line protocol → [`coordinator`] route/queue →
-//! `batcher::assemble` → execution backend (XLA artifact **or**
-//! [`kernels`] CPU core) → scatter/pool → response channel. The full
-//! walkthrough, with the data-flow diagram and the paper-symbol →
-//! function table, lives in `ARCHITECTURE.md` at the repo root.
+//! socket → [`server`] line protocol → [`coordinator`] route → embedding
+//! cache (hit answers instantly; a hit is bitwise-equal to a recompute)
+//! → sharded bucket queue, deadline-aware → worker pool (work-stealing)
+//! → `batcher::assemble` → execution backend (XLA artifact **or**
+//! [`kernels`] CPU core) → scatter/pool → cache insert → response
+//! channel. The full walkthrough, with the data-flow diagram, deadline
+//! semantics, and the paper-symbol → function table, lives in
+//! `ARCHITECTURE.md` at the repo root; the operator's view (knobs,
+//! `STATS` reference, capacity planning) in `OPERATIONS.md`.
 //!
 //! ## Crate-wide invariants
 //!

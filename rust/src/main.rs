@@ -42,6 +42,9 @@ USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
 
   serve    --config FILE | --variant full|nystrom|ss --addr HOST:PORT
            --artifacts DIR --max-batch N --max-wait-ms MS
+           --workers N --shards N --cache-capacity N (0 = off)
+           --default-deadline-ms MS (0 = none) --deadline-margin-ms MS
+           (knob semantics + capacity planning: see OPERATIONS.md)
   train    --variant full|ss --steps N --seed S --artifacts DIR
   info     --artifacts DIR
   spectrum --n N --c C  (pure-rust Figure-2 analysis; no artifacts needed)
@@ -86,6 +89,21 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
     if let Some(w) = flags.get("max-wait-ms") {
         cfg.max_wait_ms = w.parse().map_err(|_| "bad max-wait-ms")?;
     }
+    if let Some(w) = flags.get("workers") {
+        cfg.workers = w.parse().map_err(|_| "bad workers")?;
+    }
+    if let Some(s) = flags.get("shards") {
+        cfg.queue_shards = s.parse().map_err(|_| "bad shards")?;
+    }
+    if let Some(c) = flags.get("cache-capacity") {
+        cfg.cache_capacity = c.parse().map_err(|_| "bad cache-capacity")?;
+    }
+    if let Some(d) = flags.get("default-deadline-ms") {
+        cfg.default_deadline_ms = d.parse().map_err(|_| "bad default-deadline-ms")?;
+    }
+    if let Some(m) = flags.get("deadline-margin-ms") {
+        cfg.deadline_margin_ms = m.parse().map_err(|_| "bad deadline-margin-ms")?;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -118,11 +136,17 @@ fn cmd_serve(flags: &Flags) -> i32 {
         }
     };
     let backend_name = coordinator.backend().name();
+    println!("worker pool: {} workers over {} queue shards, cache {}",
+             coordinator.workers(), coordinator.queue_shards(),
+             match coordinator.cache_capacity() {
+                 0 => "off".to_string(),
+                 n => format!("{n} entries"),
+             });
     match ssaformer::server::serve(coordinator, &cfg.bind_addr, 8) {
         Ok((addr, _handle)) => {
             println!("serving {} attention on {addr} (backend: {backend_name})",
                      cfg.variant.token());
-            println!("protocol: ENCODE <id> <tok...> | STATS | QUIT");
+            println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] <tok...> | STATS | QUIT");
             // block forever (ctrl-c to stop)
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

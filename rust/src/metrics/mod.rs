@@ -120,6 +120,19 @@ pub struct ServingMetrics {
     pub requests_in: Counter,
     pub requests_done: Counter,
     pub requests_rejected: Counter,
+    /// Requests that missed their deadline: rejected at admission with
+    /// an already-expired deadline, or expired while queued (failed by
+    /// the worker before occupying a batch slot). Disjoint from
+    /// `requests_done` and `requests_rejected`.
+    pub requests_expired: Counter,
+    /// Admission-path embedding-cache hits — served instantly without
+    /// queueing or batching (still counted in `requests_done`).
+    pub cache_hits: Counter,
+    /// Cache lookups that missed **and reached batch compute** (counted
+    /// by the worker when the batch is formed, only when a cache is
+    /// configured). Requests rejected at admission or expired while
+    /// queued are excluded, so they cannot deflate the hit rate.
+    pub cache_misses: Counter,
     pub batches_executed: Counter,
     pub tokens_processed: Counter,
     /// Request slots offered across all executed batches (capacity ×
@@ -145,8 +158,14 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         let real = self.tokens_processed.get();
         let padded = self.padded_tokens.get();
+        let hits = self.cache_hits.get();
+        let lookups = hits + self.cache_misses.get();
+        // cache hits never occupy a batch slot, so fill/occupancy are
+        // computed over the batch-executed requests only
+        let batched = self.requests_done.get().saturating_sub(hits);
         format!(
-            "requests: in={} done={} rejected={}\n\
+            "requests: in={} done={} rejected={} expired={}\n\
+             cache:    hits={} misses={} ({:.0}% hit rate)\n\
              batches:  {} (avg fill {:.2} req/batch, occupancy {:.0}%)\n\
              tokens:   {} (+{} executed padding, {:.0}% waste)\n\
              queue:    {}\n\
@@ -155,11 +174,13 @@ impl ServingMetrics {
             self.requests_in.get(),
             self.requests_done.get(),
             self.requests_rejected.get(),
+            self.requests_expired.get(),
+            hits,
+            self.cache_misses.get(),
+            100.0 * hits as f64 / lookups.max(1) as f64,
             self.batches_executed.get(),
-            self.requests_done.get() as f64
-                / self.batches_executed.get().max(1) as f64,
-            100.0 * self.requests_done.get() as f64
-                / self.batch_slots.get().max(1) as f64,
+            batched as f64 / self.batches_executed.get().max(1) as f64,
+            100.0 * batched as f64 / self.batch_slots.get().max(1) as f64,
             real,
             padded,
             100.0 * padded as f64 / (real + padded).max(1) as f64,
@@ -234,9 +255,37 @@ mod tests {
         let r = m.report();
         assert!(r.contains("in=5"));
         assert!(r.contains("done=4"));
+        assert!(r.contains("expired=0"), "{r}");
         assert!(r.contains("avg fill 2.00"));
         assert!(r.contains("occupancy 50%"), "{r}");
         assert!(r.contains("+100 executed padding"), "{r}");
         assert!(r.contains("25% waste"), "{r}");
+    }
+
+    #[test]
+    fn cache_hits_do_not_inflate_occupancy() {
+        let m = ServingMetrics::new();
+        // 8 served: 4 from batches (2 batches × 4 slots), 4 from cache
+        m.requests_in.add(8);
+        m.requests_done.add(8);
+        m.cache_hits.add(4);
+        m.cache_misses.add(4);
+        m.batches_executed.add(2);
+        m.batch_slots.add(8);
+        let r = m.report();
+        assert!(r.contains("hits=4 misses=4 (50% hit rate)"), "{r}");
+        // occupancy counts only the batch-served half
+        assert!(r.contains("avg fill 2.00"), "{r}");
+        assert!(r.contains("occupancy 50%"), "{r}");
+    }
+
+    #[test]
+    fn expired_requests_are_reported() {
+        let m = ServingMetrics::new();
+        m.requests_in.add(3);
+        m.requests_done.add(2);
+        m.requests_expired.inc();
+        let r = m.report();
+        assert!(r.contains("expired=1"), "{r}");
     }
 }

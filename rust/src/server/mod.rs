@@ -9,15 +9,27 @@
 //! ## Requests
 //!
 //! ```text
-//! ENCODE <id> <tok1> <tok2> ... \n    encode a token sequence
-//! STATS\n                             metrics + backend report
-//! QUIT\n                              close this connection
+//! ENCODE <id> [DEADLINE_MS=<ms>] <tok1> <tok2> ... \n
+//!                                      encode a token sequence
+//! STATS\n                              metrics + backend report
+//! QUIT\n                               close this connection
 //! ```
 //!
 //! `<id>` is an arbitrary non-negative integer echoed back verbatim —
-//! correlation only, no server-side meaning. Tokens that fail to parse
-//! as `i32` are skipped; out-of-vocabulary ids are accepted (the CPU
-//! model wraps them into range).
+//! correlation only, no server-side meaning. The optional
+//! `DEADLINE_MS=<ms>` field (immediately after the id) gives the
+//! request a deadline budget. A request whose deadline expires
+//! **before its batch is formed** is answered `ERR <id> deadline`
+//! instead of being served late, and never occupies a batch slot;
+//! enforcement points are admission, early batch close
+//! (`deadline_margin_ms` before expiry), and batch pop. A request
+//! already inside an executing batch is never aborted: if execution
+//! itself overruns the deadline, the (still-correct) embedding is
+//! delivered late as `OK` — clients with hard cutoffs should discard
+//! replies past their own deadline. Omitting the field applies the
+//! server's configured `default_deadline_ms` (0 = no deadline). Tokens
+//! that fail to parse as `i32` are skipped; out-of-vocabulary ids are
+//! accepted (the CPU model wraps them into range).
 //!
 //! ## Responses
 //!
@@ -31,20 +43,26 @@
 //! | reason                  | meaning                                      |
 //! |-------------------------|----------------------------------------------|
 //! | `bad-id`                | `ENCODE` id missing or not a `u64`           |
+//! | `bad-deadline`          | `DEADLINE_MS=` value not a `u64`             |
 //! | `empty`                 | no valid tokens in the request               |
 //! | `too-long-<n>-max-<m>`  | length n exceeds the largest bucket m        |
 //! | `queue-full`            | admission backpressure; retry later          |
+//! | `deadline`              | deadline expired before execution; the       |
+//! |                         | request consumed no batch slot               |
 //! | `shutting-down`         | coordinator is draining; do not retry here   |
 //! | `unknown-command`       | first word not ENCODE/STATS/QUIT             |
 //! | *anything else*         | execution failure, whitespace dashed         |
 //!
 //! ## `STATS` report
 //!
-//! A multi-line block terminated by a lone `.`:
+//! A multi-line block terminated by a lone `.` (each field is specified
+//! operator-style in `OPERATIONS.md`):
 //!
 //! ```text
 //! backend:  <cpu-kernels|xla-pjrt>     which execution backend is live
-//! requests: in=N done=N rejected=N     admission counters
+//! workers:  N (S queue shards, cache L/C)   worker pool + cache shape
+//! requests: in=N done=N rejected=N expired=N   admission counters
+//! cache:    hits=N misses=N (H% hit rate)
 //! batches:  N (avg fill F req/batch, occupancy P%)
 //! tokens:   N (+P executed padding, W% waste)
 //! queue:    n=.. mean=..us p50=..us p99=..us max=..us
@@ -53,10 +71,12 @@
 //! .
 //! ```
 //!
-//! `occupancy` is requests served per offered batch slot; `executed
-//! padding` counts padding positions the backend actually computed
-//! (dense remainder on XLA, landmark-alignment tails on CPU) — the
-//! padding-waste signal for batcher tuning.
+//! `occupancy` is batch-served requests per offered batch slot (cache
+//! hits bypass batching and are excluded); `executed padding` counts
+//! padding positions the backend actually computed (dense remainder on
+//! XLA, landmark-alignment tails on CPU) — the padding-waste signal for
+//! batcher tuning. `expired` counts deadline misses, which appear in
+//! neither `done` nor `rejected`.
 //!
 //! Deliberately minimal — the protocol exists so the serving stack can
 //! be exercised end-to-end over a real socket (examples/serve_attention,
@@ -180,14 +200,27 @@ fn handle_conn(stream: TcpStream, coordinator: &Coordinator,
 /// Parse + execute one protocol line (pure w.r.t. the socket; separately
 /// unit-tested).
 pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
-    let mut parts = line.split_whitespace();
+    let mut parts = line.split_whitespace().peekable();
     match parts.next() {
         Some("ENCODE") => {
             let Some(id) = parts.next().and_then(|s| s.parse::<u64>().ok()) else {
                 return "ERR 0 bad-id\n".into();
             };
+            // optional deadline field, directly after the id
+            let mut deadline = None;
+            if let Some(field) = parts.peek().copied()
+                .and_then(|p| p.strip_prefix("DEADLINE_MS=")) {
+                let Ok(ms) = field.parse::<u64>() else {
+                    return format!("ERR {id} bad-deadline\n");
+                };
+                deadline = Some(std::time::Duration::from_millis(ms));
+                parts.next();
+            }
             let tokens: Vec<i32> = parts.filter_map(|t| t.parse().ok()).collect();
-            match coordinator.submit_blocking(tokens) {
+            let submitted = coordinator
+                .submit_with_deadline(tokens, deadline)
+                .and_then(|rx| rx.recv().map_err(|_| SubmitError::ShuttingDown));
+            match submitted {
                 Ok(resp) => match resp.embedding {
                     Ok(emb) => {
                         let head: Vec<String> = emb
@@ -204,12 +237,22 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                     format!("ERR {id} too-long-{len}-max-{max}\n")
                 }
                 Err(SubmitError::Empty) => format!("ERR {id} empty\n"),
+                Err(SubmitError::DeadlineExpired) => format!("ERR {id} deadline\n"),
                 Err(SubmitError::ShuttingDown) => format!("ERR {id} shutting-down\n"),
             }
         }
-        Some("STATS") => format!("backend:  {}\n{}\n.\n",
-                                 coordinator.backend().name(),
-                                 coordinator.metrics.report()),
+        Some("STATS") => {
+            let cache = match coordinator.cache_capacity() {
+                0 => "off".to_string(),
+                cap => format!("{}/{}", coordinator.cache_len(), cap),
+            };
+            format!("backend:  {}\nworkers:  {} ({} queue shards, cache {})\n{}\n.\n",
+                    coordinator.backend().name(),
+                    coordinator.workers(),
+                    coordinator.queue_shards(),
+                    cache,
+                    coordinator.metrics.report())
+        }
         Some("QUIT") => "OK 0 bye\n".into(),
         _ => "ERR 0 unknown-command\n".into(),
     }
@@ -240,6 +283,18 @@ impl Client {
     pub fn encode(&mut self, id: u64, tokens: &[i32]) -> std::io::Result<String> {
         let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
         writeln!(self.writer, "ENCODE {id} {}", toks.join(" "))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+
+    /// Send ENCODE with a `DEADLINE_MS=` budget and wait for the reply
+    /// line (`ERR <id> deadline` when the budget is blown).
+    pub fn encode_with_deadline(&mut self, id: u64, tokens: &[i32],
+                                deadline_ms: u64) -> std::io::Result<String> {
+        let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+        writeln!(self.writer, "ENCODE {id} DEADLINE_MS={deadline_ms} {}",
+                 toks.join(" "))?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())

@@ -1,6 +1,9 @@
 //! End-to-end CPU-backend serving: full stack (TCP server → coordinator
-//! → kernels::batched) with **no artifacts**, checked against the seed
-//! scalar `attention::spectral_shift::reference` pipeline.
+//! → sharded queue → worker pool → kernels::batched) with **no
+//! artifacts**, checked against the seed scalar
+//! `attention::spectral_shift::reference` pipeline. Also covers the
+//! embedding cache (hit ≡ recompute, bounded eviction) and the deadline
+//! path (`DEADLINE_MS` wire field, `ERR deadline`, early batch close).
 //!
 //! Runs unconditionally — this is the path the offline build serves on.
 
@@ -212,4 +215,142 @@ fn graceful_shutdown_drains_cpu_backend() {
     let c = Arc::try_unwrap(c).ok().expect("sole owner");
     c.shutdown();
     assert!(rx.recv().unwrap().embedding.is_ok());
+}
+
+#[test]
+fn four_workers_with_cache_serve_parity_and_register_hits() {
+    // the acceptance scenario: N=4 workers over 2 shards, cache on
+    let cfg = ServingConfig {
+        variant: Variant::SpectralShift,
+        max_batch: 4,
+        max_wait_ms: 5,
+        queue_capacity: 64,
+        workers: 4,
+        queue_shards: 2,
+        cache_capacity: 64,
+        ..Default::default()
+    };
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), cfg.variant)));
+    let c = Arc::new(Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+    assert_eq!((c.workers(), c.queue_shards()), (4, 2));
+
+    // phase 1: 8 distinct concurrent requests across buckets — every
+    // embedding must match the scalar reference at full precision
+    let lengths = [40usize, 100, 128, 200, 260, 300, 400, 500];
+    let mut joins = Vec::new();
+    for &len in &lengths {
+        let c = c.clone();
+        joins.push(std::thread::spawn(move || {
+            let tokens = toks(len, len as i32);
+            let emb = c.submit_blocking(tokens.clone()).unwrap()
+                .embedding.unwrap();
+            (tokens, emb)
+        }));
+    }
+    let mut first: Vec<(Vec<i32>, Vec<f32>)> = Vec::new();
+    for j in joins {
+        first.push(j.join().unwrap());
+    }
+    for (tokens, emb) in &first {
+        let want = expected_embedding(Variant::SpectralShift, tokens);
+        for (j, (a, b)) in emb.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "len {} dim {j}: {a} vs {b}", tokens.len());
+        }
+    }
+    assert_eq!(c.metrics.cache_hits.get(), 0, "phase 1 had no repeats");
+
+    // phase 2: repeat every sequence — all hits, all bitwise-equal to
+    // the computed originals (the cache-coherence invariant)
+    for (tokens, emb) in &first {
+        let again = c.submit_blocking(tokens.clone()).unwrap()
+            .embedding.unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&again), bits(emb), "hit must equal recompute bitwise");
+    }
+    assert_eq!(c.metrics.cache_hits.get(), lengths.len() as u64);
+    assert_eq!(c.metrics.requests_done.get(), 2 * lengths.len() as u64);
+}
+
+#[test]
+fn cache_evicts_under_capacity_pressure() {
+    let cfg = ServingConfig {
+        variant: Variant::SpectralShift,
+        max_batch: 4,
+        max_wait_ms: 2,
+        queue_capacity: 64,
+        cache_capacity: 4,
+        ..Default::default()
+    };
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), cfg.variant)));
+    let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+    let t = toks(64, 1);
+    let first = c.submit_blocking(t.clone()).unwrap().embedding.unwrap();
+    assert_eq!(c.submit_blocking(t.clone()).unwrap().embedding.unwrap(), first);
+    assert_eq!(c.metrics.cache_hits.get(), 1);
+    // 6 distinct sequences push through a 4-entry cache → t evicted
+    for s in 10..16 {
+        c.submit_blocking(toks(64, s)).unwrap().embedding.unwrap();
+    }
+    assert!(c.cache_len() <= 4, "cache grew past capacity: {}", c.cache_len());
+    let misses_before = c.metrics.cache_misses.get();
+    let recomputed = c.submit_blocking(t).unwrap().embedding.unwrap();
+    assert_eq!(c.metrics.cache_misses.get(), misses_before + 1,
+               "evicted entry must miss");
+    // determinism: the recompute still equals the original bitwise
+    assert_eq!(recomputed, first);
+}
+
+#[test]
+fn expired_deadline_gets_err_deadline_over_tcp_without_batch_slot() {
+    let c = cpu_coordinator(Variant::SpectralShift);
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    // a zero budget has always expired by admission time
+    let reply = client.encode_with_deadline(9, &toks(100, 3), 0).unwrap();
+    assert_eq!(reply, "ERR 9 deadline");
+    assert_eq!(c.metrics.requests_expired.get(), 1);
+    // no batch slot was consumed anywhere
+    assert_eq!(c.metrics.batch_slots.get(), 0);
+    assert_eq!(c.metrics.batches_executed.get(), 0);
+    assert_eq!(c.metrics.requests_done.get(), 0);
+    // a generous deadline on the same connection still serves
+    let reply = client.encode_with_deadline(10, &toks(100, 3), 60_000).unwrap();
+    assert!(reply.starts_with("OK 10 "), "{reply}");
+    // malformed deadline value is rejected, not silently dropped
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("expired=1"), "{stats}");
+    assert!(stats.contains("workers:  2"), "{stats}");
+    handle.stop();
+}
+
+#[test]
+fn deadline_pressure_closes_partial_batch_early() {
+    // one lonely request, a 30s batching window, but a 2s deadline:
+    // the batcher must close the bucket at deadline − margin instead of
+    // holding the request for max_wait
+    let cfg = ServingConfig {
+        variant: Variant::SpectralShift,
+        max_batch: 4,
+        max_wait_ms: 30_000,
+        queue_capacity: 64,
+        deadline_margin_ms: 500,
+        ..Default::default()
+    };
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), cfg.variant)));
+    let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+    let t0 = std::time::Instant::now();
+    let rx = c.submit_with_deadline(
+        toks(100, 5), Some(std::time::Duration::from_millis(2000))).unwrap();
+    let resp = rx.recv().unwrap();
+    let waited = t0.elapsed();
+    assert!(resp.embedding.is_ok(), "{:?}", resp.embedding);
+    assert!(waited < std::time::Duration::from_secs(20),
+            "deadline did not close the batch early: {waited:?}");
+    assert!(waited >= std::time::Duration::from_millis(1000),
+            "batch closed before deadline pressure: {waited:?}");
+    assert_eq!(c.metrics.requests_expired.get(), 0);
 }

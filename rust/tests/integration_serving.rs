@@ -18,6 +18,9 @@ fn setup(variant: Variant) -> Option<Arc<Coordinator>> {
         max_batch: 4,
         max_wait_ms: 5,
         queue_capacity: 64,
+        workers: 2,
+        queue_shards: 2,
+        cache_capacity: 32,
         ..Default::default()
     };
     Some(Arc::new(
@@ -106,6 +109,26 @@ fn tcp_server_error_paths() {
     let reply = client.encode(1, &toks(3000, 6)).unwrap();
     assert!(reply.starts_with("ERR 1 too-long"), "{reply}");
     handle.stop();
+}
+
+#[test]
+fn xla_backend_caches_and_honors_deadlines() {
+    // cache + deadline semantics are backend-agnostic: the XLA pool
+    // must behave exactly like the CPU pool does in
+    // integration_cpu_serving.rs
+    let Some(c) = setup(Variant::SpectralShift) else { return };
+    let t = toks(90, 8);
+    let first = c.submit_blocking(t.clone()).unwrap().embedding.unwrap();
+    let again = c.submit_blocking(t.clone()).unwrap().embedding.unwrap();
+    assert_eq!(first, again, "cache hit must equal the computed embedding");
+    assert!(c.metrics.cache_hits.get() >= 1);
+    // an already-expired deadline is rejected without a batch slot
+    let slots = c.metrics.batch_slots.get();
+    let err = c.submit_with_deadline(toks(91, 9),
+                                     Some(std::time::Duration::ZERO));
+    assert!(matches!(err, Err(SubmitError::DeadlineExpired)));
+    assert_eq!(c.metrics.batch_slots.get(), slots);
+    assert_eq!(c.metrics.requests_expired.get(), 1);
 }
 
 #[test]
