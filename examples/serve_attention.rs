@@ -9,8 +9,11 @@
 //! `artifacts/` is built, otherwise the in-process CPU kernel backend —
 //! so this example serves real embeddings with no artifacts at all.
 //!
-//! Run: `cargo run --release --example serve_attention [variant]`
-//! (optionally `make artifacts` first to exercise the XLA path).
+//! Run: `cargo run --release --example serve_attention [variant] [layers]`
+//! — `variant` is any of full|nystrom|ss|linformer|lsh|sparse (the
+//! AttentionOp seam makes them interchangeable), `layers` the encoder
+//! depth (default 1, the seed single-pass model). Optionally
+//! `make artifacts` first to exercise the XLA path.
 
 use ssaformer::config::{ServingConfig, Variant};
 use ssaformer::coordinator::{Coordinator, ExecBackend};
@@ -23,10 +26,16 @@ fn main() {
         .nth(1)
         .and_then(|s| Variant::parse(&s))
         .unwrap_or(Variant::SpectralShift);
+    let layers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
 
-    println!("== ssaformer serving demo ({}) ==", variant.token());
+    println!("== ssaformer serving demo ({}, {} layer{}) ==",
+             variant.token(), layers, if layers == 1 { "" } else { "s" });
     let cfg = ServingConfig {
         variant,
+        layers,
         max_batch: 4,
         max_wait_ms: 10,
         queue_capacity: 128,
@@ -43,6 +52,7 @@ fn main() {
               cache {} entries",
              t0.elapsed(), coordinator.workers(), coordinator.queue_shards(),
              coordinator.cache_capacity());
+    println!("model: {}", coordinator.model_desc());
 
     let (addr, handle) = serve(coordinator.clone(), "127.0.0.1:0", 4)
         .expect("bind");

@@ -4,12 +4,15 @@
 //! c = 64, d = 64) and writes `BENCH_kernels.json` at the repo root
 //! (falling back to the crate root when run elsewhere): variant →
 //! ns/op, GF/s, threads, fast-vs-seed-scalar speedups, plus the
-//! serving-path entries (schema v3): CPU-backend coordinator
-//! requests/sec at n ∈ {1024, 4096}, and a mixed-deadline workload over
-//! a 4-worker pool with the embedding cache on — cache hit rate,
-//! per-request p50/p99 e2e latency, and deadline expiries. Model
-//! defaults (d/heads/landmarks) are recorded alongside the rates. CI
-//! and future PRs diff this file to track the hot path.
+//! serving-path entries (schema v4): CPU-backend coordinator
+//! requests/sec per encoder depth (`cpu_encode_rps_n{N}_l{L}` for
+//! n ∈ {1024, 4096} × layers ∈ {1, 4} — layer 1 is the seed
+//! single-pass model, layer 4 the full pre-LN stack), and a
+//! mixed-deadline workload over a 4-worker pool with the embedding
+//! cache on — cache hit rate, per-request p50/p99 e2e latency, and
+//! deadline expiries. Model defaults (d/heads/landmarks/ffn_mult) are
+//! recorded alongside the rates. CI and future PRs diff this file to
+//! track the hot path.
 //!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
@@ -141,38 +144,43 @@ fn main() {
         ("model_d".into(), mcfg.d_model as f64),
         ("model_heads".into(), mcfg.n_heads as f64),
         ("model_landmarks".into(), mcfg.landmarks as f64),
+        ("model_ffn_mult".into(), mcfg.ffn_mult as f64),
     ];
-    let mut stbl = Table::new(&["serving (cpu backend)", "n", "req/s"]);
-    for &n in &[1024usize, 4096] {
-        let cfg = ServingConfig {
-            variant: Variant::SpectralShift,
-            max_batch: 4,
-            max_wait_ms: 2,
-            queue_capacity: 256,
-            seq_buckets: vec![1024, 4096],
-            // cache off: this row measures the *encode* path, and the
-            // saturated load replays one token sequence
-            cache_capacity: 0,
-            ..Default::default()
-        };
-        let engine = Box::new(CpuEngine::new(CpuModel::new(
-            CpuModelConfig::default(), cfg.variant)));
-        let coordinator = Arc::new(
-            Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
-        let toks: Vec<i32> = (0..n).map(|i| 3 + (i as i32 % 2000)).collect();
-        // warm the kernel arenas before timing
-        coordinator.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
-        let reqs = 24;
-        let start = std::time::Instant::now();
-        let rxs: Vec<_> = (0..reqs)
-            .map(|_| coordinator.submit(toks.clone()).unwrap())
-            .collect();
-        for rx in rxs {
-            rx.recv().unwrap().embedding.unwrap();
+    let mut stbl = Table::new(&["serving (cpu backend)", "layers", "n", "req/s"]);
+    for &layers in &[1usize, 4] {
+        for &n in &[1024usize, 4096] {
+            let cfg = ServingConfig {
+                variant: Variant::SpectralShift,
+                layers,
+                max_batch: 4,
+                max_wait_ms: 2,
+                queue_capacity: 256,
+                seq_buckets: vec![1024, 4096],
+                // cache off: this row measures the *encode* path, and
+                // the saturated load replays one token sequence
+                cache_capacity: 0,
+                ..Default::default()
+            };
+            let engine = Box::new(CpuEngine::new(CpuModel::new(
+                CpuModelConfig { layers, ..Default::default() }, cfg.variant)));
+            let coordinator = Arc::new(
+                Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+            let toks: Vec<i32> = (0..n).map(|i| 3 + (i as i32 % 2000)).collect();
+            // warm the kernel arenas before timing
+            coordinator.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
+            let reqs = 24;
+            let start = std::time::Instant::now();
+            let rxs: Vec<_> = (0..reqs)
+                .map(|_| coordinator.submit(toks.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().embedding.unwrap();
+            }
+            let rps = reqs as f64 / start.elapsed().as_secs_f64();
+            stbl.row(&["encode_rps".into(), layers.to_string(), n.to_string(),
+                       format!("{rps:.1}")]);
+            serving.push((format!("cpu_encode_rps_n{n}_l{layers}"), rps));
         }
-        let rps = reqs as f64 / start.elapsed().as_secs_f64();
-        stbl.row(&["encode_rps".into(), n.to_string(), format!("{rps:.1}")]);
-        serving.push((format!("cpu_encode_rps_n{n}"), rps));
     }
     println!("{}", stbl.render());
 
@@ -290,7 +298,7 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                serving: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v3\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v4\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"c\": {c},\n"));

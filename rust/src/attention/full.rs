@@ -8,6 +8,24 @@
 
 use super::{default_scale, Tensor2};
 use crate::kernels::{flash_attention, KernelCtx, Workspace};
+use crate::model::AttentionOp;
+
+/// Exact softmax attention as a pluggable [`AttentionOp`] (the O(n²)
+/// upper baseline every approximation is judged against). Stateless:
+/// the flash kernel streams keys, so no configuration is needed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FullOp;
+
+impl AttentionOp for FullOp {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn attend(&self, ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+              ws: &mut Workspace) -> Tensor2 {
+        flash_attention(ctx, q, k, v, default_scale(q.cols), ws)
+    }
+}
 
 /// Exact attention out = softmax(q kᵀ · scale) v.
 ///

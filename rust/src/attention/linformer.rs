@@ -9,7 +9,32 @@
 
 use super::{default_scale, Tensor2};
 use crate::kernels::{flash_attention, gemm_f32, KernelCtx, Workspace};
+use crate::model::AttentionOp;
 use crate::rngx::Rng;
+
+/// Linformer as a pluggable [`AttentionOp`]. The projection matrix is
+/// regenerated from `seed` on every call (cheap next to the GEMMs), so
+/// the op stays stateless and the served function is fixed by
+/// `(kdim, seed)`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinformerOp {
+    /// Projection dimension (rows kept after E·K / E·V).
+    pub kdim: usize,
+    /// Seed of the fixed Gaussian projection — part of the served
+    /// function, like the CPU model's embedding-table seed.
+    pub seed: u64,
+}
+
+impl AttentionOp for LinformerOp {
+    fn name(&self) -> &'static str {
+        "linformer"
+    }
+
+    fn attend(&self, ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+              ws: &mut Workspace) -> Tensor2 {
+        linformer_attention_with(q, k, v, self.kdim, self.seed, None, ctx, ws)
+    }
+}
 
 /// Linformer attention with projection dimension `kdim`.
 pub fn linformer_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,

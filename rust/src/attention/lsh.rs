@@ -9,7 +9,40 @@
 //! bits ≈ log n).
 
 use super::{axpy_f32, default_scale, dot_f32, Tensor2};
+use crate::model::AttentionOp;
 use crate::rngx::Rng;
+
+/// LSH attention as a pluggable [`AttentionOp`]. Reference-grade: the
+/// scalar implementation below allocates internally and ignores the
+/// kernel context (single-threaded per head — the batched executor
+/// still fans heads × requests over the pool around it). The output is
+/// copied into a `ws`-backed tensor so callers that recycle op outputs
+/// through the arena (the batched executor's slot discipline) stay
+/// balanced: every `put` of an op output is matched by a `take` here.
+#[derive(Clone, Copy, Debug)]
+pub struct LshOp {
+    /// Independent hash rounds averaged together.
+    pub rounds: usize,
+    /// Hyperplanes per hash; `None` derives ⌈log₂(n/64)⌉ from the key
+    /// count (Reformer's ≈64-key buckets).
+    pub bits: Option<usize>,
+    /// Hyperplane seed — part of the served function.
+    pub seed: u64,
+}
+
+impl AttentionOp for LshOp {
+    fn name(&self) -> &'static str {
+        "lsh"
+    }
+
+    fn attend(&self, _ctx: &crate::kernels::KernelCtx, q: &Tensor2, k: &Tensor2,
+              v: &Tensor2, ws: &mut crate::kernels::Workspace) -> Tensor2 {
+        let out = lsh_attention(q, k, v, self.rounds, self.bits, self.seed, None);
+        let mut data = ws.take(out.rows * out.cols);
+        data.copy_from_slice(&out.data);
+        Tensor2 { rows: out.rows, cols: out.cols, data }
+    }
+}
 
 /// LSH attention with `rounds` independent hash functions of `bits`
 /// random hyperplanes each. bits=None picks ⌈log₂(n/64)⌉ so the expected

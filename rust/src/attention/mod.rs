@@ -38,6 +38,12 @@
 //!   is property-tested against it (max rel err < 1e-4) in
 //!   `tests/kernel_parity.rs`, and `benches/bench_snapshot.rs` records
 //!   the fast/reference speedup to `BENCH_kernels.json`.
+//! * **Op seam** — every variant additionally exports a small struct
+//!   (`FullOp`, `NystromOp`, `SpectralShiftOp`, `LinformerOp`, `LshOp`,
+//!   `SparseOp`) implementing [`crate::model::AttentionOp`], the single
+//!   dispatch point the encoder stack and the batched executor route
+//!   through. Serving no longer matches on a variant enum at each call
+//!   site; it holds one `&dyn AttentionOp`.
 //!
 //! The serving hot path executes the AOT-compiled XLA artifacts through
 //! `runtime::` when artifacts are present; without them the coordinator
@@ -66,15 +72,16 @@ pub mod nystrom;
 pub mod spectral_shift;
 pub mod sparse;
 
-pub use full::softmax_attention;
+pub use full::{softmax_attention, FullOp};
 pub use landmarks::{segment_means, segment_means_with};
-pub use linformer::{linformer_attention, linformer_attention_with};
-pub use lsh::lsh_attention;
-pub use nystrom::{nystrom_attention, nystrom_attention_with};
+pub use linformer::{linformer_attention, linformer_attention_with, LinformerOp};
+pub use lsh::{lsh_attention, LshOp};
+pub use nystrom::{nystrom_attention, nystrom_attention_with, NystromOp};
 pub use spectral_shift::{
     spectral_shift_attention, spectral_shift_attention_with, SpectralShiftConfig,
+    SpectralShiftOp,
 };
-pub use sparse::sparse_attention;
+pub use sparse::{sparse_attention, SparseOp};
 
 /// A (rows × cols) f32 row-major tensor view used across the variants.
 #[derive(Clone, Debug)]

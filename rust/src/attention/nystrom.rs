@@ -16,6 +16,32 @@ use super::{default_scale, Tensor2};
 use crate::kernels::{
     flash_attention, gemm_f32, gemm_into, softmax_gemm, softmax_scores, KernelCtx, Workspace,
 };
+use crate::model::AttentionOp;
+
+/// Nystromformer as a pluggable [`AttentionOp`]. Execution lengths must
+/// be divisible by `landmarks` (reported via `landmark_divisor`, aligned
+/// upstream by the batcher).
+#[derive(Clone, Copy, Debug)]
+pub struct NystromOp {
+    pub landmarks: usize,
+    pub pinv_iters: usize,
+}
+
+impl AttentionOp for NystromOp {
+    fn name(&self) -> &'static str {
+        "nystrom"
+    }
+
+    fn landmark_divisor(&self) -> Option<usize> {
+        Some(self.landmarks)
+    }
+
+    fn attend(&self, ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+              ws: &mut Workspace) -> Tensor2 {
+        nystrom_attention_with(q, k, v, self.landmarks, self.pinv_iters, None,
+                               ctx, ws)
+    }
+}
 
 /// The shared landmark-factor prologue every O(n) variant starts with:
 /// segment-means landmarks q̃/k̃, A = L(q̃k̃ᵀ), and W = L(q̃kᵀ)·V streamed

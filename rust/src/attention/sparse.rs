@@ -6,6 +6,34 @@
 //! score evaluations.
 
 use super::{axpy_f32, default_scale, dot_f32, Tensor2};
+use crate::model::AttentionOp;
+
+/// Sparse local+strided attention as a pluggable [`AttentionOp`].
+/// Reference-grade: scalar per head (like [`LshOp`](super::lsh::LshOp)),
+/// parallelism comes from the heads × requests fan-out around it. As
+/// with `LshOp`, the output is copied into `ws` scratch so arena
+/// take/put stays balanced under the batched executor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparseOp {
+    /// Local window half-width; `None` derives √n.
+    pub window: Option<usize>,
+    /// Summary-column stride; `None` derives √n.
+    pub stride: Option<usize>,
+}
+
+impl AttentionOp for SparseOp {
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+
+    fn attend(&self, _ctx: &crate::kernels::KernelCtx, q: &Tensor2, k: &Tensor2,
+              v: &Tensor2, ws: &mut crate::kernels::Workspace) -> Tensor2 {
+        let out = sparse_attention(q, k, v, self.window, self.stride, None);
+        let mut data = ws.take(out.rows * out.cols);
+        data.copy_from_slice(&out.data);
+        Tensor2 { rows: out.rows, cols: out.cols, data }
+    }
+}
 
 /// Sparse attention with window and stride both ≈ √n (overridable).
 pub fn sparse_attention(q: &Tensor2, k: &Tensor2, v: &Tensor2,

@@ -20,6 +20,28 @@ use super::nystrom::{landmark_factors, ns_pinv_with};
 use super::{default_scale, Tensor2};
 use crate::kernels::{gemm_f32, softmax_gemm, KernelCtx, Workspace};
 use crate::linalg::{self, Matrix};
+use crate::model::AttentionOp;
+
+/// Spectral shifting (the paper's method) as a pluggable
+/// [`AttentionOp`]: the [`SpectralShiftConfig`] carries every tunable,
+/// so the op is a transparent newtype over it.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralShiftOp(pub SpectralShiftConfig);
+
+impl AttentionOp for SpectralShiftOp {
+    fn name(&self) -> &'static str {
+        "spectral_shift"
+    }
+
+    fn landmark_divisor(&self) -> Option<usize> {
+        Some(self.0.landmarks)
+    }
+
+    fn attend(&self, ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+              ws: &mut Workspace) -> Tensor2 {
+        spectral_shift_attention_with(q, k, v, &self.0, ctx, ws)
+    }
+}
 
 /// Which middle factor to build (paper inconsistency; eq8 is primary).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -200,12 +200,18 @@ fn parse_value(s: &str) -> Option<Value> {
 // Typed serving configuration
 // ---------------------------------------------------------------------------
 
-/// Attention variant selector shared across the stack.
+/// Attention variant selector shared across the stack. All six Table-1
+/// operators are servable on the CPU backend (they plug into the
+/// encoder stack through the `AttentionOp` seam); XLA artifacts exist
+/// only for `full` / `nystrom` / `ss`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Variant {
     Full,
     Nystrom,
     SpectralShift,
+    Linformer,
+    Lsh,
+    Sparse,
 }
 
 impl Variant {
@@ -214,6 +220,9 @@ impl Variant {
             "full" => Some(Variant::Full),
             "nystrom" => Some(Variant::Nystrom),
             "ss" | "spectral_shift" => Some(Variant::SpectralShift),
+            "linformer" => Some(Variant::Linformer),
+            "lsh" => Some(Variant::Lsh),
+            "sparse" => Some(Variant::Sparse),
             _ => None,
         }
     }
@@ -224,6 +233,9 @@ impl Variant {
             Variant::Full => "full",
             Variant::Nystrom => "nystrom",
             Variant::SpectralShift => "ss",
+            Variant::Linformer => "linformer",
+            Variant::Lsh => "lsh",
+            Variant::Sparse => "sparse",
         }
     }
 }
@@ -259,6 +271,14 @@ pub struct ServingConfig {
     /// How far before a queued request's deadline the batcher closes
     /// its bucket early, leaving this margin for execution.
     pub deadline_margin_ms: u64,
+    /// Encoder depth on the CPU backend (≥ 1). `1` serves the seed
+    /// single-pass model (bitwise-compatible with pre-stack releases);
+    /// deeper stacks add full pre-LN blocks. Per-request cost scales
+    /// roughly linearly with depth — see OPERATIONS.md capacity math.
+    pub layers: usize,
+    /// FFN expansion factor of each full encoder block (inner width =
+    /// `ffn_mult · d_model`). Ignored at `layers = 1`.
+    pub ffn_mult: usize,
 }
 
 impl Default for ServingConfig {
@@ -276,6 +296,8 @@ impl Default for ServingConfig {
             cache_capacity: 1024,
             default_deadline_ms: 0,
             deadline_margin_ms: 5,
+            layers: 1,
+            ffn_mult: 4,
         }
     }
 }
@@ -313,6 +335,8 @@ impl ServingConfig {
                                           d.default_deadline_ms as i64)?,
             deadline_margin_ms: unsigned("deadline_margin_ms",
                                          d.deadline_margin_ms as i64)?,
+            layers: unsigned("layers", d.layers as i64)? as usize,
+            ffn_mult: unsigned("ffn_mult", d.ffn_mult as i64)? as usize,
         };
         out.validate()?;
         Ok(out)
@@ -356,6 +380,14 @@ impl ServingConfig {
             || self.seq_buckets.windows(2).any(|w| w[0] >= w[1]) {
             return Err(ConfigError::Invalid("serving".into(), "seq_buckets".into(),
                                             "must be ascending, nonempty".into()));
+        }
+        if self.layers == 0 {
+            return Err(ConfigError::Invalid("serving".into(), "layers".into(),
+                                            "must be >= 1".into()));
+        }
+        if self.ffn_mult == 0 {
+            return Err(ConfigError::Invalid("serving".into(), "ffn_mult".into(),
+                                            "must be >= 1".into()));
         }
         Ok(())
     }
@@ -499,9 +531,34 @@ resume = false
 
     #[test]
     fn variant_roundtrip() {
-        for v in [Variant::Full, Variant::Nystrom, Variant::SpectralShift] {
+        for v in [Variant::Full, Variant::Nystrom, Variant::SpectralShift,
+                  Variant::Linformer, Variant::Lsh, Variant::Sparse] {
             assert_eq!(Variant::parse(v.token()), Some(v));
         }
+        assert_eq!(Variant::parse("spectral_shift"), Some(Variant::SpectralShift));
         assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn encoder_knobs_parse_and_validate() {
+        let c = Config::parse("[serving]\nlayers = 4\nffn_mult = 2\n").unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!((s.layers, s.ffn_mult), (4, 2));
+        // defaults: the compatibility single-pass model
+        let s = ServingConfig::default();
+        assert_eq!((s.layers, s.ffn_mult), (1, 4));
+        // zero depth / zero expansion are config errors
+        let mut s = ServingConfig::default();
+        s.layers = 0;
+        assert!(s.validate().is_err());
+        let mut s = ServingConfig::default();
+        s.ffn_mult = 0;
+        assert!(s.validate().is_err());
+        for key in ["layers", "ffn_mult"] {
+            let c = Config::parse(&format!("[serving]\n{key} = -1\n")).unwrap();
+            assert!(matches!(ServingConfig::from_config(&c),
+                             Err(ConfigError::Invalid(..))),
+                    "{key} = -1 must be rejected");
+        }
     }
 }

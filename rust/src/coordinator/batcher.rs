@@ -17,8 +17,26 @@
 //! shuffling.
 
 use crate::attention::Tensor2;
-use crate::kernels::{attention_batched, BatchedAttention, BatchedVariant};
+use crate::kernels::{attention_batched, BatchedAttention};
+use crate::model::AttentionOp;
 use crate::text::PAD;
+
+/// The one place landmark alignment is computed: the execution length of
+/// a `len`-token request under an operator with `divisor = Some(c)` is
+/// `len` rounded up to the next multiple of c (segment-means landmarks
+/// need divisibility); divisor-free operators execute at `len` exactly.
+/// `CpuModel::padded_len`, the padding-waste metric, and the encoder
+/// stack all route through this helper so the serving model can never
+/// drift from the batcher's notion of alignment.
+pub fn aligned_len(len: usize, divisor: Option<usize>) -> usize {
+    match divisor {
+        Some(c) => {
+            assert!(c > 0, "landmark divisor must be positive");
+            (len + c - 1) / c * c
+        }
+        None => len,
+    }
+}
 
 /// A request's tokens plus its slot in the assembled batch.
 pub struct BatchPlan {
@@ -81,7 +99,7 @@ pub fn scatter(plan: &BatchPlan, output: &[f32], width: usize) -> Vec<Vec<f32>> 
 pub fn attention_scatter(exec: &mut BatchedAttention, plan: &BatchPlan,
                          q: &[f32], k: &[f32], v: &[f32], d: usize,
                          lens: &[usize], n_heads: usize,
-                         variant: BatchedVariant) -> Vec<Tensor2> {
+                         op: &dyn AttentionOp) -> Vec<Tensor2> {
     let per_req = plan.seq * d;
     assert!(q.len() >= plan.fill * per_req,
             "q len {} < fill {} × seq {} × d {d}",
@@ -102,7 +120,7 @@ pub fn attention_scatter(exec: &mut BatchedAttention, plan: &BatchPlan,
             (slice(q), slice(k), slice(v))
         })
         .collect();
-    let outs = attention_batched(exec, &reqs, n_heads, variant);
+    let outs = attention_batched(exec, &reqs, n_heads, op);
     for (rq, rk, rv) in reqs {
         exec.scratch().put(rq.data);
         exec.scratch().put(rk.data);
@@ -114,6 +132,33 @@ pub fn attention_scatter(exec: &mut BatchedAttention, plan: &BatchPlan,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn aligned_len_rounds_up_only_under_a_divisor() {
+        // divisor-free ops execute at the exact length
+        assert_eq!(aligned_len(0, None), 0);
+        assert_eq!(aligned_len(17, None), 17);
+        // landmark ops round up to the next multiple
+        assert_eq!(aligned_len(1, Some(16)), 16);
+        assert_eq!(aligned_len(16, Some(16)), 16);
+        assert_eq!(aligned_len(17, Some(16)), 32);
+        assert_eq!(aligned_len(112, Some(16)), 112);
+        assert_eq!(aligned_len(0, Some(16)), 0);
+        // property: smallest multiple of c that is >= len
+        for len in 0..200usize {
+            for c in [1usize, 3, 16, 64] {
+                let a = aligned_len(len, Some(c));
+                assert!(a >= len && a % c == 0 && a < len + c,
+                        "len {len} c {c} -> {a}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn aligned_len_rejects_zero_divisor() {
+        aligned_len(5, Some(0));
+    }
 
     #[test]
     fn pads_rows_and_tail() {
@@ -172,7 +217,7 @@ mod tests {
         let plan = assemble(&refs, cap, seq);
         let mut exec = BatchedAttention::new(KernelCtx::global());
         let outs = attention_scatter(&mut exec, &plan, &q, &k, &v, d, &lens,
-                                     heads, BatchedVariant::Full);
+                                     heads, &crate::kernels::BatchedVariant::Full);
         assert_eq!(outs.len(), fill);
         // per-request, per-head serial reference over the real positions
         let mut ws = Workspace::new();

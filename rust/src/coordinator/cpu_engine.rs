@@ -1,37 +1,42 @@
 //! CPU execution backend: serve real embeddings with **no XLA
-//! artifacts**, driving the `kernels::batched` core directly.
+//! artifacts**, driving the [`EncoderStack`](crate::model::EncoderStack)
+//! directly.
 //!
 //! The XLA worker executes an AOT-compiled encode artifact per batch;
 //! this module is its in-process twin. A [`CpuModel`] supplies a
 //! deterministic token→activation map (seeded Gaussian embedding table
-//! plus a sinusoidal position signal), and a [`CpuEngine`] turns one
-//! assembled [`BatchPlan`] into per-request pooled embeddings:
+//! plus a sinusoidal position signal) **and** the seeded multi-layer
+//! encoder weights; a [`CpuEngine`] turns one assembled [`BatchPlan`]
+//! into per-request pooled embeddings:
 //!
 //! 1. embed each real request's tokens (plus the landmark-alignment
-//!    padding tail) into a stacked `(capacity·seq × d_model)` buffer,
-//! 2. run every head of every request in parallel through
-//!    [`attention_scatter`] (full / Nyström / spectral-shift kernels),
+//!    padding tail) into one `(plen × d_model)` activation tensor per
+//!    request,
+//! 2. run the batch through [`EncoderStack::forward_batch`] — the seed
+//!    bare-attention block, then `layers − 1` pre-LN encoder blocks,
+//!    heads × requests fanned over the kernel pool through the
+//!    [`AttentionOp`](crate::model::AttentionOp) seam,
 //! 3. mean-pool each request's **real** rows into one `d_model` vector.
 //!
 //! Determinism contract: for a fixed [`CpuModelConfig`] and token
 //! sequence the served embedding is a pure function of the inputs —
 //! independent of batch composition, arrival order, and kernel thread
-//! count (the GEMM's fixed-block reduction order guarantees the last
-//! part). The end-to-end test `tests/integration_cpu_serving.rs` pins
-//! this against the seed scalar `attention::spectral_shift::reference`
-//! pipeline.
+//! count (every kernel splits work by problem shape, never pool size).
+//! `tests/model_parity.rs` pins this against the scalar multi-layer
+//! reference, and `tests/integration_cpu_serving.rs` end-to-end at the
+//! default `layers = 1`.
 //!
 //! Padding discipline: a request of length `len` executes at
-//! `padded_len(len)` positions (`len` rounded up to the landmark count
-//! for the O(n) variants so segment-means stays well-defined; exactly
-//! `len` for full attention). Rows past `padded_len` and slots past
-//! `plan.fill` are never touched — the padding-skip guarantee of
-//! [`attention_scatter`] — and pooled outputs only average real rows.
+//! `padded_len(len)` positions ([`aligned_len`] under the operator's
+//! landmark divisor; exactly `len` for divisor-free operators). Rows
+//! past `padded_len` and slots past `plan.fill` are never touched, and
+//! pooled outputs only average real rows.
 
-use super::batcher::{attention_scatter, BatchPlan};
+use super::batcher::{aligned_len, BatchPlan};
 use crate::attention::Tensor2;
 use crate::config::Variant;
 use crate::kernels::{BatchedAttention, BatchedVariant, KernelCtx, Workspace};
+use crate::model::{AttentionOp, EncoderStack};
 use crate::rngx::Rng;
 use std::sync::Arc;
 
@@ -42,14 +47,21 @@ pub struct CpuModelConfig {
     pub d_model: usize,
     /// Attention heads; must divide `d_model`.
     pub n_heads: usize,
-    /// Landmark count c for the O(n) variants.
+    /// Landmark count c for the O(n) variants (doubles as the Linformer
+    /// projection dimension — one rank budget across baselines).
     pub landmarks: usize,
     /// Newton-Schulz iterations for the A⁺ pseudoinverse.
     pub pinv_iters: usize,
     /// Embedding-table rows; token ids are wrapped into this range.
     pub vocab: usize,
-    /// Seed for the embedding table — fixes the served function.
+    /// Seed for the embedding table and encoder weights — fixes the
+    /// served function.
     pub seed: u64,
+    /// Encoder depth (≥ 1). `1` is the weightless seed block alone —
+    /// bitwise-identical to the pre-stack single-pass model.
+    pub layers: usize,
+    /// FFN expansion factor: inner width = `ffn_mult · d_model`.
+    pub ffn_mult: usize,
 }
 
 impl Default for CpuModelConfig {
@@ -61,6 +73,8 @@ impl Default for CpuModelConfig {
             pinv_iters: 8,
             vocab: 2048,
             seed: 42,
+            layers: 1,
+            ffn_mult: 4,
         }
     }
 }
@@ -73,7 +87,7 @@ impl Default for CpuModelConfig {
 pub struct CpuModel {
     cfg: CpuModelConfig,
     serving_variant: Variant,
-    kernel_variant: BatchedVariant,
+    stack: EncoderStack,
     /// vocab × d_model Gaussian embedding table (seeded).
     embed: Vec<f32>,
     /// sinusoid frequency per even dimension (d_model/2 entries),
@@ -87,15 +101,19 @@ impl CpuModel {
                 "d_model {} must be divisible by n_heads {}",
                 cfg.d_model, cfg.n_heads);
         assert!(cfg.landmarks > 0 && cfg.vocab > 0, "degenerate model config");
+        assert!(cfg.layers > 0, "encoder depth must be >= 1");
+        assert!(cfg.ffn_mult > 0, "ffn_mult must be >= 1");
         let mut rng = Rng::new(cfg.seed);
         let mut embed = vec![0.0f32; cfg.vocab * cfg.d_model];
         rng.fill_normal_f32(&mut embed, 0.0, 1.0);
         let kernel_variant =
             BatchedVariant::from_config(variant, cfg.landmarks, cfg.pinv_iters);
+        let stack = EncoderStack::new(kernel_variant, cfg.layers, cfg.d_model,
+                                      cfg.n_heads, cfg.ffn_mult, cfg.seed);
         let pos_freqs = (0..cfg.d_model / 2)
             .map(|h| 10_000f32.powf(-((2 * h) as f32) / cfg.d_model as f32))
             .collect();
-        CpuModel { cfg, serving_variant: variant, kernel_variant, embed, pos_freqs }
+        CpuModel { cfg, serving_variant: variant, stack, embed, pos_freqs }
     }
 
     pub fn d_model(&self) -> usize {
@@ -114,34 +132,52 @@ impl CpuModel {
         self.cfg.pinv_iters
     }
 
+    /// Encoder depth (seed block + full blocks).
+    pub fn layers(&self) -> usize {
+        self.cfg.layers
+    }
+
+    /// FFN expansion factor.
+    pub fn ffn_mult(&self) -> usize {
+        self.cfg.ffn_mult
+    }
+
     /// The serving-config variant this model executes.
     pub fn variant(&self) -> Variant {
         self.serving_variant
     }
 
-    /// The kernel dispatch the variant maps onto.
+    /// The kernel dispatch the variant maps onto (also the model's
+    /// `&dyn AttentionOp`).
     pub fn kernel_variant(&self) -> BatchedVariant {
-        self.kernel_variant
+        self.stack.variant()
+    }
+
+    /// The encoder stack this model serves through.
+    pub fn stack(&self) -> &EncoderStack {
+        &self.stack
+    }
+
+    /// One-line description for STATS / operator logs.
+    pub fn describe(&self) -> String {
+        format!("{} layers, variant={}, d_model={}, heads={}, ffn_mult={}",
+                self.cfg.layers,
+                AttentionOp::name(&self.stack.variant()),
+                self.cfg.d_model, self.cfg.n_heads, self.cfg.ffn_mult)
     }
 
     /// `Some(c)` when execution lengths must be divisible by the
-    /// landmark count (Nyström / spectral shift), `None` for full
-    /// attention.
+    /// landmark count (segment-means operators), `None` otherwise —
+    /// delegated to the attention operator through the stack.
     pub fn landmark_divisor(&self) -> Option<usize> {
-        match self.kernel_variant {
-            BatchedVariant::Full => None,
-            _ => Some(self.cfg.landmarks),
-        }
+        self.stack.landmark_divisor()
     }
 
-    /// The sequence length a `len`-token request executes at: `len`
-    /// rounded up to the landmark count for the landmark variants
-    /// (segment means require divisibility), unchanged for full.
+    /// The sequence length a `len`-token request executes at:
+    /// [`aligned_len`] under the operator's landmark divisor — the same
+    /// helper the batching paths use, so model and batcher cannot drift.
     pub fn padded_len(&self, len: usize) -> usize {
-        match self.landmark_divisor() {
-            Some(c) => (len + c - 1) / c * c,
-            None => len,
-        }
+        aligned_len(len, self.landmark_divisor())
     }
 
     /// Embed `tokens` into `out` (`tokens.len() × d_model`, row-major):
@@ -181,14 +217,14 @@ impl CpuModel {
 /// Batch executor owned by one coordinator CPU worker thread. Holds a
 /// shared handle to the model, the multi-head fan-out executor, and a
 /// staging arena so steady-state batches embed + execute with zero heap
-/// allocations.
+/// allocations from the arenas.
 ///
 /// A worker *pool* runs one `CpuEngine` per thread, all [`fork`]ed from
-/// the same engine: the (read-only) model — embedding table included —
-/// is shared behind an `Arc`, while the executor and staging arena are
-/// per-worker (they are the mutable state). Forked engines compute
-/// bitwise-identical embeddings: the model is literally the same
-/// memory, and the kernels are thread-count deterministic.
+/// the same engine: the (read-only) model — embedding table and encoder
+/// weights included — is shared behind an `Arc`, while the executor and
+/// staging arena are per-worker (they are the mutable state). Forked
+/// engines compute bitwise-identical embeddings: the model is literally
+/// the same memory, and the kernels are thread-count deterministic.
 ///
 /// [`fork`]: CpuEngine::fork
 pub struct CpuEngine {
@@ -221,6 +257,16 @@ impl CpuEngine {
         &self.model
     }
 
+    /// Pre-plan the staging arena for batches of `capacity` requests at
+    /// up to `max_seq` positions ([`EncoderStack::plan_sizes`] →
+    /// [`Workspace::plan`]), so even the first batch at the largest
+    /// bucket allocates nothing from the stage. The coordinator calls
+    /// this per worker engine before serving.
+    pub fn plan_for(&mut self, capacity: usize, max_seq: usize) {
+        let sizes = self.model.stack().plan_sizes(capacity, max_seq);
+        self.stage.plan(&sizes);
+    }
+
     /// Padding positions [`CpuEngine::encode_batch`] will execute on top
     /// of the real tokens for these request lengths (the CPU path's
     /// padding-waste metric: landmark-alignment tails only, since
@@ -229,19 +275,18 @@ impl CpuEngine {
         lens.iter().map(|&l| (self.model.padded_len(l) - l) as u64).sum()
     }
 
-    /// Execute one assembled batch: embed every real request, fan all
-    /// heads × requests over the kernel pool, and mean-pool each
-    /// request's real rows. `lens[r]` is request r's true token count,
-    /// exactly what the caller handed `assemble`. Returns one `d_model`
-    /// embedding per real request, in order.
+    /// Execute one assembled batch: embed every real request, forward
+    /// the batch through the encoder stack (heads × requests in
+    /// parallel on the kernel pool), and mean-pool each request's real
+    /// rows. `lens[r]` is request r's true token count, exactly what the
+    /// caller handed `assemble`. Returns one `d_model` embedding per
+    /// real request, in order.
     pub fn encode_batch(&mut self, plan: &BatchPlan, lens: &[usize]) -> Vec<Vec<f32>> {
         assert_eq!(lens.len(), plan.fill, "one length per real request");
         let d = self.model.cfg.d_model;
-        let per_req = plan.seq * d;
-        // stage only the real requests — a 1-request batch in a
-        // capacity-4 plan zero-fills a quarter of the dense tensor
-        let mut x = self.stage.take(plan.fill * per_req);
-        let mut plens = Vec::with_capacity(plan.fill);
+        // stage one activation tensor per real request — a 1-request
+        // batch in a capacity-4 plan stages exactly one tensor
+        let mut xs: Vec<Tensor2> = Vec::with_capacity(plan.fill);
         for (r, &len) in lens.iter().enumerate() {
             assert!(len > 0 && len <= plan.seq,
                     "request {r} length {len} outside 1..={}", plan.seq);
@@ -249,18 +294,26 @@ impl CpuEngine {
             // assemble() already PAD-filled the row tail, so the slice
             // covers the landmark-alignment padding tokens too
             let toks = &plan.tokens[r * plan.seq..r * plan.seq + plen];
-            self.model
-                .embed_into(toks, &mut x[r * per_req..r * per_req + plen * d]);
-            plens.push(plen);
+            let mut x = Tensor2 {
+                rows: plen,
+                cols: d,
+                data: self.stage.take(plen * d),
+            };
+            self.model.embed_into(toks, &mut x.data);
+            xs.push(x);
         }
-        let outs = attention_scatter(&mut self.exec, plan, &x, &x, &x, d,
-                                     &plens, self.model.cfg.n_heads,
-                                     self.model.kernel_variant);
-        self.stage.put(x);
-        outs.iter()
+        self.model
+            .stack
+            .forward_batch(&mut self.exec, &mut xs, &mut self.stage);
+        let outs = xs
+            .iter()
             .zip(lens)
             .map(|(t, &len)| mean_pool(t, len))
-            .collect()
+            .collect();
+        for t in xs {
+            self.stage.put(t.data);
+        }
+        outs
     }
 }
 
@@ -286,6 +339,7 @@ mod tests {
     use super::*;
     use crate::attention::spectral_shift::{reference, SpectralShiftConfig};
     use crate::coordinator::batcher::assemble;
+    use crate::model::reference::forward_ref;
 
     fn toks(n: usize, seed: i32) -> Vec<i32> {
         (0..n).map(|i| 3 + ((i as i32 * 17 + seed) % 2000)).collect()
@@ -299,6 +353,10 @@ mod tests {
         assert_eq!(m.padded_len(17), 32);
         assert_eq!(m.landmark_divisor(), Some(16));
         let m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
+        assert_eq!(m.padded_len(17), 17);
+        assert_eq!(m.landmark_divisor(), None);
+        // divisor-free O(n) baselines execute at the exact length too
+        let m = CpuModel::new(CpuModelConfig::default(), Variant::Linformer);
         assert_eq!(m.padded_len(17), 17);
         assert_eq!(m.landmark_divisor(), None);
     }
@@ -321,6 +379,17 @@ mod tests {
         let m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
         let x = m.embed_sequence(&[-5, 9999, i32::MAX], 3);
         assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn describe_names_depth_and_operator() {
+        let cfg = CpuModelConfig { layers: 4, ..Default::default() };
+        let m = CpuModel::new(cfg, Variant::SpectralShift);
+        let d = m.describe();
+        assert!(d.contains("4 layers"), "{d}");
+        assert!(d.contains("variant=spectral_shift"), "{d}");
+        assert_eq!(m.layers(), 4);
+        assert_eq!(m.ffn_mult(), 4);
     }
 
     #[test]
@@ -367,6 +436,27 @@ mod tests {
     }
 
     #[test]
+    fn multi_layer_encode_matches_stack_reference() {
+        // the engine at layers = 3 must equal the scalar multi-layer
+        // forward: embed → forward_ref → pool
+        let cfg = CpuModelConfig { layers: 3, ffn_mult: 2, ..Default::default() };
+        let model = CpuModel::new(cfg, Variant::SpectralShift);
+        let verify = CpuModel::new(cfg, Variant::SpectralShift);
+        let mut engine = CpuEngine::new(model);
+        let t = toks(100, 5);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let got = engine.encode_batch(&plan, &[t.len()]);
+        let plen = verify.padded_len(t.len());
+        let x = verify.embed_sequence(&t, plen);
+        let full = forward_ref(verify.stack(), &x);
+        let want = mean_pool(&full, t.len());
+        for (j, (a, b)) in got[0].iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "dim {j}: engine {a} vs stack reference {b}");
+        }
+    }
+
+    #[test]
     fn encode_batch_is_independent_of_batch_composition() {
         let mk = || CpuEngine::new(
             CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift));
@@ -396,6 +486,23 @@ mod tests {
             let _ = engine.encode_batch(&plan, &lens);
         }
         assert_eq!(engine.stage.allocations(), warm);
+    }
+
+    #[test]
+    fn planned_engine_first_batch_allocates_nothing_from_stage() {
+        // the multi-layer path exercises LN/FFN scratch too
+        let cfg = CpuModelConfig { layers: 3, ffn_mult: 2, ..Default::default() };
+        let mut engine = CpuEngine::new(
+            CpuModel::new(cfg, Variant::SpectralShift));
+        engine.plan_for(4, 128);
+        let planned = engine.stage.allocations();
+        let reqs = [toks(100, 8), toks(128, 9), toks(40, 10), toks(64, 11)];
+        let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+        let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+        let plan = assemble(&refs, 4, 128);
+        let _ = engine.encode_batch(&plan, &lens);
+        assert_eq!(engine.stage.allocations(), planned,
+                   "planned stage must cover the first full batch");
     }
 
     #[test]

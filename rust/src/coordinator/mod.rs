@@ -22,10 +22,11 @@
 //! Two execution backends implement the same submit/batch/execute/
 //! respond loop ([`ExecBackend`]): the PJRT workers execute compiled
 //! encode artifacts, and the CPU workers drive the in-process
-//! [`kernels`](crate::kernels) core through
-//! [`batcher::attention_scatter`] via [`cpu_engine::CpuEngine`] (one
-//! forked engine per worker, sharing one model). [`ExecBackend::auto`]
-//! picks XLA when artifacts + PJRT are available and falls back to CPU
+//! multi-layer [`model::EncoderStack`](crate::model::EncoderStack) on
+//! the [`kernels`](crate::kernels) core via [`cpu_engine::CpuEngine`]
+//! (one forked engine per worker, sharing one model; all attention
+//! routed through the `AttentionOp` seam). [`ExecBackend::auto`] picks
+//! XLA when artifacts + PJRT are available and falls back to CPU
 //! otherwise, so the stack serves real embeddings even with the offline
 //! `xla-stub` build.
 //!
@@ -83,7 +84,7 @@ pub mod cpu_engine;
 pub mod queue;
 pub mod router;
 
-pub use batcher::{assemble, scatter, BatchPlan};
+pub use batcher::{aligned_len, assemble, attention_scatter, scatter, BatchPlan};
 pub use cache::{EmbeddingCache, LruCache};
 pub use cpu_engine::{CpuEngine, CpuModel, CpuModelConfig};
 pub use queue::{BatchPolicy, BucketQueue, PushError, Queued, ShardedQueue};
@@ -158,7 +159,11 @@ impl ExecBackend {
             Ok(engine) => (ExecBackend::Xla(Arc::new(engine)), None),
             Err(e) => (
                 ExecBackend::Cpu(Box::new(CpuEngine::new(CpuModel::new(
-                    CpuModelConfig::default(),
+                    CpuModelConfig {
+                        layers: cfg.layers,
+                        ffn_mult: cfg.ffn_mult,
+                        ..Default::default()
+                    },
                     cfg.variant,
                 )))),
                 Some(e),
@@ -213,7 +218,7 @@ impl Scaffold {
     }
 
     fn into_coordinator(self, workers: Vec<std::thread::JoinHandle<()>>,
-                        kind: BackendKind) -> Coordinator {
+                        kind: BackendKind, model_desc: String) -> Coordinator {
         Coordinator {
             router: self.router,
             queue: self.queue,
@@ -224,6 +229,7 @@ impl Scaffold {
             next_id: std::sync::atomic::AtomicU64::new(0),
             backend_kind: kind,
             default_deadline: self.default_deadline,
+            model_desc,
         }
     }
 }
@@ -241,6 +247,9 @@ pub struct Coordinator {
     next_id: std::sync::atomic::AtomicU64,
     backend_kind: BackendKind,
     default_deadline: Option<Duration>,
+    /// One-line served-model identification (depth, operator, widths) —
+    /// the `model:` line of the STATS report.
+    model_desc: String,
 }
 
 impl Coordinator {
@@ -290,7 +299,8 @@ impl Coordinator {
                     })
                     .expect("spawn coordinator worker"));
         }
-        Ok(s.into_coordinator(workers, BackendKind::Xla))
+        let desc = format!("artifact encoder, variant={}", cfg.variant.token());
+        Ok(s.into_coordinator(workers, BackendKind::Xla, desc))
     }
 
     fn start_cpu(engine: Box<CpuEngine>, cfg: &ServingConfig)
@@ -306,12 +316,21 @@ impl Coordinator {
             }
         }
         let s = Scaffold::new(&buckets, cfg);
+        let model_desc = engine.model().describe();
 
         // one engine per worker, all sharing the model of the one we
-        // were handed
-        let engine = *engine;
-        let mut engines: Vec<CpuEngine> =
-            (1..s.n_workers).map(|_| engine.fork()).collect();
+        // were handed; every stage arena is pre-planned for a full batch
+        // at the largest bucket so first batches allocate nothing
+        let mut engine = *engine;
+        let max_bucket = *buckets.last().expect("nonempty buckets");
+        engine.plan_for(cfg.max_batch, max_bucket);
+        let mut engines: Vec<CpuEngine> = (1..s.n_workers)
+            .map(|_| {
+                let mut e = engine.fork();
+                e.plan_for(cfg.max_batch, max_bucket);
+                e
+            })
+            .collect();
         engines.insert(0, engine);
 
         let mut workers = Vec::with_capacity(s.n_workers);
@@ -331,12 +350,19 @@ impl Coordinator {
                     })
                     .expect("spawn coordinator worker"));
         }
-        Ok(s.into_coordinator(workers, BackendKind::Cpu))
+        Ok(s.into_coordinator(workers, BackendKind::Cpu, model_desc))
     }
 
     /// The execution backend serving this coordinator's requests.
     pub fn backend(&self) -> BackendKind {
         self.backend_kind
+    }
+
+    /// One-line description of the served model (encoder depth,
+    /// attention operator, widths) — surfaced as the STATS `model:`
+    /// line.
+    pub fn model_desc(&self) -> &str {
+        &self.model_desc
     }
 
     /// Batch-execution worker threads in the pool.
@@ -750,5 +776,25 @@ mod tests {
         assert_eq!(c.queue_shards(), 2);
         assert_eq!(c.cache_capacity(), 16);
         assert_eq!(c.cache_len(), 0);
+        assert!(c.model_desc().contains("1 layers"), "{}", c.model_desc());
+        assert!(c.model_desc().contains("variant=spectral_shift"),
+                "{}", c.model_desc());
+    }
+
+    #[test]
+    fn auto_cpu_backend_inherits_encoder_knobs() {
+        let cfg = ServingConfig {
+            artifacts_dir: "definitely/not/a/real/artifacts/dir".into(),
+            layers: 3,
+            ffn_mult: 2,
+            ..Default::default()
+        };
+        match ExecBackend::auto(&cfg) {
+            ExecBackend::Cpu(engine) => {
+                assert_eq!(engine.model().layers(), 3);
+                assert_eq!(engine.model().ffn_mult(), 2);
+            }
+            ExecBackend::Xla(_) => panic!("no artifacts, must fall back"),
+        }
     }
 }

@@ -7,13 +7,23 @@
 //! its head with a *sequential* [`KernelCtx`]: the batch dimension
 //! already saturates the pool, and keeping nested work sequential both
 //! avoids pool-in-pool deadlock and preserves bitwise determinism.
+//!
+//! Since the encoder-stack refactor the executor dispatches through the
+//! [`AttentionOp`] seam: [`BatchedAttention::run`] takes any
+//! `&dyn AttentionOp`, and [`BatchedVariant`] — the Copy-able serving
+//! configuration covering all six variants — implements the trait by
+//! building the matching op value on the stack (no allocation) and
+//! delegating, so config-driven callers and hand-built ops share one
+//! code path.
 
 use super::workspace::Workspace;
-use super::{flash_attention, KernelCtx, SendMut};
-use crate::attention::nystrom::nystrom_attention_with;
-use crate::attention::spectral_shift::{spectral_shift_attention_with, SpectralShiftConfig};
-use crate::attention::{default_scale, Tensor2};
+use super::{KernelCtx, SendMut};
+use crate::attention::spectral_shift::SpectralShiftConfig;
+use crate::attention::{
+    FullOp, LinformerOp, LshOp, NystromOp, SparseOp, SpectralShiftOp, Tensor2,
+};
 use crate::config::Variant;
+use crate::model::AttentionOp;
 
 /// One attention problem: a single head of a single request.
 pub struct AttnTask {
@@ -22,7 +32,11 @@ pub struct AttnTask {
     pub v: Tensor2,
 }
 
-/// Which attention kernel a batch executes.
+/// Which attention kernel a batch executes — the Copy-able serving-side
+/// configuration for every variant in Table 1. Implements
+/// [`AttentionOp`] by delegating to the per-variant op structs, so a
+/// `BatchedVariant` can be passed anywhere `&dyn AttentionOp` is
+/// expected.
 #[derive(Clone, Copy, Debug)]
 pub enum BatchedVariant {
     /// Exact softmax attention (flash streaming).
@@ -31,11 +45,24 @@ pub enum BatchedVariant {
     Nystrom { landmarks: usize, pinv_iters: usize },
     /// Spectral shifting (the paper's method).
     SpectralShift(SpectralShiftConfig),
+    /// Linformer sequence-axis projection to `kdim` rows.
+    Linformer { kdim: usize, seed: u64 },
+    /// Reformer-style LSH bucketing (reference-grade scalar op).
+    Lsh { rounds: usize, bits: Option<usize>, seed: u64 },
+    /// Local+strided sparse pattern (reference-grade scalar op).
+    Sparse { window: Option<usize>, stride: Option<usize> },
 }
 
+/// Fixed projection/hash seed for the serving-side Linformer and LSH
+/// baselines: like the CPU model's embedding-table seed, it is part of
+/// the served function, not a tunable.
+const BASELINE_SEED: u64 = 0x55a_f0e2;
+
 impl BatchedVariant {
-    /// Map a serving-config variant onto its kernel, with the given
-    /// landmark count / pinv iterations for the O(n) methods.
+    /// Map a serving-config variant onto its kernel. `landmarks` doubles
+    /// as the Linformer projection dimension so every O(n) baseline runs
+    /// at the same rank budget c (the comparison Table 1 makes);
+    /// `pinv_iters` only affects the landmark variants.
     pub fn from_config(variant: Variant, landmarks: usize, pinv_iters: usize) -> Self {
         match variant {
             Variant::Full => BatchedVariant::Full,
@@ -45,7 +72,54 @@ impl BatchedVariant {
                 cfg.pinv_iters = pinv_iters;
                 BatchedVariant::SpectralShift(cfg)
             }
+            Variant::Linformer => {
+                BatchedVariant::Linformer { kdim: landmarks, seed: BASELINE_SEED }
+            }
+            Variant::Lsh => {
+                BatchedVariant::Lsh { rounds: 2, bits: None, seed: BASELINE_SEED }
+            }
+            Variant::Sparse => {
+                BatchedVariant::Sparse { window: None, stride: None }
+            }
         }
+    }
+
+    /// Build the op value this configuration denotes and hand it to `f`
+    /// — the single enum→op construction point. `name`, `attend` and
+    /// `landmark_divisor` all delegate through here, so metrics keys
+    /// can never desynchronize from the kernels actually executed.
+    fn with_op<R>(&self, f: impl FnOnce(&dyn AttentionOp) -> R) -> R {
+        match *self {
+            BatchedVariant::Full => f(&FullOp),
+            BatchedVariant::Nystrom { landmarks, pinv_iters } => {
+                f(&NystromOp { landmarks, pinv_iters })
+            }
+            BatchedVariant::SpectralShift(cfg) => f(&SpectralShiftOp(cfg)),
+            BatchedVariant::Linformer { kdim, seed } => {
+                f(&LinformerOp { kdim, seed })
+            }
+            BatchedVariant::Lsh { rounds, bits, seed } => {
+                f(&LshOp { rounds, bits, seed })
+            }
+            BatchedVariant::Sparse { window, stride } => {
+                f(&SparseOp { window, stride })
+            }
+        }
+    }
+}
+
+impl AttentionOp for BatchedVariant {
+    fn name(&self) -> &'static str {
+        self.with_op(|op| op.name())
+    }
+
+    fn landmark_divisor(&self) -> Option<usize> {
+        self.with_op(|op| op.landmark_divisor())
+    }
+
+    fn attend(&self, ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+              ws: &mut Workspace) -> Tensor2 {
+        self.with_op(|op| op.attend(ctx, q, k, v, ws))
     }
 }
 
@@ -70,9 +144,17 @@ impl BatchedAttention {
         &mut self.ws_main
     }
 
-    /// Execute every task in parallel; returns one output per task, in
-    /// order. Deterministic: identical results for any pool size.
-    pub fn run(&mut self, tasks: &[AttnTask], variant: BatchedVariant) -> Vec<Tensor2> {
+    /// The execution context this executor fans tasks out on (the
+    /// encoder stack runs its LN/FFN kernels on the same context so the
+    /// whole layer shares one pool).
+    pub fn ctx(&self) -> &KernelCtx {
+        &self.ctx
+    }
+
+    /// Execute every task in parallel through the [`AttentionOp`] seam;
+    /// returns one output per task, in order. Deterministic: identical
+    /// results for any pool size.
+    pub fn run(&mut self, tasks: &[AttnTask], op: &dyn AttentionOp) -> Vec<Tensor2> {
         let nt = tasks.len();
         if nt == 0 {
             return Vec::new();
@@ -87,33 +169,19 @@ impl BatchedAttention {
         // run_blocks) so the scope_for caller lane stays busy for the
         // whole batch instead of finishing one task and idling
         self.ctx.run_blocks(nt, |_chunk, range| {
+            let seq = KernelCtx::sequential();
             for i in range {
                 // SAFETY: task i exclusively owns slot i and output i;
                 // both vectors outlive the fork-join.
                 let ws = unsafe { &mut *sbase.0.add(i) };
                 let t = &tasks[i];
-                let out = run_one(t, variant, ws);
+                let out = op.attend(&seq, &t.q, &t.k, &t.v, ws);
                 unsafe {
                     *obase.0.add(i) = out;
                 }
             }
         });
         outs
-    }
-}
-
-fn run_one(t: &AttnTask, variant: BatchedVariant, ws: &mut Workspace) -> Tensor2 {
-    let seq = KernelCtx::sequential();
-    match variant {
-        BatchedVariant::Full => {
-            flash_attention(&seq, &t.q, &t.k, &t.v, default_scale(t.q.cols), ws)
-        }
-        BatchedVariant::Nystrom { landmarks, pinv_iters } => {
-            nystrom_attention_with(&t.q, &t.k, &t.v, landmarks, pinv_iters, None, &seq, ws)
-        }
-        BatchedVariant::SpectralShift(cfg) => {
-            spectral_shift_attention_with(&t.q, &t.k, &t.v, &cfg, &seq, ws)
-        }
     }
 }
 
@@ -126,7 +194,52 @@ pub fn attention_batched(
     exec: &mut BatchedAttention,
     reqs: &[(Tensor2, Tensor2, Tensor2)],
     n_heads: usize,
-    variant: BatchedVariant,
+    op: &dyn AttentionOp,
+) -> Vec<Tensor2> {
+    let refs: Vec<(&Tensor2, &Tensor2, &Tensor2)> =
+        reqs.iter().map(|(q, k, v)| (q, k, v)).collect();
+    attention_batched_core(exec, &refs, n_heads, op, false)
+}
+
+/// [`attention_batched`] for *self*-attention over per-request
+/// activations: q = k = v = `xs[r]` — one activation tensor per
+/// request, no triplicated staging. Merged outputs are fresh
+/// allocations, like [`attention_batched`].
+pub fn attention_batched_self(
+    exec: &mut BatchedAttention,
+    xs: &[Tensor2],
+    n_heads: usize,
+    op: &dyn AttentionOp,
+) -> Vec<Tensor2> {
+    let refs: Vec<(&Tensor2, &Tensor2, &Tensor2)> =
+        xs.iter().map(|x| (x, x, x)).collect();
+    attention_batched_core(exec, &refs, n_heads, op, false)
+}
+
+/// [`attention_batched_self`] with the merged per-request outputs taken
+/// from the executor's scratch arena instead of freshly allocated — the
+/// caller MUST return each output's buffer with
+/// `exec.scratch().put(out.data)` once consumed, or the arena take/put
+/// imbalance shows up as steady-state allocations. This is the encoder
+/// stack's per-block path: it recycles every attention output within
+/// the same batch, so serving stays allocation-free once warm.
+pub fn attention_batched_self_pooled(
+    exec: &mut BatchedAttention,
+    xs: &[Tensor2],
+    n_heads: usize,
+    op: &dyn AttentionOp,
+) -> Vec<Tensor2> {
+    let refs: Vec<(&Tensor2, &Tensor2, &Tensor2)> =
+        xs.iter().map(|x| (x, x, x)).collect();
+    attention_batched_core(exec, &refs, n_heads, op, true)
+}
+
+fn attention_batched_core(
+    exec: &mut BatchedAttention,
+    reqs: &[(&Tensor2, &Tensor2, &Tensor2)],
+    n_heads: usize,
+    op: &dyn AttentionOp,
+    pooled: bool,
 ) -> Vec<Tensor2> {
     assert!(n_heads > 0, "n_heads must be positive");
     if reqs.is_empty() {
@@ -148,7 +261,7 @@ pub fn attention_batched(
             });
         }
     }
-    let head_outs = exec.run(&tasks, variant);
+    let head_outs = exec.run(&tasks, op);
     // stitch heads back per request
     let mut outs = Vec::with_capacity(reqs.len());
     let mut it = head_outs.into_iter();
@@ -156,7 +269,15 @@ pub fn attention_batched(
     let mut slot = 0;
     for (q, _, _) in reqs {
         let dh = q.cols / n_heads;
-        let mut merged = Tensor2::zeros(q.rows, q.cols);
+        let mut merged = if pooled {
+            Tensor2 {
+                rows: q.rows,
+                cols: q.cols,
+                data: exec.ws_main.take(q.rows * q.cols),
+            }
+        } else {
+            Tensor2::zeros(q.rows, q.cols)
+        };
         for h in 0..n_heads {
             let head = it.next().expect("one output per task");
             assert_eq!((head.rows, head.cols), (q.rows, dh));
@@ -193,6 +314,8 @@ fn slice_head(ws: &mut Workspace, x: &Tensor2, h: usize, dh: usize) -> Tensor2 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::flash_attention;
+    use crate::attention::default_scale;
     use crate::rngx::Rng;
 
     fn reqs(seed: u64, shapes: &[(usize, usize)]) -> Vec<(Tensor2, Tensor2, Tensor2)> {
@@ -213,7 +336,7 @@ mod tests {
     fn batched_full_matches_serial_single_head() {
         let rs = reqs(1, &[(48, 8), (64, 8), (16, 8)]);
         let mut exec = BatchedAttention::new(KernelCtx::global());
-        let outs = attention_batched(&mut exec, &rs, 1, BatchedVariant::Full);
+        let outs = attention_batched(&mut exec, &rs, 1, &BatchedVariant::Full);
         assert_eq!(outs.len(), 3);
         let mut ws = Workspace::new();
         for ((q, k, v), out) in rs.iter().zip(&outs) {
@@ -229,7 +352,7 @@ mod tests {
         // its column slice
         let rs = reqs(2, &[(32, 16)]);
         let mut exec = BatchedAttention::new(KernelCtx::global());
-        let outs = attention_batched(&mut exec, &rs, 4, BatchedVariant::Full);
+        let outs = attention_batched(&mut exec, &rs, 4, &BatchedVariant::Full);
         let (q, k, v) = &rs[0];
         let mut ws = Workspace::new();
         for h in 0..4 {
@@ -249,11 +372,87 @@ mod tests {
         let rs = reqs(3, &[(64, 16), (64, 16)]);
         let cfg = SpectralShiftConfig::new(8);
         let mut exec = BatchedAttention::new(KernelCtx::global());
-        let a = attention_batched(&mut exec, &rs, 2, BatchedVariant::SpectralShift(cfg));
+        let a = attention_batched(&mut exec, &rs, 2,
+                                  &BatchedVariant::SpectralShift(cfg));
         let mut exec_seq = BatchedAttention::new(KernelCtx::sequential());
-        let b = attention_batched(&mut exec_seq, &rs, 2, BatchedVariant::SpectralShift(cfg));
+        let b = attention_batched(&mut exec_seq, &rs, 2,
+                                  &BatchedVariant::SpectralShift(cfg));
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn self_attention_equals_triplicated_inputs() {
+        // the encoder stack's q = k = v entry point must be the same
+        // function as the general one fed three copies
+        let mut rng = Rng::new(9);
+        let xs = vec![
+            Tensor2::randn(&mut rng, 64, 16, 1.0),
+            Tensor2::randn(&mut rng, 32, 16, 1.0),
+        ];
+        let trips: Vec<(Tensor2, Tensor2, Tensor2)> =
+            xs.iter().map(|x| (x.clone(), x.clone(), x.clone())).collect();
+        let op = BatchedVariant::SpectralShift(SpectralShiftConfig::new(8));
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let a = attention_batched_self(&mut exec, &xs, 2, &op);
+        let b = attention_batched(&mut exec, &trips, 2, &op);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn pooled_self_attention_recycles_outputs_through_scratch() {
+        let mut rng = Rng::new(11);
+        let xs = vec![
+            Tensor2::randn(&mut rng, 64, 16, 1.0),
+            Tensor2::randn(&mut rng, 32, 16, 1.0),
+        ];
+        let op = BatchedVariant::Full;
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        // pooled and unpooled are the same function
+        let plain = attention_batched_self(&mut exec, &xs, 2, &op);
+        let pooled = attention_batched_self_pooled(&mut exec, &xs, 2, &op);
+        for (p, q) in plain.iter().zip(&pooled) {
+            assert_eq!(p.data, q.data);
+        }
+        for t in pooled {
+            exec.scratch().put(t.data);
+        }
+        // steady state: pooled batches whose outputs are returned never
+        // allocate from any executor arena
+        let arena = |e: &BatchedAttention| -> usize {
+            e.slots.iter().map(|w| w.allocations()).sum::<usize>()
+                + e.ws_main.allocations()
+        };
+        let warm = arena(&exec);
+        for _ in 0..3 {
+            let outs = attention_batched_self_pooled(&mut exec, &xs, 2, &op);
+            for t in outs {
+                exec.scratch().put(t.data);
+            }
+        }
+        assert_eq!(arena(&exec), warm,
+                   "returned pooled outputs must keep the arenas flat");
+    }
+
+    #[test]
+    fn all_six_variants_execute_batched() {
+        let rs = reqs(5, &[(64, 16)]);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        for variant in [
+            BatchedVariant::Full,
+            BatchedVariant::Nystrom { landmarks: 8, pinv_iters: 6 },
+            BatchedVariant::SpectralShift(SpectralShiftConfig::new(8)),
+            BatchedVariant::Linformer { kdim: 8, seed: 1 },
+            BatchedVariant::Lsh { rounds: 2, bits: None, seed: 1 },
+            BatchedVariant::Sparse { window: None, stride: None },
+        ] {
+            let outs = attention_batched(&mut exec, &rs, 2, &variant);
+            assert_eq!(outs.len(), 1, "{}", variant.name());
+            assert!(outs[0].data.iter().all(|x| x.is_finite()),
+                    "{}", variant.name());
         }
     }
 
@@ -261,11 +460,11 @@ mod tests {
     fn workspace_slots_recycle_across_batches() {
         let rs = reqs(4, &[(64, 8), (64, 8)]);
         let mut exec = BatchedAttention::new(KernelCtx::global());
-        let _ = attention_batched(&mut exec, &rs, 2, BatchedVariant::Full);
+        let _ = attention_batched(&mut exec, &rs, 2, &BatchedVariant::Full);
         let warm: usize = exec.slots.iter().map(|w| w.allocations()).sum::<usize>()
             + exec.ws_main.allocations();
         for _ in 0..3 {
-            let _ = attention_batched(&mut exec, &rs, 2, BatchedVariant::Full);
+            let _ = attention_batched(&mut exec, &rs, 2, &BatchedVariant::Full);
         }
         let after: usize = exec.slots.iter().map(|w| w.allocations()).sum::<usize>()
             + exec.ws_main.allocations();
@@ -289,5 +488,21 @@ mod tests {
         }
         assert!(matches!(BatchedVariant::from_config(Variant::Full, 8, 4),
                          BatchedVariant::Full));
+        // linformer runs at the same rank budget as the landmark methods
+        match BatchedVariant::from_config(Variant::Linformer, 24, 4) {
+            BatchedVariant::Linformer { kdim, .. } => assert_eq!(kdim, 24),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(BatchedVariant::from_config(Variant::Lsh, 8, 4),
+                         BatchedVariant::Lsh { .. }));
+        assert!(matches!(BatchedVariant::from_config(Variant::Sparse, 8, 4),
+                         BatchedVariant::Sparse { .. }));
+        // only the landmark variants constrain execution lengths
+        assert_eq!(BatchedVariant::from_config(Variant::Linformer, 24, 4)
+                       .landmark_divisor(),
+                   None);
+        assert_eq!(BatchedVariant::from_config(Variant::Nystrom, 24, 4)
+                       .landmark_divisor(),
+                   Some(24));
     }
 }

@@ -128,6 +128,62 @@ pub fn flash_attention(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
     out
 }
 
+/// Fused layer normalization with gain and bias, row-parallel:
+/// out[i,j] = (x[i,j] − μᵢ)/√(σᵢ² + eps) · gain[j] + bias[j].
+///
+/// μ/σ² accumulate left-to-right over the row (a pure function of the
+/// row contents, never the thread count), so outputs inherit the
+/// kernel-core bitwise thread-count determinism. The output tensor is
+/// backed by `ws` scratch — recycle with `ws.put(out.data)`.
+pub fn layernorm(ctx: &KernelCtx, x: &Tensor2, gain: &[f32], bias: &[f32],
+                 eps: f32, ws: &mut Workspace) -> Tensor2 {
+    let (n, d) = (x.rows, x.cols);
+    assert_eq!(gain.len(), d, "layernorm gain width");
+    assert_eq!(bias.len(), d, "layernorm bias width");
+    let mut out = Tensor2 { rows: n, cols: d, data: ws.take(n * d) };
+    par_rows(ctx, &mut out.data, n, d, |i, orow| {
+        let xrow = x.row(i);
+        let mut mean = 0.0f32;
+        for &v in xrow {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xrow {
+            let c = v - mean;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = (xrow[j] - mean) * inv * gain[j] + bias[j];
+        }
+    });
+    out
+}
+
+/// Fused bias + GELU (tanh form), in place and row-parallel:
+/// x[i,j] ← gelu(x[i,j] + bias[j]). This is the FFN activation the
+/// encoder stack runs between its two GEMMs; fusing the bias add into
+/// the activation pass saves one full traversal of the (n × ffn) tensor.
+pub fn bias_gelu(ctx: &KernelCtx, x: &mut Tensor2, bias: &[f32]) {
+    assert_eq!(bias.len(), x.cols, "bias width mismatch");
+    let (n, d) = (x.rows, x.cols);
+    par_rows(ctx, &mut x.data, n, d, |_i, row| {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v = gelu(*v + b);
+        }
+    });
+}
+
+/// GELU, tanh approximation (the form the exported encoder uses):
+/// 0.5·z·(1 + tanh(√(2/π)·(z + 0.044715·z³))).
+#[inline(always)]
+pub fn gelu(z: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    0.5 * z * (1.0 + (SQRT_2_OVER_PI * (z + 0.044_715 * z * z * z)).tanh())
+}
+
 /// f32 dot product, 8-wide unrolled (kernel-core counterpart of the
 /// reference `attention::dot_f32`; kept separate so the reference path
 /// stays byte-for-byte the seed implementation).
@@ -236,6 +292,78 @@ mod tests {
         // dense reference via softmax_gemm_ref with landmark set = keys
         let slow = softmax_gemm_ref(&q, &k, &v, scale);
         assert!(fast.max_abs_diff(&slow) < 1e-4, "{}", fast.max_abs_diff(&slow));
+    }
+
+    #[test]
+    fn layernorm_rows_are_normalized() {
+        let mut rng = Rng::new(11);
+        let x = Tensor2::randn(&mut rng, 40, 16, 3.0);
+        let gain = vec![1.0f32; 16];
+        let bias = vec![0.0f32; 16];
+        let mut ws = Workspace::new();
+        let y = layernorm(&KernelCtx::global(), &x, &gain, &bias, 1e-5, &mut ws);
+        for i in 0..y.rows {
+            let mean: f32 = y.row(i).iter().sum::<f32>() / 16.0;
+            let var: f32 = y.row(i).iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5, "row {i} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {i} var {var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_applies_gain_and_bias() {
+        let x = Tensor2::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let gain = vec![2.0f32; 4];
+        let bias = vec![10.0f32; 4];
+        let mut ws = Workspace::new();
+        let y = layernorm(&KernelCtx::sequential(), &x, &gain, &bias, 1e-5, &mut ws);
+        // plain LN of the same row, scaled by 2 and shifted by 10
+        let plain = layernorm(&KernelCtx::sequential(), &x,
+                              &[1.0; 4], &[0.0; 4], 1e-5, &mut ws);
+        for j in 0..4 {
+            assert!((y.data[j] - (2.0 * plain.data[j] + 10.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_threads_bitwise_identical() {
+        let mut rng = Rng::new(12);
+        let x = Tensor2::randn(&mut rng, 130, 32, 1.0);
+        let mut gain = vec![0.0f32; 32];
+        let mut bias = vec![0.0f32; 32];
+        rng.fill_normal_f32(&mut gain, 1.0, 0.1);
+        rng.fill_normal_f32(&mut bias, 0.0, 0.1);
+        let mut ws = Workspace::new();
+        let seq = layernorm(&KernelCtx::sequential(), &x, &gain, &bias, 1e-5, &mut ws);
+        let par = layernorm(&KernelCtx::global(), &x, &gain, &bias, 1e-5, &mut ws);
+        assert_eq!(seq.data, par.data);
+    }
+
+    #[test]
+    fn bias_gelu_matches_scalar_and_is_deterministic() {
+        let mut rng = Rng::new(13);
+        let base = Tensor2::randn(&mut rng, 70, 24, 2.0);
+        let mut bias = vec![0.0f32; 24];
+        rng.fill_normal_f32(&mut bias, 0.0, 0.5);
+        let mut a = base.clone();
+        bias_gelu(&KernelCtx::global(), &mut a, &bias);
+        let mut b = base.clone();
+        bias_gelu(&KernelCtx::sequential(), &mut b, &bias);
+        assert_eq!(a.data, b.data, "thread count must not change bits");
+        for (i, (&got, &x)) in a.data.iter().zip(&base.data).enumerate() {
+            let want = gelu(x + bias[i % 24]);
+            assert_eq!(got, want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert_eq!(gelu(0.0), 0.0);
+        // gelu(x) → x for large x, → 0 for very negative x
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        // tanh-form value at 1.0 ≈ 0.8412
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
     }
 
     #[test]

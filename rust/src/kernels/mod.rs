@@ -64,8 +64,13 @@ pub mod fused;
 pub mod gemm;
 pub mod workspace;
 
-pub use batched::{attention_batched, AttnTask, BatchedAttention, BatchedVariant};
-pub use fused::{flash_attention, softmax_gemm, softmax_scores};
+pub use batched::{
+    attention_batched, attention_batched_self, attention_batched_self_pooled,
+    AttnTask, BatchedAttention, BatchedVariant,
+};
+pub use fused::{
+    bias_gelu, flash_attention, gelu, layernorm, softmax_gemm, softmax_scores,
+};
 pub use gemm::{gemm_f32, gemm_into, transpose_into};
 pub use workspace::Workspace;
 

@@ -45,6 +45,19 @@ impl Workspace {
         buf
     }
 
+    /// Pre-plan the arena for a known peak working set: take every
+    /// buffer in `sizes` simultaneously, then return them all. After a
+    /// plan, any take/put sequence whose concurrent demand is covered by
+    /// `sizes` (element-wise) replays allocation-free — the encoder
+    /// stack plans its per-layer activations this way at engine start,
+    /// so even the *first* batch at the planned shape allocates nothing.
+    pub fn plan(&mut self, sizes: &[usize]) {
+        let bufs: Vec<Vec<f32>> = sizes.iter().map(|&s| self.take(s)).collect();
+        for b in bufs {
+            self.put(b);
+        }
+    }
+
     /// Return a buffer to the pool for reuse.
     pub fn put(&mut self, buf: Vec<f32>) {
         if buf.capacity() > 0 {
@@ -96,6 +109,30 @@ mod tests {
             ws.put(b);
         }
         assert_eq!(ws.allocations(), warm, "arena must not allocate once warm");
+    }
+
+    #[test]
+    fn planned_arena_serves_first_use_allocation_free() {
+        let mut ws = Workspace::new();
+        ws.plan(&[128, 128, 64, 32]);
+        let planned = ws.allocations();
+        // a workload whose concurrent demand fits the plan: no growth,
+        // even on the very first replay
+        for _ in 0..5 {
+            let a = ws.take(128);
+            let b = ws.take(100); // served by the second 128 slot
+            let c = ws.take(64);
+            let d = ws.take(17);
+            ws.put(a);
+            ws.put(b);
+            ws.put(c);
+            ws.put(d);
+        }
+        assert_eq!(ws.allocations(), planned, "planned shapes must not allocate");
+        // demand beyond the plan still works (and is counted)
+        let big = ws.take(4096);
+        assert_eq!(ws.allocations(), planned + 1);
+        ws.put(big);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!   text artifacts.
 //! * **L3** (this crate) — the serving/training stack: request router,
 //!   dynamic batcher, dual execution backends (PJRT artifacts or the
-//!   in-process CPU kernel core), metrics, plus every substrate the
+//!   in-process multi-layer [`model::EncoderStack`] on the CPU kernel
+//!   core, with every attention variant behind the
+//!   [`model::AttentionOp`] seam), metrics, plus every substrate the
 //!   paper's evaluation needs (dense linear algebra, SPSD model zoo,
 //!   attention baselines, spectrum analysis, workload generation).
 //!
@@ -85,6 +87,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod minirt;
+pub mod model;
 pub mod proptest_mini;
 pub mod rngx;
 pub mod runtime;

@@ -40,7 +40,9 @@ ssaformer — spectral-shifting attention serving/training stack
 
 USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
 
-  serve    --config FILE | --variant full|nystrom|ss --addr HOST:PORT
+  serve    --config FILE | --addr HOST:PORT
+           --variant full|nystrom|ss|linformer|lsh|sparse
+           --layers N (1 = seed single-pass model) --ffn-mult N
            --artifacts DIR --max-batch N --max-wait-ms MS
            --workers N --shards N --cache-capacity N (0 = off)
            --default-deadline-ms MS (0 = none) --deadline-margin-ms MS
@@ -104,6 +106,12 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
     if let Some(m) = flags.get("deadline-margin-ms") {
         cfg.deadline_margin_ms = m.parse().map_err(|_| "bad deadline-margin-ms")?;
     }
+    if let Some(l) = flags.get("layers") {
+        cfg.layers = l.parse().map_err(|_| "bad layers")?;
+    }
+    if let Some(f) = flags.get("ffn-mult") {
+        cfg.ffn_mult = f.parse().map_err(|_| "bad ffn-mult")?;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -136,6 +144,7 @@ fn cmd_serve(flags: &Flags) -> i32 {
         }
     };
     let backend_name = coordinator.backend().name();
+    println!("model: {}", coordinator.model_desc());
     println!("worker pool: {} workers over {} queue shards, cache {}",
              coordinator.workers(), coordinator.queue_shards(),
              match coordinator.cache_capacity() {

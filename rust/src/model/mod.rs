@@ -1,0 +1,47 @@
+//! The serving model layer: a multi-layer transformer encoder over a
+//! pluggable attention operator.
+//!
+//! The paper's claim — and the claim of every O(n) baseline it is
+//! compared against — is about an attention *operator* dropped into an
+//! otherwise-fixed encoder (Linformer and Skyformer both evaluate this
+//! way). This module is that encoder:
+//!
+//! * [`AttentionOp`] (`op`) — the one dispatch seam. Every variant in
+//!   `attention/` implements it; so does the Copy-able serving config
+//!   [`BatchedVariant`](crate::kernels::BatchedVariant).
+//! * [`EncoderLayer`] (`layer`) — one pre-LN block: LN → MHA → residual
+//!   → LN → FFN (fused bias+GELU between two blocked GEMMs) → residual.
+//! * [`EncoderStack`] (`stack`) — `layers` blocks sharing one planned
+//!   [`Workspace`](crate::kernels::Workspace); the first block is the
+//!   weightless *seed block* (bare attention), so `layers = 1` is
+//!   bitwise-identical to the pre-stack single-pass serving model.
+//! * [`reference`] — the scalar multi-layer forward the kernel stack is
+//!   parity-tested against (`tests/model_parity.rs`).
+//!
+//! `coordinator::cpu_engine` owns embedding and pooling and routes all
+//! compute through [`EncoderStack::forward_batch`]; nothing in the
+//! serving path matches on a variant enum anymore.
+//!
+//! # Invariants
+//!
+//! * **Pure served function** — a request's final activation depends
+//!   only on `(model seed, shape, tokens)`: never on batch composition,
+//!   worker assignment, or pool size (inherited from the kernel layer's
+//!   fixed-block splits; pinned by `tests/model_parity.rs`).
+//! * **Depth compatibility** — the depth-1 stack *is* the seed model,
+//!   bitwise; deeper stacks prepend nothing and append full blocks, so
+//!   caches and recorded traces remain valid exactly when `layers` (and
+//!   the rest of the model config) is unchanged.
+//! * **Workspace discipline** — `forward_batch` takes all LN/FFN
+//!   scratch from the caller's arena and returns it before exiting;
+//!   [`EncoderStack::plan_sizes`] names the peak working set so engines
+//!   pre-plan it.
+
+pub mod layer;
+pub mod op;
+pub mod reference;
+pub mod stack;
+
+pub use layer::{EncoderLayer, LN_EPS};
+pub use op::AttentionOp;
+pub use stack::EncoderStack;

@@ -1,0 +1,138 @@
+//! The `AttentionOp` seam — one dispatch point for every attention
+//! variant.
+//!
+//! Before the encoder-stack refactor each serving call site matched on
+//! the variant enum and called one of six per-variant entry points.
+//! [`AttentionOp`] replaces those call sites with a single trait object
+//! seam: anything that can attend one head — `(len × dh)` q/k/v in,
+//! `(len × dh)` out — plugs into the batched executor, the encoder
+//! stack, and therefore the whole serving path. This is the same
+//! evaluation shape Linformer and Skyformer use: the encoder is fixed,
+//! the attention operator is the swappable part.
+//!
+//! Implementations live next to their math in `attention/`:
+//! [`FullOp`], [`NystromOp`], [`SpectralShiftOp`], [`LinformerOp`],
+//! [`LshOp`], [`SparseOp`]. The serving configuration's Copy-able
+//! [`BatchedVariant`](crate::kernels::BatchedVariant) also implements
+//! the trait by constructing the matching op value on the stack and
+//! delegating — so a config enum and a hand-built op are
+//! interchangeable wherever `&dyn AttentionOp` is accepted.
+//!
+//! # Contract
+//!
+//! * **Purity** — `attend` must be a pure function of `(q, k, v)` and
+//!   the op's own configuration: no interior mutability, no global
+//!   state. This is what makes served embeddings independent of batch
+//!   composition (the cache-coherence invariant).
+//! * **Thread-count determinism** — for any `ctx`, the result must be
+//!   bitwise identical to the sequential result. Ops built on the
+//!   `kernels::` primitives inherit this; scalar ops are trivially
+//!   deterministic.
+//! * **Workspace discipline** — the returned tensor's buffer comes from
+//!   `ws` (callers recycle it with `ws.put`), and intermediates return
+//!   to `ws` before `attend` exits. The scalar reference-grade ops
+//!   [`LshOp`] / [`SparseOp`] allocate intermediates internally
+//!   (documented baseline, not hot-path, operators) but still copy
+//!   their output into `ws` scratch so arena take/put stays balanced.
+//!
+//! [`FullOp`]: crate::attention::full::FullOp
+//! [`NystromOp`]: crate::attention::nystrom::NystromOp
+//! [`SpectralShiftOp`]: crate::attention::spectral_shift::SpectralShiftOp
+//! [`LinformerOp`]: crate::attention::linformer::LinformerOp
+//! [`LshOp`]: crate::attention::lsh::LshOp
+//! [`SparseOp`]: crate::attention::sparse::SparseOp
+
+use crate::attention::Tensor2;
+use crate::kernels::{KernelCtx, Workspace};
+
+/// A pluggable self/cross-attention operator: one head at a time,
+/// `(len × dh)` in, `(len × dh)` out. See the module docs for the
+/// purity / determinism / workspace contract.
+pub trait AttentionOp: Send + Sync {
+    /// Stable identifier used in metrics, STATS and bench labels.
+    fn name(&self) -> &'static str;
+
+    /// `Some(c)` when execution lengths must be divisible by the
+    /// landmark count (segment-means variants); `None` otherwise. The
+    /// router/batcher align request lengths with
+    /// [`aligned_len`](crate::coordinator::batcher::aligned_len) off
+    /// this value.
+    fn landmark_divisor(&self) -> Option<usize> {
+        None
+    }
+
+    /// Compute attention for one head. `scale` is owned by the op
+    /// (defaulting to 1/√d inside each implementation), so every caller
+    /// — stack, batcher, test — sees the same served function.
+    fn attend(&self, ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+              ws: &mut Workspace) -> Tensor2;
+}
+
+pub use crate::attention::full::FullOp;
+pub use crate::attention::linformer::LinformerOp;
+pub use crate::attention::lsh::LshOp;
+pub use crate::attention::nystrom::NystromOp;
+pub use crate::attention::sparse::SparseOp;
+pub use crate::attention::spectral_shift::SpectralShiftOp;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::qkv;
+    use crate::attention::SpectralShiftConfig;
+    use crate::kernels::BatchedVariant;
+
+    /// Every op (and the enum-config impl) runs through the one seam.
+    #[test]
+    fn all_six_ops_attend_through_the_trait() {
+        let (q, k, v) = qkv(1, 64, 16);
+        let ops: Vec<Box<dyn AttentionOp>> = vec![
+            Box::new(FullOp),
+            Box::new(NystromOp { landmarks: 8, pinv_iters: 6 }),
+            Box::new(SpectralShiftOp(SpectralShiftConfig::new(8))),
+            Box::new(LinformerOp { kdim: 8, seed: 7 }),
+            Box::new(LshOp { rounds: 2, bits: None, seed: 7 }),
+            Box::new(SparseOp { window: None, stride: None }),
+        ];
+        let mut ws = Workspace::new();
+        let ctx = KernelCtx::global();
+        for op in &ops {
+            let out = op.attend(&ctx, &q, &k, &v, &mut ws);
+            assert_eq!((out.rows, out.cols), (64, 16), "{}", op.name());
+            assert!(out.data.iter().all(|x| x.is_finite()), "{}", op.name());
+            ws.put(out.data);
+        }
+        // names are distinct (they key metrics and bench rows)
+        let mut names: Vec<&str> = ops.iter().map(|o| o.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+    }
+
+    #[test]
+    fn enum_config_delegates_to_the_same_ops() {
+        let (q, k, v) = qkv(2, 64, 16);
+        let mut ws = Workspace::new();
+        let ctx = KernelCtx::global();
+        let via_enum = BatchedVariant::SpectralShift(SpectralShiftConfig::new(8))
+            .attend(&ctx, &q, &k, &v, &mut ws);
+        let via_op = SpectralShiftOp(SpectralShiftConfig::new(8))
+            .attend(&ctx, &q, &k, &v, &mut ws);
+        assert_eq!(via_enum.data, via_op.data, "enum and op must be one function");
+    }
+
+    #[test]
+    fn landmark_divisors() {
+        assert_eq!(FullOp.landmark_divisor(), None);
+        assert_eq!(NystromOp { landmarks: 16, pinv_iters: 8 }.landmark_divisor(),
+                   Some(16));
+        assert_eq!(SpectralShiftOp(SpectralShiftConfig::new(32))
+                       .landmark_divisor(),
+                   Some(32));
+        assert_eq!(LinformerOp { kdim: 16, seed: 0 }.landmark_divisor(), None);
+        assert_eq!(LshOp { rounds: 1, bits: None, seed: 0 }.landmark_divisor(),
+                   None);
+        assert_eq!(SparseOp { window: None, stride: None }.landmark_divisor(),
+                   None);
+    }
+}

@@ -1,0 +1,225 @@
+//! Scalar multi-layer reference forward — the ground truth the kernel
+//! stack is parity-tested against.
+//!
+//! Mirrors [`EncoderStack::forward_batch`] block for block using only
+//! reference-grade arithmetic: the seed scalar attention pipelines
+//! preserved in [`spectral_shift::reference`], naive [`matmul_f32`],
+//! and plain-loop LN/GELU below. Like the kernel `reference` modules,
+//! this path is never "improved" for speed; `tests/model_parity.rs`
+//! pins the fast stack against it at max rel err < 1e-4.
+//!
+//! [`spectral_shift::reference`]: crate::attention::spectral_shift::reference
+
+use super::layer::LN_EPS;
+use super::stack::EncoderStack;
+use crate::attention::spectral_shift::reference;
+use crate::attention::{lsh_attention, matmul_f32, sparse_attention, Tensor2};
+use crate::kernels::BatchedVariant;
+use crate::rngx::Rng;
+
+/// A scalar single-head attention function.
+pub type AttnRef = Box<dyn Fn(&Tensor2, &Tensor2, &Tensor2) -> Tensor2>;
+
+/// The reference attention for a serving variant: the preserved seed
+/// scalar pipelines for full / nystrom / spectral-shift, a naive-matmul
+/// rebuild of the seeded projection for linformer, and the (already
+/// scalar) lsh / sparse entry points.
+pub fn ref_attention(variant: BatchedVariant) -> AttnRef {
+    match variant {
+        BatchedVariant::Full => Box::new(naive_softmax_attention_ref),
+        BatchedVariant::Nystrom { landmarks, pinv_iters } => {
+            Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| {
+                reference::nystrom_attention_ref(q, k, v, landmarks, pinv_iters,
+                                                 None)
+            })
+        }
+        BatchedVariant::SpectralShift(cfg) => {
+            Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| {
+                reference::spectral_shift_attention_ref(q, k, v, &cfg)
+            })
+        }
+        BatchedVariant::Linformer { kdim, seed } => {
+            // independent scalar pipeline: regenerate the same seeded
+            // projection E the fast path draws, but project with the
+            // naive matmul and attend with the naive softmax — a fast-
+            // kernel bug cannot hide in a self-comparison
+            Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| {
+                let m = k.rows;
+                let mut rng = Rng::new(seed);
+                let std = 1.0 / (kdim as f32).sqrt();
+                let mut e = Tensor2::zeros(kdim, m);
+                rng.fill_normal_f32(&mut e.data, 0.0, std);
+                let kp = matmul_f32(&e, k);
+                let vp = matmul_f32(&e, v);
+                naive_softmax_attention_ref(q, &kp, &vp)
+            })
+        }
+        BatchedVariant::Lsh { rounds, bits, seed } => {
+            Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| {
+                lsh_attention(q, k, v, rounds, bits, seed, None)
+            })
+        }
+        BatchedVariant::Sparse { window, stride } => {
+            Box::new(move |q: &Tensor2, k: &Tensor2, v: &Tensor2| {
+                sparse_attention(q, k, v, window, stride, None)
+            })
+        }
+    }
+}
+
+/// Scalar forward through `stack` for one request's (plen × d)
+/// embedding: seed bare-attention block, then each full pre-LN block
+/// with naive matmuls and the scalar LN/GELU.
+pub fn forward_ref(stack: &EncoderStack, x: &Tensor2) -> Tensor2 {
+    let attn = ref_attention(stack.variant());
+    let heads = stack.n_heads();
+    let mut cur = mha_ref(x, heads, &attn);
+    for blk in stack.blocks() {
+        // attention sublayer
+        let ln = layernorm_ref(&cur, &blk.ln1_gain, &blk.ln1_bias);
+        let att = mha_ref(&ln, heads, &attn);
+        for (c, a) in cur.data.iter_mut().zip(&att.data) {
+            *c += *a;
+        }
+        // FFN sublayer
+        let ln2 = layernorm_ref(&cur, &blk.ln2_gain, &blk.ln2_bias);
+        let w1 = Tensor2::from_vec(blk.d, blk.dff, blk.w1.clone());
+        let mut f1 = matmul_f32(&ln2, &w1);
+        for i in 0..f1.rows {
+            for (v, &b) in f1.row_mut(i).iter_mut().zip(&blk.b1) {
+                *v = gelu_ref(*v + b);
+            }
+        }
+        let w2 = Tensor2::from_vec(blk.dff, blk.d, blk.w2.clone());
+        let f2 = matmul_f32(&f1, &w2);
+        for i in 0..cur.rows {
+            let crow = cur.row_mut(i);
+            let frow = f2.row(i);
+            for j in 0..blk.d {
+                crow[j] += frow[j] + blk.b2[j];
+            }
+        }
+    }
+    cur
+}
+
+/// Scalar multi-head wrapper: split columns into heads, attend each with
+/// the scalar reference, stitch back.
+pub fn mha_ref(x: &Tensor2, n_heads: usize, attn: &AttnRef) -> Tensor2 {
+    assert!(n_heads > 0 && x.cols % n_heads == 0);
+    let dh = x.cols / n_heads;
+    let mut out = Tensor2::zeros(x.rows, x.cols);
+    for h in 0..n_heads {
+        let mut xs = Tensor2::zeros(x.rows, dh);
+        for i in 0..x.rows {
+            xs.row_mut(i)
+                .copy_from_slice(&x.row(i)[h * dh..(h + 1) * dh]);
+        }
+        let oh = attn(&xs, &xs, &xs);
+        assert_eq!((oh.rows, oh.cols), (x.rows, dh));
+        for i in 0..x.rows {
+            out.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(oh.row(i));
+        }
+    }
+    out
+}
+
+/// Plain-loop layer norm (same ε as the fused kernel).
+pub fn layernorm_ref(x: &Tensor2, gain: &[f32], bias: &[f32]) -> Tensor2 {
+    let (n, d) = (x.rows, x.cols);
+    let mut out = Tensor2::zeros(n, d);
+    for i in 0..n {
+        let row = x.row(i);
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 =
+            row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..d {
+            out.data[i * d + j] = (row[j] - mean) * inv * gain[j] + bias[j];
+        }
+    }
+    out
+}
+
+/// GELU, same tanh form as the fused kernel.
+pub fn gelu_ref(z: f32) -> f32 {
+    crate::kernels::gelu(z)
+}
+
+/// Naive scalar softmax attention (the full-variant reference; the fast
+/// path streams keys through the flash kernel instead).
+pub fn naive_softmax_attention_ref(q: &Tensor2, k: &Tensor2, v: &Tensor2) -> Tensor2 {
+    let scale = crate::attention::default_scale(q.cols);
+    let mut out = Tensor2::zeros(q.rows, v.cols);
+    for i in 0..q.rows {
+        let mut s: Vec<f32> = (0..k.rows)
+            .map(|j| {
+                q.row(i).iter().zip(k.row(j)).map(|(a, b)| a * b).sum::<f32>()
+                    * scale
+            })
+            .collect();
+        let m = s.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in s.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        for x in s.iter_mut() {
+            *x /= sum;
+        }
+        for (j, &w) in s.iter().enumerate() {
+            for (o, &vv) in out.row_mut(i).iter_mut().zip(v.row(j)) {
+                *o += w * vv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{qkv, rel_err};
+    use crate::attention::{softmax_attention, SpectralShiftConfig};
+    use crate::kernels::{KernelCtx, Workspace};
+
+    #[test]
+    fn naive_full_matches_flash() {
+        let (q, k, v) = qkv(1, 96, 8);
+        let a = naive_softmax_attention_ref(&q, &k, &v);
+        let b = softmax_attention(&q, &k, &v, None);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_ref_matches_kernel() {
+        let mut rng = Rng::new(2);
+        let x = Tensor2::randn(&mut rng, 33, 16, 2.0);
+        let mut gain = vec![0.0f32; 16];
+        let mut bias = vec![0.0f32; 16];
+        rng.fill_normal_f32(&mut gain, 1.0, 0.1);
+        rng.fill_normal_f32(&mut bias, 0.0, 0.1);
+        let slow = layernorm_ref(&x, &gain, &bias);
+        let fast = crate::kernels::layernorm(
+            &KernelCtx::global(), &x, &gain, &bias, LN_EPS,
+            &mut Workspace::new());
+        assert!(slow.max_abs_diff(&fast) < 1e-5);
+    }
+
+    #[test]
+    fn forward_ref_matches_kernel_stack() {
+        // block-for-block mirror: depth 3, spectral shift
+        let stack = EncoderStack::new(
+            BatchedVariant::SpectralShift(SpectralShiftConfig::new(8)),
+            3, 16, 2, 2, 9);
+        let mut rng = Rng::new(10);
+        let x = Tensor2::randn(&mut rng, 64, 16, 1.0);
+        let want = forward_ref(&stack, &x);
+        let mut exec = crate::kernels::BatchedAttention::new(KernelCtx::global());
+        let mut ws = Workspace::new();
+        let mut xs = vec![x];
+        stack.forward_batch(&mut exec, &mut xs, &mut ws);
+        let e = rel_err(&xs[0], &want);
+        assert!(e < 1e-4, "stack vs scalar reference rel err {e}");
+    }
+}

@@ -60,6 +60,7 @@
 //!
 //! ```text
 //! backend:  <cpu-kernels|xla-pjrt>     which execution backend is live
+//! model:    L layers, variant=<op>, d_model=D, heads=H, ffn_mult=M
 //! workers:  N (S queue shards, cache L/C)   worker pool + cache shape
 //! requests: in=N done=N rejected=N expired=N   admission counters
 //! cache:    hits=N misses=N (H% hit rate)
@@ -71,6 +72,10 @@
 //! .
 //! ```
 //!
+//! `model` identifies the served function: encoder depth (1 = the
+//! seed single-pass model; deeper stacks add pre-LN blocks), the
+//! attention operator behind the `AttentionOp` seam, and the widths —
+//! on the XLA backend it reads `artifact encoder, variant=…` instead.
 //! `occupancy` is batch-served requests per offered batch slot (cache
 //! hits bypass batching and are excluded); `executed padding` counts
 //! padding positions the backend actually computed (dense remainder on
@@ -246,8 +251,10 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                 0 => "off".to_string(),
                 cap => format!("{}/{}", coordinator.cache_len(), cap),
             };
-            format!("backend:  {}\nworkers:  {} ({} queue shards, cache {})\n{}\n.\n",
+            format!("backend:  {}\nmodel:    {}\nworkers:  {} ({} queue shards, \
+                     cache {})\n{}\n.\n",
                     coordinator.backend().name(),
+                    coordinator.model_desc(),
                     coordinator.workers(),
                     coordinator.queue_shards(),
                     cache,

@@ -60,6 +60,7 @@ fn expected_embedding(variant: Variant, tokens: &[i32]) -> Vec<f32> {
             Variant::Nystrom => reference::nystrom_attention_ref(
                 &xs, &xs, &xs, m.landmarks(), m.pinv_iters(), None),
             Variant::Full => softmax_attention(&xs, &xs, &xs, None),
+            other => panic!("no scalar reference wired here for {other:?}"),
         };
         for i in 0..plen {
             for j in 0..dh {

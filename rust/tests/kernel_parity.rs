@@ -188,8 +188,8 @@ fn batched_attention_matches_per_head_serial() {
     let cfg = SpectralShiftConfig::new(8);
     let mut par = BatchedAttention::new(KernelCtx::global());
     let mut ser = BatchedAttention::new(KernelCtx::sequential());
-    let a = attention_batched(&mut par, &reqs, 4, BatchedVariant::SpectralShift(cfg));
-    let b = attention_batched(&mut ser, &reqs, 4, BatchedVariant::SpectralShift(cfg));
+    let a = attention_batched(&mut par, &reqs, 4, &BatchedVariant::SpectralShift(cfg));
+    let b = attention_batched(&mut ser, &reqs, 4, &BatchedVariant::SpectralShift(cfg));
     assert_eq!(a.len(), reqs.len());
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.data, y.data, "parallel batch must equal serial batch bitwise");

@@ -1,0 +1,196 @@
+//! Encoder-stack acceptance tests (the multi-layer-refactor contract):
+//!
+//! 1. `layers = 1` serves **bitwise** the pre-refactor single-pass
+//!    model — reproduced here via the preserved `attention_scatter`
+//!    path — so existing caches/traces/parity tests stay meaningful.
+//! 2. `layers = 4` matches the scalar multi-layer reference
+//!    (`model::reference::forward_ref`) within 1e-4 relative error.
+//! 3. Served embeddings are bitwise identical across worker pools
+//!    (`workers ∈ {1, 4}`).
+//! 4. All six attention variants serve through the one
+//!    `AttentionOp`/`EncoderStack` seam.
+
+use ssaformer::attention::Tensor2;
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::{
+    assemble, attention_scatter, Coordinator, CpuEngine, CpuModel,
+    CpuModelConfig, ExecBackend,
+};
+use ssaformer::kernels::{BatchedAttention, KernelCtx};
+use ssaformer::model::reference::forward_ref;
+use std::sync::Arc;
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 31 + seed) % 2000)).collect()
+}
+
+/// Same arithmetic as `cpu_engine`'s pooling, reciprocal-multiply
+/// included — the bitwise assertions below compare against it, and
+/// `x * (1/len)` and `x / len` round differently for non-power-of-two
+/// lengths.
+fn mean_pool(t: &Tensor2, len: usize) -> Vec<f32> {
+    let len = len.min(t.rows).max(1);
+    let mut out = vec![0.0f32; t.cols];
+    for i in 0..len {
+        for (o, v) in out.iter_mut().zip(t.row(i)) {
+            *o += *v;
+        }
+    }
+    let inv = 1.0 / len as f32;
+    out.iter_mut().for_each(|v| *v *= inv);
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The pre-refactor single-pass pipeline, reproduced exactly: stage a
+/// dense (fill × seq × d) buffer, embed each request's aligned rows,
+/// fan heads × requests through `attention_scatter`, mean-pool real
+/// rows. This is byte-for-byte what `CpuEngine::encode_batch` did
+/// before the encoder stack existed.
+fn pre_refactor_encode(model: &CpuModel, reqs: &[Vec<i32>], capacity: usize,
+                       seq: usize) -> Vec<Vec<f32>> {
+    let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+    let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+    let plan = assemble(&refs, capacity, seq);
+    let d = model.d_model();
+    let per_req = seq * d;
+    let mut x = vec![0.0f32; plan.fill * per_req];
+    let mut plens = Vec::with_capacity(plan.fill);
+    for (r, &len) in lens.iter().enumerate() {
+        let plen = model.padded_len(len).min(seq);
+        let toks = &plan.tokens[r * seq..r * seq + plen];
+        model.embed_into(toks, &mut x[r * per_req..r * per_req + plen * d]);
+        plens.push(plen);
+    }
+    let mut exec = BatchedAttention::new(KernelCtx::global());
+    let outs = attention_scatter(&mut exec, &plan, &x, &x, &x, d, &plens,
+                                 model.n_heads(), &model.kernel_variant());
+    outs.iter().zip(&lens).map(|(t, &len)| mean_pool(t, len)).collect()
+}
+
+#[test]
+fn layers1_is_bitwise_equal_to_the_pre_refactor_single_pass() {
+    let cfg = CpuModelConfig::default();
+    assert_eq!(cfg.layers, 1, "default depth must stay the compat model");
+    for variant in [Variant::SpectralShift, Variant::Full] {
+        let model = CpuModel::new(cfg, variant);
+        let verify = CpuModel::new(cfg, variant);
+        let reqs = vec![toks(100, 1), toks(128, 2), toks(40, 3)];
+        let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+        let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+        let plan = assemble(&refs, 4, 128);
+        let mut engine = CpuEngine::new(model);
+        let got = engine.encode_batch(&plan, &lens);
+        let want = pre_refactor_encode(&verify, &reqs, 4, 128);
+        assert_eq!(got.len(), want.len());
+        for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(bits(a), bits(b),
+                       "{variant:?} req {r}: layers=1 must be bitwise-equal \
+                        to the pre-refactor single-pass output");
+        }
+    }
+}
+
+#[test]
+fn four_layer_stack_matches_the_scalar_multilayer_reference() {
+    let cfg = CpuModelConfig { layers: 4, ffn_mult: 2, ..Default::default() };
+    let model = CpuModel::new(cfg, Variant::SpectralShift);
+    let verify = CpuModel::new(cfg, Variant::SpectralShift);
+    let reqs = vec![toks(100, 4), toks(128, 5), toks(40, 6)];
+    let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+    let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+    let plan = assemble(&refs, 4, 128);
+    let mut engine = CpuEngine::new(model);
+    let got = engine.encode_batch(&plan, &lens);
+    for (r, t) in reqs.iter().enumerate() {
+        let plen = verify.padded_len(t.len());
+        let x = verify.embed_sequence(t, plen);
+        let full = forward_ref(verify.stack(), &x);
+        let want = mean_pool(&full, t.len());
+        for (j, (a, b)) in got[r].iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "req {r} dim {j}: stack {a} vs scalar reference {b}");
+        }
+    }
+}
+
+#[test]
+fn served_embeddings_are_bitwise_identical_across_worker_pools() {
+    // same 4-layer model, same requests, 1-worker vs 4-worker pools
+    // (cache off so every request is computed, not replayed)
+    let serve = |workers: usize| -> Vec<Vec<f32>> {
+        let cfg = ServingConfig {
+            variant: Variant::SpectralShift,
+            layers: 4,
+            ffn_mult: 2,
+            max_batch: 4,
+            max_wait_ms: 5,
+            queue_capacity: 64,
+            workers,
+            cache_capacity: 0,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig { layers: cfg.layers, ffn_mult: cfg.ffn_mult,
+                             ..Default::default() },
+            cfg.variant)));
+        let c = Arc::new(Coordinator::start(ExecBackend::Cpu(engine), &cfg)
+            .unwrap());
+        // concurrent submits so the 4-worker pool actually fans out
+        let mut joins = Vec::new();
+        for i in 0..6usize {
+            let c = c.clone();
+            joins.push(std::thread::spawn(move || {
+                let t = toks(60 + 20 * i, i as i32);
+                c.submit_blocking(t).unwrap().embedding.unwrap()
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    };
+    let one = serve(1);
+    let four = serve(4);
+    for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+        assert_eq!(bits(a), bits(b),
+                   "req {i}: worker-pool size leaked into the embedding");
+    }
+}
+
+#[test]
+fn all_six_variants_serve_through_the_stack() {
+    for variant in [Variant::Full, Variant::Nystrom, Variant::SpectralShift,
+                    Variant::Linformer, Variant::Lsh, Variant::Sparse] {
+        let cfg = CpuModelConfig { layers: 2, ffn_mult: 2, ..Default::default() };
+        let mut a = CpuEngine::new(CpuModel::new(cfg, variant));
+        let mut b = CpuEngine::new(CpuModel::new(cfg, variant));
+        let t = toks(96, 7);
+        let plan = assemble(&[t.as_slice()], 2, 128);
+        let ea = a.encode_batch(&plan, &[t.len()]);
+        let eb = b.encode_batch(&plan, &[t.len()]);
+        assert_eq!(ea[0].len(), a.model().d_model(), "{variant:?}");
+        assert!(ea[0].iter().all(|x| x.is_finite()), "{variant:?}");
+        assert_eq!(bits(&ea[0]), bits(&eb[0]),
+                   "{variant:?}: two engines over one config must serve \
+                    one function");
+    }
+}
+
+#[test]
+fn deeper_stacks_change_the_served_function() {
+    // sanity guard: the extra blocks must actually be load-bearing
+    let t = toks(64, 8);
+    let plan = assemble(&[t.as_slice()], 2, 64);
+    let emb = |layers: usize| -> Vec<f32> {
+        let cfg = CpuModelConfig { layers, ffn_mult: 2, ..Default::default() };
+        let mut e = CpuEngine::new(CpuModel::new(cfg, Variant::SpectralShift));
+        e.encode_batch(&plan, &[t.len()]).remove(0)
+    };
+    let l1 = emb(1);
+    let l2 = emb(2);
+    let l4 = emb(4);
+    assert_ne!(bits(&l1), bits(&l2));
+    assert_ne!(bits(&l2), bits(&l4));
+    assert!(l4.iter().all(|x| x.is_finite()));
+}
