@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# The full verify gate, runnable offline — .github/workflows/ci.yml
+# encodes exactly this sequence, so "CI green" and "ci/run.sh passes"
+# are the same statement. Run from anywhere; it cd's to the crate.
+#
+#   ci/run.sh          # build + test + clippy + doc + fmt
+#   ci/run.sh bench    # additionally regenerate BENCH_kernels.json
+#                      # on the reduced smoke shapes (BENCH_SMOKE=1)
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+if [[ "${1:-}" == "bench" ]]; then
+    echo "==> BENCH_SMOKE=1 cargo bench --bench bench_snapshot"
+    BENCH_SMOKE=1 cargo bench --bench bench_snapshot
+fi
+
+echo "ci/run.sh: all gates green"

@@ -9,11 +9,13 @@
 //! `artifacts/` is built, otherwise the in-process CPU kernel backend —
 //! so this example serves real embeddings with no artifacts at all.
 //!
-//! Run: `cargo run --release --example serve_attention [variant] [layers]`
-//! — `variant` is any of full|nystrom|ss|linformer|lsh|sparse (the
-//! AttentionOp seam makes them interchangeable), `layers` the encoder
-//! depth (default 1, the seed single-pass model). Optionally
-//! `make artifacts` first to exercise the XLA path.
+//! Run: `cargo run --release --example serve_attention
+//! [variant] [layers] [projections]` — `variant` is any of
+//! full|nystrom|ss|linformer|lsh|sparse or a per-layer list like
+//! `ss,ss,full` (the AttentionOp seam makes them interchangeable),
+//! `layers` the encoder depth (default 1, the seed single-pass model),
+//! `projections` `on`/`off` (QKV/output maps in the full blocks).
+//! Optionally `make artifacts` first to exercise the XLA path.
 
 use ssaformer::config::{ServingConfig, Variant};
 use ssaformer::coordinator::{Coordinator, ExecBackend};
@@ -22,20 +24,26 @@ use ssaformer::workload::{generate_trace, LengthDist, TraceConfig};
 use std::sync::Arc;
 
 fn main() {
-    let variant = std::env::args()
+    let variants = std::env::args()
         .nth(1)
-        .and_then(|s| Variant::parse(&s))
-        .unwrap_or(Variant::SpectralShift);
+        .and_then(|s| Variant::parse_list(&s))
+        .unwrap_or_else(|| vec![Variant::SpectralShift]);
     let layers: usize = std::env::args()
         .nth(2)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(1);
+        .unwrap_or_else(|| variants.len().max(1));
+    let projections = std::env::args().nth(3).as_deref() == Some("on");
 
-    println!("== ssaformer serving demo ({}, {} layer{}) ==",
-             variant.token(), layers, if layers == 1 { "" } else { "s" });
+    println!("== ssaformer serving demo ({}, {} layer{}, projections {}) ==",
+             variants.iter().map(|v| v.token()).collect::<Vec<_>>().join(","),
+             layers, if layers == 1 { "" } else { "s" },
+             if projections { "on" } else { "off" });
+    let (variant, layer_variants) = ServingConfig::split_variants(variants);
     let cfg = ServingConfig {
         variant,
+        layer_variants,
         layers,
+        projections,
         max_batch: 4,
         max_wait_ms: 10,
         queue_capacity: 128,
@@ -44,7 +52,8 @@ fn main() {
         cache_capacity: 256,
         ..Default::default()
     };
-    let backend = ExecBackend::auto(&cfg);
+    cfg.validate().expect("example serving config");
+    let backend = ExecBackend::auto(&cfg).expect("backend");
     let t0 = std::time::Instant::now();
     let coordinator = Arc::new(Coordinator::start(backend, &cfg).expect("start"));
     let backend_name = coordinator.backend().name();

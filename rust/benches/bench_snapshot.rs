@@ -4,7 +4,7 @@
 //! c = 64, d = 64) and writes `BENCH_kernels.json` at the repo root
 //! (falling back to the crate root when run elsewhere): variant →
 //! ns/op, GF/s, threads, fast-vs-seed-scalar speedups, plus the
-//! serving-path entries (schema v4): CPU-backend coordinator
+//! serving-path entries (schema v5): CPU-backend coordinator
 //! requests/sec per encoder depth (`cpu_encode_rps_n{N}_l{L}` for
 //! n ∈ {1024, 4096} × layers ∈ {1, 4} — layer 1 is the seed
 //! single-pass model, layer 4 the full pre-LN stack), and a
@@ -16,6 +16,10 @@
 //!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
+//! Smoke mode: set BENCH_SMOKE=1 to shrink the problem set (n = 256
+//! only, shorter timing budgets) so CI can regenerate the JSON per
+//! commit in seconds; the output records `"smoke": true` so trajectory
+//! tooling never compares smoke numbers against full runs.
 
 use ssaformer::attention::spectral_shift::reference;
 use ssaformer::attention::{
@@ -40,22 +44,29 @@ struct Entry {
     threads: usize,
 }
 
+/// CI smoke mode: reduced shapes, same schema (flagged in the JSON).
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 fn main() {
     let threads = global_pool().size() + 1; // workers + contributing caller
+    let sizes: &[usize] = if smoke() { &[256] } else { &[1024, 4096] };
     banner("bench_snapshot — kernel core at fixed shapes",
-           &format!("n ∈ {{1024, 4096}}, c = 64, d = 64, f32; \
+           &format!("n ∈ {sizes:?}{}, c = 64, d = 64, f32; \
                      {threads} kernel threads.\nWrites BENCH_kernels.json \
-                     (variant → ns/op, GF/s, threads)."));
+                     (variant → ns/op, GF/s, threads).",
+                    if smoke() { " (BENCH_SMOKE)" } else { "" }));
 
     let (c, d) = (64usize, 64usize);
-    let budget = Duration::from_millis(700);
+    let budget = Duration::from_millis(if smoke() { 120 } else { 700 });
     let seq = KernelCtx::sequential();
     let par = KernelCtx::global();
     let mut entries: Vec<Entry> = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
 
     let mut table = Table::new(&["kernel", "n", "median", "GF/s", "threads"]);
-    for &n in &[1024usize, 4096] {
+    for &n in sizes {
         let mut rng = Rng::new(n as u64);
         let q = Tensor2::randn(&mut rng, n, d, 1.0);
         let k = Tensor2::randn(&mut rng, n, d, 1.0);
@@ -148,14 +159,14 @@ fn main() {
     ];
     let mut stbl = Table::new(&["serving (cpu backend)", "layers", "n", "req/s"]);
     for &layers in &[1usize, 4] {
-        for &n in &[1024usize, 4096] {
+        for &n in sizes {
             let cfg = ServingConfig {
                 variant: Variant::SpectralShift,
                 layers,
                 max_batch: 4,
                 max_wait_ms: 2,
                 queue_capacity: 256,
-                seq_buckets: vec![1024, 4096],
+                seq_buckets: sizes.to_vec(),
                 // cache off: this row measures the *encode* path, and
                 // the saturated load replays one token sequence
                 cache_capacity: 0,
@@ -168,7 +179,7 @@ fn main() {
             let toks: Vec<i32> = (0..n).map(|i| 3 + (i as i32 % 2000)).collect();
             // warm the kernel arenas before timing
             coordinator.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
-            let reqs = 24;
+            let reqs = if smoke() { 8 } else { 24 };
             let start = std::time::Instant::now();
             let rxs: Vec<_> = (0..reqs)
                 .map(|_| coordinator.submit(toks.clone()).unwrap())
@@ -298,8 +309,9 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                serving: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v4\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v5\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
+    out.push_str(&format!("  \"smoke\": {},\n", smoke()));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"c\": {c},\n"));
     out.push_str(&format!("  \"d\": {d},\n"));

@@ -238,6 +238,42 @@ impl Variant {
             Variant::Sparse => "sparse",
         }
     }
+
+    /// Parse a comma-separated variant list (`"ss"`, `"ss,ss,full"`).
+    /// One entry = a uniform stack; N entries = one operator per
+    /// encoder block, seed block first (must then match `layers`).
+    pub fn parse_list(s: &str) -> Option<Vec<Variant>> {
+        let list: Option<Vec<Variant>> =
+            s.split(',').map(|tok| Variant::parse(tok.trim())).collect();
+        list.filter(|l| !l.is_empty())
+    }
+}
+
+/// Where the CPU model's encoder weights come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitPolicy {
+    /// Deterministic draw from the model seed (the default).
+    Seeded,
+    /// Load the checkpoint named by `weights`; any load problem fails
+    /// serving closed instead of silently drawing seeded weights.
+    Load,
+}
+
+impl InitPolicy {
+    pub fn parse(s: &str) -> Option<InitPolicy> {
+        match s {
+            "seeded" => Some(InitPolicy::Seeded),
+            "load" => Some(InitPolicy::Load),
+            _ => None,
+        }
+    }
+
+    pub fn token(&self) -> &'static str {
+        match self {
+            InitPolicy::Seeded => "seeded",
+            InitPolicy::Load => "load",
+        }
+    }
 }
 
 /// Serving configuration (coordinator + server).
@@ -279,6 +315,22 @@ pub struct ServingConfig {
     /// FFN expansion factor of each full encoder block (inner width =
     /// `ffn_mult · d_model`). Ignored at `layers = 1`.
     pub ffn_mult: usize,
+    /// Per-layer attention operators (config `variant = "ss,ss,full"`,
+    /// seed block first) — empty means every block runs `variant`.
+    /// CPU backend only; must match `layers` when non-empty.
+    pub layer_variants: Vec<Variant>,
+    /// QKV/output projections (`W_Q`/`W_K`/`W_V`/`W_O`) in every full
+    /// encoder block. Off (the default) serves the pre-projection
+    /// function bitwise; the seed block never projects either way, so
+    /// `layers = 1` ignores this knob entirely.
+    pub projections: bool,
+    /// Weight-checkpoint path for `init = load` (see
+    /// `model::checkpoint` for the format).
+    pub weights: Option<String>,
+    /// Whether encoder weights are a seeded draw or loaded from
+    /// `weights`. Defaults to `load` when a path is given, `seeded`
+    /// otherwise; contradictory combinations are config errors.
+    pub init: InitPolicy,
 }
 
 impl Default for ServingConfig {
@@ -298,6 +350,10 @@ impl Default for ServingConfig {
             deadline_margin_ms: 5,
             layers: 1,
             ffn_mult: 4,
+            layer_variants: Vec::new(),
+            projections: false,
+            weights: None,
+            init: InitPolicy::Seeded,
         }
     }
 }
@@ -309,9 +365,34 @@ impl ServingConfig {
     pub fn from_config(cfg: &Config) -> Result<ServingConfig, ConfigError> {
         let d = ServingConfig::default();
         let variant_s = cfg.str_or("serving", "variant", "ss").to_string();
-        let variant = Variant::parse(&variant_s).ok_or_else(|| {
+        let variants = Variant::parse_list(&variant_s).ok_or_else(|| {
             ConfigError::Invalid("serving".into(), "variant".into(), variant_s)
         })?;
+        let (variant, layer_variants) = ServingConfig::split_variants(variants);
+        let weights = match cfg.get("serving", "weights") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(_) => {
+                return Err(ConfigError::Type("serving".into(), "weights".into(),
+                                             "string"))
+            }
+            None => None,
+        };
+        let init = match cfg.get("serving", "init") {
+            Some(Value::Str(s)) => InitPolicy::parse(s).ok_or_else(|| {
+                ConfigError::Invalid("serving".into(), "init".into(), s.clone())
+            })?,
+            Some(_) => {
+                return Err(ConfigError::Type("serving".into(), "init".into(),
+                                             "string"))
+            }
+            None if weights.is_some() => InitPolicy::Load,
+            None => InitPolicy::Seeded,
+        };
+        let projections = match cfg.get_bool("serving", "projections") {
+            Ok(b) => b,
+            Err(ConfigError::Missing(..)) => d.projections,
+            Err(e) => return Err(e),
+        };
         let unsigned = |key: &str, default: i64| -> Result<u64, ConfigError> {
             let v = cfg.i64_or("serving", key, default);
             u64::try_from(v).map_err(|_| ConfigError::Invalid(
@@ -337,9 +418,33 @@ impl ServingConfig {
                                          d.deadline_margin_ms as i64)?,
             layers: unsigned("layers", d.layers as i64)? as usize,
             ffn_mult: unsigned("ffn_mult", d.ffn_mult as i64)? as usize,
+            layer_variants,
+            projections,
+            weights,
+            init,
         };
         out.validate()?;
         Ok(out)
+    }
+
+    /// Normalize a parsed `variant` list (nonempty) into the
+    /// `(variant, layer_variants)` field pair: a single entry means a
+    /// uniform stack (empty per-layer list), longer lists keep every
+    /// entry with the first one leading. The ONE place the convention
+    /// lives — config parsing, the CLI, and the example all call it.
+    pub fn split_variants(list: Vec<Variant>) -> (Variant, Vec<Variant>) {
+        let lead = list[0];
+        (lead, if list.len() > 1 { list } else { Vec::new() })
+    }
+
+    /// One attention operator per encoder block, seed block first:
+    /// the configured per-layer list, or `variant` replicated.
+    pub fn effective_layer_variants(&self) -> Vec<Variant> {
+        if self.layer_variants.is_empty() {
+            vec![self.variant; self.layers]
+        } else {
+            self.layer_variants.clone()
+        }
     }
 
     /// The shard count the coordinator will actually build:
@@ -388,6 +493,27 @@ impl ServingConfig {
         if self.ffn_mult == 0 {
             return Err(ConfigError::Invalid("serving".into(), "ffn_mult".into(),
                                             "must be >= 1".into()));
+        }
+        if !self.layer_variants.is_empty()
+            && self.layer_variants.len() != self.layers {
+            return Err(ConfigError::Invalid(
+                "serving".into(), "variant".into(),
+                format!("{} per-layer variants for layers = {}",
+                        self.layer_variants.len(), self.layers)));
+        }
+        match (&self.weights, self.init) {
+            (None, InitPolicy::Load) => {
+                return Err(ConfigError::Invalid(
+                    "serving".into(), "init".into(),
+                    "init = load requires a weights path".into()));
+            }
+            (Some(_), InitPolicy::Seeded) => {
+                return Err(ConfigError::Invalid(
+                    "serving".into(), "weights".into(),
+                    "weights path set but init = seeded — drop the path \
+                     or set init = load".into()));
+            }
+            _ => {}
         }
         Ok(())
     }
@@ -559,6 +685,73 @@ resume = false
             assert!(matches!(ServingConfig::from_config(&c),
                              Err(ConfigError::Invalid(..))),
                     "{key} = -1 must be rejected");
+        }
+    }
+
+    #[test]
+    fn per_layer_variant_lists_parse_and_validate() {
+        assert_eq!(Variant::parse_list("ss"), Some(vec![Variant::SpectralShift]));
+        assert_eq!(Variant::parse_list("ss, ss ,full"),
+                   Some(vec![Variant::SpectralShift, Variant::SpectralShift,
+                             Variant::Full]));
+        assert_eq!(Variant::parse_list("ss,bogus"), None);
+        assert_eq!(Variant::parse_list(""), None);
+
+        let c = Config::parse(
+            "[serving]\nvariant = \"ss,ss,full\"\nlayers = 3\n").unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!(s.variant, Variant::SpectralShift, "first entry leads");
+        assert_eq!(s.layer_variants,
+                   vec![Variant::SpectralShift, Variant::SpectralShift,
+                        Variant::Full]);
+        assert_eq!(s.effective_layer_variants().len(), 3);
+        // list length must match depth
+        let c = Config::parse(
+            "[serving]\nvariant = \"ss,full\"\nlayers = 3\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        // a single variant replicates to the configured depth
+        let s = ServingConfig { layers: 4, ..Default::default() };
+        assert_eq!(s.effective_layer_variants(),
+                   vec![Variant::SpectralShift; 4]);
+    }
+
+    #[test]
+    fn projection_and_weight_knobs() {
+        let s = ServingConfig::default();
+        assert!(!s.projections);
+        assert_eq!(s.init, InitPolicy::Seeded);
+        assert!(s.weights.is_none());
+
+        let c = Config::parse(
+            "[serving]\nprojections = true\nlayers = 2\n").unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert!(s.projections);
+        // a wrong type is an error, not a silent default
+        let c = Config::parse("[serving]\nprojections = 1\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Type(..))));
+
+        // weights path implies init = load
+        let c = Config::parse(
+            "[serving]\nweights = \"w.ckpt\"\n").unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!(s.init, InitPolicy::Load);
+        assert_eq!(s.weights.as_deref(), Some("w.ckpt"));
+        // explicit contradictions fail
+        let c = Config::parse(
+            "[serving]\nweights = \"w.ckpt\"\ninit = \"seeded\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        let c = Config::parse("[serving]\ninit = \"load\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        let c = Config::parse("[serving]\ninit = \"bogus\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        // policy tokens round-trip
+        for p in [InitPolicy::Seeded, InitPolicy::Load] {
+            assert_eq!(InitPolicy::parse(p.token()), Some(p));
         }
     }
 }

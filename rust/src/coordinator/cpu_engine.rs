@@ -36,7 +36,7 @@ use super::batcher::{aligned_len, BatchPlan};
 use crate::attention::Tensor2;
 use crate::config::Variant;
 use crate::kernels::{BatchedAttention, BatchedVariant, KernelCtx, Workspace};
-use crate::model::{AttentionOp, EncoderStack};
+use crate::model::{AttentionOp, Checkpoint, CheckpointError, EncoderStack};
 use crate::rngx::Rng;
 use std::sync::Arc;
 
@@ -62,6 +62,10 @@ pub struct CpuModelConfig {
     pub layers: usize,
     /// FFN expansion factor: inner width = `ffn_mult · d_model`.
     pub ffn_mult: usize,
+    /// QKV/output projections in every full encoder block. The seed
+    /// block never projects, so `false` (and any depth-1 model) serves
+    /// the pre-projection function bitwise.
+    pub projections: bool,
 }
 
 impl Default for CpuModelConfig {
@@ -75,6 +79,7 @@ impl Default for CpuModelConfig {
             seed: 42,
             layers: 1,
             ffn_mult: 4,
+            projections: false,
         }
     }
 }
@@ -86,7 +91,7 @@ impl Default for CpuModelConfig {
 /// served embeddings against the scalar reference pipeline.
 pub struct CpuModel {
     cfg: CpuModelConfig,
-    serving_variant: Variant,
+    serving_variants: Vec<Variant>,
     stack: EncoderStack,
     /// vocab × d_model Gaussian embedding table (seeded).
     embed: Vec<f32>,
@@ -96,24 +101,68 @@ pub struct CpuModel {
 }
 
 impl CpuModel {
+    /// A uniform stack: every block runs `variant`, weights seeded.
     pub fn new(cfg: CpuModelConfig, variant: Variant) -> CpuModel {
+        CpuModel::new_mixed(cfg, &[variant])
+    }
+
+    /// Seeded model with per-layer operators: `variants` is either one
+    /// entry (replicated to every block) or exactly `cfg.layers`
+    /// entries, seed block first.
+    pub fn new_mixed(cfg: CpuModelConfig, variants: &[Variant]) -> CpuModel {
+        let (serving, kernel) = CpuModel::resolve_variants(&cfg, variants);
+        let stack = EncoderStack::new_mixed(kernel, cfg.d_model, cfg.n_heads,
+                                            cfg.ffn_mult, cfg.seed,
+                                            cfg.projections);
+        CpuModel::assemble(cfg, serving, stack)
+    }
+
+    /// Model serving externally trained weights: the checkpoint's
+    /// shape must match `cfg` exactly (depth, widths, projection flag)
+    /// — any disagreement or file problem fails closed with a typed
+    /// [`CheckpointError`].
+    pub fn with_checkpoint(cfg: CpuModelConfig, variants: &[Variant],
+                           ckpt: Checkpoint)
+                           -> Result<CpuModel, CheckpointError> {
+        let (serving, kernel) = CpuModel::resolve_variants(&cfg, variants);
+        ckpt.check_shape(cfg.d_model, cfg.n_heads, cfg.ffn_mult, cfg.layers,
+                         cfg.projections)?;
+        let stack = ckpt.into_stack(kernel)?;
+        Ok(CpuModel::assemble(cfg, serving, stack))
+    }
+
+    /// Validate the config and expand `variants` to one serving/kernel
+    /// operator per block.
+    fn resolve_variants(cfg: &CpuModelConfig, variants: &[Variant])
+                        -> (Vec<Variant>, Vec<BatchedVariant>) {
         assert!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
                 "d_model {} must be divisible by n_heads {}",
                 cfg.d_model, cfg.n_heads);
         assert!(cfg.landmarks > 0 && cfg.vocab > 0, "degenerate model config");
         assert!(cfg.layers > 0, "encoder depth must be >= 1");
         assert!(cfg.ffn_mult > 0, "ffn_mult must be >= 1");
+        let serving: Vec<Variant> = match variants.len() {
+            1 => vec![variants[0]; cfg.layers],
+            n if n == cfg.layers => variants.to_vec(),
+            n => panic!("{n} per-layer variants for layers = {}", cfg.layers),
+        };
+        let kernel = serving
+            .iter()
+            .map(|&v| BatchedVariant::from_config(v, cfg.landmarks,
+                                                  cfg.pinv_iters))
+            .collect();
+        (serving, kernel)
+    }
+
+    fn assemble(cfg: CpuModelConfig, serving_variants: Vec<Variant>,
+                stack: EncoderStack) -> CpuModel {
         let mut rng = Rng::new(cfg.seed);
         let mut embed = vec![0.0f32; cfg.vocab * cfg.d_model];
         rng.fill_normal_f32(&mut embed, 0.0, 1.0);
-        let kernel_variant =
-            BatchedVariant::from_config(variant, cfg.landmarks, cfg.pinv_iters);
-        let stack = EncoderStack::new(kernel_variant, cfg.layers, cfg.d_model,
-                                      cfg.n_heads, cfg.ffn_mult, cfg.seed);
         let pos_freqs = (0..cfg.d_model / 2)
             .map(|h| 10_000f32.powf(-((2 * h) as f32) / cfg.d_model as f32))
             .collect();
-        CpuModel { cfg, serving_variant: variant, stack, embed, pos_freqs }
+        CpuModel { cfg, serving_variants, stack, embed, pos_freqs }
     }
 
     pub fn d_model(&self) -> usize {
@@ -142,13 +191,24 @@ impl CpuModel {
         self.cfg.ffn_mult
     }
 
-    /// The serving-config variant this model executes.
+    /// The serving-config variant of the seed block (uniform models:
+    /// the only one).
     pub fn variant(&self) -> Variant {
-        self.serving_variant
+        self.serving_variants[0]
     }
 
-    /// The kernel dispatch the variant maps onto (also the model's
-    /// `&dyn AttentionOp`).
+    /// One serving-config variant per encoder block, seed block first.
+    pub fn variants(&self) -> &[Variant] {
+        &self.serving_variants
+    }
+
+    /// Whether full blocks run QKV/output projections.
+    pub fn projections(&self) -> bool {
+        self.cfg.projections
+    }
+
+    /// The kernel dispatch the seed-block variant maps onto (also the
+    /// model's `&dyn AttentionOp`).
     pub fn kernel_variant(&self) -> BatchedVariant {
         self.stack.variant()
     }
@@ -158,12 +218,22 @@ impl CpuModel {
         &self.stack
     }
 
-    /// One-line description for STATS / operator logs.
+    /// One-line description for STATS / operator logs: depth, per-block
+    /// operator(s), widths, projection flag, and weight provenance.
     pub fn describe(&self) -> String {
-        format!("{} layers, variant={}, d_model={}, heads={}, ffn_mult={}",
-                self.cfg.layers,
-                AttentionOp::name(&self.stack.variant()),
-                self.cfg.d_model, self.cfg.n_heads, self.cfg.ffn_mult)
+        let names: Vec<&str> =
+            self.stack.variants().iter().map(|v| v.name()).collect();
+        let variant = if names.iter().all(|n| *n == names[0]) {
+            names[0].to_string()
+        } else {
+            names.join(",")
+        };
+        format!("{} layers, variant={variant}, d_model={}, heads={}, \
+                 ffn_mult={}, projections={}, weights={}",
+                self.cfg.layers, self.cfg.d_model, self.cfg.n_heads,
+                self.cfg.ffn_mult,
+                if self.cfg.projections { "on" } else { "off" },
+                self.stack.init().token())
     }
 
     /// `Some(c)` when execution lengths must be divisible by the
@@ -388,8 +458,71 @@ mod tests {
         let d = m.describe();
         assert!(d.contains("4 layers"), "{d}");
         assert!(d.contains("variant=spectral_shift"), "{d}");
+        assert!(d.contains("projections=off"), "{d}");
+        assert!(d.contains("weights=seeded"), "{d}");
         assert_eq!(m.layers(), 4);
         assert_eq!(m.ffn_mult(), 4);
+    }
+
+    #[test]
+    fn describe_names_mixing_and_projections() {
+        let cfg = CpuModelConfig { layers: 2, projections: true,
+                                   ..Default::default() };
+        let m = CpuModel::new_mixed(
+            cfg, &[Variant::SpectralShift, Variant::Full]);
+        let d = m.describe();
+        assert!(d.contains("variant=spectral_shift,full"), "{d}");
+        assert!(d.contains("projections=on"), "{d}");
+        assert_eq!(m.variants(), &[Variant::SpectralShift, Variant::Full]);
+        assert_eq!(m.variant(), Variant::SpectralShift, "seed block leads");
+        assert!(m.projections());
+    }
+
+    #[test]
+    fn projected_encode_matches_the_scalar_projected_reference() {
+        let cfg = CpuModelConfig { layers: 2, ffn_mult: 2, projections: true,
+                                   ..Default::default() };
+        let model = CpuModel::new(cfg, Variant::SpectralShift);
+        let verify = CpuModel::new(cfg, Variant::SpectralShift);
+        let mut engine = CpuEngine::new(model);
+        let t = toks(100, 12);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let got = engine.encode_batch(&plan, &[t.len()]);
+        let plen = verify.padded_len(t.len());
+        let x = verify.embed_sequence(&t, plen);
+        let full = forward_ref(verify.stack(), &x);
+        let want = mean_pool(&full, t.len());
+        for (j, (a, b)) in got[0].iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                    "dim {j}: engine {a} vs projected reference {b}");
+        }
+    }
+
+    #[test]
+    fn checkpointed_model_serves_bitwise_the_saved_function() {
+        let cfg = CpuModelConfig { layers: 3, ffn_mult: 2, projections: true,
+                                   ..Default::default() };
+        let seeded = CpuModel::new(cfg, Variant::SpectralShift);
+        let path = std::env::temp_dir().join(format!(
+            "ssaformer-engine-ckpt-{}.bin", std::process::id()));
+        crate::model::checkpoint::save(seeded.stack(), &path).unwrap();
+        let ckpt = crate::model::checkpoint::load(&path).unwrap();
+        let loaded = CpuModel::with_checkpoint(
+            cfg, &[Variant::SpectralShift], ckpt).unwrap();
+        assert!(loaded.describe().contains("weights=loaded"),
+                "{}", loaded.describe());
+        let t = toks(80, 13);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let a = CpuEngine::new(seeded).encode_batch(&plan, &[t.len()]);
+        let b = CpuEngine::new(loaded).encode_batch(&plan, &[t.len()]);
+        assert_eq!(a, b, "checkpoint load must reproduce the served function");
+        // a shape disagreement fails closed
+        let ckpt = crate::model::checkpoint::load(&path).unwrap();
+        let narrow = CpuModelConfig { layers: 2, ..cfg };
+        assert!(matches!(
+            CpuModel::with_checkpoint(narrow, &[Variant::SpectralShift], ckpt),
+            Err(crate::model::CheckpointError::Mismatch { .. })));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -144,31 +144,88 @@ pub enum ExecBackend {
 impl ExecBackend {
     /// Backend auto-selection: XLA when the artifacts directory loads
     /// and the PJRT client constructs, otherwise the CPU kernel backend
-    /// with the default deterministic model. With the offline
-    /// `xla-stub` build this always selects CPU.
-    pub fn auto(cfg: &ServingConfig) -> ExecBackend {
-        ExecBackend::auto_with_reason(cfg).0
+    /// built from the full serving config (per-layer variants,
+    /// projections, and — under `init = load` — checkpoint weights).
+    /// With the offline `xla-stub` build this always selects CPU.
+    ///
+    /// Errors fail closed: a bad weights checkpoint (or `init = load`
+    /// on the XLA backend, which has no loadable encoder weights) stops
+    /// startup instead of silently serving seeded weights.
+    pub fn auto(cfg: &ServingConfig)
+                -> Result<ExecBackend, crate::runtime::RuntimeError> {
+        Ok(ExecBackend::auto_with_reason(cfg)?.0)
     }
 
     /// [`ExecBackend::auto`], also returning *why* XLA was skipped (the
     /// engine construction error) so entry points can surface a corrupt
     /// manifest instead of silently serving the CPU demo model.
     pub fn auto_with_reason(cfg: &ServingConfig)
-                            -> (ExecBackend, Option<crate::runtime::RuntimeError>) {
+                            -> Result<(ExecBackend, Option<crate::runtime::RuntimeError>),
+                                      crate::runtime::RuntimeError> {
         match Engine::new(&cfg.artifacts_dir) {
-            Ok(engine) => (ExecBackend::Xla(Arc::new(engine)), None),
-            Err(e) => (
-                ExecBackend::Cpu(Box::new(CpuEngine::new(CpuModel::new(
-                    CpuModelConfig {
-                        layers: cfg.layers,
-                        ffn_mult: cfg.ffn_mult,
-                        ..Default::default()
-                    },
-                    cfg.variant,
-                )))),
-                Some(e),
-            ),
+            Ok(engine) => {
+                // CPU-only model knobs must not be silently dropped by
+                // artifact selection: replicas with and without
+                // artifacts would then serve two different functions
+                // behind one STATS `model:` promise. Fail closed, like
+                // a bad checkpoint.
+                if cfg.init == crate::config::InitPolicy::Load {
+                    return Err(crate::runtime::RuntimeError::Checkpoint(
+                        "init = load applies to the CPU backend only; \
+                         remove the weights knob or the artifacts dir".into()));
+                }
+                // a uniform `variant = ss,ss,ss` list is the same
+                // request as `variant = ss` + `layers = 3`, so only
+                // genuine mixing trips this arm — depth itself is
+                // gated below either way
+                let mixed =
+                    cfg.layer_variants.iter().any(|&v| v != cfg.variant);
+                if cfg.projections || mixed {
+                    return Err(crate::runtime::RuntimeError::Xla(
+                        "cpu-only model knobs set (projections / per-layer \
+                         variant mixing) but the XLA artifact backend was \
+                         selected; remove the knobs or the artifacts dir"
+                            .into()));
+                }
+                if cfg.layers != 1 {
+                    return Err(crate::runtime::RuntimeError::Xla(format!(
+                        "layers = {} is a CPU-backend knob (the encode \
+                         artifact is single-pass); remove it or the \
+                         artifacts dir", cfg.layers)));
+                }
+                Ok((ExecBackend::Xla(Arc::new(engine)), None))
+            }
+            Err(e) => Ok((ExecBackend::cpu_from_config(cfg)?, Some(e))),
         }
+    }
+
+    /// Build the CPU kernel backend for `cfg`: seeded weights under
+    /// `init = seeded`, checkpoint weights (fail-closed) under
+    /// `init = load`, per-layer operators from the `variant` list, and
+    /// the projection flag threaded through to the stack.
+    pub fn cpu_from_config(cfg: &ServingConfig)
+                           -> Result<ExecBackend, crate::runtime::RuntimeError> {
+        let mcfg = CpuModelConfig {
+            layers: cfg.layers,
+            ffn_mult: cfg.ffn_mult,
+            projections: cfg.projections,
+            ..Default::default()
+        };
+        let variants = cfg.effective_layer_variants();
+        let model = match cfg.init {
+            crate::config::InitPolicy::Seeded => {
+                CpuModel::new_mixed(mcfg, &variants)
+            }
+            crate::config::InitPolicy::Load => {
+                let path = cfg.weights.as_deref().ok_or_else(|| {
+                    crate::runtime::RuntimeError::Checkpoint(
+                        "init = load without a weights path".into())
+                })?;
+                let ckpt = crate::model::checkpoint::load(path)?;
+                CpuModel::with_checkpoint(mcfg, &variants, ckpt)?
+            }
+        };
+        Ok(ExecBackend::Cpu(Box::new(CpuEngine::new(model))))
     }
 
     /// Which backend this is, for manifest/metrics reporting.
@@ -719,7 +776,7 @@ mod tests {
             artifacts_dir: "definitely/not/a/real/artifacts/dir".into(),
             ..Default::default()
         };
-        let backend = ExecBackend::auto(&cfg);
+        let backend = ExecBackend::auto(&cfg).unwrap();
         assert_eq!(backend.kind(), BackendKind::Cpu);
     }
 
@@ -787,14 +844,59 @@ mod tests {
             artifacts_dir: "definitely/not/a/real/artifacts/dir".into(),
             layers: 3,
             ffn_mult: 2,
+            projections: true,
+            layer_variants: vec![Variant::SpectralShift,
+                                 Variant::SpectralShift, Variant::Full],
             ..Default::default()
         };
-        match ExecBackend::auto(&cfg) {
+        match ExecBackend::auto(&cfg).unwrap() {
             ExecBackend::Cpu(engine) => {
                 assert_eq!(engine.model().layers(), 3);
                 assert_eq!(engine.model().ffn_mult(), 2);
+                assert!(engine.model().projections());
+                assert_eq!(engine.model().variants()[2], Variant::Full);
             }
             ExecBackend::Xla(_) => panic!("no artifacts, must fall back"),
         }
+    }
+
+    #[test]
+    fn load_policy_fails_closed_on_bad_checkpoints() {
+        use crate::config::InitPolicy;
+        // missing file
+        let cfg = ServingConfig {
+            artifacts_dir: "definitely/not/a/real/artifacts/dir".into(),
+            weights: Some("definitely/not/a/real/weights.ckpt".into()),
+            init: InitPolicy::Load,
+            ..Default::default()
+        };
+        assert!(matches!(ExecBackend::auto(&cfg),
+                         Err(crate::runtime::RuntimeError::Checkpoint(_))));
+        // shape mismatch: a depth-3 checkpoint cannot serve layers = 2
+        let path = std::env::temp_dir().join(format!(
+            "ssaformer-coord-ckpt-{}.bin", std::process::id()));
+        let donor = CpuModel::new(
+            CpuModelConfig { layers: 3, ..Default::default() },
+            Variant::SpectralShift);
+        crate::model::checkpoint::save(donor.stack(), &path).unwrap();
+        let cfg = ServingConfig {
+            artifacts_dir: "definitely/not/a/real/artifacts/dir".into(),
+            weights: Some(path.to_string_lossy().into_owned()),
+            init: InitPolicy::Load,
+            layers: 2,
+            ..Default::default()
+        };
+        assert!(matches!(ExecBackend::auto(&cfg),
+                         Err(crate::runtime::RuntimeError::Checkpoint(_))));
+        // the matching depth loads and serves
+        let cfg = ServingConfig { layers: 3, ..cfg };
+        match ExecBackend::auto(&cfg).unwrap() {
+            ExecBackend::Cpu(engine) => {
+                assert!(engine.model().describe().contains("weights=loaded"),
+                        "{}", engine.model().describe());
+            }
+            ExecBackend::Xla(_) => panic!("no artifacts, must fall back"),
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -151,6 +151,17 @@ impl BatchedAttention {
         &self.ctx
     }
 
+    /// Return a [`run`](BatchedAttention::run) output's buffer to the
+    /// per-task slot arena it was taken from (`task` = the task's index
+    /// in that `run` call). Callers composing custom fan-outs — e.g.
+    /// the projected MHA in [`model::layer`](crate::model::layer) —
+    /// use this to keep the slot arenas flat across batches, exactly as
+    /// [`attention_batched`] does internally for its own outputs.
+    pub fn put_slot(&mut self, task: usize, buf: Vec<f32>) {
+        assert!(task < self.slots.len(), "no such task slot");
+        self.slots[task].put(buf);
+    }
+
     /// Execute every task in parallel through the [`AttentionOp`] seam;
     /// returns one output per task, in order. Deterministic: identical
     /// results for any pool size.

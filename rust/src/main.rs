@@ -8,7 +8,7 @@
 //!
 //! (hand-rolled arg parsing: the crate cache has no clap.)
 
-use ssaformer::config::{Config, ServingConfig, Variant};
+use ssaformer::config::{Config, InitPolicy, ServingConfig, Variant};
 use ssaformer::coordinator::{Coordinator, ExecBackend};
 use ssaformer::runtime::Engine;
 use ssaformer::train::{train, TrainConfig};
@@ -42,7 +42,11 @@ USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
 
   serve    --config FILE | --addr HOST:PORT
            --variant full|nystrom|ss|linformer|lsh|sparse
+                     (or a per-layer list: --variant ss,ss,full)
            --layers N (1 = seed single-pass model) --ffn-mult N
+           --projections true|false (QKV/output maps in full blocks)
+           --weights PATH --init seeded|load (checkpoint policy;
+                     a --weights path implies --init load)
            --artifacts DIR --max-batch N --max-wait-ms MS
            --workers N --shards N --cache-capacity N (0 = off)
            --default-deadline-ms MS (0 = none) --deadline-margin-ms MS
@@ -77,7 +81,8 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
         ServingConfig::default()
     };
     if let Some(v) = flags.get("variant") {
-        cfg.variant = Variant::parse(v).ok_or(format!("bad variant {v:?}"))?;
+        let list = Variant::parse_list(v).ok_or(format!("bad variant {v:?}"))?;
+        (cfg.variant, cfg.layer_variants) = ServingConfig::split_variants(list);
     }
     if let Some(a) = flags.get("addr") {
         cfg.bind_addr = a.clone();
@@ -112,6 +117,19 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
     if let Some(f) = flags.get("ffn-mult") {
         cfg.ffn_mult = f.parse().map_err(|_| "bad ffn-mult")?;
     }
+    if let Some(p) = flags.get("projections") {
+        cfg.projections = p.parse().map_err(|_| "bad projections")?;
+    }
+    if let Some(w) = flags.get("weights") {
+        cfg.weights = Some(w.clone());
+        // a weights flag without an explicit policy means "load it"
+        if !flags.contains_key("init") {
+            cfg.init = InitPolicy::Load;
+        }
+    }
+    if let Some(i) = flags.get("init") {
+        cfg.init = InitPolicy::parse(i).ok_or(format!("bad init {i:?}"))?;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -125,7 +143,15 @@ fn cmd_serve(flags: &Flags) -> i32 {
         }
     };
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
-    let (backend, skipped) = ExecBackend::auto_with_reason(&cfg);
+    // a bad weights checkpoint (or load-on-XLA) stops startup here —
+    // fail closed, never silently serve seeded weights instead
+    let (backend, skipped) = match ExecBackend::auto_with_reason(&cfg) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("backend: {e}");
+            return 1;
+        }
+    };
     match (&backend, skipped) {
         (ExecBackend::Xla(engine), _) => {
             println!("platform: {}", engine.platform());

@@ -1,0 +1,520 @@
+//! Versioned binary checkpoints for the encoder stack — the bridge
+//! from externally trained weights to the serving path.
+//!
+//! A checkpoint stores every full-block weight of an [`EncoderStack`]
+//! (the seed block is weightless by construction, so depth-1 models
+//! have an empty payload) in a little-endian, dependency-free format:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"SSAFCKPT"
+//!      8     4  version          u32 LE (currently 1)
+//!     12     4  d_model          u32 LE
+//!     16     4  n_heads          u32 LE
+//!     20     4  ffn_mult         u32 LE
+//!     24     4  layers           u32 LE (total depth incl. seed block)
+//!     28     4  flags            u32 LE (bit 0: projections present)
+//!     32     …  payload          f32 LE ×(layers−1) blocks, each:
+//!                ln1_gain[d] ln1_bias[d] ln2_gain[d] ln2_bias[d]
+//!                w1[d·dff] b1[dff] w2[dff·d] b2[d]
+//!                then, if projections:
+//!                wq[h·d·dh] wk[h·d·dh] wv[h·d·dh] wo[d·d]
+//! ```
+//!
+//! The payload length is fully determined by the header, and both ends
+//! are enforced: a short file fails with [`CheckpointError::Truncated`],
+//! extra bytes with [`CheckpointError::TrailingBytes`] — malformed
+//! checkpoints **fail closed**, they never serve. Loading is exact:
+//! f32 bits round-trip untouched, so `save → load` reproduces the
+//! stack bitwise (pinned in `tests/checkpoint.rs`).
+//!
+//! What a checkpoint deliberately does *not* store: the attention
+//! operators (weightless, chosen by the serving config), the embedding
+//! table and position signal (drawn from the model seed — the
+//! checkpoint covers the encoder, matching the paper's "fixed encoder,
+//! swappable operator" evaluation shape), and the model seed itself.
+
+use super::layer::{EncoderLayer, Projections};
+use super::stack::{EncoderStack, WeightInit};
+use crate::kernels::BatchedVariant;
+use std::fmt;
+use std::path::Path;
+
+/// Magic bytes leading every checkpoint file.
+pub const MAGIC: &[u8; 8] = b"SSAFCKPT";
+/// Format version written by [`save`] and accepted by [`load`].
+pub const VERSION: u32 = 1;
+/// Header bytes before the f32 payload.
+const HEADER_LEN: usize = 32;
+/// Dimension sanity bounds — a corrupt header must not drive a huge
+/// allocation before the length check can catch it.
+const MAX_DIM: usize = 1 << 20;
+
+/// Why a checkpoint could not be written, read, or applied.
+#[derive(Debug)]
+pub enum CheckpointError {
+    Io(std::io::Error),
+    /// The file does not start with the checkpoint magic bytes.
+    BadMagic,
+    /// The file's format version is not [`VERSION`].
+    UnsupportedVersion(u32),
+    /// Header dimensions are zero, inconsistent, or absurd.
+    BadDims(String),
+    /// The file ends before the header-implied payload does.
+    Truncated { need: usize, got: usize },
+    /// The file continues past the header-implied payload.
+    TrailingBytes(usize),
+    /// The checkpoint's shape does not match the configured model.
+    Mismatch { field: &'static str, want: usize, got: usize },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io: {e}"),
+            CheckpointError::BadMagic => write!(f, "not a checkpoint (bad magic)"),
+            CheckpointError::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (expected {VERSION})")
+            }
+            CheckpointError::BadDims(why) => write!(f, "bad dimensions: {why}"),
+            CheckpointError::Truncated { need, got } => {
+                write!(f, "truncated: need {need} bytes, file has {got}")
+            }
+            CheckpointError::TrailingBytes(n) => {
+                write!(f, "{n} trailing bytes after the payload")
+            }
+            CheckpointError::Mismatch { field, want, got } => {
+                write!(f, "model/checkpoint mismatch on {field}: \
+                           configured {want}, checkpoint has {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+impl From<CheckpointError> for crate::runtime::RuntimeError {
+    fn from(e: CheckpointError) -> Self {
+        crate::runtime::RuntimeError::Checkpoint(e.to_string())
+    }
+}
+
+/// A loaded checkpoint: validated header dimensions plus the full-block
+/// weights, ready to become an [`EncoderStack`] via
+/// [`Checkpoint::into_stack`].
+pub struct Checkpoint {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub ffn_mult: usize,
+    /// Total depth, weightless seed block included.
+    pub layers: usize,
+    pub projections: bool,
+    blocks: Vec<EncoderLayer>,
+}
+
+impl Checkpoint {
+    /// Consume the checkpoint into a serving stack running `variants`
+    /// (one operator per block; length must equal the checkpoint
+    /// depth). The stack reports [`WeightInit::Loaded`].
+    pub fn into_stack(self, variants: Vec<BatchedVariant>)
+                      -> Result<EncoderStack, CheckpointError> {
+        if variants.len() != self.layers {
+            return Err(CheckpointError::Mismatch {
+                field: "layers", want: variants.len(), got: self.layers,
+            });
+        }
+        Ok(EncoderStack::from_blocks(variants, self.d_model, self.n_heads,
+                                     self.d_model * self.ffn_mult, self.blocks,
+                                     self.projections, WeightInit::Loaded))
+    }
+
+    /// Check the checkpoint against a configured model shape, naming
+    /// the first field that disagrees.
+    pub fn check_shape(&self, d_model: usize, n_heads: usize, ffn_mult: usize,
+                       layers: usize, projections: bool)
+                       -> Result<(), CheckpointError> {
+        let fields = [
+            ("d_model", d_model, self.d_model),
+            ("n_heads", n_heads, self.n_heads),
+            ("ffn_mult", ffn_mult, self.ffn_mult),
+            ("layers", layers, self.layers),
+            ("projections", projections as usize, self.projections as usize),
+        ];
+        for (field, want, got) in fields {
+            if want != got {
+                return Err(CheckpointError::Mismatch { field, want, got });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// f32 elements of one full block's payload — the ONE payload-size
+/// formula shared by `save` and `load`, so the writer and the
+/// validator cannot drift. Computed in u128 because `load` must
+/// evaluate crafted headers whose products overflow usize.
+fn block_f32s(d: usize, ffn_mult: usize, projections: bool) -> u128 {
+    let d = d as u128;
+    let dff = d * ffn_mult as u128;
+    // 4 LN vectors + w1 + b1 + w2 + b2
+    let base = 4 * d + d * dff + dff + dff * d + d;
+    // 3 per-head QKV maps (h · d · dh = d² each) + the d² output map
+    if projections { base + 4 * d * d } else { base }
+}
+
+/// Serialize `stack` to `path` (see the module docs for the layout).
+/// The write is atomic: bytes land in a `<path>.tmp` sibling first and
+/// are renamed over the target, so a crash or full disk mid-save can
+/// never truncate an existing good checkpoint out from under
+/// fail-closed `init = load` restarts.
+pub fn save(stack: &EncoderStack, path: impl AsRef<Path>)
+            -> Result<(), CheckpointError> {
+    let d = stack.d_model();
+    let dff = stack.dff();
+    let ffn_mult = dff / d;
+    let projections = stack.projections();
+    // the capacity hint comes from the shared formula; a real stack's
+    // sizes always fit usize
+    let mut out: Vec<u8> = Vec::with_capacity(
+        HEADER_LEN
+            + (4 * (stack.layers() as u128 - 1)
+               * block_f32s(d, ffn_mult, projections)) as usize);
+    out.extend_from_slice(MAGIC);
+    for v in [VERSION, d as u32, stack.n_heads() as u32,
+              ffn_mult as u32, stack.layers() as u32,
+              projections as u32] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut put = |w: &[f32]| {
+        for x in w {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    };
+    for blk in stack.blocks() {
+        put(&blk.ln1_gain);
+        put(&blk.ln1_bias);
+        put(&blk.ln2_gain);
+        put(&blk.ln2_bias);
+        put(&blk.w1);
+        put(&blk.b1);
+        put(&blk.w2);
+        put(&blk.b2);
+        if let Some(p) = blk.projections() {
+            put(&p.wq);
+            put(&p.wk);
+            put(&p.wv);
+            put(&p.wo);
+        } else {
+            assert!(!projections, "projection stack with a bare block");
+        }
+    }
+    let path = path.as_ref();
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&out)?;
+        // flush to stable storage before the rename becomes visible —
+        // without this a power loss after save() returns could leave a
+        // zero-length file where the previous good checkpoint was
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Parse and validate a checkpoint file. Every failure mode is a typed
+/// [`CheckpointError`]; no partially-loaded state escapes.
+pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, CheckpointError> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() < HEADER_LEN {
+        // a file too short for the header can still fail BadMagic
+        // first when even the magic is wrong — more precise than
+        // "truncated" for garbage input
+        if bytes.len() < 8 || &bytes[..8] != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        return Err(CheckpointError::Truncated {
+            need: HEADER_LEN, got: bytes.len(),
+        });
+    }
+    if &bytes[..8] != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let u32_at = |off: usize| -> u32 {
+        u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+    };
+    let version = u32_at(8);
+    if version != VERSION {
+        return Err(CheckpointError::UnsupportedVersion(version));
+    }
+    let d = u32_at(12) as usize;
+    let n_heads = u32_at(16) as usize;
+    let ffn_mult = u32_at(20) as usize;
+    let layers = u32_at(24) as usize;
+    let flags = u32_at(28);
+    let projections = flags & 1 != 0;
+    if (flags & !1) != 0 {
+        return Err(CheckpointError::BadDims(format!("unknown flags {flags:#x}")));
+    }
+    if d == 0 || n_heads == 0 || ffn_mult == 0 || layers == 0 {
+        return Err(CheckpointError::BadDims("zero dimension".into()));
+    }
+    if d > MAX_DIM || layers > MAX_DIM || ffn_mult > MAX_DIM {
+        return Err(CheckpointError::BadDims("dimension above sanity bound".into()));
+    }
+    if n_heads > d || d % n_heads != 0 {
+        return Err(CheckpointError::BadDims(format!(
+            "d_model {d} does not split into {n_heads} heads")));
+    }
+    // need is computed entirely in u128 (see block_f32s): with every
+    // dimension individually under MAX_DIM the usize products can
+    // still overflow (e.g. d = ffn_mult = 2^20, layers = 4), and an
+    // overflow-wrapped `need` would let a crafted header through to
+    // the payload loop's allocations. In widened arithmetic an absurd
+    // header simply fails the length check — no real file can be 2^60
+    // bytes.
+    let per_block = block_f32s(d, ffn_mult, projections);
+    let need = HEADER_LEN as u128 + 4 * (layers as u128 - 1) * per_block;
+    let got = bytes.len() as u128;
+    if got < need {
+        return Err(CheckpointError::Truncated {
+            need: need.min(usize::MAX as u128) as usize,
+            got: bytes.len(),
+        });
+    }
+    if got > need {
+        return Err(CheckpointError::TrailingBytes((got - need) as usize));
+    }
+    // the length check passed, so every product below fits usize (the
+    // file physically holds that many bytes)
+    let dff = d * ffn_mult;
+    let mut pos = HEADER_LEN;
+    let mut take = |len: usize| -> Vec<f32> {
+        let mut v = Vec::with_capacity(len);
+        for _ in 0..len {
+            v.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        v
+    };
+    let dh = d / n_heads;
+    let blocks = (1..layers)
+        .map(|_| {
+            let mut blk = EncoderLayer {
+                d,
+                dff,
+                ln1_gain: take(d),
+                ln1_bias: take(d),
+                ln2_gain: take(d),
+                ln2_bias: take(d),
+                w1: take(d * dff),
+                b1: take(dff),
+                w2: take(dff * d),
+                b2: take(d),
+                proj: None,
+            };
+            if projections {
+                blk.proj = Some(Projections::from_parts(
+                    d, n_heads,
+                    take(n_heads * d * dh),
+                    take(n_heads * d * dh),
+                    take(n_heads * d * dh),
+                    take(d * d)));
+            }
+            blk
+        })
+        .collect();
+    Ok(Checkpoint { d_model: d, n_heads, ffn_mult, layers, projections, blocks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SpectralShiftConfig;
+
+    fn stack(layers: usize, projections: bool) -> EncoderStack {
+        EncoderStack::new_mixed(
+            vec![BatchedVariant::SpectralShift(SpectralShiftConfig::new(8));
+                 layers],
+            16, 2, 2, 7, projections)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("ssaformer-ckpt-{}-{name}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn header_math_matches_the_format_spec() {
+        // one block of d=16, ffn_mult=2 (dff=32):
+        // 4·16 + 16·32 + 32 + 32·16 + 16
+        assert_eq!(block_f32s(16, 2, false), 64 + 512 + 32 + 512 + 16);
+        // projections add 4·d²
+        assert_eq!(block_f32s(16, 2, true),
+                   block_f32s(16, 2, false) + 4 * 256);
+    }
+
+    #[test]
+    fn save_load_roundtrips_bitwise() {
+        for projections in [false, true] {
+            let s = stack(3, projections);
+            let path = tmp(&format!("rt{projections}"));
+            save(&s, &path).unwrap();
+            let ck = load(&path).unwrap();
+            assert_eq!((ck.d_model, ck.n_heads, ck.ffn_mult, ck.layers,
+                        ck.projections),
+                       (16, 2, 2, 3, projections));
+            for (a, b) in s.blocks().iter().zip(&ck.blocks) {
+                assert_eq!(a.w1, b.w1);
+                assert_eq!(a.ln1_gain, b.ln1_gain);
+                assert_eq!(a.b2, b.b2);
+                match (a.projections(), b.projections()) {
+                    (None, None) => assert!(!projections),
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.wq, y.wq);
+                        assert_eq!(x.wo, y.wo);
+                    }
+                    _ => panic!("projection presence diverged"),
+                }
+            }
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+
+    #[test]
+    fn depth1_checkpoints_are_header_only() {
+        let s = stack(1, true);
+        let path = tmp("d1");
+        save(&s, &path).unwrap();
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), HEADER_LEN as u64);
+        // the atomic-write staging file must have been renamed away
+        let mut staged = path.as_os_str().to_owned();
+        staged.push(".tmp");
+        assert!(!std::path::Path::new(&staged).exists(),
+                "save must rename its staging file over the target");
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.layers, 1);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn malformed_files_fail_closed_with_typed_errors() {
+        let s = stack(2, true);
+        let path = tmp("bad");
+        save(&s, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // bad magic
+        let mut b = good.clone();
+        b[0] ^= 0xFF;
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::BadMagic)));
+
+        // unsupported version
+        let mut b = good.clone();
+        b[8] = 99;
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path),
+                         Err(CheckpointError::UnsupportedVersion(99))));
+
+        // truncation: drop the last byte; and a header-only torso
+        std::fs::write(&path, &good[..good.len() - 1]).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Truncated { .. })));
+        std::fs::write(&path, &good[..HEADER_LEN + 3]).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Truncated { .. })));
+
+        // trailing garbage
+        let mut b = good.clone();
+        b.extend_from_slice(&[0, 1, 2]);
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::TrailingBytes(3))));
+
+        // zero dimension
+        let mut b = good.clone();
+        b[12..16].copy_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::BadDims(_))));
+
+        // heads not dividing d_model
+        let mut b = good;
+        b[16..20].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::BadDims(_))));
+
+        // missing file is an Io error
+        std::fs::remove_file(&path).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Io(_))));
+    }
+
+    #[test]
+    fn absurd_header_products_fail_the_length_check_not_the_allocator() {
+        // every dimension is individually under MAX_DIM but the payload
+        // size overflows usize arithmetic — the u128 length check must
+        // reject it as truncated, never panic or attempt the allocation
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        for v in [VERSION, 1u32 << 20, 1, 1 << 20, 4, 0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = tmp("absurd");
+        std::fs::write(&path, &b).unwrap();
+        assert!(matches!(load(&path), Err(CheckpointError::Truncated { .. })));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn shape_checks_name_the_offending_field() {
+        let s = stack(3, true);
+        let path = tmp("shape");
+        save(&s, &path).unwrap();
+        let ck = load(&path).unwrap();
+        assert!(ck.check_shape(16, 2, 2, 3, true).is_ok());
+        match ck.check_shape(16, 2, 2, 4, true) {
+            Err(CheckpointError::Mismatch { field: "layers", want: 4, got: 3 }) => {}
+            other => panic!("{other:?}"),
+        }
+        match ck.check_shape(16, 2, 2, 3, false) {
+            Err(CheckpointError::Mismatch { field: "projections", .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        // into_stack enforces the operator count
+        let one_op = vec![BatchedVariant::Full];
+        assert!(matches!(ck.into_stack(one_op),
+                         Err(CheckpointError::Mismatch { .. })));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn loaded_stack_reports_its_init_and_serves_the_saved_function() {
+        use crate::attention::Tensor2;
+        use crate::kernels::{BatchedAttention, KernelCtx, Workspace};
+        use crate::rngx::Rng;
+        let s = stack(3, true);
+        let path = tmp("serve");
+        save(&s, &path).unwrap();
+        let loaded = load(&path).unwrap()
+            .into_stack(s.variants().to_vec()).unwrap();
+        assert_eq!(loaded.init(), WeightInit::Loaded);
+        assert_eq!(s.init(), WeightInit::Seeded);
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(11);
+        let x = Tensor2::randn(&mut rng, 64, 16, 1.0);
+        let mut xa = vec![x.clone()];
+        let mut xb = vec![x];
+        s.forward_batch(&mut exec, &mut xa, &mut ws);
+        loaded.forward_batch(&mut exec, &mut xb, &mut ws);
+        assert_eq!(xa[0].data, xb[0].data,
+                   "a reloaded checkpoint must serve bitwise the same function");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

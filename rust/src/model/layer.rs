@@ -14,18 +14,193 @@
 //! the blocked parallel [`gemm_into`], and the activation through the
 //! fused [`bias_gelu`] pass — so the whole block inherits the kernels'
 //! bitwise thread-count determinism and workspace discipline.
+//!
+//! Since the projection refactor a block may additionally carry
+//! [`Projections`]: per-head `W_Q`/`W_K`/`W_V` maps plus an output
+//! projection `W_O` over the concatenated heads. These wrap *around*
+//! the unchanged [`AttentionOp`](super::op::AttentionOp) seam — the
+//! operator still sees one `(len × dh)` head in, one out — which is
+//! exactly the `Q = XW_Q, K = XW_K, V = XW_V` formulation the paper
+//! (and Nyströmformer / Linformer) defines its approximation over.
+//! Blocks without projections attend over the raw per-head slice of
+//! the LN output, preserving the pre-projection served function
+//! bitwise.
 
+use super::op::AttentionOp;
 use crate::attention::Tensor2;
-use crate::kernels::{bias_gelu, gemm_into, layernorm, KernelCtx, Workspace};
+use crate::kernels::{
+    bias_gelu, gemm_into, layernorm, AttnTask, BatchedAttention, KernelCtx,
+    Workspace,
+};
 use crate::rngx::Rng;
 
 /// Layer-norm epsilon shared by the kernel and scalar-reference paths.
 pub const LN_EPS: f32 = 1e-5;
 
+/// Per-head attention projections of one encoder block: head `h`
+/// attends over `q = x·W_Q^h`, `k = x·W_K^h`, `v = x·W_V^h` (each
+/// `W^h` is `d_model × dh`), and the concatenated head outputs pass
+/// through one `d_model × d_model` output projection `W_O`. Like every
+/// other model weight the matrices are a seeded deterministic draw
+/// unless loaded from a [`checkpoint`](super::checkpoint).
+pub struct Projections {
+    pub(crate) d: usize,
+    pub(crate) n_heads: usize,
+    pub(crate) dh: usize,
+    /// `n_heads` head-major `(d × dh)` row-major matrices, concatenated.
+    pub(crate) wq: Vec<f32>,
+    pub(crate) wk: Vec<f32>,
+    pub(crate) wv: Vec<f32>,
+    /// `(d × d)` row-major output projection over concatenated heads.
+    pub(crate) wo: Vec<f32>,
+}
+
+impl Projections {
+    /// Draw one block's projection weights from `rng` (1/√fan_in
+    /// scaling, fan_in = d_model for all four maps, so projected
+    /// activations stay on the residual stream's scale).
+    pub(crate) fn seeded(rng: &mut Rng, d: usize, n_heads: usize) -> Projections {
+        assert!(n_heads >= 1 && d % n_heads == 0);
+        let std = 1.0 / (d as f32).sqrt();
+        let mut draw = |len: usize| -> Vec<f32> {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal_f32(&mut v, 0.0, std);
+            v
+        };
+        let dh = d / n_heads;
+        Projections {
+            d,
+            n_heads,
+            dh,
+            wq: draw(n_heads * d * dh),
+            wk: draw(n_heads * d * dh),
+            wv: draw(n_heads * d * dh),
+            wo: draw(d * d),
+        }
+    }
+
+    /// Assemble projections from already-materialized weights (the
+    /// checkpoint load path). Shapes are the caller's contract.
+    pub(crate) fn from_parts(d: usize, n_heads: usize, wq: Vec<f32>,
+                             wk: Vec<f32>, wv: Vec<f32>, wo: Vec<f32>)
+                             -> Projections {
+        let dh = d / n_heads;
+        assert_eq!(wq.len(), n_heads * d * dh);
+        assert_eq!(wk.len(), n_heads * d * dh);
+        assert_eq!(wv.len(), n_heads * d * dh);
+        assert_eq!(wo.len(), d * d);
+        Projections { d, n_heads, dh, wq, wk, wv, wo }
+    }
+
+    /// Heads per block.
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    /// Per-head width `d_model / n_heads`.
+    pub fn dh(&self) -> usize {
+        self.dh
+    }
+
+    /// Head `h`'s `(d × dh)` query projection, row-major.
+    pub fn wq(&self, h: usize) -> &[f32] {
+        &self.wq[h * self.d * self.dh..(h + 1) * self.d * self.dh]
+    }
+
+    /// Head `h`'s `(d × dh)` key projection, row-major.
+    pub fn wk(&self, h: usize) -> &[f32] {
+        &self.wk[h * self.d * self.dh..(h + 1) * self.d * self.dh]
+    }
+
+    /// Head `h`'s `(d × dh)` value projection, row-major.
+    pub fn wv(&self, h: usize) -> &[f32] {
+        &self.wv[h * self.d * self.dh..(h + 1) * self.d * self.dh]
+    }
+
+    /// The `(d × d)` output projection, row-major.
+    pub fn wo(&self) -> &[f32] {
+        &self.wo
+    }
+
+    /// Projected multi-head attention for a batch of per-request
+    /// activations: for every request and head, `q/k/v` are projected
+    /// with the blocked parallel GEMM (staged from `ws`), all heads ×
+    /// requests fan out over `exec`'s pool through the one
+    /// [`AttentionOp`] seam, head outputs are stitched back and pushed
+    /// through `W_O`. Returns one `(len × d)` tensor per request,
+    /// backed by `exec.scratch()` — the caller recycles each with
+    /// `exec.scratch().put(out.data)`, mirroring
+    /// [`attention_batched_self_pooled`]'s contract, so warm serving
+    /// stays allocation-free.
+    ///
+    /// [`attention_batched_self_pooled`]:
+    ///     crate::kernels::attention_batched_self_pooled
+    pub fn mha_batch(&self, exec: &mut BatchedAttention, xs: &[Tensor2],
+                     op: &dyn AttentionOp, ws: &mut Workspace) -> Vec<Tensor2> {
+        let (h, d, dh) = (self.n_heads, self.d, self.dh);
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let ctx = exec.ctx().clone();
+        let mut tasks = Vec::with_capacity(xs.len() * h);
+        for x in xs {
+            assert_eq!(x.cols, d, "projection width mismatch");
+            let n = x.rows;
+            for head in 0..h {
+                let mut project = |w: &[f32]| -> Tensor2 {
+                    let mut t = Tensor2 { rows: n, cols: dh, data: ws.take(n * dh) };
+                    gemm_into(&ctx, &x.data, w, &mut t.data, n, d, dh);
+                    t
+                };
+                tasks.push(AttnTask {
+                    q: project(self.wq(head)),
+                    k: project(self.wk(head)),
+                    v: project(self.wv(head)),
+                });
+            }
+        }
+        let heads = exec.run(&tasks, op);
+        let mut outs = Vec::with_capacity(xs.len());
+        let mut task_it = tasks.into_iter();
+        let mut slot = 0;
+        for x in xs {
+            let n = x.rows;
+            // stitch this request's heads into one (n × d) tensor ...
+            let mut merged = Tensor2 { rows: n, cols: d, data: ws.take(n * d) };
+            for head in 0..h {
+                let ho = &heads[slot + head];
+                assert_eq!((ho.rows, ho.cols), (n, dh));
+                for i in 0..n {
+                    merged.row_mut(i)[head * dh..(head + 1) * dh]
+                        .copy_from_slice(ho.row(i));
+                }
+                let t = task_it.next().expect("one task per head");
+                ws.put(t.q.data);
+                ws.put(t.k.data);
+                ws.put(t.v.data);
+            }
+            slot += h;
+            // ... and push it through W_O into executor scratch
+            let mut out = Tensor2 { rows: n, cols: d,
+                                    data: exec.scratch().take(n * d) };
+            gemm_into(&ctx, &merged.data, &self.wo, &mut out.data, n, d, d);
+            ws.put(merged.data);
+            outs.push(out);
+        }
+        // head outputs came from the per-task slot arenas — return them
+        for (i, ho) in heads.into_iter().enumerate() {
+            exec.put_slot(i, ho.data);
+        }
+        outs
+    }
+}
+
 /// Weights of one encoder block. Like the serving model's embedding
 /// table, they are a seeded deterministic draw: two stacks built from
 /// the same `(seed, shape)` serve the same function, which is what lets
 /// tests (and forked worker engines) rebuild and cross-check the model.
+/// Checkpoint-loaded stacks replace the draw with externally trained
+/// weights (see [`checkpoint`](super::checkpoint)).
 pub struct EncoderLayer {
     pub(crate) d: usize,
     pub(crate) dff: usize,
@@ -41,20 +216,27 @@ pub struct EncoderLayer {
     /// FFN contract: (dff × d) row-major, plus its bias.
     pub(crate) w2: Vec<f32>,
     pub(crate) b2: Vec<f32>,
+    /// Attention projections (None = attend over the raw per-head
+    /// slice — the pre-projection served function, kept bitwise).
+    pub(crate) proj: Option<Projections>,
 }
 
 impl EncoderLayer {
     /// Draw one block's weights from `rng`. GEMM weights use 1/√fan_in
     /// scaling so the residual stream stays O(1) across depth; LN
     /// gains/biases get small seeded variation so they are load-bearing
-    /// (a unit-gain LN would make the parameters dead weight).
-    pub(crate) fn seeded(rng: &mut Rng, d: usize, dff: usize) -> EncoderLayer {
+    /// (a unit-gain LN would make the parameters dead weight). With
+    /// `projections` the QKV/output maps are drawn *after* the
+    /// LN/FFN weights, so the projection-free stream is identical to
+    /// the pre-projection releases draw for draw.
+    pub(crate) fn seeded(rng: &mut Rng, d: usize, dff: usize, n_heads: usize,
+                         projections: bool) -> EncoderLayer {
         let mut draw = |len: usize, mean: f32, std: f32| -> Vec<f32> {
             let mut v = vec![0.0f32; len];
             rng.fill_normal_f32(&mut v, mean, std);
             v
         };
-        EncoderLayer {
+        let mut layer = EncoderLayer {
             d,
             dff,
             ln1_gain: draw(d, 1.0, 0.05),
@@ -65,7 +247,17 @@ impl EncoderLayer {
             b1: draw(dff, 0.0, 0.02),
             w2: draw(dff * d, 0.0, 1.0 / (dff as f32).sqrt()),
             b2: draw(d, 0.0, 0.02),
+            proj: None,
+        };
+        if projections {
+            layer.proj = Some(Projections::seeded(rng, d, n_heads));
         }
+        layer
+    }
+
+    /// This block's attention projections, when configured.
+    pub fn projections(&self) -> Option<&Projections> {
+        self.proj.as_ref()
     }
 
     /// LN₁(x): the tensor the attention sublayer attends over (q = k =
@@ -106,9 +298,14 @@ impl EncoderLayer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::BatchedVariant;
 
     fn layer(seed: u64, d: usize, dff: usize) -> EncoderLayer {
-        EncoderLayer::seeded(&mut Rng::new(seed), d, dff)
+        EncoderLayer::seeded(&mut Rng::new(seed), d, dff, 2, false)
+    }
+
+    fn projected_layer(seed: u64, d: usize, dff: usize, h: usize) -> EncoderLayer {
+        EncoderLayer::seeded(&mut Rng::new(seed), d, dff, h, true)
     }
 
     #[test]
@@ -119,6 +316,78 @@ mod tests {
         assert_eq!(a.ln1_gain, b.ln1_gain);
         let c = layer(8, 16, 32);
         assert_ne!(a.w1, c.w1);
+    }
+
+    #[test]
+    fn projection_flag_does_not_perturb_the_base_draw() {
+        // the LN/FFN stream must be identical with and without
+        // projections (the off path is the PR-4 function, bitwise)
+        let off = layer(7, 16, 32);
+        let on = projected_layer(7, 16, 32, 2);
+        assert_eq!(off.w1, on.w1);
+        assert_eq!(off.b2, on.b2);
+        assert!(off.proj.is_none());
+        let p = on.projections().expect("projections drawn");
+        assert_eq!(p.n_heads(), 2);
+        assert_eq!(p.dh(), 8);
+        assert_eq!(p.wq(0).len(), 16 * 8);
+        assert_eq!(p.wo().len(), 16 * 16);
+        // per-head slices are distinct draws
+        assert_ne!(p.wq(0), p.wq(1));
+    }
+
+    #[test]
+    fn projected_mha_is_thread_invariant_and_differs_from_bare() {
+        let l = projected_layer(3, 16, 32, 2);
+        let p = l.projections().unwrap();
+        let mut rng = Rng::new(5);
+        let xs = vec![
+            Tensor2::randn(&mut rng, 48, 16, 1.0),
+            Tensor2::randn(&mut rng, 32, 16, 1.0),
+        ];
+        let op = BatchedVariant::Full;
+        let mut ws = Workspace::new();
+        let mut seq_exec = BatchedAttention::new(KernelCtx::sequential());
+        let a = p.mha_batch(&mut seq_exec, &xs, &op, &mut ws);
+        let mut par_exec = BatchedAttention::new(KernelCtx::global());
+        let b = p.mha_batch(&mut par_exec, &xs, &op, &mut ws);
+        let bare = crate::kernels::attention_batched_self(
+            &mut par_exec, &xs, 2, &op);
+        for ((x, y), raw) in a.iter().zip(&b).zip(&bare) {
+            assert_eq!(x.data, y.data, "projected MHA must be thread-invariant");
+            assert_ne!(x.data, raw.data, "projections must be load-bearing");
+            assert!(x.data.iter().all(|v| v.is_finite()));
+        }
+        for t in a {
+            seq_exec.scratch().put(t.data);
+        }
+        for t in b {
+            par_exec.scratch().put(t.data);
+        }
+    }
+
+    #[test]
+    fn projected_mha_keeps_the_arenas_flat() {
+        let l = projected_layer(9, 16, 32, 4);
+        let p = l.projections().unwrap();
+        let mut rng = Rng::new(6);
+        let xs = vec![Tensor2::randn(&mut rng, 64, 16, 1.0)];
+        let op = BatchedVariant::Full;
+        let mut ws = Workspace::new();
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let outs = p.mha_batch(&mut exec, &xs, &op, &mut ws);
+        for t in outs {
+            exec.scratch().put(t.data);
+        }
+        let warm = ws.allocations();
+        for _ in 0..3 {
+            let outs = p.mha_batch(&mut exec, &xs, &op, &mut ws);
+            for t in outs {
+                exec.scratch().put(t.data);
+            }
+        }
+        assert_eq!(ws.allocations(), warm,
+                   "steady-state projected MHA must not grow the arena");
     }
 
     #[test]

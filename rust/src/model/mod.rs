@@ -11,10 +11,19 @@
 //!   [`BatchedVariant`](crate::kernels::BatchedVariant).
 //! * [`EncoderLayer`] (`layer`) — one pre-LN block: LN → MHA → residual
 //!   → LN → FFN (fused bias+GELU between two blocked GEMMs) → residual.
-//! * [`EncoderStack`] (`stack`) — `layers` blocks sharing one planned
+//!   With projections on, the MHA is the projected form over per-head
+//!   `W_Q`/`W_K`/`W_V` plus the concatenated output map `W_O`
+//!   ([`Projections`]) — the `Q = XW_Q` formulation the paper defines
+//!   its approximation over — still dispatched through the one
+//!   [`AttentionOp`] seam.
+//! * [`EncoderStack`] (`stack`) — `layers` blocks (each with its own
+//!   operator — per-layer variant mixing) sharing one planned
 //!   [`Workspace`](crate::kernels::Workspace); the first block is the
 //!   weightless *seed block* (bare attention), so `layers = 1` is
 //!   bitwise-identical to the pre-stack single-pass serving model.
+//! * [`checkpoint`] — versioned little-endian weight files: `save` /
+//!   `load` / fail-closed validation, so the stack serves externally
+//!   trained weights (`init = load`) instead of only seeded draws.
 //! * [`reference`] — the scalar multi-layer forward the kernel stack is
 //!   parity-tested against (`tests/model_parity.rs`).
 //!
@@ -37,11 +46,13 @@
 //!   [`EncoderStack::plan_sizes`] names the peak working set so engines
 //!   pre-plan it.
 
+pub mod checkpoint;
 pub mod layer;
 pub mod op;
 pub mod reference;
 pub mod stack;
 
-pub use layer::{EncoderLayer, LN_EPS};
+pub use checkpoint::{Checkpoint, CheckpointError};
+pub use layer::{EncoderLayer, Projections, LN_EPS};
 pub use op::AttentionOp;
-pub use stack::EncoderStack;
+pub use stack::{EncoderStack, WeightInit};

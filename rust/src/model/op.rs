@@ -23,7 +23,10 @@
 //! * **Purity** — `attend` must be a pure function of `(q, k, v)` and
 //!   the op's own configuration: no interior mutability, no global
 //!   state. This is what makes served embeddings independent of batch
-//!   composition (the cache-coherence invariant).
+//!   composition (the cache-coherence invariant). Memoizing a
+//!   deterministic internal draw (e.g. [`LinformerOp`]'s seeded
+//!   projection, cached per key count) is permitted: a hit is bitwise
+//!   the regenerated value, so the function served is unchanged.
 //! * **Thread-count determinism** — for any `ctx`, the result must be
 //!   bitwise identical to the sequential result. Ops built on the
 //!   `kernels::` primitives inherit this; scalar ops are trivially

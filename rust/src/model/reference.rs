@@ -10,7 +10,7 @@
 //!
 //! [`spectral_shift::reference`]: crate::attention::spectral_shift::reference
 
-use super::layer::LN_EPS;
+use super::layer::{Projections, LN_EPS};
 use super::stack::EncoderStack;
 use crate::attention::spectral_shift::reference;
 use crate::attention::{lsh_attention, matmul_f32, sparse_attention, Tensor2};
@@ -69,15 +69,22 @@ pub fn ref_attention(variant: BatchedVariant) -> AttnRef {
 
 /// Scalar forward through `stack` for one request's (plen × d)
 /// embedding: seed bare-attention block, then each full pre-LN block
-/// with naive matmuls and the scalar LN/GELU.
+/// with naive matmuls and the scalar LN/GELU. Mirrors the kernel path
+/// feature for feature: per-block attention operators (variant mixing)
+/// and, when the block carries [`Projections`], the projected MHA via
+/// [`projected_mha_ref`].
 pub fn forward_ref(stack: &EncoderStack, x: &Tensor2) -> Tensor2 {
-    let attn = ref_attention(stack.variant());
+    let attn = ref_attention(stack.variants()[0]);
     let heads = stack.n_heads();
     let mut cur = mha_ref(x, heads, &attn);
-    for blk in stack.blocks() {
+    for (b, blk) in stack.blocks().iter().enumerate() {
+        let attn = ref_attention(stack.variants()[b + 1]);
         // attention sublayer
         let ln = layernorm_ref(&cur, &blk.ln1_gain, &blk.ln1_bias);
-        let att = mha_ref(&ln, heads, &attn);
+        let att = match blk.projections() {
+            Some(p) => projected_mha_ref(&ln, p, &attn),
+            None => mha_ref(&ln, heads, &attn),
+        };
         for (c, a) in cur.data.iter_mut().zip(&att.data) {
             *c += *a;
         }
@@ -101,6 +108,56 @@ pub fn forward_ref(stack: &EncoderStack, x: &Tensor2) -> Tensor2 {
         }
     }
     cur
+}
+
+/// Naive in-k-order matmul: `c[i][j] = Σ_k a[i][k]·b[k][j]`, adds
+/// strictly in increasing k. This is the textbook triple loop — and
+/// because the blocked GEMM also never splits or reorders k, the two
+/// round identically, which matters below: discrete operators (LSH
+/// bucketing) amplify any rounding difference on their *inputs* into
+/// order-1 output changes, so the reference must project bitwise like
+/// the kernel path does. (`matmul_f32`'s 4-way split accumulators
+/// round differently, so it cannot be used here.)
+fn matmul_k_order_ref(a: &Tensor2, b: &[f32], cols: usize) -> Tensor2 {
+    assert_eq!(b.len(), a.cols * cols);
+    let mut c = Tensor2::zeros(a.rows, cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &av) in arow.iter().enumerate() {
+            let brow = &b[k * cols..(k + 1) * cols];
+            for j in 0..cols {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Scalar projected multi-head attention: head `h` attends over
+/// `q = x·W_Q^h`, `k = x·W_K^h`, `v = x·W_V^h` (naive in-order
+/// matmuls), the head outputs are concatenated and pushed through
+/// `W_O`. The mirror of [`Projections::mha_batch`] in reference-grade
+/// arithmetic.
+///
+/// [`Projections::mha_batch`]: super::layer::Projections::mha_batch
+pub fn projected_mha_ref(x: &Tensor2, proj: &Projections,
+                         attn: &AttnRef) -> Tensor2 {
+    let (h, dh) = (proj.n_heads(), proj.dh());
+    let d = x.cols;
+    assert_eq!(d, h * dh, "projection width mismatch");
+    let mut merged = Tensor2::zeros(x.rows, d);
+    for head in 0..h {
+        let oh = attn(&matmul_k_order_ref(x, proj.wq(head), dh),
+                      &matmul_k_order_ref(x, proj.wk(head), dh),
+                      &matmul_k_order_ref(x, proj.wv(head), dh));
+        assert_eq!((oh.rows, oh.cols), (x.rows, dh));
+        for i in 0..x.rows {
+            merged.row_mut(i)[head * dh..(head + 1) * dh]
+                .copy_from_slice(oh.row(i));
+        }
+    }
+    matmul_k_order_ref(&merged, proj.wo(), d)
 }
 
 /// Scalar multi-head wrapper: split columns into heads, attend each with
@@ -221,5 +278,59 @@ mod tests {
         stack.forward_batch(&mut exec, &mut xs, &mut ws);
         let e = rel_err(&xs[0], &want);
         assert!(e < 1e-4, "stack vs scalar reference rel err {e}");
+    }
+
+    #[test]
+    fn k_order_matmul_is_bitwise_the_blocked_gemm() {
+        // the load-bearing assumption of the projected reference: the
+        // textbook k-order loop and the blocked GEMM round identically
+        // (neither splits or reorders the k reduction)
+        let mut rng = Rng::new(3);
+        let a = Tensor2::randn(&mut rng, 37, 24, 1.0);
+        let mut b = vec![0.0f32; 24 * 12];
+        rng.fill_normal_f32(&mut b, 0.0, 1.0);
+        let slow = matmul_k_order_ref(&a, &b, 12);
+        let mut fast = vec![0.0f32; 37 * 12];
+        crate::kernels::gemm_into(&KernelCtx::global(), &a.data, &b, &mut fast,
+                                  37, 24, 12);
+        assert_eq!(slow.data, fast, "reference projection must round like \
+                                     the kernel projection");
+    }
+
+    #[test]
+    fn projected_forward_ref_matches_kernel_stack() {
+        // same mirror with QKV/output projections live in every full
+        // block — pins Projections::mha_batch against the naive path
+        let stack = EncoderStack::new_mixed(
+            vec![BatchedVariant::SpectralShift(SpectralShiftConfig::new(8)); 2],
+            16, 2, 2, 9, true);
+        let mut rng = Rng::new(12);
+        let x = Tensor2::randn(&mut rng, 64, 16, 1.0);
+        let want = forward_ref(&stack, &x);
+        let mut exec = crate::kernels::BatchedAttention::new(KernelCtx::global());
+        let mut ws = Workspace::new();
+        let mut xs = vec![x];
+        stack.forward_batch(&mut exec, &mut xs, &mut ws);
+        let e = rel_err(&xs[0], &want);
+        assert!(e < 1e-4, "projected stack vs scalar reference rel err {e}");
+    }
+
+    #[test]
+    fn mixed_variant_forward_ref_matches_kernel_stack() {
+        // per-block operators: spectral shift below, exact softmax on top
+        let stack = EncoderStack::new_mixed(
+            vec![BatchedVariant::SpectralShift(SpectralShiftConfig::new(8)),
+                 BatchedVariant::SpectralShift(SpectralShiftConfig::new(8)),
+                 BatchedVariant::Full],
+            16, 2, 2, 9, false);
+        let mut rng = Rng::new(13);
+        let x = Tensor2::randn(&mut rng, 64, 16, 1.0);
+        let want = forward_ref(&stack, &x);
+        let mut exec = crate::kernels::BatchedAttention::new(KernelCtx::global());
+        let mut ws = Workspace::new();
+        let mut xs = vec![x];
+        stack.forward_batch(&mut exec, &mut xs, &mut ws);
+        let e = rel_err(&xs[0], &want);
+        assert!(e < 1e-4, "mixed stack vs scalar reference rel err {e}");
     }
 }

@@ -53,6 +53,10 @@ pub enum RuntimeError {
     Io(std::io::Error),
     NotFound(String),
     Shape(String),
+    /// Weight-checkpoint problem (bad file, shape mismatch) — serving
+    /// with `init = load` fails closed on these instead of silently
+    /// falling back to seeded weights.
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -63,6 +67,7 @@ impl std::fmt::Display for RuntimeError {
             RuntimeError::Io(e) => write!(f, "io: {e}"),
             RuntimeError::NotFound(what) => write!(f, "artifact not found: {what}"),
             RuntimeError::Shape(what) => write!(f, "shape mismatch: {what}"),
+            RuntimeError::Checkpoint(what) => write!(f, "checkpoint: {what}"),
         }
     }
 }

@@ -60,7 +60,7 @@
 //!
 //! ```text
 //! backend:  <cpu-kernels|xla-pjrt>     which execution backend is live
-//! model:    L layers, variant=<op>, d_model=D, heads=H, ffn_mult=M
+//! model:    L layers, variant=<op[,op…]>, d_model=D, heads=H, ffn_mult=M, projections=<on|off>, weights=<seeded|loaded>
 //! workers:  N (S queue shards, cache L/C)   worker pool + cache shape
 //! requests: in=N done=N rejected=N expired=N   admission counters
 //! cache:    hits=N misses=N (H% hit rate)
@@ -74,8 +74,11 @@
 //!
 //! `model` identifies the served function: encoder depth (1 = the
 //! seed single-pass model; deeper stacks add pre-LN blocks), the
-//! attention operator behind the `AttentionOp` seam, and the widths —
-//! on the XLA backend it reads `artifact encoder, variant=…` instead.
+//! attention operator behind the `AttentionOp` seam (one per block
+//! when per-layer mixing is configured), the widths, whether full
+//! blocks run QKV/output projections, and whether the encoder weights
+//! are the seeded draw or a loaded checkpoint — on the XLA backend it
+//! reads `artifact encoder, variant=…` instead.
 //! `occupancy` is batch-served requests per offered batch slot (cache
 //! hits bypass batching and are excluded); `executed padding` counts
 //! padding positions the backend actually computed (dense remainder on

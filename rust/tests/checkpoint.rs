@@ -1,0 +1,146 @@
+//! Checkpoint acceptance tests (the loadable-weights contract):
+//!
+//! 1. `save → load` round-trips the encoder weights **bitwise**, and a
+//!    coordinator serving the loaded checkpoint returns embeddings
+//!    bitwise-equal to the stack that wrote it.
+//! 2. Malformed files — truncated, corrupt header, wrong dims, trailing
+//!    bytes — fail closed with typed [`CheckpointError`]s; serving with
+//!    `init = load` on a bad file never starts.
+//! 3. The `weights`/`init` knobs thread end to end through
+//!    `ServingConfig` → `ExecBackend::auto` → `Coordinator`.
+
+use ssaformer::config::{InitPolicy, ServingConfig, Variant};
+use ssaformer::coordinator::{
+    Coordinator, CpuModel, CpuModelConfig, ExecBackend,
+};
+use ssaformer::model::checkpoint::{self, CheckpointError};
+use ssaformer::runtime::RuntimeError;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 23 + seed) % 2000)).collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "ssaformer-it-ckpt-{}-{name}.bin", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn saved_weights_serve_bitwise_through_the_coordinator() {
+    // write a projected depth-3 model's weights ...
+    let mcfg = CpuModelConfig {
+        layers: 3, ffn_mult: 2, projections: true, ..Default::default()
+    };
+    let donor = CpuModel::new(mcfg, Variant::SpectralShift);
+    let path = tmp("serve");
+    checkpoint::save(donor.stack(), &path).unwrap();
+
+    // ... then serve twice: seeded (the donor's config) vs loaded
+    let serve = |weights: Option<String>| -> Vec<Vec<f32>> {
+        let cfg = ServingConfig {
+            artifacts_dir: "no/such/artifacts".into(),
+            variant: Variant::SpectralShift,
+            layers: 3,
+            ffn_mult: 2,
+            projections: true,
+            init: if weights.is_some() { InitPolicy::Load }
+                  else { InitPolicy::Seeded },
+            weights,
+            max_batch: 2,
+            max_wait_ms: 2,
+            queue_capacity: 32,
+            workers: 1,
+            cache_capacity: 0,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let backend = ExecBackend::auto(&cfg).unwrap();
+        let c = Arc::new(Coordinator::start(backend, &cfg).unwrap());
+        (0..3)
+            .map(|i| {
+                c.submit_blocking(toks(60 + 30 * i, i as i32))
+                    .unwrap().embedding.unwrap()
+            })
+            .collect()
+    };
+    let seeded = serve(None);
+    let loaded = serve(Some(path.to_string_lossy().into_owned()));
+    for (i, (a, b)) in seeded.iter().zip(&loaded).enumerate() {
+        assert_eq!(bits(a), bits(b),
+                   "req {i}: loaded checkpoint must serve the saved \
+                    function bitwise");
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn roundtrip_is_bitwise_stable_across_a_second_save() {
+    // save(load(save(m))) must produce byte-identical files — the
+    // strongest cheap statement of lossless serialization
+    let mcfg = CpuModelConfig {
+        layers: 4, ffn_mult: 2, projections: true, ..Default::default()
+    };
+    let m = CpuModel::new(mcfg, Variant::Nystrom);
+    let p1 = tmp("rt1");
+    let p2 = tmp("rt2");
+    checkpoint::save(m.stack(), &p1).unwrap();
+    let ck = checkpoint::load(&p1).unwrap();
+    let stack = ck.into_stack(m.stack().variants().to_vec()).unwrap();
+    checkpoint::save(&stack, &p2).unwrap();
+    assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap(),
+               "re-serialization must be byte-identical");
+    std::fs::remove_file(&p1).unwrap();
+    std::fs::remove_file(&p2).unwrap();
+}
+
+#[test]
+fn malformed_checkpoints_fail_closed_end_to_end() {
+    let mcfg = CpuModelConfig { layers: 2, ..Default::default() };
+    let donor = CpuModel::new(mcfg, Variant::SpectralShift);
+    let path = tmp("mal");
+    checkpoint::save(donor.stack(), &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let cfg_for = |p: &PathBuf| ServingConfig {
+        artifacts_dir: "no/such/artifacts".into(),
+        layers: 2,
+        weights: Some(p.to_string_lossy().into_owned()),
+        init: InitPolicy::Load,
+        ..Default::default()
+    };
+
+    // typed errors at the parser ...
+    std::fs::write(&path, &good[..good.len() - 2]).unwrap();
+    assert!(matches!(checkpoint::load(&path),
+                     Err(CheckpointError::Truncated { .. })));
+    // ... and a closed front door at the backend builder
+    assert!(matches!(ExecBackend::auto(&cfg_for(&path)),
+                     Err(RuntimeError::Checkpoint(_))));
+
+    let mut corrupt = good.clone();
+    corrupt[3] ^= 0x40; // magic
+    std::fs::write(&path, &corrupt).unwrap();
+    assert!(matches!(checkpoint::load(&path), Err(CheckpointError::BadMagic)));
+    assert!(ExecBackend::auto(&cfg_for(&path)).is_err());
+
+    let mut corrupt = good.clone();
+    corrupt[8..12].copy_from_slice(&7u32.to_le_bytes()); // version
+    std::fs::write(&path, &corrupt).unwrap();
+    assert!(matches!(checkpoint::load(&path),
+                     Err(CheckpointError::UnsupportedVersion(7))));
+
+    // wrong dims for the serving config (file itself is valid)
+    std::fs::write(&path, &good).unwrap();
+    let mut cfg = cfg_for(&path);
+    cfg.layers = 5;
+    assert!(matches!(ExecBackend::auto(&cfg),
+                     Err(RuntimeError::Checkpoint(_))));
+
+    std::fs::remove_file(&path).unwrap();
+}

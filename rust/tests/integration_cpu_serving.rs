@@ -170,7 +170,7 @@ fn auto_selects_cpu_without_artifacts_and_serves() {
         queue_capacity: 16,
         ..Default::default()
     };
-    let backend = ExecBackend::auto(&cfg);
+    let backend = ExecBackend::auto(&cfg).unwrap();
     assert_eq!(backend.kind(), BackendKind::Cpu);
     let c = Coordinator::start(backend, &cfg).unwrap();
     assert_eq!(c.backend(), BackendKind::Cpu);

@@ -178,6 +178,81 @@ fn all_six_variants_serve_through_the_stack() {
 }
 
 #[test]
+fn projected_two_layer_stack_matches_the_scalar_projected_reference() {
+    // the tentpole acceptance case: with QKV/output projections on, a
+    // 2-layer stack must match the scalar projected reference within
+    // 1e-4 for ALL SIX variants — the projections wrap around the
+    // AttentionOp seam, so every operator gets them for free
+    for variant in [Variant::Full, Variant::Nystrom, Variant::SpectralShift,
+                    Variant::Linformer, Variant::Lsh, Variant::Sparse] {
+        let cfg = CpuModelConfig { layers: 2, ffn_mult: 2, projections: true,
+                                   ..Default::default() };
+        let model = CpuModel::new(cfg, variant);
+        let verify = CpuModel::new(cfg, variant);
+        let reqs = vec![toks(100, 9), toks(48, 10)];
+        let lens: Vec<usize> = reqs.iter().map(|t| t.len()).collect();
+        let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
+        let plan = assemble(&refs, 4, 128);
+        let mut engine = CpuEngine::new(model);
+        let got = engine.encode_batch(&plan, &lens);
+        for (r, t) in reqs.iter().enumerate() {
+            let plen = verify.padded_len(t.len());
+            let x = verify.embed_sequence(t, plen);
+            let full = forward_ref(verify.stack(), &x);
+            let want = mean_pool(&full, t.len());
+            for (j, (a, b)) in got[r].iter().zip(&want).enumerate() {
+                assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                        "{variant:?} req {r} dim {j}: projected stack {a} \
+                         vs scalar reference {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn projections_off_keeps_the_pr4_function_and_on_changes_it() {
+    // off = the exact PR-4 stack (same seeded draw, bitwise); on is a
+    // different served function at depth ≥ 2 and a no-op at depth 1
+    let t = toks(64, 11);
+    let plan = assemble(&[t.as_slice()], 2, 64);
+    let emb = |layers: usize, projections: bool| -> Vec<f32> {
+        let cfg = CpuModelConfig { layers, ffn_mult: 2, projections,
+                                   ..Default::default() };
+        let mut e = CpuEngine::new(CpuModel::new(cfg, Variant::SpectralShift));
+        e.encode_batch(&plan, &[t.len()]).remove(0)
+    };
+    assert_eq!(bits(&emb(1, false)), bits(&emb(1, true)),
+               "depth 1 has no projected block — flag must be inert");
+    assert_ne!(bits(&emb(2, false)), bits(&emb(2, true)),
+               "projections must be load-bearing at depth 2");
+}
+
+#[test]
+fn per_layer_variant_mixing_serves_and_matches_the_reference() {
+    // variant = ss,full — cheap operator below, exact softmax on top
+    let cfg = CpuModelConfig { layers: 2, ffn_mult: 2, ..Default::default() };
+    let mixed = [Variant::SpectralShift, Variant::Full];
+    let model = CpuModel::new_mixed(cfg, &mixed);
+    let verify = CpuModel::new_mixed(cfg, &mixed);
+    assert_eq!(model.variants(), &mixed);
+    let t = toks(96, 12);
+    let plan = assemble(&[t.as_slice()], 2, 128);
+    let mut engine = CpuEngine::new(model);
+    let got = engine.encode_batch(&plan, &[t.len()]);
+    let plen = verify.padded_len(t.len());
+    let x = verify.embed_sequence(&t, plen);
+    let want = mean_pool(&forward_ref(verify.stack(), &x), t.len());
+    for (j, (a, b)) in got[0].iter().zip(&want).enumerate() {
+        assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0),
+                "dim {j}: mixed stack {a} vs scalar reference {b}");
+    }
+    // mixing is load-bearing: differs from the uniform ss stack
+    let mut uniform = CpuEngine::new(CpuModel::new(cfg, Variant::SpectralShift));
+    let u = uniform.encode_batch(&plan, &[t.len()]);
+    assert_ne!(bits(&got[0]), bits(&u[0]));
+}
+
+#[test]
 fn deeper_stacks_change_the_served_function() {
     // sanity guard: the extra blocks must actually be load-bearing
     let t = toks(64, 8);
