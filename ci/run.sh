@@ -3,7 +3,8 @@
 # encodes exactly this sequence, so "CI green" and "ci/run.sh passes"
 # are the same statement. Run from anywhere; it cd's to the crate.
 #
-#   ci/run.sh          # build + test + clippy + doc + fmt
+#   ci/run.sh          # build + test (default + scalar arm) + clippy
+#                      # + doc + fmt
 #   ci/run.sh bench    # additionally regenerate BENCH_kernels.json
 #                      # on the reduced smoke shapes (BENCH_SMOKE=1)
 set -euo pipefail
@@ -14,6 +15,12 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+# second gate lane: the whole suite again with the kernel dispatch
+# forced to the scalar arm, so the portable fallback can never silently
+# rot behind a host that always detects avx2/neon
+echo "==> SSAF_KERNEL=scalar cargo test -q"
+SSAF_KERNEL=scalar cargo test -q
 
 echo "==> cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings

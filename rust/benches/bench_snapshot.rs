@@ -4,7 +4,7 @@
 //! c = 64, d = 64) and writes `BENCH_kernels.json` at the repo root
 //! (falling back to the crate root when run elsewhere): variant →
 //! ns/op, GF/s, threads, fast-vs-seed-scalar speedups, plus the
-//! serving-path entries (schema v5): CPU-backend coordinator
+//! serving-path entries (schema v6): CPU-backend coordinator
 //! requests/sec per encoder depth (`cpu_encode_rps_n{N}_l{L}` for
 //! n ∈ {1024, 4096} × layers ∈ {1, 4} — layer 1 is the seed
 //! single-pass model, layer 4 the full pre-LN stack), and a
@@ -13,6 +13,13 @@
 //! deadline expiries. Model defaults (d/heads/landmarks/ffn_mult) are
 //! recorded alongside the rates. CI and future PRs diff this file to
 //! track the hot path.
+//!
+//! Schema v6 adds the per-ISA dispatch rows: `isa.gemm_gflops_<arm>`
+//! (GEMM GF/s with the kernel core pinned to each arm this host can
+//! run) and `isa.serving_rps_<arm>` (layers=1 coordinator throughput
+//! per arm via the `[serving] kernel` knob), plus `kernel_active` /
+//! `kernel_available` metadata — the SIMD speedup lands
+//! machine-readably next to the numbers it multiplies.
 //!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
@@ -31,7 +38,9 @@ use ssaformer::config::{ServingConfig, Variant};
 use ssaformer::coordinator::{
     Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
 };
-use ssaformer::kernels::{gemm_f32, global_pool, KernelCtx, Workspace};
+use ssaformer::kernels::{
+    active_isa, gemm_f32, global_pool, Isa, KernelCtx, Workspace,
+};
 use ssaformer::rngx::Rng;
 use std::sync::Arc;
 use std::time::Duration;
@@ -64,6 +73,8 @@ fn main() {
     let par = KernelCtx::global();
     let mut entries: Vec<Entry> = Vec::new();
     let mut speedups: Vec<(String, f64)> = Vec::new();
+    // per-ISA dispatch rows (schema v6): keyed by arm token
+    let mut isa_rows: Vec<(String, f64)> = Vec::new();
 
     let mut table = Table::new(&["kernel", "n", "median", "GF/s", "threads"]);
     for &n in sizes {
@@ -99,6 +110,21 @@ fn main() {
         push(&mut entries, &mut table, "gemm/fast_tN", n, &s, gemm_flops, threads);
         speedups.push((format!("gemm_n{n}_fast_tN_vs_ref"),
                        ref_gemm / s.median.as_secs_f64()));
+
+        // --- per-ISA GEMM rows: the same shape with the kernel core
+        // pinned to each arm this host can run (scalar is always one)
+        for isa in Isa::available() {
+            let ctx = par.clone().with_isa(isa);
+            let s = bench(|| {
+                let out = gemm_f32(&ctx, &q, &b, &mut ws);
+                std::hint::black_box(&out.data);
+                ws.put(out.data);
+            }, budget, 60);
+            let name = format!("gemm/arm_{}", isa.token());
+            push(&mut entries, &mut table, &name, n, &s, gemm_flops, threads);
+            isa_rows.push((format!("gemm_gflops_n{n}_{}", isa.token()),
+                           gemm_flops / s.median.as_secs_f64() / 1e9));
+        }
 
         // --- spectral shifting end-to-end, seed scalar vs kernel core
         // flop model (approx): F logits + fused combine + W stream
@@ -193,6 +219,43 @@ fn main() {
             serving.push((format!("cpu_encode_rps_n{n}_l{layers}"), rps));
         }
     }
+    // per-ISA serving rows (schema v6): layers=1 at the smallest bucket
+    // with the `[serving] kernel` knob pinning each available arm — the
+    // end-to-end counterpart of the gemm_gflops_* rows
+    {
+        let n = sizes[0];
+        for isa in Isa::available() {
+            let cfg = ServingConfig {
+                variant: Variant::SpectralShift,
+                layers: 1,
+                max_batch: 4,
+                max_wait_ms: 2,
+                queue_capacity: 256,
+                seq_buckets: sizes.to_vec(),
+                cache_capacity: 0,
+                kernel: Some(isa),
+                ..Default::default()
+            };
+            let engine = Box::new(CpuEngine::new(CpuModel::new(
+                CpuModelConfig::default(), cfg.variant)));
+            let coordinator = Arc::new(
+                Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+            let toks: Vec<i32> = (0..n).map(|i| 3 + (i as i32 % 2000)).collect();
+            coordinator.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
+            let reqs = if smoke() { 8 } else { 24 };
+            let start = std::time::Instant::now();
+            let rxs: Vec<_> = (0..reqs)
+                .map(|_| coordinator.submit(toks.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().embedding.unwrap();
+            }
+            let rps = reqs as f64 / start.elapsed().as_secs_f64();
+            stbl.row(&[format!("encode_rps[{}]", isa.token()), "1".into(),
+                       n.to_string(), format!("{rps:.1}")]);
+            isa_rows.push((format!("serving_rps_n{n}_l1_{}", isa.token()), rps));
+        }
+    }
     println!("{}", stbl.render());
 
     // --- mixed-deadline workload over the sharded worker pool + cache
@@ -279,7 +342,8 @@ fn main() {
         serving.push(("mixed_rps".into(), rps));
     }
 
-    let json = render_json(threads, c, d, &entries, &speedups, &serving);
+    let json = render_json(threads, c, d, &entries, &speedups, &serving,
+                           &isa_rows);
     // benches run with cwd = rust/; the repo root is one level up
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
         "../BENCH_kernels.json"
@@ -306,15 +370,22 @@ fn push(entries: &mut Vec<Entry>, table: &mut Table, name: &str, n: usize,
 
 fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                speedups: &[(String, f64)],
-               serving: &[(String, f64)]) -> String {
+               serving: &[(String, f64)],
+               isa_rows: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v5\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v6\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"smoke\": {},\n", smoke()));
     out.push_str(&format!("  \"threads\": {threads},\n"));
     out.push_str(&format!("  \"c\": {c},\n"));
     out.push_str(&format!("  \"d\": {d},\n"));
+    out.push_str(&format!("  \"kernel_active\": \"{}\",\n",
+                          active_isa().token()));
+    out.push_str(&format!(
+        "  \"kernel_available\": [{}],\n",
+        Isa::available().iter().map(|i| format!("\"{}\"", i.token()))
+            .collect::<Vec<_>>().join(", ")));
     out.push_str("  \"entries\": [\n");
     for (i, e) in entries.iter().enumerate() {
         let comma = if i + 1 < entries.len() { "," } else { "" };
@@ -335,6 +406,14 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
     for (i, (name, x)) in serving.iter().enumerate() {
         let comma = if i + 1 < serving.len() { "," } else { "" };
         out.push_str(&format!("    \"{name}\": {x:.2}{comma}\n"));
+    }
+    out.push_str("  },\n");
+    // per-ISA dispatch rows (v6): gemm GF/s and layers=1 serving rps
+    // with the kernel core pinned to each arm this host can run
+    out.push_str("  \"isa\": {\n");
+    for (i, (name, x)) in isa_rows.iter().enumerate() {
+        let comma = if i + 1 < isa_rows.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
     }
     out.push_str("  }\n");
     out.push_str("}\n");

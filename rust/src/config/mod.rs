@@ -5,6 +5,7 @@
 //! Supported TOML subset: `[section]` headers, `key = value` with
 //! string ("…"), integer, float, and boolean values, `#` comments.
 
+use crate::kernels::Isa;
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
@@ -331,6 +332,11 @@ pub struct ServingConfig {
     /// `weights`. Defaults to `load` when a path is given, `seeded`
     /// otherwise; contradictory combinations are config errors.
     pub init: InitPolicy,
+    /// Micro-kernel arm to pin (`scalar` | `avx2` | `neon`); `None`
+    /// (config token `auto`, the default) detects the best supported
+    /// arm at startup. The `SSAF_KERNEL` environment variable overrides
+    /// this knob either way.
+    pub kernel: Option<Isa>,
 }
 
 impl Default for ServingConfig {
@@ -354,6 +360,7 @@ impl Default for ServingConfig {
             projections: false,
             weights: None,
             init: InitPolicy::Seeded,
+            kernel: None,
         }
     }
 }
@@ -393,6 +400,17 @@ impl ServingConfig {
             Err(ConfigError::Missing(..)) => d.projections,
             Err(e) => return Err(e),
         };
+        let kernel = match cfg.get("serving", "kernel") {
+            Some(Value::Str(s)) if s.trim().eq_ignore_ascii_case("auto") => None,
+            Some(Value::Str(s)) => Some(Isa::parse(s).ok_or_else(|| {
+                ConfigError::Invalid("serving".into(), "kernel".into(), s.clone())
+            })?),
+            Some(_) => {
+                return Err(ConfigError::Type("serving".into(), "kernel".into(),
+                                             "string"))
+            }
+            None => None,
+        };
         let unsigned = |key: &str, default: i64| -> Result<u64, ConfigError> {
             let v = cfg.i64_or("serving", key, default);
             u64::try_from(v).map_err(|_| ConfigError::Invalid(
@@ -422,6 +440,7 @@ impl ServingConfig {
             projections,
             weights,
             init,
+            kernel,
         };
         out.validate()?;
         Ok(out)
@@ -653,6 +672,25 @@ resume = false
         assert!(s.validate().is_err());
         s.queue_capacity = 16;
         assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_knob_parses_and_rejects_garbage() {
+        // default: auto-detect (no pinned arm)
+        assert_eq!(ServingConfig::default().kernel, None);
+        let c = Config::parse("[serving]\nkernel = \"scalar\"\n").unwrap();
+        assert_eq!(ServingConfig::from_config(&c).unwrap().kernel,
+                   Some(Isa::Scalar));
+        // "auto" is the explicit spelling of the default
+        let c = Config::parse("[serving]\nkernel = \"auto\"\n").unwrap();
+        assert_eq!(ServingConfig::from_config(&c).unwrap().kernel, None);
+        // unknown arms and wrong types are errors, not silent fallbacks
+        let c = Config::parse("[serving]\nkernel = \"sse9\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        let c = Config::parse("[serving]\nkernel = 2\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Type(..))));
     }
 
     #[test]

@@ -318,9 +318,22 @@ impl CpuEngine {
     }
 
     /// A sibling engine over the same shared model, with its own
-    /// executor and staging arena — one per worker-pool thread.
+    /// executor and staging arena — one per worker-pool thread. The
+    /// sibling inherits this engine's pinned micro-kernel arm, so every
+    /// worker in a pool executes the same arm (the cache-coherence
+    /// argument needs worker-independent bits).
     pub fn fork(&self) -> CpuEngine {
-        CpuEngine::with_model(self.model.clone())
+        let mut e = CpuEngine::with_model(self.model.clone());
+        e.set_kernel_isa(self.exec.ctx().isa());
+        e
+    }
+
+    /// Pin this engine's kernels to an explicit micro-kernel arm
+    /// (coordinator startup resolves `SSAF_KERNEL` / the `[serving]
+    /// kernel` knob / detection and applies the result here). Rebuilds
+    /// the executor, so call before [`CpuEngine::plan_for`].
+    pub fn set_kernel_isa(&mut self, isa: crate::kernels::Isa) {
+        self.exec = BatchedAttention::new(KernelCtx::global().with_isa(isa));
     }
 
     pub fn model(&self) -> &CpuModel {

@@ -91,12 +91,35 @@ pub use queue::{BatchPolicy, BucketQueue, PushError, Queued, ShardedQueue};
 pub use router::{Route, Router};
 
 use crate::config::{ServingConfig, Variant};
+use crate::kernels::{gemm, isa, Isa};
 use crate::metrics::ServingMetrics;
 use crate::minirt::CancelToken;
 use crate::runtime::{ArtifactKind, BackendKind, Engine};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// The micro-kernel arm a coordinator will run, resolved with the
+/// documented precedence: `SSAF_KERNEL` environment override, else the
+/// `[serving] kernel` knob, else hardware detection.
+fn resolve_kernel_isa(cfg: &ServingConfig) -> Isa {
+    isa::env_override().or(cfg.kernel).unwrap_or_else(Isa::detect)
+}
+
+/// Log the kernel-dispatch decision once per process: the arm replicas
+/// actually execute, what detection alone would have picked, and the
+/// Newton–Schulz-relevant
+/// GEMM blocking parameters ([`gemm::KC`] k panels / [`gemm::NC`]
+/// L2-resident column panels). Operators get the same facts per
+/// coordinator from the STATS `kernel:` field.
+fn report_kernel_dispatch(active: Isa) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        eprintln!(
+            "ssaformer kernel dispatch: arm={} detected={} gemm KC={} NC={}",
+            active.token(), Isa::detect().token(), gemm::KC, gemm::NC);
+    });
+}
 
 /// A completed request.
 #[derive(Debug)]
@@ -275,7 +298,8 @@ impl Scaffold {
     }
 
     fn into_coordinator(self, workers: Vec<std::thread::JoinHandle<()>>,
-                        kind: BackendKind, model_desc: String) -> Coordinator {
+                        kind: BackendKind, model_desc: String,
+                        kernel_isa: Isa) -> Coordinator {
         Coordinator {
             router: self.router,
             queue: self.queue,
@@ -287,6 +311,7 @@ impl Scaffold {
             backend_kind: kind,
             default_deadline: self.default_deadline,
             model_desc,
+            kernel_isa,
         }
     }
 }
@@ -307,6 +332,9 @@ pub struct Coordinator {
     /// One-line served-model identification (depth, operator, widths) —
     /// the `model:` line of the STATS report.
     model_desc: String,
+    /// Micro-kernel arm the execution workers run (resolved once at
+    /// startup; CPU backend pins every engine to it).
+    kernel_isa: Isa,
 }
 
 impl Coordinator {
@@ -357,7 +385,12 @@ impl Coordinator {
                     .expect("spawn coordinator worker"));
         }
         let desc = format!("artifact encoder, variant={}", cfg.variant.token());
-        Ok(s.into_coordinator(workers, BackendKind::Xla, desc))
+        // the XLA batch path never touches the CPU micro-kernels, but
+        // the arm is still resolved and reported so STATS reads the
+        // same either way (cache/admission helpers stay scalar-free)
+        let kernel_isa = resolve_kernel_isa(cfg);
+        report_kernel_dispatch(kernel_isa);
+        Ok(s.into_coordinator(workers, BackendKind::Xla, desc, kernel_isa))
     }
 
     fn start_cpu(engine: Box<CpuEngine>, cfg: &ServingConfig)
@@ -379,6 +412,9 @@ impl Coordinator {
         // were handed; every stage arena is pre-planned for a full batch
         // at the largest bucket so first batches allocate nothing
         let mut engine = *engine;
+        let kernel_isa = resolve_kernel_isa(cfg);
+        report_kernel_dispatch(kernel_isa);
+        engine.set_kernel_isa(kernel_isa);
         let max_bucket = *buckets.last().expect("nonempty buckets");
         engine.plan_for(cfg.max_batch, max_bucket);
         let mut engines: Vec<CpuEngine> = (1..s.n_workers)
@@ -407,7 +443,7 @@ impl Coordinator {
                     })
                     .expect("spawn coordinator worker"));
         }
-        Ok(s.into_coordinator(workers, BackendKind::Cpu, model_desc))
+        Ok(s.into_coordinator(workers, BackendKind::Cpu, model_desc, kernel_isa))
     }
 
     /// The execution backend serving this coordinator's requests.
@@ -420,6 +456,20 @@ impl Coordinator {
     /// line.
     pub fn model_desc(&self) -> &str {
         &self.model_desc
+    }
+
+    /// The micro-kernel arm the execution workers run.
+    pub fn kernel_isa(&self) -> Isa {
+        self.kernel_isa
+    }
+
+    /// One-line kernel-dispatch description — the STATS `kernel:` line:
+    /// active arm, what detection alone would pick, and the GEMM
+    /// blocking parameters the Newton–Schulz chain depends on.
+    pub fn kernel_desc(&self) -> String {
+        format!("{} (detected {}, gemm KC={} NC={})",
+                self.kernel_isa.token(), Isa::detect().token(),
+                gemm::KC, gemm::NC)
     }
 
     /// Batch-execution worker threads in the pool.

@@ -179,8 +179,11 @@ impl BatchedAttention {
         // chunk tasks into at most `threads` contiguous ranges (like
         // run_blocks) so the scope_for caller lane stays busy for the
         // whole batch instead of finishing one task and idling
+        let isa = self.ctx.isa();
         self.ctx.run_blocks(nt, |_chunk, range| {
-            let seq = KernelCtx::sequential();
+            // per-task sequential ctx inherits the executor's pinned
+            // micro-kernel arm — never re-resolves it mid-batch
+            let seq = KernelCtx::sequential().with_isa(isa);
             for i in range {
                 // SAFETY: task i exclusively owns slot i and output i;
                 // both vectors outlive the fork-join.

@@ -5,9 +5,9 @@
 //! arithmetic is a pure function of the inputs, never of the thread
 //! count.
 
-use super::gemm::{axpy8, gemm_rows};
+use super::gemm::gemm_rows;
 use super::workspace::Workspace;
-use super::{par_rows, KernelCtx, SendMut, BLOCK_ROWS};
+use super::{par_rows, simd, Isa, KernelCtx, SendMut, BLOCK_ROWS};
 use crate::attention::Tensor2;
 use crate::linalg::scaled_softmax_row;
 
@@ -44,6 +44,7 @@ pub fn softmax_gemm(ctx: &KernelCtx, q: &Tensor2, kt: &Tensor2, x: &Tensor2,
     assert_eq!(q.cols, kt.cols, "q/landmark width mismatch");
     assert_eq!(kt.rows, x.rows, "landmark/value length mismatch");
     let (m, d, c, dv) = (q.rows, q.cols, kt.rows, x.cols);
+    let isa = ctx.isa();
     let mut ktt = ws.take(d * c);
     super::gemm::transpose_into(&kt.data, &mut ktt, c, d);
     let mut out = ws.take(m * dv);
@@ -65,14 +66,14 @@ pub fn softmax_gemm(ctx: &KernelCtx, q: &Tensor2, kt: &Tensor2, x: &Tensor2,
                 let r1 = (r0 + BLOCK_ROWS).min(m);
                 let mb = r1 - r0;
                 let scores = &mut strip[..mb * c];
-                gemm_rows(&q.data[r0 * d..r1 * d], &ktt, scores, mb, d, c);
+                gemm_rows(isa, &q.data[r0 * d..r1 * d], &ktt, scores, mb, d, c);
                 for r in 0..mb {
                     scaled_softmax_row(&mut scores[r * c..(r + 1) * c], scale);
                 }
                 let oblk = unsafe {
                     std::slice::from_raw_parts_mut(obase.0.add(r0 * dv), mb * dv)
                 };
-                gemm_rows(scores, &x.data, oblk, mb, c, dv);
+                gemm_rows(isa, scores, &x.data, oblk, mb, c, dv);
             }
         });
     }
@@ -91,6 +92,7 @@ pub fn flash_attention(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
     assert_eq!(q.cols, k.cols, "q/k width mismatch");
     assert_eq!(k.rows, v.rows, "k/v length mismatch");
     let (n, dv, mkeys) = (q.rows, v.cols, k.rows);
+    let isa = ctx.isa();
     let mut out = Tensor2 { rows: n, cols: dv, data: ws.take(n * dv) };
     par_rows(ctx, &mut out.data, n, dv, |i, orow| {
         let qi = q.row(i);
@@ -102,7 +104,7 @@ pub fn flash_attention(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
             let end = (start + KEY_BLOCK).min(mkeys);
             let mut m_cur = f32::NEG_INFINITY;
             for (jj, j) in (start..end).enumerate() {
-                let s = dot8(qi, k.row(j)) * scale;
+                let s = simd::dot(isa, qi, k.row(j)) * scale;
                 scores[jj] = s;
                 m_cur = m_cur.max(s);
             }
@@ -115,7 +117,7 @@ pub fn flash_attention(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
             for (jj, j) in (start..end).enumerate() {
                 let p = (scores[jj] - m_new).exp();
                 l_run += p;
-                axpy8(orow, p, v.row(j));
+                simd::axpy(isa, orow, p, v.row(j));
             }
             m_run = m_new;
             start = end;
@@ -131,33 +133,24 @@ pub fn flash_attention(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2, v: &Tensor2,
 /// Fused layer normalization with gain and bias, row-parallel:
 /// out[i,j] = (x[i,j] − μᵢ)/√(σᵢ² + eps) · gain[j] + bias[j].
 ///
-/// μ/σ² accumulate left-to-right over the row (a pure function of the
-/// row contents, never the thread count), so outputs inherit the
-/// kernel-core bitwise thread-count determinism. The output tensor is
-/// backed by `ws` scratch — recycle with `ws.put(out.data)`.
+/// μ/σ² accumulate in a fixed order that depends only on the arm and
+/// the row contents (scalar: left-to-right; SIMD: lane accumulators
+/// with a hardcoded horizontal pairing), never the thread count, so
+/// outputs inherit the kernel-core bitwise thread-count determinism.
+/// The output tensor is backed by `ws` scratch — recycle with
+/// `ws.put(out.data)`.
 pub fn layernorm(ctx: &KernelCtx, x: &Tensor2, gain: &[f32], bias: &[f32],
                  eps: f32, ws: &mut Workspace) -> Tensor2 {
     let (n, d) = (x.rows, x.cols);
     assert_eq!(gain.len(), d, "layernorm gain width");
     assert_eq!(bias.len(), d, "layernorm bias width");
+    let isa = ctx.isa();
     let mut out = Tensor2 { rows: n, cols: d, data: ws.take(n * d) };
     par_rows(ctx, &mut out.data, n, d, |i, orow| {
         let xrow = x.row(i);
-        let mut mean = 0.0f32;
-        for &v in xrow {
-            mean += v;
-        }
-        mean /= d as f32;
-        let mut var = 0.0f32;
-        for &v in xrow {
-            let c = v - mean;
-            var += c * c;
-        }
-        var /= d as f32;
+        let (mean, var) = simd::moments(isa, xrow);
         let inv = 1.0 / (var + eps).sqrt();
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o = (xrow[j] - mean) * inv * gain[j] + bias[j];
-        }
+        simd::ln_affine(isa, orow, xrow, mean, inv, gain, bias);
     });
     out
 }
@@ -166,12 +159,24 @@ pub fn layernorm(ctx: &KernelCtx, x: &Tensor2, gain: &[f32], bias: &[f32],
 /// x[i,j] ← gelu(x[i,j] + bias[j]). This is the FFN activation the
 /// encoder stack runs between its two GEMMs; fusing the bias add into
 /// the activation pass saves one full traversal of the (n × ffn) tensor.
+/// The bias add is a single rounding in every arm and the GELU itself
+/// stays scalar, so `bias_gelu` output is bitwise identical across
+/// arms (not just within one).
 pub fn bias_gelu(ctx: &KernelCtx, x: &mut Tensor2, bias: &[f32]) {
     assert_eq!(bias.len(), x.cols, "bias width mismatch");
     let (n, d) = (x.rows, x.cols);
+    let isa = ctx.isa();
     par_rows(ctx, &mut x.data, n, d, |_i, row| {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v = gelu(*v + b);
+        if isa == Isa::Scalar {
+            // seed single-pass form
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v = gelu(*v + b);
+            }
+        } else {
+            simd::add_bias(isa, row, bias);
+            for v in row.iter_mut() {
+                *v = gelu(*v);
+            }
         }
     });
 }
@@ -182,32 +187,6 @@ pub fn bias_gelu(ctx: &KernelCtx, x: &mut Tensor2, bias: &[f32]) {
 pub fn gelu(z: f32) -> f32 {
     const SQRT_2_OVER_PI: f32 = 0.797_884_56;
     0.5 * z * (1.0 + (SQRT_2_OVER_PI * (z + 0.044_715 * z * z * z)).tanh())
-}
-
-/// f32 dot product, 8-wide unrolled (kernel-core counterpart of the
-/// reference `attention::dot_f32`; kept separate so the reference path
-/// stays byte-for-byte the seed implementation).
-#[inline(always)]
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let mut acc = [0.0f32; 8];
-    let mut i = 0;
-    while i + 8 <= n {
-        let aj = &a[i..i + 8];
-        let bj = &b[i..i + 8];
-        for t in 0..8 {
-            acc[t] += aj[t] * bj[t];
-        }
-        i += 8;
-    }
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
-        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    while i < n {
-        s += a[i] * b[i];
-        i += 1;
-    }
-    s
 }
 
 #[cfg(test)]
@@ -367,15 +346,18 @@ mod tests {
     }
 
     #[test]
-    fn dot8_matches_naive() {
-        let mut rng = Rng::new(6);
-        for n in [0usize, 1, 7, 8, 9, 16, 31] {
-            let a = Tensor2::randn(&mut rng, 1, n.max(1), 1.0);
-            let b = Tensor2::randn(&mut rng, 1, n.max(1), 1.0);
-            let a = &a.data[..n];
-            let b = &b.data[..n];
-            let want: f64 = a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
-            assert!((dot8(a, b) as f64 - want).abs() < 1e-4);
+    fn bias_gelu_is_bitwise_arm_invariant() {
+        let mut rng = Rng::new(14);
+        let base = Tensor2::randn(&mut rng, 33, 17, 2.0);
+        let mut bias = vec![0.0f32; 17];
+        rng.fill_normal_f32(&mut bias, 0.0, 0.5);
+        let mut want = base.clone();
+        bias_gelu(&KernelCtx::sequential().with_isa(Isa::Scalar),
+                  &mut want, &bias);
+        for isa in Isa::available() {
+            let mut got = base.clone();
+            bias_gelu(&KernelCtx::sequential().with_isa(isa), &mut got, &bias);
+            assert_eq!(got.data, want.data, "{}", isa.token());
         }
     }
 }

@@ -1,27 +1,49 @@
-//! Tiled, multi-threaded f32 GEMM.
+//! Tiled, multi-threaded f32 GEMM with per-[`Isa`] micro-kernels.
 //!
 //! Layout: everything row-major. Parallelism: fixed [`BLOCK_ROWS`]-row
 //! blocks of C fanned out over the pool (M-parallel; K is never split,
 //! so each output element's reduction order is fixed regardless of the
-//! thread count — bitwise-deterministic results). Within a block:
+//! thread count — bitwise-deterministic results per arm). Within a
+//! block, every arm walks the same cache structure:
 //!
-//! * the k dimension is walked in [`KC`]-deep cache panels,
-//! * each group of [`MR`] = 4 A-rows is packed into a column-major
-//!   micro-panel (one 4-wide column per k) held on the task's stack,
-//! * the micro-kernel broadcasts the packed A column against a full
-//!   B row with an 8-wide unrolled axpy, accumulating 4 C rows at once.
+//! * the k dimension in [`KC`]-deep panels,
+//! * B in [`NC`]-wide column panels, so the streamed KC×NC B panel
+//!   (128 KiB at the defaults) stays L2-resident while every A
+//!   micro-panel of the block sweeps it — this is what keeps the c×c
+//!   Newton–Schulz pseudoinverse chain (`attention::nystrom::ns_pinv_with`)
+//!   in cache as the landmark count grows,
+//! * a group of A rows packed into a column-major micro-panel on the
+//!   task's stack, sized to the register tile of the dispatched arm:
+//!   scalar 4 rows × 8-wide unrolled axpy ([`micro_axpy4`]), AVX2
+//!   8 rows × 8 FMA lanes with software prefetch on the B panel, NEON
+//!   4 rows × 4 FMA lanes.
 //!
 //! B needs no packing: its rows are already contiguous and stream
-//! through the j-unrolled inner loop in order.
+//! through the j inner loop in order.
+//!
+//! Column blocking is arithmetic-order-neutral: each `c[i][j]` still
+//! accumulates over k in ascending panel-then-p order, exactly one
+//! column panel owning any given j — so the scalar arm is byte-for-byte
+//! the pre-blocking kernel, and the `k_order_matmul_is_bitwise_the_blocked_gemm`
+//! pin in `model::reference` keeps holding on that arm. The FMA arms
+//! keep the same k order but contract mul+add to a single rounding,
+//! which is why that pin (and nothing else) is scalar-arm-only.
 
+use super::isa::Isa;
 use super::workspace::Workspace;
 use super::{KernelCtx, SendMut, BLOCK_ROWS};
 use crate::attention::Tensor2;
 
-/// Rows per micro-kernel (register tile height). Divides [`BLOCK_ROWS`].
+/// Rows per scalar micro-kernel (register tile height). Divides
+/// [`BLOCK_ROWS`], as do the per-ISA tile heights.
 const MR: usize = 4;
-/// k-depth of a cache panel (MR×KC packed panel = 4 KiB, L1-resident).
-const KC: usize = 256;
+/// k-depth of a cache panel (the packed micro-panel stays L1-resident:
+/// 4 KiB scalar/NEON, 8 KiB AVX2). Reported at coordinator startup as
+/// the Newton–Schulz k-blocking depth.
+pub const KC: usize = 256;
+/// Column width of the streamed B panel (KC×NC f32 = 128 KiB,
+/// L2-resident). Reported alongside [`KC`] at coordinator startup.
+pub const NC: usize = 128;
 
 /// C = A · B on flat row-major slices; `c` is overwritten.
 /// a: m×k, b: k×n, c: m×n.
@@ -39,6 +61,7 @@ pub fn gemm_into(ctx: &KernelCtx, a: &[f32], b: &[f32], c: &mut [f32],
     }
     let nblocks = (m + BLOCK_ROWS - 1) / BLOCK_ROWS;
     let cbase = SendMut(c.as_mut_ptr());
+    let isa = ctx.isa();
     ctx.run_blocks(nblocks, |_task, blocks| {
         for blk in blocks {
             let r0 = blk * BLOCK_ROWS;
@@ -48,15 +71,16 @@ pub fn gemm_into(ctx: &KernelCtx, a: &[f32], b: &[f32], c: &mut [f32],
             let cblk = unsafe {
                 std::slice::from_raw_parts_mut(cbase.0.add(r0 * n), (r1 - r0) * n)
             };
-            gemm_rows(&a[r0 * k..r1 * k], b, cblk, r1 - r0, k, n);
+            gemm_rows(isa, &a[r0 * k..r1 * k], b, cblk, r1 - r0, k, n);
         }
     });
 }
 
 /// Sequential GEMM over `mb` rows: c (mb×n, overwritten) = a (mb×k) ·
-/// b (k×n). This is the per-block body `gemm_into` parallelizes and the
-/// building block the fused kernels reuse on their scratch.
-pub(crate) fn gemm_rows(a: &[f32], b: &[f32], c: &mut [f32],
+/// b (k×n), dispatched to the register tile of `isa`. This is the
+/// per-block body `gemm_into` parallelizes and the building block the
+/// fused kernels reuse on their scratch.
+pub(crate) fn gemm_rows(isa: Isa, a: &[f32], b: &[f32], c: &mut [f32],
                         mb: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), mb * k);
     debug_assert_eq!(b.len(), k * n);
@@ -65,38 +89,65 @@ pub(crate) fn gemm_rows(a: &[f32], b: &[f32], c: &mut [f32],
     if k == 0 || n == 0 {
         return;
     }
+    debug_assert!(isa.supported());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: a `KernelCtx` only carries host-supported arms
+        // (asserted at construction), so avx2+fma are present here.
+        Isa::Avx2 => unsafe { avx2::gemm_rows(a, b, c, mb, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, for neon.
+        Isa::Neon => unsafe { neon::gemm_rows(a, b, c, mb, k, n) },
+        _ => gemm_rows_scalar(a, b, c, mb, k, n),
+    }
+}
+
+/// The scalar arm — byte-for-byte the seed arithmetic (the [`NC`]
+/// column loop regroups the j traversal but leaves every element's
+/// multiply-add sequence untouched). `c` must be pre-zeroed.
+fn gemm_rows_scalar(a: &[f32], b: &[f32], c: &mut [f32],
+                    mb: usize, k: usize, n: usize) {
     let mut apack = [0.0f32; MR * KC];
     let mut kb = 0;
     while kb < k {
         let kc = KC.min(k - kb);
-        let mut i = 0;
-        // 4-row micro-kernel over packed A panels
-        while i + MR <= mb {
-            for p in 0..kc {
-                for r in 0..MR {
-                    apack[p * MR + r] = a[(i + r) * k + kb + p];
+        let mut jb = 0;
+        while jb < n {
+            let nc = NC.min(n - jb);
+            let mut i = 0;
+            // 4-row micro-kernel over packed A panels
+            while i + MR <= mb {
+                for p in 0..kc {
+                    for (r, slot) in
+                        apack[p * MR..(p + 1) * MR].iter_mut().enumerate() {
+                        *slot = a[(i + r) * k + kb + p];
+                    }
                 }
+                let cblk = &mut c[i * n..(i + MR) * n];
+                let (c0, rest) = cblk.split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                let (c0, c1, c2, c3) =
+                    (&mut c0[jb..jb + nc], &mut c1[jb..jb + nc],
+                     &mut c2[jb..jb + nc], &mut c3[jb..jb + nc]);
+                for p in 0..kc {
+                    let brow = &b[(kb + p) * n + jb..(kb + p) * n + jb + nc];
+                    let ap = &apack[p * MR..(p + 1) * MR];
+                    micro_axpy4(c0, c1, c2, c3, ap[0], ap[1], ap[2], ap[3], brow);
+                }
+                i += MR;
             }
-            let cblk = &mut c[i * n..(i + MR) * n];
-            let (c0, rest) = cblk.split_at_mut(n);
-            let (c1, rest) = rest.split_at_mut(n);
-            let (c2, c3) = rest.split_at_mut(n);
-            for p in 0..kc {
-                let brow = &b[(kb + p) * n..(kb + p + 1) * n];
-                let ap = &apack[p * MR..(p + 1) * MR];
-                micro_axpy4(c0, c1, c2, c3, ap[0], ap[1], ap[2], ap[3], brow);
+            // remainder rows (mb % 4): single-row axpy, same k order
+            while i < mb {
+                let crow = &mut c[i * n + jb..i * n + jb + nc];
+                for p in 0..kc {
+                    let w = a[i * k + kb + p];
+                    let brow = &b[(kb + p) * n + jb..(kb + p) * n + jb + nc];
+                    axpy8(crow, w, brow);
+                }
+                i += 1;
             }
-            i += MR;
-        }
-        // remainder rows (mb % 4): single-row axpy, same k order
-        while i < mb {
-            let crow = &mut c[i * n..(i + 1) * n];
-            for p in 0..kc {
-                let w = a[i * k + kb + p];
-                let brow = &b[(kb + p) * n..(kb + p + 1) * n];
-                axpy8(crow, w, brow);
-            }
-            i += 1;
+            jb += nc;
         }
         kb += kc;
     }
@@ -156,6 +207,216 @@ pub(crate) fn axpy8(c: &mut [f32], w: f32, b: &[f32]) {
     while j < n {
         c[j] += w * b[j];
         j += 1;
+    }
+}
+
+/// The AVX2+FMA arm: an 8-row × 8-lane register tile (8 ymm
+/// accumulators live across the whole k panel), software prefetch on
+/// the streamed B panel, and the same KC/NC cache walk as the scalar
+/// arm. Per element the k accumulation order is identical to scalar —
+/// only the mul+add contraction differs — so the arm is bitwise
+/// thread-count deterministic and within the 1e-4 envelope of the
+/// references.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{KC, NC};
+    use std::arch::x86_64::*;
+
+    /// Register-tile height (divides [`super::BLOCK_ROWS`]).
+    const MR8: usize = 8;
+    /// B-panel rows prefetched ahead of the FMA stream.
+    const PF: usize = 4;
+
+    /// SAFETY: caller verified avx2+fma support. `c` must be pre-zeroed
+    /// (the dispatcher zeroes it).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gemm_rows(a: &[f32], b: &[f32], c: &mut [f32],
+                                   mb: usize, k: usize, n: usize) {
+        let mut apack = [0.0f32; MR8 * KC];
+        let (bp, cp) = (b.as_ptr(), c.as_mut_ptr());
+        let mut kb = 0;
+        while kb < k {
+            let kc = KC.min(k - kb);
+            let mut jb = 0;
+            while jb < n {
+                let nc = NC.min(n - jb);
+                let jend = jb + nc;
+                // full 8-lane extent of this column panel
+                let jv = jb + (nc & !7);
+                let mut i = 0;
+                while i + MR8 <= mb {
+                    // pack 8 A rows column-major for this k panel
+                    for p in 0..kc {
+                        for (r, slot) in
+                            apack[p * MR8..(p + 1) * MR8].iter_mut().enumerate() {
+                            *slot = a[(i + r) * k + kb + p];
+                        }
+                    }
+                    let mut j = jb;
+                    while j < jv {
+                        // 8×8 tile: accumulators stay in ymm registers
+                        // for the whole k panel
+                        let mut acc = [_mm256_setzero_ps(); MR8];
+                        for (r, accr) in acc.iter_mut().enumerate() {
+                            *accr = _mm256_loadu_ps(cp.add((i + r) * n + j));
+                        }
+                        for p in 0..kc {
+                            let bv = _mm256_loadu_ps(bp.add((kb + p) * n + j));
+                            if p + PF < kc {
+                                _mm_prefetch(
+                                    bp.add((kb + p + PF) * n + j) as *const i8,
+                                    _MM_HINT_T0);
+                            }
+                            let ap = apack.as_ptr().add(p * MR8);
+                            for (r, accr) in acc.iter_mut().enumerate() {
+                                *accr = _mm256_fmadd_ps(
+                                    _mm256_set1_ps(*ap.add(r)), bv, *accr);
+                            }
+                        }
+                        for (r, accr) in acc.iter().enumerate() {
+                            _mm256_storeu_ps(cp.add((i + r) * n + j), *accr);
+                        }
+                        j += 8;
+                    }
+                    // tail columns (nc % 8): scalar FMA, same k order
+                    while j < jend {
+                        for r in 0..MR8 {
+                            let mut s = *cp.add((i + r) * n + j);
+                            for p in 0..kc {
+                                s = (*bp.add((kb + p) * n + j))
+                                    .mul_add(apack[p * MR8 + r], s);
+                            }
+                            *cp.add((i + r) * n + j) = s;
+                        }
+                        j += 1;
+                    }
+                    i += MR8;
+                }
+                // remainder rows (mb % 8): single-row FMA over the panel
+                while i < mb {
+                    let mut j = jb;
+                    while j < jv {
+                        let mut accv = _mm256_loadu_ps(cp.add(i * n + j));
+                        for p in 0..kc {
+                            let bv = _mm256_loadu_ps(bp.add((kb + p) * n + j));
+                            accv = _mm256_fmadd_ps(
+                                _mm256_set1_ps(a[i * k + kb + p]), bv, accv);
+                        }
+                        _mm256_storeu_ps(cp.add(i * n + j), accv);
+                        j += 8;
+                    }
+                    while j < jend {
+                        let mut s = *cp.add(i * n + j);
+                        for p in 0..kc {
+                            s = (*bp.add((kb + p) * n + j))
+                                .mul_add(a[i * k + kb + p], s);
+                        }
+                        *cp.add(i * n + j) = s;
+                        j += 1;
+                    }
+                    i += 1;
+                }
+                jb = jend;
+            }
+            kb += kc;
+        }
+    }
+}
+
+/// The NEON arm: a 4-row × 4-lane `vfmaq_f32` register tile on the
+/// same KC/NC cache walk. Same k order as scalar, FMA contraction only
+/// (no software prefetch: stable `core::arch` exposes none for
+/// aarch64, and the hardware prefetchers handle the streamed panel).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{KC, NC};
+    use std::arch::aarch64::*;
+
+    /// Register-tile height (divides [`super::BLOCK_ROWS`]).
+    const MR4: usize = 4;
+
+    /// SAFETY: caller verified neon support. `c` must be pre-zeroed
+    /// (the dispatcher zeroes it).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gemm_rows(a: &[f32], b: &[f32], c: &mut [f32],
+                                   mb: usize, k: usize, n: usize) {
+        let mut apack = [0.0f32; MR4 * KC];
+        let (bp, cp) = (b.as_ptr(), c.as_mut_ptr());
+        let mut kb = 0;
+        while kb < k {
+            let kc = KC.min(k - kb);
+            let mut jb = 0;
+            while jb < n {
+                let nc = NC.min(n - jb);
+                let jend = jb + nc;
+                let jv = jb + (nc & !3);
+                let mut i = 0;
+                while i + MR4 <= mb {
+                    for p in 0..kc {
+                        for (r, slot) in
+                            apack[p * MR4..(p + 1) * MR4].iter_mut().enumerate() {
+                            *slot = a[(i + r) * k + kb + p];
+                        }
+                    }
+                    let mut j = jb;
+                    while j < jv {
+                        let mut acc = [vdupq_n_f32(0.0); MR4];
+                        for (r, accr) in acc.iter_mut().enumerate() {
+                            *accr = vld1q_f32(cp.add((i + r) * n + j));
+                        }
+                        for p in 0..kc {
+                            let bv = vld1q_f32(bp.add((kb + p) * n + j));
+                            let ap = apack.as_ptr().add(p * MR4);
+                            for (r, accr) in acc.iter_mut().enumerate() {
+                                *accr = vfmaq_f32(*accr, vdupq_n_f32(*ap.add(r)),
+                                                  bv);
+                            }
+                        }
+                        for (r, accr) in acc.iter().enumerate() {
+                            vst1q_f32(cp.add((i + r) * n + j), *accr);
+                        }
+                        j += 4;
+                    }
+                    while j < jend {
+                        for r in 0..MR4 {
+                            let mut s = *cp.add((i + r) * n + j);
+                            for p in 0..kc {
+                                s = (*bp.add((kb + p) * n + j))
+                                    .mul_add(apack[p * MR4 + r], s);
+                            }
+                            *cp.add((i + r) * n + j) = s;
+                        }
+                        j += 1;
+                    }
+                    i += MR4;
+                }
+                while i < mb {
+                    let mut j = jb;
+                    while j < jv {
+                        let mut accv = vld1q_f32(cp.add(i * n + j));
+                        for p in 0..kc {
+                            accv = vfmaq_f32(accv,
+                                             vdupq_n_f32(a[i * k + kb + p]),
+                                             vld1q_f32(bp.add((kb + p) * n + j)));
+                        }
+                        vst1q_f32(cp.add(i * n + j), accv);
+                        j += 4;
+                    }
+                    while j < jend {
+                        let mut s = *cp.add(i * n + j);
+                        for p in 0..kc {
+                            s = (*bp.add((kb + p) * n + j))
+                                .mul_add(a[i * k + kb + p], s);
+                        }
+                        *cp.add(i * n + j) = s;
+                        j += 1;
+                    }
+                    i += 1;
+                }
+                jb = jend;
+            }
+            kb += kc;
+        }
     }
 }
 

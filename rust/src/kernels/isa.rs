@@ -1,0 +1,189 @@
+//! Runtime ISA dispatch for the kernel core.
+//!
+//! Every [`KernelCtx`](super::KernelCtx) carries one [`Isa`] arm; the
+//! GEMM and fused kernels dispatch on it once per block, outside their
+//! inner loops. The default arm is resolved per context construction by
+//! [`active_isa`]: the `SSAF_KERNEL` environment override when set,
+//! otherwise the best arm the host supports ([`Isa::detect`]).
+//!
+//! # Determinism scope
+//!
+//! * **Within an arm**: results are bitwise-invariant across thread
+//!   counts — the arm never changes how work is split (fixed
+//!   [`BLOCK_ROWS`](super::BLOCK_ROWS) blocks, k never split), only the
+//!   register tile each block body uses.
+//! * **Across arms**: the FMA arms contract mul+add to one rounding, so
+//!   scalar and SIMD results differ in the last ulps; every arm stays
+//!   within the 1e-4 parity envelope of the seed scalar references
+//!   (property-tested per detected arm in `tests/kernel_parity.rs`).
+//!   The `scalar` arm is byte-for-byte the pre-dispatch kernel core.
+//!
+//! # Why `avx512` is absent
+//!
+//! AVX-512 intrinsics are not stabilized on the toolchain this repo
+//! pins (`rust-toolchain.toml`, stable 1.88); the dispatch seam is
+//! ready for an `Avx512` arm the day the pin moves past 1.89.
+//!
+//! # No caching
+//!
+//! [`active_isa`] re-reads the environment on every call instead of
+//! memoizing in a `OnceLock`. Contexts are constructed per batch / per
+//! test, not per inner loop, so the cost is one env lookup well outside
+//! the hot path — and it keeps the override observable by tests that
+//! set `SSAF_KERNEL` for their own process (`tests/kernel_isa_override.rs`)
+//! without global-state races between parallel in-process tests, which
+//! instead pin arms per context via
+//! [`KernelCtx::with_isa`](super::KernelCtx::with_isa).
+
+/// One micro-kernel arm of the kernel core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// The portable arm — byte-for-byte the pre-dispatch scalar core
+    /// (8-wide unrolled loops the compiler may autovectorize, separate
+    /// mul and add roundings). Supported everywhere; forced by the CI
+    /// scalar gate lane.
+    Scalar,
+    /// x86-64 AVX2 + FMA: 8-row × 8-lane fused-multiply-add register
+    /// tile in the GEMM, 256-bit dot/axpy/layernorm rows in the fused
+    /// kernels, software prefetch on the streamed B panel.
+    Avx2,
+    /// AArch64 NEON: 4-row × 4-lane `vfmaq_f32` register tile and
+    /// 128-bit fused-kernel rows.
+    Neon,
+}
+
+impl Isa {
+    /// Parse a config/env token (`scalar` | `avx2` | `neon`).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// The canonical token (round-trips through [`Isa::parse`]); keys
+    /// the per-ISA bench rows and the STATS `kernel:` field.
+    pub fn token(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Best arm the host CPU supports. One-time feature detection per
+    /// call site (`is_x86_feature_detected!` caches internally).
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
+        Isa::Scalar
+    }
+
+    /// Whether this build, on this CPU, can execute the arm.
+    /// [`KernelCtx::with_isa`](super::KernelCtx::with_isa) and
+    /// [`env_override`] assert this at construction — the invariant that
+    /// a context never carries an unsupported arm is what lets the GEMM
+    /// and fused dispatchers enter their `unsafe` `target_feature`
+    /// bodies behind a `debug_assert` instead of a per-call probe.
+    pub fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Isa::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Every arm this host can run (scalar first). The per-arm parity
+    /// suite iterates this, so coverage widens automatically on hosts
+    /// with more ISA extensions.
+    pub fn available() -> Vec<Isa> {
+        [Isa::Scalar, Isa::Avx2, Isa::Neon]
+            .into_iter()
+            .filter(|i| i.supported())
+            .collect()
+    }
+}
+
+/// The `SSAF_KERNEL` environment override, if set. Empty and `auto`
+/// mean "no override". An unknown token or an arm the host cannot run
+/// is a hard panic: the override exists for debugging and the CI scalar
+/// lane, where silently falling back would defeat the point.
+pub fn env_override() -> Option<Isa> {
+    let s = std::env::var("SSAF_KERNEL").ok()?;
+    let t = s.trim();
+    if t.is_empty() || t.eq_ignore_ascii_case("auto") {
+        return None;
+    }
+    let isa = Isa::parse(t).unwrap_or_else(|| {
+        panic!("SSAF_KERNEL={t}: unknown kernel arm (scalar|avx2|neon|auto)")
+    });
+    assert!(isa.supported(),
+            "SSAF_KERNEL={t}: arm not supported on this host (available: {})",
+            Isa::available().iter().map(|i| i.token())
+                .collect::<Vec<_>>().join(","));
+    Some(isa)
+}
+
+/// The arm new contexts run: `SSAF_KERNEL` override, else detection.
+/// This is the probe the override tests assert through.
+pub fn active_isa() -> Isa {
+    env_override().unwrap_or_else(Isa::detect)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_round_trip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.token()), Some(isa));
+        }
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("bogus"), None);
+        assert_eq!(Isa::parse(""), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(Isa::Scalar.supported());
+        let avail = Isa::available();
+        assert_eq!(avail[0], Isa::Scalar);
+        assert!(avail.contains(&Isa::detect()));
+    }
+
+    #[test]
+    fn detected_arm_is_supported() {
+        assert!(Isa::detect().supported());
+    }
+}

@@ -7,8 +7,9 @@
 //! scalar loops:
 //!
 //! * [`gemm::gemm_into`] — tiled GEMM: fixed 32-row parallel blocks,
-//!   256-deep k panels packed per 4-row micro-panel, 8-wide unrolled
-//!   micro-kernel. Row-major, allocation-free.
+//!   256-deep k panels packed per micro-panel, L2-resident column
+//!   panels, and a per-[`Isa`] register tile (scalar 4×8, AVX2 8×8 FMA,
+//!   NEON 4×4 FMA). Row-major, allocation-free.
 //! * [`fused::softmax_gemm`] — rowsoftmax(scale·Q·K̃ᵀ)·X without
 //!   materializing the n×c logits (per-block scratch only).
 //! * [`fused::flash_attention`] — exact attention with the online
@@ -34,12 +35,16 @@
 //!
 //! # Invariants
 //!
-//! * **Bitwise thread-count determinism** — work splits into
+//! * **Bitwise thread-count determinism (per arm)** — work splits into
 //!   [`BLOCK_ROWS`]-sized blocks whose boundaries are a pure function
 //!   of the problem shape (never the pool size), and the k dimension is
 //!   never split, so each output element's floating-point reduction
 //!   order — and therefore every bit of the result — is identical for 1
-//!   and N threads (`tests/kernel_parity.rs`).
+//!   and N threads (`tests/kernel_parity.rs`). The guarantee holds
+//!   *within* a micro-kernel arm: the SIMD arms contract mul+add into
+//!   FMA, so they differ from the scalar arm in the last ulps (each arm
+//!   is property-tested against the seed references at 1e-4; see
+//!   [`isa`]).
 //! * **Zero steady-state allocation** — all scratch comes from a
 //!   caller-owned [`Workspace`]; after a warmup call at a given shape,
 //!   repeated calls allocate nothing (asserted by `allocations()`
@@ -62,6 +67,8 @@
 pub mod batched;
 pub mod fused;
 pub mod gemm;
+pub mod isa;
+pub(crate) mod simd;
 pub mod workspace;
 
 pub use batched::{
@@ -72,6 +79,7 @@ pub use fused::{
     bias_gelu, flash_attention, gelu, layernorm, softmax_gemm, softmax_scores,
 };
 pub use gemm::{gemm_f32, gemm_into, transpose_into};
+pub use isa::{active_isa, Isa};
 pub use workspace::Workspace;
 
 use crate::minirt::ThreadPool;
@@ -106,27 +114,52 @@ pub fn global_pool() -> Arc<ThreadPool> {
 }
 
 /// Execution context handed to every kernel: either sequential or a
-/// handle to a (shared) thread pool.
+/// handle to a (shared) thread pool, plus the micro-kernel [`Isa`] arm
+/// the kernels dispatch on. Constructors resolve the arm from
+/// [`active_isa`] (`SSAF_KERNEL` override, else hardware detection);
+/// [`KernelCtx::with_isa`] pins an explicit arm — the per-arm parity
+/// tests and the `[serving] kernel` knob go through it.
 #[derive(Clone)]
 pub struct KernelCtx {
     pool: Option<Arc<ThreadPool>>,
+    isa: Isa,
 }
 
 impl KernelCtx {
     /// Single-threaded execution (also used inside batched tasks, where
     /// the outer fan-out already owns the pool).
     pub fn sequential() -> Self {
-        KernelCtx { pool: None }
+        KernelCtx { pool: None, isa: active_isa() }
     }
 
     /// Run on an explicit pool handle.
     pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
-        KernelCtx { pool: Some(pool) }
+        KernelCtx { pool: Some(pool), isa: active_isa() }
     }
 
     /// Run on the shared process-wide pool.
     pub fn global() -> Self {
         KernelCtx::with_pool(global_pool())
+    }
+
+    /// Pin this context to an explicit micro-kernel arm (builder style).
+    /// Panics when the host cannot execute the arm — a `KernelCtx`
+    /// never carries an unsupported `Isa`, which is what lets the
+    /// kernels enter their `target_feature` bodies without per-call
+    /// feature probes.
+    pub fn with_isa(mut self, isa: Isa) -> Self {
+        assert!(isa.supported(),
+                "kernel arm {} not supported on this host (available: {})",
+                isa.token(),
+                Isa::available().iter().map(|i| i.token())
+                    .collect::<Vec<_>>().join(","));
+        self.isa = isa;
+        self
+    }
+
+    /// The micro-kernel arm this context dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
     }
 
     /// Parallel lanes this context can use (workers + the caller).
@@ -237,6 +270,18 @@ mod tests {
     fn sequential_ctx_has_one_thread() {
         assert_eq!(KernelCtx::sequential().threads(), 1);
         assert!(KernelCtx::global().threads() >= 2);
+    }
+
+    #[test]
+    fn ctx_carries_a_pinned_arm() {
+        // default arm is the resolved process arm; with_isa pins any
+        // supported arm (scalar is always one)
+        assert_eq!(KernelCtx::sequential().isa(), active_isa());
+        let ctx = KernelCtx::global().with_isa(Isa::Scalar);
+        assert_eq!(ctx.isa(), Isa::Scalar);
+        for isa in Isa::available() {
+            assert_eq!(KernelCtx::sequential().with_isa(isa).isa(), isa);
+        }
     }
 
     #[test]

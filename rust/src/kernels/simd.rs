@@ -1,0 +1,510 @@
+//! Per-ISA vector primitives for the fused kernels: dot, axpy, and the
+//! layernorm / bias-add row bodies. The GEMM micro-kernels live next to
+//! their packing logic in [`super::gemm`]; this module covers the
+//! row-shaped work (`flash_attention` score/value loops, `layernorm`
+//! moments + affine, `bias_gelu` bias add).
+//!
+//! # Safety contract
+//!
+//! The `Avx2`/`Neon` arms enter `#[target_feature]` bodies. Callers
+//! pass an [`Isa`] obtained from a [`KernelCtx`](super::KernelCtx),
+//! which verifies [`Isa::supported`] at construction (`with_isa`
+//! asserts; `active_isa` only yields supported arms) — so dispatch here
+//! is a plain match with a `debug_assert`, not a per-call feature probe
+//! in the hot loop.
+//!
+//! # Determinism
+//!
+//! Scalar arms are byte-for-byte the pre-dispatch implementations. SIMD
+//! arms keep a *fixed* reduction order (lane accumulators combined in a
+//! hardcoded pairing, then a left-to-right tail), so results are
+//! bitwise-invariant across thread counts within an arm; FMA contraction
+//! makes them differ from scalar in the last ulps (≤ the 1e-4 envelope,
+//! property-tested per arm).
+
+use super::gemm::axpy8;
+use super::isa::Isa;
+
+/// f32 dot product on the selected arm.
+#[inline(always)]
+pub(crate) fn dot(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(isa.supported());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: ctx-carried arms are verified supported (module docs).
+        Isa::Avx2 => unsafe { x86::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Isa::Neon => unsafe { arm::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// c += w·b on the selected arm.
+#[inline(always)]
+pub(crate) fn axpy(isa: Isa, c: &mut [f32], w: f32, b: &[f32]) {
+    debug_assert!(isa.supported());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: ctx-carried arms are verified supported (module docs).
+        Isa::Avx2 => unsafe { x86::axpy(c, w, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Isa::Neon => unsafe { arm::axpy(c, w, b) },
+        _ => axpy8(c, w, b),
+    }
+}
+
+/// Row mean and variance (biased, /n) for layernorm. The scalar arm is
+/// the seed single-accumulator left-to-right pass; SIMD arms accumulate
+/// lane-wise with the fixed horizontal pairing.
+#[inline(always)]
+pub(crate) fn moments(isa: Isa, x: &[f32]) -> (f32, f32) {
+    debug_assert!(isa.supported());
+    let n = x.len().max(1) as f32;
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: ctx-carried arms are verified supported (module docs).
+        Isa::Avx2 => unsafe {
+            let mean = x86::sum(x) / n;
+            (mean, x86::centered_sumsq(x, mean) / n)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Isa::Neon => unsafe {
+            let mean = arm::sum(x) / n;
+            (mean, arm::centered_sumsq(x, mean) / n)
+        },
+        _ => {
+            let mut mean = 0.0f32;
+            for &v in x {
+                mean += v;
+            }
+            mean /= n;
+            let mut var = 0.0f32;
+            for &v in x {
+                let c = v - mean;
+                var += c * c;
+            }
+            (mean, var / n)
+        }
+    }
+}
+
+/// Layernorm affine: o[j] = (x[j] − mean)·inv·gain[j] + bias[j].
+#[inline(always)]
+pub(crate) fn ln_affine(isa: Isa, o: &mut [f32], x: &[f32], mean: f32,
+                        inv: f32, gain: &[f32], bias: &[f32]) {
+    debug_assert!(isa.supported());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: ctx-carried arms are verified supported (module docs).
+        Isa::Avx2 => unsafe { x86::ln_affine(o, x, mean, inv, gain, bias) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Isa::Neon => unsafe { arm::ln_affine(o, x, mean, inv, gain, bias) },
+        _ => {
+            for (j, oj) in o.iter_mut().enumerate() {
+                *oj = (x[j] - mean) * inv * gain[j] + bias[j];
+            }
+        }
+    }
+}
+
+/// row[j] += bias[j]. A single-rounding add in every arm, so the result
+/// is bitwise arm-invariant (the GELU that follows stays scalar).
+#[inline(always)]
+pub(crate) fn add_bias(isa: Isa, row: &mut [f32], bias: &[f32]) {
+    debug_assert!(isa.supported());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: ctx-carried arms are verified supported (module docs).
+        Isa::Avx2 => unsafe { x86::add_bias(row, bias) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above.
+        Isa::Neon => unsafe { arm::add_bias(row, bias) },
+        _ => {
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    }
+}
+
+/// f32 dot product, 8-wide unrolled — the scalar arm (kernel-core
+/// counterpart of the reference `attention::dot_f32`; kept separate so
+/// the reference path stays byte-for-byte the seed implementation).
+#[inline(always)]
+pub(crate) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        let aj = &a[i..i + 8];
+        let bj = &b[i..i + 8];
+        for t in 0..8 {
+            acc[t] += aj[t] * bj[t];
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Fixed-pairing horizontal sum of one 256-bit accumulator: the
+    /// same (l0+l4)+(l1+l5) … tree the scalar arm uses, so the reduce
+    /// order is a constant of the arm.
+    ///
+    /// SAFETY: caller runs under avx2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut l = [0.0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), v);
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    /// SAFETY: caller verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)),
+                                  _mm256_loadu_ps(bp.add(i)), acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s = (*ap.add(i)).mul_add(*bp.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    /// SAFETY: caller verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy(c: &mut [f32], w: f32, b: &[f32]) {
+        debug_assert_eq!(c.len(), b.len());
+        let n = c.len();
+        let (cp, bp) = (c.as_mut_ptr(), b.as_ptr());
+        let wv = _mm256_set1_ps(w);
+        let mut j = 0;
+        while j + 8 <= n {
+            let cv = _mm256_fmadd_ps(wv, _mm256_loadu_ps(bp.add(j)),
+                                     _mm256_loadu_ps(cp.add(j)));
+            _mm256_storeu_ps(cp.add(j), cv);
+            j += 8;
+        }
+        while j < n {
+            *cp.add(j) = w.mul_add(*bp.add(j), *cp.add(j));
+            j += 1;
+        }
+    }
+
+    /// SAFETY: caller verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(xp.add(i)));
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += *xp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// Σ (x[i] − mean)² with lane accumulators.
+    ///
+    /// SAFETY: caller verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn centered_sumsq(x: &[f32], mean: f32) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mv = _mm256_set1_ps(mean);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), mv);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = *xp.add(i) - mean;
+            s = d.mul_add(d, s);
+            i += 1;
+        }
+        s
+    }
+
+    /// SAFETY: caller verified avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn ln_affine(o: &mut [f32], x: &[f32], mean: f32,
+                                   inv: f32, gain: &[f32], bias: &[f32]) {
+        let n = o.len();
+        debug_assert!(x.len() == n && gain.len() == n && bias.len() == n);
+        let (op, xp, gp, bp) =
+            (o.as_mut_ptr(), x.as_ptr(), gain.as_ptr(), bias.as_ptr());
+        let mv = _mm256_set1_ps(mean);
+        let iv = _mm256_set1_ps(inv);
+        let mut j = 0;
+        while j + 8 <= n {
+            let t = _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(xp.add(j)), mv), iv);
+            let ov = _mm256_fmadd_ps(t, _mm256_loadu_ps(gp.add(j)),
+                                     _mm256_loadu_ps(bp.add(j)));
+            _mm256_storeu_ps(op.add(j), ov);
+            j += 8;
+        }
+        while j < n {
+            let t = (*xp.add(j) - mean) * inv;
+            *op.add(j) = t.mul_add(*gp.add(j), *bp.add(j));
+            j += 1;
+        }
+    }
+
+    /// SAFETY: caller verified avx2 support.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn add_bias(row: &mut [f32], bias: &[f32]) {
+        debug_assert_eq!(row.len(), bias.len());
+        let n = row.len();
+        let (rp, bp) = (row.as_mut_ptr(), bias.as_ptr());
+        let mut j = 0;
+        while j + 8 <= n {
+            let v = _mm256_add_ps(_mm256_loadu_ps(rp.add(j)),
+                                  _mm256_loadu_ps(bp.add(j)));
+            _mm256_storeu_ps(rp.add(j), v);
+            j += 8;
+        }
+        while j < n {
+            *rp.add(j) += *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// Fixed-pairing horizontal sum of one 128-bit accumulator.
+    ///
+    /// SAFETY: caller runs under neon.
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(v: float32x4_t) -> f32 {
+        let mut l = [0.0f32; 4];
+        vst1q_f32(l.as_mut_ptr(), v);
+        (l[0] + l[2]) + (l[1] + l[3])
+    }
+
+    /// SAFETY: caller verified neon support.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            acc = vfmaq_f32(acc, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s = (*ap.add(i)).mul_add(*bp.add(i), s);
+            i += 1;
+        }
+        s
+    }
+
+    /// SAFETY: caller verified neon support.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy(c: &mut [f32], w: f32, b: &[f32]) {
+        debug_assert_eq!(c.len(), b.len());
+        let n = c.len();
+        let (cp, bp) = (c.as_mut_ptr(), b.as_ptr());
+        let wv = vdupq_n_f32(w);
+        let mut j = 0;
+        while j + 4 <= n {
+            let cv = vfmaq_f32(vld1q_f32(cp.add(j)), wv, vld1q_f32(bp.add(j)));
+            vst1q_f32(cp.add(j), cv);
+            j += 4;
+        }
+        while j < n {
+            *cp.add(j) = w.mul_add(*bp.add(j), *cp.add(j));
+            j += 1;
+        }
+    }
+
+    /// SAFETY: caller verified neon support.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            acc = vaddq_f32(acc, vld1q_f32(xp.add(i)));
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += *xp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// Σ (x[i] − mean)² with lane accumulators.
+    ///
+    /// SAFETY: caller verified neon support.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn centered_sumsq(x: &[f32], mean: f32) -> f32 {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mv = vdupq_n_f32(mean);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = vsubq_f32(vld1q_f32(xp.add(i)), mv);
+            acc = vfmaq_f32(acc, d, d);
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            let d = *xp.add(i) - mean;
+            s = d.mul_add(d, s);
+            i += 1;
+        }
+        s
+    }
+
+    /// SAFETY: caller verified neon support.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn ln_affine(o: &mut [f32], x: &[f32], mean: f32,
+                                   inv: f32, gain: &[f32], bias: &[f32]) {
+        let n = o.len();
+        debug_assert!(x.len() == n && gain.len() == n && bias.len() == n);
+        let (op, xp, gp, bp) =
+            (o.as_mut_ptr(), x.as_ptr(), gain.as_ptr(), bias.as_ptr());
+        let mv = vdupq_n_f32(mean);
+        let iv = vdupq_n_f32(inv);
+        let mut j = 0;
+        while j + 4 <= n {
+            let t = vmulq_f32(vsubq_f32(vld1q_f32(xp.add(j)), mv), iv);
+            let ov = vfmaq_f32(vld1q_f32(bp.add(j)), t, vld1q_f32(gp.add(j)));
+            vst1q_f32(op.add(j), ov);
+            j += 4;
+        }
+        while j < n {
+            let t = (*xp.add(j) - mean) * inv;
+            *op.add(j) = t.mul_add(*gp.add(j), *bp.add(j));
+            j += 1;
+        }
+    }
+
+    /// SAFETY: caller verified neon support.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn add_bias(row: &mut [f32], bias: &[f32]) {
+        debug_assert_eq!(row.len(), bias.len());
+        let n = row.len();
+        let (rp, bp) = (row.as_mut_ptr(), bias.as_ptr());
+        let mut j = 0;
+        while j + 4 <= n {
+            vst1q_f32(rp.add(j), vaddq_f32(vld1q_f32(rp.add(j)),
+                                           vld1q_f32(bp.add(j))));
+            j += 4;
+        }
+        while j < n {
+            *rp.add(j) += *bp.add(j);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Tensor2;
+    use crate::rngx::Rng;
+
+    #[test]
+    fn dot_matches_naive_on_every_arm() {
+        let mut rng = Rng::new(6);
+        for isa in Isa::available() {
+            for n in [0usize, 1, 3, 7, 8, 9, 16, 31, 64] {
+                let a = Tensor2::randn(&mut rng, 1, n.max(1), 1.0);
+                let b = Tensor2::randn(&mut rng, 1, n.max(1), 1.0);
+                let (a, b) = (&a.data[..n], &b.data[..n]);
+                let want: f64 =
+                    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum();
+                let got = dot(isa, a, b) as f64;
+                assert!((got - want).abs() < 1e-4, "{}: n={n}", isa.token());
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive_on_every_arm() {
+        let mut rng = Rng::new(7);
+        for isa in Isa::available() {
+            for n in [1usize, 5, 8, 13, 32] {
+                let b = Tensor2::randn(&mut rng, 1, n, 1.0);
+                let mut c = vec![1.0f32; n];
+                let mut want = vec![1.0f32; n];
+                axpy(isa, &mut c, 0.5, &b.data);
+                for (w, &x) in want.iter_mut().zip(&b.data) {
+                    *w += 0.5 * x;
+                }
+                for (g, w) in c.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-5, "{}: n={n}", isa.token());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moments_match_scalar_on_every_arm() {
+        let mut rng = Rng::new(8);
+        let x = Tensor2::randn(&mut rng, 1, 37, 2.0);
+        let (m0, v0) = moments(Isa::Scalar, &x.data);
+        for isa in Isa::available() {
+            let (m, v) = moments(isa, &x.data);
+            assert!((m - m0).abs() < 1e-5 && (v - v0).abs() < 1e-4,
+                    "{}: mean {m} vs {m0}, var {v} vs {v0}", isa.token());
+        }
+    }
+
+    #[test]
+    fn add_bias_is_bitwise_arm_invariant() {
+        let mut rng = Rng::new(9);
+        let base = Tensor2::randn(&mut rng, 1, 21, 1.0);
+        let bias = Tensor2::randn(&mut rng, 1, 21, 1.0);
+        let mut want = base.data.clone();
+        add_bias(Isa::Scalar, &mut want, &bias.data);
+        for isa in Isa::available() {
+            let mut got = base.data.clone();
+            add_bias(isa, &mut got, &bias.data);
+            assert_eq!(got, want, "{}", isa.token());
+        }
+    }
+}

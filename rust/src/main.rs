@@ -50,6 +50,8 @@ USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
            --artifacts DIR --max-batch N --max-wait-ms MS
            --workers N --shards N --cache-capacity N (0 = off)
            --default-deadline-ms MS (0 = none) --deadline-margin-ms MS
+           --kernel auto|scalar|avx2|neon (micro-kernel arm; the
+                     SSAF_KERNEL env var overrides this flag)
            (knob semantics + capacity planning: see OPERATIONS.md)
   train    --variant full|ss --steps N --seed S --artifacts DIR
   info     --artifacts DIR
@@ -130,6 +132,14 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
     if let Some(i) = flags.get("init") {
         cfg.init = InitPolicy::parse(i).ok_or(format!("bad init {i:?}"))?;
     }
+    if let Some(k) = flags.get("kernel") {
+        cfg.kernel = if k.trim().eq_ignore_ascii_case("auto") {
+            None
+        } else {
+            Some(ssaformer::kernels::Isa::parse(k)
+                .ok_or(format!("bad kernel {k:?} (auto|scalar|avx2|neon)"))?)
+        };
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -171,6 +181,7 @@ fn cmd_serve(flags: &Flags) -> i32 {
     };
     let backend_name = coordinator.backend().name();
     println!("model: {}", coordinator.model_desc());
+    println!("kernel: {}", coordinator.kernel_desc());
     println!("worker pool: {} workers over {} queue shards, cache {}",
              coordinator.workers(), coordinator.queue_shards(),
              match coordinator.cache_capacity() {

@@ -61,6 +61,7 @@
 //! ```text
 //! backend:  <cpu-kernels|xla-pjrt>     which execution backend is live
 //! model:    L layers, variant=<op[,op…]>, d_model=D, heads=H, ffn_mult=M, projections=<on|off>, weights=<seeded|loaded>
+//! kernel:   <arm> (detected <arm>, gemm KC=.. NC=..)   active micro-kernel arm
 //! workers:  N (S queue shards, cache L/C)   worker pool + cache shape
 //! requests: in=N done=N rejected=N expired=N   admission counters
 //! cache:    hits=N misses=N (H% hit rate)
@@ -254,10 +255,11 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                 0 => "off".to_string(),
                 cap => format!("{}/{}", coordinator.cache_len(), cap),
             };
-            format!("backend:  {}\nmodel:    {}\nworkers:  {} ({} queue shards, \
-                     cache {})\n{}\n.\n",
+            format!("backend:  {}\nmodel:    {}\nkernel:   {}\nworkers:  {} \
+                     ({} queue shards, cache {})\n{}\n.\n",
                     coordinator.backend().name(),
                     coordinator.model_desc(),
+                    coordinator.kernel_desc(),
                     coordinator.workers(),
                     coordinator.queue_shards(),
                     cache,

@@ -130,6 +130,15 @@ fn cpu_backend_serves_over_tcp_and_matches_reference() {
     let mut client = Client::connect(&addr).unwrap();
     let stats = client.stats().unwrap();
     assert!(stats.contains("backend:  cpu-kernels"), "{stats}");
+    // the kernel line names the active micro-kernel arm and the GEMM
+    // blocking parameters (KC/NC) the NS chain depends on
+    let kernel_line = stats.lines().find(|l| l.starts_with("kernel:"))
+        .unwrap_or_else(|| panic!("no kernel line in {stats}"));
+    assert!(kernel_line.contains(
+                ssaformer::kernels::active_isa().token()),
+            "{kernel_line}");
+    assert!(kernel_line.contains("KC=") && kernel_line.contains("NC="),
+            "{kernel_line}");
     let batches: u64 = stats
         .lines()
         .find(|l| l.starts_with("batches:"))

@@ -1,0 +1,59 @@
+//! `SSAF_KERNEL` override behavior, asserted through the
+//! `kernels::active_isa()` probe.
+//!
+//! This lives in its own integration-test binary (= its own process) on
+//! purpose: the override is read from the process environment, and
+//! `active_isa()` deliberately does not cache it, so mutating the env
+//! here cannot race the per-context arm pinning the in-process test
+//! suites use (`KernelCtx::with_isa`). Everything runs in ONE `#[test]`
+//! so the set/unset sequence is serial even if the harness adds threads.
+
+use ssaformer::kernels::{active_isa, Isa};
+
+#[test]
+fn ssaf_kernel_env_selects_the_arm() {
+    const KEY: &str = "SSAF_KERNEL";
+    // the CI scalar lane runs the whole suite under SSAF_KERNEL=scalar —
+    // stash whatever the harness was launched with and restore on exit
+    let orig = std::env::var_os(KEY);
+    std::env::remove_var(KEY);
+
+    // no override: detection wins
+    let detected = Isa::detect();
+    assert_eq!(active_isa(), detected);
+
+    // scalar is supported everywhere, so the override must always take
+    std::env::set_var(KEY, "scalar");
+    assert_eq!(active_isa(), Isa::Scalar);
+    // a context constructed under the override carries the forced arm
+    assert_eq!(ssaformer::kernels::KernelCtx::sequential().isa(),
+               Isa::Scalar);
+
+    // "auto" and empty both mean "no override" (back to detection)
+    std::env::set_var(KEY, "auto");
+    assert_eq!(active_isa(), detected);
+    std::env::set_var(KEY, "");
+    assert_eq!(active_isa(), detected);
+
+    // every supported arm is selectable by token (spelled any case)
+    for isa in Isa::available() {
+        std::env::set_var(KEY, isa.token().to_ascii_uppercase());
+        assert_eq!(active_isa(), isa);
+    }
+
+    // an unknown token is a hard panic, not a silent fallback — the CI
+    // scalar lane depends on the override failing closed
+    std::env::set_var(KEY, "sse9");
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {})); // keep the expected panic quiet
+    let r = std::panic::catch_unwind(active_isa);
+    std::panic::set_hook(hook);
+    assert!(r.is_err(), "unknown SSAF_KERNEL token must panic");
+
+    std::env::remove_var(KEY);
+    assert_eq!(active_isa(), detected);
+
+    if let Some(v) = orig {
+        std::env::set_var(KEY, v);
+    }
+}

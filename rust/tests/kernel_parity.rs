@@ -4,17 +4,18 @@
 //!
 //! Invariants:
 //! * max rel err < 1e-4 between fast and reference across odd shapes
-//!   (non-multiples of the 32-row block / 4-row micro-kernel, 1×1,
-//!   tall-skinny, wide-flat),
+//!   (non-multiples of the 32-row block / register-tile heights, 1×1,
+//!   tall-skinny, wide-flat) — on **every** micro-kernel arm this host
+//!   can run ([`Isa::available`]), not just the default one,
 //! * 1-thread and N-thread results are **bitwise identical** (fixed
-//!   per-row reduction order).
+//!   per-row reduction order), again per arm.
 
 use ssaformer::attention::spectral_shift::{reference, SpectralShiftConfig};
 use ssaformer::attention::{matmul_f32, nystrom_attention_with, Tensor2};
 use ssaformer::attention::spectral_shift_attention_with;
 use ssaformer::kernels::{
-    attention_batched, flash_attention, gemm_f32, softmax_gemm, transpose_into,
-    BatchedAttention, BatchedVariant, KernelCtx, Workspace,
+    attention_batched, flash_attention, gemm_f32, layernorm, softmax_gemm,
+    transpose_into, BatchedAttention, BatchedVariant, Isa, KernelCtx, Workspace,
 };
 use ssaformer::linalg::row_softmax_f32;
 use ssaformer::minirt::ThreadPool;
@@ -171,6 +172,103 @@ fn k_t(k: &Tensor2) -> Tensor2 {
     let mut kt = Tensor2::zeros(k.cols, k.rows);
     transpose_into(&k.data, &mut kt.data, k.rows, k.cols);
     kt
+}
+
+#[test]
+fn every_available_arm_matches_the_naive_gemm() {
+    // the per-arm parity suite: each arm the host can run (scalar is
+    // always one; avx2/neon when detected) vs the naive reference on
+    // odd and degenerate shapes — off-by-one around the 8-lane vector
+    // extent and the 8/4-row register tiles included
+    let mut ws = Workspace::new();
+    for isa in Isa::available() {
+        let ctx = KernelCtx::global().with_isa(isa);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (1, 512, 1),
+                            (7, 9, 7), (8, 8, 8), (9, 17, 9),
+                            (33, 257, 31), (40, 300, 129), (64, 64, 64),
+                            (1000, 3, 2)] {
+            let mut rng = Rng::new((m + k * 7 + n * 13) as u64);
+            let a = Tensor2::randn(&mut rng, m, k, 1.0);
+            let b = Tensor2::randn(&mut rng, k, n, 1.0);
+            let fast = gemm_f32(&ctx, &a, &b, &mut ws);
+            let slow = matmul_f32(&a, &b);
+            let err = max_rel_err(&fast, &slow);
+            assert!(err < 1e-4, "{} ({m},{k},{n}): rel err {err}", isa.token());
+            ws.put(fast.data);
+        }
+    }
+}
+
+#[test]
+fn every_available_arm_is_thread_count_bitwise_deterministic() {
+    // the within-arm determinism contract: for EACH arm, sequential /
+    // 1-worker / 4-worker contexts produce byte-identical gemm, flash,
+    // layernorm, and spectral-shift outputs
+    let pool1 = Arc::new(ThreadPool::new(1));
+    let pool4 = Arc::new(ThreadPool::new(4));
+    let mut rng = Rng::new(21);
+    let q = Tensor2::randn(&mut rng, 160, 16, 1.0);
+    let k = Tensor2::randn(&mut rng, 160, 16, 1.0);
+    let v = Tensor2::randn(&mut rng, 160, 16, 1.0);
+    let mut gain = vec![0.0f32; 16];
+    let mut bias = vec![0.0f32; 16];
+    rng.fill_normal_f32(&mut gain, 1.0, 0.1);
+    rng.fill_normal_f32(&mut bias, 0.0, 0.1);
+    let cfg = SpectralShiftConfig::new(16);
+    for isa in Isa::available() {
+        let ctxs = [
+            KernelCtx::sequential().with_isa(isa),
+            KernelCtx::with_pool(pool1.clone()).with_isa(isa),
+            KernelCtx::with_pool(pool4.clone()).with_isa(isa),
+        ];
+        let mut outs: Vec<[Vec<f32>; 4]> = Vec::new();
+        for ctx in &ctxs {
+            let mut ws = Workspace::new();
+            outs.push([
+                gemm_f32(ctx, &q, &k_t(&k), &mut ws).data,
+                flash_attention(ctx, &q, &k, &v, 0.25, &mut ws).data,
+                layernorm(ctx, &q, &gain, &bias, 1e-5, &mut ws).data,
+                spectral_shift_attention_with(&q, &k, &v, &cfg, ctx,
+                                              &mut ws).data,
+            ]);
+        }
+        for i in 1..ctxs.len() {
+            for (j, name) in ["gemm", "flash", "layernorm", "ss"]
+                .iter().enumerate() {
+                assert_eq!(outs[0][j], outs[i][j],
+                           "{}: {name} differs at ctx {i}", isa.token());
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_arms_hold_the_envelope_against_the_scalar_arm() {
+    // cross-arm contract: each non-scalar arm stays within 1e-4 of the
+    // scalar arm on the same inputs (FMA contraction is the only
+    // difference; it moves last ulps, not the answer)
+    let mut ws = Workspace::new();
+    let mut rng = Rng::new(22);
+    let q = Tensor2::randn(&mut rng, 130, 24, 1.0);
+    let k = Tensor2::randn(&mut rng, 130, 24, 1.0);
+    let v = Tensor2::randn(&mut rng, 130, 24, 1.0);
+    let scalar_ctx = KernelCtx::global().with_isa(Isa::Scalar);
+    let base_gemm = gemm_f32(&scalar_ctx, &q, &k_t(&k), &mut ws);
+    let base_flash = flash_attention(&scalar_ctx, &q, &k, &v, 0.2, &mut ws);
+    for isa in Isa::available() {
+        if isa == Isa::Scalar {
+            continue;
+        }
+        let ctx = KernelCtx::global().with_isa(isa);
+        let g = gemm_f32(&ctx, &q, &k_t(&k), &mut ws);
+        let f = flash_attention(&ctx, &q, &k, &v, 0.2, &mut ws);
+        let eg = max_rel_err(&g, &base_gemm);
+        let ef = max_rel_err(&f, &base_flash);
+        assert!(eg < 1e-4, "{} gemm vs scalar arm: {eg}", isa.token());
+        assert!(ef < 1e-4, "{} flash vs scalar arm: {ef}", isa.token());
+        ws.put(g.data);
+        ws.put(f.data);
+    }
 }
 
 #[test]

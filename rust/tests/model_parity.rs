@@ -194,6 +194,17 @@ fn projected_two_layer_stack_matches_the_scalar_projected_reference() {
         let refs: Vec<&[i32]> = reqs.iter().map(|t| t.as_slice()).collect();
         let plan = assemble(&refs, 4, 128);
         let mut engine = CpuEngine::new(model);
+        if variant == Variant::Lsh {
+            // the PR-5 risk note, realized by the SIMD dispatch: LSH
+            // bucket assignment is a discontinuous function of the
+            // projected values, so the FMA arms' last-ulp differences
+            // from the scalar reference can flip a bucket and blow the
+            // 1e-4 envelope. Pin the engine to the scalar arm — the
+            // projected-LSH parity claim is about the projection seam,
+            // not about cross-arm rounding (covered at the kernel level
+            // in tests/kernel_parity.rs).
+            engine.set_kernel_isa(ssaformer::kernels::Isa::Scalar);
+        }
         let got = engine.encode_batch(&plan, &lens);
         for (r, t) in reqs.iter().enumerate() {
             let plen = verify.padded_len(t.len());
