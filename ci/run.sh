@@ -22,6 +22,17 @@ cargo test -q
 echo "==> SSAF_KERNEL=scalar cargo test -q"
 SSAF_KERNEL=scalar cargo test -q
 
+# cluster lane: the multi-replica fault-injection suite, named
+# explicitly so a red run reads as "the cluster tier broke" rather than
+# a generic test failure, and run three times back to back because the
+# suite's contract is determinism — a flake here is a bug, not noise.
+# One of the three repeats runs on the scalar kernel arm so the
+# cross-replica bitwise-equality pins hold on the portable fallback too.
+echo "==> cluster lane: cargo test -q --test integration_cluster (x2 + scalar)"
+cargo test -q --test integration_cluster
+cargo test -q --test integration_cluster
+SSAF_KERNEL=scalar cargo test -q --test integration_cluster
+
 echo "==> cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 

@@ -21,6 +21,14 @@
 //! `kernel_available` metadata — the SIMD speedup lands
 //! machine-readably next to the numbers it multiplies.
 //!
+//! Schema v7 adds the cluster-tier rows under `"cluster"`: a router
+//! front-end over two loopback replicas, reporting forwarded
+//! requests/sec through the consistent-hash hop
+//! (`router_forward_rps`), replayed requests/sec served from the
+//! router's cross-replica cache (`router_cache_hit_rps`), and the
+//! router cache hit rate over the whole workload — the serving tier's
+//! horizontal-scaling counterpart of the `cpu_encode_rps_*` rows.
+//!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
 //! Smoke mode: set BENCH_SMOKE=1 to shrink the problem set (n = 256
@@ -35,9 +43,13 @@ use ssaformer::attention::{
 };
 use ssaformer::benchkit::{banner, bench, fmt_duration, Table};
 use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::cluster::{
+    serve_router, ClusterConfig, ClusterRouter,
+};
 use ssaformer::coordinator::{
     Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
 };
+use ssaformer::server::{serve, Client};
 use ssaformer::kernels::{
     active_isa, gemm_f32, global_pool, Isa, KernelCtx, Workspace,
 };
@@ -342,8 +354,91 @@ fn main() {
         serving.push(("mixed_rps".into(), rps));
     }
 
+    // --- cluster tier (schema v7): router front-end over two loopback
+    // replicas — forwarded req/s through the consistent-hash hop, then
+    // the same workload replayed against the router's cross-replica
+    // cache (hit ≡ recompute bitwise, so the replay is pure routing
+    // overhead)
+    let mut cluster: Vec<(String, f64)> = Vec::new();
+    {
+        let mk_replica = || {
+            let cfg = ServingConfig {
+                variant: Variant::SpectralShift,
+                max_batch: 4,
+                max_wait_ms: 2,
+                queue_capacity: 256,
+                cache_capacity: 64,
+                ..Default::default()
+            };
+            let engine = Box::new(CpuEngine::new(CpuModel::new(
+                CpuModelConfig::default(), cfg.variant)));
+            let c = Arc::new(
+                Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+            let (addr, h) = serve(c.clone(), "127.0.0.1:0", 4).unwrap();
+            (c, addr, h)
+        };
+        let (_ra, aaddr, ahandle) = mk_replica();
+        let (_rb, baddr, bhandle) = mk_replica();
+        let rcfg = ClusterConfig {
+            replicas: vec![aaddr.to_string(), baddr.to_string()],
+            probe_interval: Duration::from_secs(600),
+            cache_capacity: 256,
+            ..Default::default()
+        };
+        let router = Arc::new(ClusterRouter::new(rcfg));
+        let (raddr, rhandle) = serve_router(router.clone(), "127.0.0.1:0", 4)
+            .expect("bind router");
+        let mut client = Client::connect(&raddr).expect("connect router");
+
+        let n_seqs = if smoke() { 4usize } else { 16 };
+        let seqs: Vec<Vec<i32>> = (0..n_seqs)
+            .map(|s| (0..200 + 20 * s)
+                .map(|i| 3 + ((i * 17 + s * 11) as i32 % 2000))
+                .collect())
+            .collect();
+
+        // cold pass: every request forwarded to a replica
+        let start = std::time::Instant::now();
+        for (i, t) in seqs.iter().enumerate() {
+            assert!(client.encode(i as u64, t).unwrap().starts_with("OK "));
+        }
+        let fwd_rps = n_seqs as f64 / start.elapsed().as_secs_f64();
+
+        // replay passes: served from the router cache, replicas idle
+        let rounds = if smoke() { 2usize } else { 4 };
+        let start = std::time::Instant::now();
+        for _ in 0..rounds {
+            for (i, t) in seqs.iter().enumerate() {
+                assert!(client.encode(i as u64, t).unwrap().starts_with("OK "));
+            }
+        }
+        let hit_rps =
+            (rounds * n_seqs) as f64 / start.elapsed().as_secs_f64();
+        let hits = router.metrics.cache_hits.get();
+        let lookups = hits + router.metrics.cache_misses.get();
+        let hit_rate = hits as f64 / lookups.max(1) as f64;
+
+        let mut ctbl = Table::new(&["cluster (router + 2 replicas)", "value"]);
+        ctbl.row(&["forward req/s".into(), format!("{fwd_rps:.1}")]);
+        ctbl.row(&["cache-hit req/s".into(), format!("{hit_rps:.1}")]);
+        ctbl.row(&["router hit rate".into(),
+                   format!("{:.0}%", 100.0 * hit_rate)]);
+        println!("{}", ctbl.render());
+        cluster.push(("replicas".into(), 2.0));
+        cluster.push(("router_forward_rps".into(), fwd_rps));
+        cluster.push(("router_cache_hit_rps".into(), hit_rps));
+        cluster.push(("router_cache_hit_rate".into(), hit_rate));
+        cluster.push(("forwarded".into(),
+                      router.metrics.forwarded.get() as f64));
+        cluster.push(("replica_lost".into(),
+                      router.metrics.replica_lost.get() as f64));
+        rhandle.stop();
+        ahandle.stop();
+        bhandle.stop();
+    }
+
     let json = render_json(threads, c, d, &entries, &speedups, &serving,
-                           &isa_rows);
+                           &isa_rows, &cluster);
     // benches run with cwd = rust/; the repo root is one level up
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
         "../BENCH_kernels.json"
@@ -371,10 +466,11 @@ fn push(entries: &mut Vec<Entry>, table: &mut Table, name: &str, n: usize,
 fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                speedups: &[(String, f64)],
                serving: &[(String, f64)],
-               isa_rows: &[(String, f64)]) -> String {
+               isa_rows: &[(String, f64)],
+               cluster: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v6\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v7\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"smoke\": {},\n", smoke()));
     out.push_str(&format!("  \"threads\": {threads},\n"));
@@ -413,6 +509,13 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
     out.push_str("  \"isa\": {\n");
     for (i, (name, x)) in isa_rows.iter().enumerate() {
         let comma = if i + 1 < isa_rows.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
+    }
+    out.push_str("  },\n");
+    // cluster-tier rows (v7): router front-end over loopback replicas
+    out.push_str("  \"cluster\": {\n");
+    for (i, (name, x)) in cluster.iter().enumerate() {
+        let comma = if i + 1 < cluster.len() { "," } else { "" };
         out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
     }
     out.push_str("  }\n");

@@ -277,6 +277,34 @@ impl InitPolicy {
     }
 }
 
+/// Which half of the cluster tier a serving process is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// A single-process server executing requests locally (the default
+    /// — and the only role that existed before the cluster tier).
+    Replica,
+    /// A front-end that consistent-hashes ENCODE requests across the
+    /// configured `replicas` and executes nothing locally.
+    Router,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Option<Role> {
+        match s {
+            "replica" => Some(Role::Replica),
+            "router" => Some(Role::Router),
+            _ => None,
+        }
+    }
+
+    pub fn token(&self) -> &'static str {
+        match self {
+            Role::Replica => "replica",
+            Role::Router => "router",
+        }
+    }
+}
+
 /// Serving configuration (coordinator + server).
 #[derive(Clone, Debug)]
 pub struct ServingConfig {
@@ -337,6 +365,16 @@ pub struct ServingConfig {
     /// arm at startup. The `SSAF_KERNEL` environment variable overrides
     /// this knob either way.
     pub kernel: Option<Isa>,
+    /// `replica` (default) serves requests locally; `router` forwards
+    /// them across `replicas` (see `coordinator::cluster`).
+    pub role: Role,
+    /// Replica addresses (`host:port`) for `role = router` — config
+    /// token is one comma-separated string. Must be empty in replica
+    /// role and nonempty in router role.
+    pub replicas: Vec<String>,
+    /// Router health-probe sweep period (milliseconds, > 0). Ignored in
+    /// replica role.
+    pub probe_interval_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -361,6 +399,9 @@ impl Default for ServingConfig {
             weights: None,
             init: InitPolicy::Seeded,
             kernel: None,
+            role: Role::Replica,
+            replicas: Vec::new(),
+            probe_interval_ms: 500,
         }
     }
 }
@@ -411,6 +452,28 @@ impl ServingConfig {
             }
             None => None,
         };
+        let role = match cfg.get("serving", "role") {
+            Some(Value::Str(s)) => Role::parse(s).ok_or_else(|| {
+                ConfigError::Invalid("serving".into(), "role".into(), s.clone())
+            })?,
+            Some(_) => {
+                return Err(ConfigError::Type("serving".into(), "role".into(),
+                                             "string"))
+            }
+            None => d.role,
+        };
+        let replicas = match cfg.get("serving", "replicas") {
+            Some(Value::Str(s)) => s
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect(),
+            Some(_) => {
+                return Err(ConfigError::Type("serving".into(), "replicas".into(),
+                                             "string"))
+            }
+            None => Vec::new(),
+        };
         let unsigned = |key: &str, default: i64| -> Result<u64, ConfigError> {
             let v = cfg.i64_or("serving", key, default);
             u64::try_from(v).map_err(|_| ConfigError::Invalid(
@@ -441,6 +504,10 @@ impl ServingConfig {
             weights,
             init,
             kernel,
+            role,
+            replicas,
+            probe_interval_ms: unsigned("probe_interval_ms",
+                                        d.probe_interval_ms as i64)?,
         };
         out.validate()?;
         Ok(out)
@@ -533,6 +600,29 @@ impl ServingConfig {
                      or set init = load".into()));
             }
             _ => {}
+        }
+        match self.role {
+            Role::Router => {
+                if self.replicas.is_empty() {
+                    return Err(ConfigError::Invalid(
+                        "serving".into(), "replicas".into(),
+                        "role = router requires at least one replica \
+                         address".into()));
+                }
+                if self.probe_interval_ms == 0 {
+                    return Err(ConfigError::Invalid(
+                        "serving".into(), "probe_interval_ms".into(),
+                        "must be > 0".into()));
+                }
+            }
+            Role::Replica => {
+                if !self.replicas.is_empty() {
+                    return Err(ConfigError::Invalid(
+                        "serving".into(), "replicas".into(),
+                        "replica addresses set but role = replica — set \
+                         role = router or drop the list".into()));
+                }
+            }
         }
         Ok(())
     }
@@ -752,6 +842,55 @@ resume = false
         let s = ServingConfig { layers: 4, ..Default::default() };
         assert_eq!(s.effective_layer_variants(),
                    vec![Variant::SpectralShift; 4]);
+    }
+
+    #[test]
+    fn cluster_role_knobs_parse_and_validate() {
+        // defaults: replica role, no replicas, 500ms probes
+        let s = ServingConfig::default();
+        assert_eq!(s.role, Role::Replica);
+        assert!(s.replicas.is_empty());
+        assert_eq!(s.probe_interval_ms, 500);
+        assert!(s.validate().is_ok());
+
+        // router role parses its replica list (whitespace-tolerant)
+        let c = Config::parse(
+            "[serving]\nrole = \"router\"\n\
+             replicas = \"127.0.0.1:4100, 127.0.0.1:4101\"\n\
+             probe_interval_ms = 100\n").unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!(s.role, Role::Router);
+        assert_eq!(s.replicas,
+                   vec!["127.0.0.1:4100".to_string(),
+                        "127.0.0.1:4101".to_string()]);
+        assert_eq!(s.probe_interval_ms, 100);
+
+        // router without replicas is a config error
+        let c = Config::parse("[serving]\nrole = \"router\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        // replicas without router role is a config error too
+        let c = Config::parse(
+            "[serving]\nreplicas = \"127.0.0.1:4100\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        // zero probe interval in router role is rejected
+        let c = Config::parse(
+            "[serving]\nrole = \"router\"\nreplicas = \"a:1\"\n\
+             probe_interval_ms = 0\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        // unknown roles and wrong types fail, not silently default
+        let c = Config::parse("[serving]\nrole = \"proxy\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        let c = Config::parse("[serving]\nrole = 2\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Type(..))));
+        // role tokens round-trip
+        for r in [Role::Replica, Role::Router] {
+            assert_eq!(Role::parse(r.token()), Some(r));
+        }
     }
 
     #[test]

@@ -1,6 +1,11 @@
-//! Request router: snaps request lengths to artifact sequence buckets
+//! Bucket router: snaps request lengths to artifact sequence buckets
 //! and validates admissibility. The routing decision is pure (no locks)
 //! so it is unit-testable in isolation.
+//!
+//! Not to be confused with the cluster *request* router
+//! ([`cluster::ClusterRouter`](super::cluster::ClusterRouter)), which
+//! consistent-hashes whole requests across replica processes — this
+//! type picks a sequence bucket *within* one serving process.
 
 use crate::workload::bucket_for;
 
@@ -15,17 +20,17 @@ pub enum Route {
     Empty,
 }
 
-/// Router over a fixed ascending bucket list.
+/// Bucket router over a fixed ascending bucket list.
 #[derive(Clone, Debug)]
-pub struct Router {
+pub struct BucketRouter {
     buckets: Vec<usize>,
 }
 
-impl Router {
-    pub fn new(buckets: Vec<usize>) -> Router {
+impl BucketRouter {
+    pub fn new(buckets: Vec<usize>) -> BucketRouter {
         assert!(!buckets.is_empty() && buckets.windows(2).all(|w| w[0] < w[1]),
                 "buckets must be ascending and nonempty");
-        Router { buckets }
+        BucketRouter { buckets }
     }
 
     pub fn buckets(&self) -> &[usize] {
@@ -55,7 +60,7 @@ mod tests {
 
     #[test]
     fn routes_to_smallest_fitting_bucket() {
-        let r = Router::new(vec![128, 256, 512]);
+        let r = BucketRouter::new(vec![128, 256, 512]);
         assert_eq!(r.route(1), Route::Bucket(128));
         assert_eq!(r.route(128), Route::Bucket(128));
         assert_eq!(r.route(129), Route::Bucket(256));
@@ -64,14 +69,14 @@ mod tests {
 
     #[test]
     fn rejects_out_of_range() {
-        let r = Router::new(vec![128, 256]);
+        let r = BucketRouter::new(vec![128, 256]);
         assert_eq!(r.route(0), Route::Empty);
         assert_eq!(r.route(257), Route::TooLong { len: 257, max: 256 });
     }
 
     #[test]
     fn bucket_index() {
-        let r = Router::new(vec![128, 256, 512]);
+        let r = BucketRouter::new(vec![128, 256, 512]);
         assert_eq!(r.bucket_index(256), Some(1));
         assert_eq!(r.bucket_index(100), None);
     }
@@ -79,7 +84,7 @@ mod tests {
     #[test]
     #[should_panic]
     fn unsorted_buckets_panic() {
-        Router::new(vec![256, 128]);
+        BucketRouter::new(vec![256, 128]);
     }
 
     #[test]
@@ -91,7 +96,7 @@ mod tests {
                 .collect();
             buckets.sort_unstable();
             buckets.dedup();
-            let r = Router::new(buckets.clone());
+            let r = BucketRouter::new(buckets.clone());
             let len = g.usize_in(1, 400);
             match r.route(len) {
                 Route::Bucket(b) => {

@@ -1,0 +1,900 @@
+//! Cluster serving tier: a router front-end that consistent-hashes
+//! ENCODE requests across N replica serving processes over the existing
+//! line protocol ([`server`](crate::server)).
+//!
+//! ```text
+//!              clients (same wire protocol as a replica)
+//!                 │
+//!                 ▼
+//!   ┌──────────── router process (`--role router`) ────────────┐
+//!   │ parse ──▶ router cache ──hit──▶ reply (bitwise recompute) │
+//!   │             │ miss                                        │
+//!   │             ▼                                             │
+//!   │ deadline gate (expired → ERR deadline, no replica I/O)    │
+//!   │             ▼                                             │
+//!   │ HashRing.preferences(fnv1a64(tokens)) ──▶ try replicas    │
+//!   │     in order: reconnect-once → failover → ERR replica-lost│
+//!   └──────┬───────────────┬───────────────┬───────────────────┘
+//!          ▼               ▼               ▼
+//!      replica 0       replica 1  ...  replica N-1
+//!      (`--role replica` = today's single-process server)
+//! ```
+//!
+//! # Invariants
+//!
+//! * **Drain/handoff — no silent drops.** Once the router accepts an
+//!   ENCODE line, the request is either answered by a replica (possibly
+//!   after reconnects and failovers to later ring preferences) or
+//!   answered `ERR <id> replica-lost`. The accounting identity
+//!   `forwarded = replica-answered + replica-lost` is load-bearing and
+//!   asserted by `tests/integration_cluster.rs`.
+//! * **At-least-once forwarding is safe.** A replica that dies after
+//!   executing but before replying may leave a duplicate execution
+//!   behind when the router retries elsewhere. That is harmless:
+//!   encoding is a pure deterministic function of the token sequence
+//!   (the coordinator's cache-coherence invariant), so duplicates
+//!   produce bitwise-identical embeddings and at-least-once semantics
+//!   need no dedup protocol.
+//! * **A hit anywhere is bitwise a recompute.** The router cache is
+//!   keyed identically to [`cache::EmbeddingCache`](super::cache) —
+//!   the full parsed token sequence — and stores the replica's `OK`
+//!   payload text. Because the wire format (`%.5f`) is itself a
+//!   deterministic function of the embedding, replaying the cached
+//!   payload is byte-identical to re-asking any replica.
+//! * **Deterministic placement.** Keys are FNV-1a 64 hashes (fixed
+//!   offset/prime — unlike `std`'s randomly keyed SipHash) so the ring
+//!   assigns identically in every process; tests rebuild the ring to
+//!   predict placement, and a router restart preserves it.
+//! * **Deadline honesty across the hop.** `DEADLINE_MS` is forwarded
+//!   minus the time already spent in the router; a budget that reaches
+//!   zero at the router is answered `ERR <id> deadline` without
+//!   touching a replica (mirroring the replica's own
+//!   zero-budget-expires-at-admission rule).
+//!
+//! Fault tolerance is exercised by the deterministic
+//! [`FaultPlan`](crate::server::FaultPlan) seam on the replica side.
+
+use crate::metrics::RouterMetrics;
+use crate::minirt::{CancelToken, ThreadPool};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Virtual nodes per replica on the hash ring. 128 points per replica
+/// keeps the load spread within ~2× of uniform for small clusters
+/// (pinned by a property test) while ring build stays trivially cheap.
+pub const DEFAULT_VNODES: usize = 128;
+
+/// FNV-1a 64-bit. Chosen over `std`'s `DefaultHasher` because SipHash
+/// is randomly keyed per process — useless for a ring that must assign
+/// identically on the router, in tests, and across restarts.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Ring key for a token sequence: FNV-1a over the little-endian token
+/// bytes. Same tokens → same key in every process.
+pub fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut bytes = Vec::with_capacity(tokens.len() * 4);
+    for t in tokens {
+        bytes.extend_from_slice(&t.to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+/// Consistent-hash ring over named replicas with virtual nodes.
+///
+/// Each replica contributes `vnodes` points at `fnv1a64("{name}#{v}")`;
+/// a key is assigned to the replica owning the first point clockwise of
+/// it. Adding a replica only *inserts* points (keys move only **to**
+/// it); removing one only deletes its points (keys move only **from**
+/// it) — the minimal-movement property the join/leave property tests
+/// pin down.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    /// (ring position, replica index), sorted by position.
+    points: Vec<(u64, usize)>,
+    n_replicas: usize,
+}
+
+impl HashRing {
+    /// Build the ring. `names` must be nonempty; replica indices in
+    /// [`assign`](HashRing::assign) refer to positions in `names`.
+    pub fn build(names: &[String], vnodes: usize) -> HashRing {
+        assert!(!names.is_empty(), "ring needs at least one replica");
+        assert!(vnodes > 0, "ring needs at least one virtual node");
+        let mut points = Vec::with_capacity(names.len() * vnodes);
+        for (i, name) in names.iter().enumerate() {
+            for v in 0..vnodes {
+                points.push((fnv1a64(format!("{name}#{v}").as_bytes()), i));
+            }
+        }
+        // position ties (astronomically unlikely) resolve by replica
+        // index so the ring is still a pure function of `names`
+        points.sort_unstable();
+        HashRing { points, n_replicas: names.len() }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    pub fn vnode_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// The replica owning `key`: first ring point clockwise of it,
+    /// wrapping at the top.
+    pub fn assign(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        self.points[i % self.points.len()].1
+    }
+
+    /// Failover order for `key`: every replica exactly once, starting
+    /// with the owner and continuing clockwise by first appearance.
+    /// Deterministic, so retry behavior is replayable.
+    pub fn preferences(&self, key: u64) -> Vec<usize> {
+        let start = self.points.partition_point(|&(p, _)| p < key);
+        let mut order = Vec::with_capacity(self.n_replicas);
+        let mut seen = vec![false; self.n_replicas];
+        for off in 0..self.points.len() {
+            let r = self.points[(start + off) % self.points.len()].1;
+            if !seen[r] {
+                seen[r] = true;
+                order.push(r);
+                if order.len() == self.n_replicas {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+/// Replica membership table: addresses plus lock-free up/down flags,
+/// written by the health prober and by forwarding failures, read by the
+/// forwarding path and the STATS report.
+pub struct Membership {
+    addrs: Vec<String>,
+    up: Vec<AtomicBool>,
+}
+
+impl Membership {
+    pub fn new(addrs: Vec<String>) -> Membership {
+        // optimistic start: every replica is presumed up until a probe
+        // or a forwarding failure says otherwise, so a router can serve
+        // before its first probe sweep completes
+        let up = addrs.iter().map(|_| AtomicBool::new(true)).collect();
+        Membership { addrs, up }
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    pub fn addr(&self, i: usize) -> &str {
+        &self.addrs[i]
+    }
+
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    pub fn is_up(&self, i: usize) -> bool {
+        self.up[i].load(Ordering::Relaxed)
+    }
+
+    pub fn set_up(&self, i: usize, up: bool) {
+        self.up[i].store(up, Ordering::Relaxed);
+    }
+
+    pub fn up_count(&self) -> usize {
+        self.up.iter().filter(|u| u.load(Ordering::Relaxed)).count()
+    }
+
+    /// `(addr, up)` snapshot for the STATS membership lines.
+    pub fn snapshot(&self) -> Vec<(String, bool)> {
+        self.addrs
+            .iter()
+            .cloned()
+            .zip(self.up.iter().map(|u| u.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+/// Router construction knobs (CLI/config mapping in `main.rs` and
+/// `OPERATIONS.md`).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Replica addresses (`host:port`), the ring's identity — order
+    /// matters only for replica *indices*, not placement.
+    pub replicas: Vec<String>,
+    /// Health-probe sweep period.
+    pub probe_interval: Duration,
+    /// Router-side reply cache entries (0 disables).
+    pub cache_capacity: usize,
+    /// Virtual nodes per replica.
+    pub vnodes: usize,
+    /// Per-attempt TCP connect budget.
+    pub connect_timeout: Duration,
+    /// Per-attempt reply budget (read timeout on replica connections) —
+    /// bounds how long a dead-but-connected replica can stall one
+    /// forwarding attempt.
+    pub reply_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: Vec::new(),
+            probe_interval: Duration::from_millis(500),
+            cache_capacity: 1024,
+            vnodes: DEFAULT_VNODES,
+            connect_timeout: Duration::from_millis(500),
+            reply_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One pooled connection to a replica. Line-oriented, blocking, with
+/// connect/read timeouts from [`ClusterConfig`].
+struct ReplicaConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ReplicaConn {
+    fn connect(addr: &str, cfg: &ClusterConfig) -> std::io::Result<ReplicaConn> {
+        let sock: SocketAddr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unresolvable replica address {addr}")))?;
+        let stream = TcpStream::connect_timeout(&sock, cfg.connect_timeout)?;
+        stream.set_read_timeout(Some(cfg.reply_timeout))?;
+        stream.set_write_timeout(Some(cfg.reply_timeout))?;
+        stream.set_nodelay(true).ok();
+        Ok(ReplicaConn {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// One request line out, one reply line back. A closed or
+    /// mid-line-truncated connection (the FaultPlan kill) surfaces as
+    /// `UnexpectedEof`.
+    fn roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        if n == 0 || !reply.ends_with('\n') {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "replica connection closed mid-reply"));
+        }
+        Ok(reply.trim_end().to_string())
+    }
+}
+
+/// The cluster request router. Owns the ring, the membership table, the
+/// reply cache, and the router metrics; per-connection replica pools
+/// live in the connection handlers (no global connection lock).
+pub struct ClusterRouter {
+    cfg: ClusterConfig,
+    ring: HashRing,
+    membership: Membership,
+    cache: Option<Mutex<super::LruCache<Box<[i32]>, String>>>,
+    pub metrics: Arc<RouterMetrics>,
+}
+
+impl ClusterRouter {
+    /// Build a router over `cfg.replicas`. Panics on an empty replica
+    /// list — `config::validate` rejects that long before here.
+    pub fn new(cfg: ClusterConfig) -> ClusterRouter {
+        assert!(!cfg.replicas.is_empty(), "router needs at least one replica");
+        let ring = HashRing::build(&cfg.replicas, cfg.vnodes.max(1));
+        let membership = Membership::new(cfg.replicas.clone());
+        let cache = match cfg.cache_capacity {
+            0 => None,
+            n => Some(Mutex::new(super::LruCache::new(n))),
+        };
+        ClusterRouter {
+            cfg,
+            ring,
+            membership,
+            cache,
+            metrics: Arc::new(RouterMetrics::new()),
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn membership(&self) -> &Membership {
+        &self.membership
+    }
+
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// Router-cache entries currently resident.
+    pub fn cache_len(&self) -> usize {
+        self.cache
+            .as_ref()
+            .map_or(0, |c| c.lock().expect("router cache lock").len())
+    }
+
+    /// One synchronous health sweep: round-trip `PING` to every
+    /// replica, flip its up/down flag on the outcome. The background
+    /// prober calls this on its interval; tests call it directly so
+    /// membership transitions are deterministic, not timing-dependent.
+    pub fn probe_now(&self) {
+        for i in 0..self.membership.len() {
+            let healthy = ReplicaConn::connect(self.membership.addr(i), &self.cfg)
+                .and_then(|mut c| c.roundtrip("PING"))
+                .map(|r| r.starts_with("OK"))
+                .unwrap_or(false);
+            if !healthy {
+                self.metrics.probe_failures.inc();
+            }
+            self.membership.set_up(i, healthy);
+        }
+    }
+
+    /// Failover order for a token sequence: ring preferences with the
+    /// replicas currently marked up moved to the front (ring order
+    /// preserved within each group). Down replicas stay as a last
+    /// resort — probe state may be stale, and trying them beats
+    /// reporting a loss.
+    fn candidates(&self, tokens: &[i32]) -> Vec<usize> {
+        let prefs = self.ring.preferences(hash_tokens(tokens));
+        let (mut up, down): (Vec<usize>, Vec<usize>) =
+            prefs.into_iter().partition(|&r| self.membership.is_up(r));
+        up.extend(down);
+        up
+    }
+
+    fn cache_get(&self, tokens: &[i32]) -> Option<String> {
+        let cache = self.cache.as_ref()?;
+        cache.lock().expect("router cache lock").get(tokens).cloned()
+    }
+
+    fn cache_put(&self, tokens: &[i32], payload: String) {
+        if let Some(cache) = &self.cache {
+            cache
+                .lock()
+                .expect("router cache lock")
+                .insert(tokens.to_vec().into_boxed_slice(), payload);
+        }
+    }
+
+    /// The `cluster:` membership lines of the router STATS report (the
+    /// counter lines come from [`RouterMetrics::report`]).
+    fn membership_report(&self) -> String {
+        let snap = self.membership.snapshot();
+        let up = snap.iter().filter(|(_, u)| *u).count();
+        let mut out = format!(
+            "cluster:  replicas={} up={} down={} vnodes={} probe-interval={}ms",
+            snap.len(),
+            up,
+            snap.len() - up,
+            self.cfg.vnodes,
+            self.cfg.probe_interval.as_millis());
+        for (addr, alive) in snap {
+            out.push_str(&format!(
+                "\ncluster:  member {addr} {}",
+                if alive { "up" } else { "down" }));
+        }
+        out
+    }
+}
+
+/// Per-connection-handler pool of replica connections, keyed by replica
+/// index. Lives on the handler's stack, so the forwarding path takes no
+/// global lock and a slow replica only stalls the clients multiplexed
+/// onto that handler's connection.
+type ConnPool = HashMap<usize, ReplicaConn>;
+
+/// Forward `line` to replica `r`, reusing the pooled connection. One
+/// transparent reconnect-and-resend on failure (a pooled connection may
+/// have died idle); a second failure marks the replica down and reports
+/// the attempt failed. Resending is safe — see the at-least-once
+/// invariant in the module docs.
+fn try_replica(router: &ClusterRouter, conns: &mut ConnPool, r: usize,
+               line: &str) -> std::io::Result<String> {
+    let attempt = |conns: &mut ConnPool| -> std::io::Result<String> {
+        if !conns.contains_key(&r) {
+            let c = ReplicaConn::connect(router.membership.addr(r),
+                                         &router.cfg)?;
+            conns.insert(r, c);
+        }
+        let conn = conns.get_mut(&r).expect("just inserted");
+        conn.roundtrip(line)
+    };
+    match attempt(conns) {
+        Ok(reply) => Ok(reply),
+        Err(_) => {
+            conns.remove(&r);
+            match attempt(conns) {
+                Ok(reply) => {
+                    router.membership.set_up(r, true);
+                    Ok(reply)
+                }
+                Err(e) => {
+                    conns.remove(&r);
+                    router.membership.set_up(r, false);
+                    Err(e)
+                }
+            }
+        }
+    }
+}
+
+/// The forwarded budget after `elapsed_ms` spent in the router. Pure —
+/// unit-tested directly; `0` means the deadline is already blown.
+pub fn remaining_budget_ms(orig_ms: u64, elapsed_ms: u64) -> u64 {
+    orig_ms.saturating_sub(elapsed_ms)
+}
+
+/// Serialize the forward line for a replica attempt.
+fn forward_line(id: u64, deadline_ms: Option<u64>, tokens: &[i32]) -> String {
+    let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    match deadline_ms {
+        Some(ms) => format!("ENCODE {id} DEADLINE_MS={ms} {}", toks.join(" ")),
+        None => format!("ENCODE {id} {}", toks.join(" ")),
+    }
+}
+
+/// Parse + execute one protocol line against the cluster (the router
+/// twin of [`server::dispatch`](crate::server::dispatch) — same verbs,
+/// same parse errors, forwarding instead of local execution).
+pub fn dispatch_router(line: &str, router: &ClusterRouter,
+                       conns: &mut ConnPool) -> String {
+    let arrival = Instant::now();
+    let mut parts = line.split_whitespace().peekable();
+    match parts.next() {
+        Some("ENCODE") => {
+            let Some(id) = parts.next().and_then(|s| s.parse::<u64>().ok()) else {
+                return "ERR 0 bad-id\n".into();
+            };
+            let mut deadline_ms = None;
+            if let Some(field) = parts.peek().copied()
+                .and_then(|p| p.strip_prefix("DEADLINE_MS=")) {
+                let Ok(ms) = field.parse::<u64>() else {
+                    return format!("ERR {id} bad-deadline\n");
+                };
+                deadline_ms = Some(ms);
+                parts.next();
+            }
+            // parse exactly as the replica would, so the cache key the
+            // router uses is the key any replica's cache uses
+            let tokens: Vec<i32> = parts.filter_map(|t| t.parse().ok()).collect();
+            // cache fast path first, mirroring the coordinator: a hit
+            // costs nothing, so it is served even under a blown deadline
+            if let Some(payload) = router.cache_get(&tokens) {
+                router.metrics.cache_hits.inc();
+                return format!("OK {id} {payload}\n");
+            }
+            // deadline gate: a budget that is already zero never
+            // touches a replica (DEADLINE_MS=0 is the replica's own
+            // always-expired admission case)
+            if let Some(orig) = deadline_ms {
+                let elapsed = arrival.elapsed().as_millis() as u64;
+                if remaining_budget_ms(orig, elapsed) == 0 {
+                    router.metrics.expired_at_router.inc();
+                    return format!("ERR {id} deadline\n");
+                }
+            }
+            // a miss = a looked-up request that goes toward a replica
+            // (expired-at-router requests never deflate the hit rate,
+            // mirroring the coordinator's accounting)
+            if router.cache.is_some() {
+                router.metrics.cache_misses.inc();
+            }
+            router.metrics.forwarded.inc();
+            let mut first = true;
+            for r in router.candidates(&tokens) {
+                if !first {
+                    router.metrics.retried.inc();
+                }
+                first = false;
+                // recompute the forwarded budget per attempt — failed
+                // attempts eat real time the replica must not be
+                // granted back
+                let fwd_deadline = match deadline_ms {
+                    Some(orig) => {
+                        let elapsed = arrival.elapsed().as_millis() as u64;
+                        let left = remaining_budget_ms(orig, elapsed);
+                        if left == 0 {
+                            router.metrics.expired_at_router.inc();
+                            return format!("ERR {id} deadline\n");
+                        }
+                        Some(left)
+                    }
+                    None => None,
+                };
+                let fwd = forward_line(id, fwd_deadline, &tokens);
+                if let Ok(reply) = try_replica(router, conns, r, &fwd) {
+                    if let Some(payload) =
+                        reply.strip_prefix(&format!("OK {id} ")) {
+                        router.cache_put(&tokens, payload.to_string());
+                    }
+                    return format!("{reply}\n");
+                }
+            }
+            router.metrics.replica_lost.inc();
+            format!("ERR {id} replica-lost\n")
+        }
+        Some("STATS") => {
+            format!("backend:  router\nrole:     router\n{}\n{}\n.\n",
+                    router.membership_report(),
+                    router.metrics.report())
+        }
+        Some("PING") => "OK 0 pong\n".into(),
+        Some("QUIT") => "OK 0 bye\n".into(),
+        _ => "ERR 0 unknown-command\n".into(),
+    }
+}
+
+/// Handle to stop a router's acceptor and prober threads.
+pub struct RouterHandle {
+    stop: CancelToken,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    pub fn stop(mut self) {
+        self.stop.cancel();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.stop.cancel();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve the router on `bind` (the cluster twin of
+/// [`server::serve`](crate::server::serve)): an acceptor loop fanning
+/// connections onto a handler pool, plus a background health prober
+/// sweeping every `probe_interval`. Returns the bound address (useful
+/// with port 0) and a stop handle.
+pub fn serve_router(router: Arc<ClusterRouter>, bind: &str, pool_size: usize)
+                    -> std::io::Result<(SocketAddr, RouterHandle)> {
+    let listener = TcpListener::bind(bind)?;
+    let addr = listener.local_addr()?;
+    let stop = CancelToken::new();
+
+    let accept_stop = stop.clone();
+    let accept_router = router.clone();
+    let acceptor = std::thread::Builder::new()
+        .name("ssaformer-router-acceptor".into())
+        .spawn(move || {
+            let pool = ThreadPool::new(pool_size);
+            listener.set_nonblocking(true).ok();
+            loop {
+                if accept_stop.is_cancelled() {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let r = accept_router.clone();
+                        let stop = accept_stop.clone();
+                        pool.execute(move || handle_router_conn(stream, &r, &stop));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            pool.shutdown();
+        })?;
+
+    let probe_stop = stop.clone();
+    let probe_router = router.clone();
+    let prober = std::thread::Builder::new()
+        .name("ssaformer-router-prober".into())
+        .spawn(move || {
+            // sleep in small slices so stop() is honored promptly even
+            // under a long probe interval
+            loop {
+                let mut slept = Duration::ZERO;
+                while slept < probe_router.cfg.probe_interval {
+                    if probe_stop.is_cancelled() {
+                        return;
+                    }
+                    let slice = Duration::from_millis(50)
+                        .min(probe_router.cfg.probe_interval - slept);
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if probe_stop.is_cancelled() {
+                    return;
+                }
+                probe_router.probe_now();
+            }
+        })?;
+
+    Ok((addr, RouterHandle { stop, threads: vec![acceptor, prober] }))
+}
+
+/// Per-connection router loop: same line discipline as the replica's
+/// `handle_conn` (read timeout for shutdown, partial-line tolerance),
+/// with a connection-local replica pool.
+fn handle_router_conn(stream: TcpStream, router: &ClusterRouter,
+                      stop: &CancelToken) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut conns: ConnPool = HashMap::new();
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut => {
+                if stop.is_cancelled() {
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+            Ok(_) if !line.ends_with('\n') => continue, // partial line
+            Ok(_) => {}
+        }
+        let trimmed = line.trim().to_string();
+        line.clear();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = dispatch_router(&trimmed, router, &mut conns);
+        if writer.write_all(reply.as_bytes()).is_err() {
+            break;
+        }
+        if trimmed == "QUIT" {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Ring/membership/budget logic needs no sockets and is tested
+    //! here (including the satellite property tests); the full
+    //! router-over-TCP fault matrix lives in
+    //! `rust/tests/integration_cluster.rs`.
+
+    use super::*;
+    use crate::proptest_mini::{prop_assert, run};
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:4100")).collect()
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn token_hash_is_content_keyed() {
+        assert_eq!(hash_tokens(&[1, 2, 3]), hash_tokens(&[1, 2, 3]));
+        assert_ne!(hash_tokens(&[1, 2, 3]), hash_tokens(&[1, 2, 4]));
+        assert_ne!(hash_tokens(&[1, 2, 3]), hash_tokens(&[3, 2, 1]));
+        // length-sensitive, not just content-sensitive
+        assert_ne!(hash_tokens(&[1, 2]), hash_tokens(&[1, 2, 0]));
+    }
+
+    #[test]
+    fn ring_covers_all_replicas_in_preference_order() {
+        let ring = HashRing::build(&names(4), DEFAULT_VNODES);
+        assert_eq!(ring.vnode_points(), 4 * DEFAULT_VNODES);
+        for key in [0u64, 1, u64::MAX, 0xdead_beef] {
+            let prefs = ring.preferences(key);
+            assert_eq!(prefs.len(), 4);
+            let mut sorted = prefs.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "each replica once");
+            assert_eq!(prefs[0], ring.assign(key), "owner leads");
+        }
+    }
+
+    #[test]
+    fn single_replica_ring_is_total() {
+        let ring = HashRing::build(&names(1), DEFAULT_VNODES);
+        for key in [0u64, 42, u64::MAX] {
+            assert_eq!(ring.assign(key), 0);
+            assert_eq!(ring.preferences(key), vec![0]);
+        }
+    }
+
+    #[test]
+    fn membership_flags_and_snapshot() {
+        let m = Membership::new(names(3));
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.up_count(), 3);
+        m.set_up(1, false);
+        assert!(!m.is_up(1));
+        assert!(m.is_up(0) && m.is_up(2));
+        assert_eq!(m.up_count(), 2);
+        let snap = m.snapshot();
+        assert_eq!(snap[1], ("10.0.0.1:4100".to_string(), false));
+    }
+
+    #[test]
+    fn remaining_budget_saturates() {
+        assert_eq!(remaining_budget_ms(100, 30), 70);
+        assert_eq!(remaining_budget_ms(100, 100), 0);
+        assert_eq!(remaining_budget_ms(100, 5000), 0);
+        assert_eq!(remaining_budget_ms(0, 0), 0);
+    }
+
+    #[test]
+    fn forward_line_round_trips_the_wire_grammar() {
+        assert_eq!(forward_line(7, None, &[5, 6, 7]), "ENCODE 7 5 6 7");
+        assert_eq!(forward_line(7, Some(250), &[5]),
+                   "ENCODE 7 DEADLINE_MS=250 5");
+        assert_eq!(forward_line(1, None, &[]), "ENCODE 1 ");
+    }
+
+    // ---- satellite: consistent-hash ring property tests ----
+
+    #[test]
+    fn property_assignment_is_deterministic_across_builds() {
+        // the ring is a pure function of (names, vnodes): two
+        // independent builds — as in two processes — agree on every key
+        run(50, |g| {
+            let n = g.usize_in(1, 6);
+            let a = HashRing::build(&names(n), DEFAULT_VNODES);
+            let b = HashRing::build(&names(n), DEFAULT_VNODES);
+            for _ in 0..20 {
+                let key = g.rng().below(u64::MAX);
+                prop_assert(a.assign(key) == b.assign(key),
+                            format!("key {key} diverged"))?;
+                prop_assert(a.preferences(key) == b.preferences(key),
+                            "preference order diverged")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_join_moves_keys_only_to_the_new_replica() {
+        run(50, |g| {
+            let n = g.usize_in(1, 5);
+            let before = HashRing::build(&names(n), DEFAULT_VNODES);
+            let after = HashRing::build(&names(n + 1), DEFAULT_VNODES);
+            for _ in 0..50 {
+                let key = g.rng().below(u64::MAX);
+                let (old, new) = (before.assign(key), after.assign(key));
+                prop_assert(new == old || new == n,
+                            format!("key {key} moved {old}→{new}, \
+                                     not to joined replica {n}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_leave_moves_keys_only_from_the_lost_replica() {
+        run(50, |g| {
+            let n = g.usize_in(2, 6);
+            let before = HashRing::build(&names(n), DEFAULT_VNODES);
+            let after = HashRing::build(&names(n - 1), DEFAULT_VNODES);
+            for _ in 0..50 {
+                let key = g.rng().below(u64::MAX);
+                let (old, new) = (before.assign(key), after.assign(key));
+                prop_assert(old == new || old == n - 1,
+                            format!("key {key} moved {old}→{new} though \
+                                     only replica {} left", n - 1))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_load_spread_within_2x_of_uniform() {
+        // 1k synthetic token-sequence keys: the hottest replica stays
+        // within 2× of the uniform share (the DEFAULT_VNODES sizing
+        // argument)
+        run(20, |g| {
+            let n = g.usize_in(2, 5);
+            let ring = HashRing::build(&names(n), DEFAULT_VNODES);
+            let mut load = vec![0usize; n];
+            for i in 0..1000 {
+                let toks: Vec<i32> = (0..8)
+                    .map(|j| (i * 8 + j) as i32 + g.usize_in(0, 3) as i32)
+                    .collect();
+                load[ring.assign(hash_tokens(&toks))] += 1;
+            }
+            let max = *load.iter().max().unwrap();
+            prop_assert(max as f64 <= 2.0 * 1000.0 / n as f64,
+                        format!("spread {load:?} exceeds 2x uniform"))?;
+            prop_assert(load.iter().all(|&l| l > 0),
+                        format!("starved replica in {load:?}"))
+        });
+    }
+
+    #[test]
+    fn router_candidates_prefer_up_replicas_but_keep_down_ones() {
+        let cfg = ClusterConfig {
+            replicas: names(3),
+            ..Default::default()
+        };
+        let router = ClusterRouter::new(cfg);
+        let toks = vec![5, 6, 7];
+        let prefs = router.ring.preferences(hash_tokens(&toks));
+        // all up: candidates are exactly the ring preference order
+        assert_eq!(router.candidates(&toks), prefs);
+        // owner down: it drops to the back, everyone still present
+        router.membership.set_up(prefs[0], false);
+        let c = router.candidates(&toks);
+        assert_eq!(c.len(), 3);
+        assert_eq!(*c.last().unwrap(), prefs[0]);
+        assert_eq!(c[0], prefs[1]);
+    }
+
+    #[test]
+    fn router_cache_is_token_keyed_and_bounded() {
+        let cfg = ClusterConfig {
+            replicas: names(1),
+            cache_capacity: 2,
+            ..Default::default()
+        };
+        let router = ClusterRouter::new(cfg);
+        assert_eq!(router.cache_len(), 0);
+        router.cache_put(&[1, 2], "0.1 0.2".into());
+        router.cache_put(&[3, 4], "0.3 0.4".into());
+        assert_eq!(router.cache_get(&[1, 2]).as_deref(), Some("0.1 0.2"));
+        // LRU bound: inserting a third evicts the least-recent ([3,4])
+        router.cache_put(&[5, 6], "0.5 0.6".into());
+        assert_eq!(router.cache_len(), 2);
+        assert!(router.cache_get(&[3, 4]).is_none());
+        assert_eq!(router.cache_get(&[1, 2]).as_deref(), Some("0.1 0.2"));
+    }
+
+    #[test]
+    fn membership_report_names_every_member() {
+        let router = ClusterRouter::new(ClusterConfig {
+            replicas: names(2),
+            ..Default::default()
+        });
+        router.membership.set_up(1, false);
+        let rep = router.membership_report();
+        assert!(rep.contains("replicas=2 up=1 down=1"), "{rep}");
+        assert!(rep.contains("member 10.0.0.0:4100 up"), "{rep}");
+        assert!(rep.contains("member 10.0.0.1:4100 down"), "{rep}");
+        assert!(rep.lines().all(|l| l.starts_with("cluster:")), "{rep}");
+    }
+}

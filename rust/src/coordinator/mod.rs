@@ -79,16 +79,18 @@
 //! see the serving_throughput bench (E8).
 
 pub mod batcher;
+pub mod bucket_router;
 pub mod cache;
+pub mod cluster;
 pub mod cpu_engine;
 pub mod queue;
-pub mod router;
 
 pub use batcher::{aligned_len, assemble, attention_scatter, scatter, BatchPlan};
+pub use bucket_router::{BucketRouter, Route};
 pub use cache::{EmbeddingCache, LruCache};
+pub use cluster::{ClusterConfig, ClusterRouter, HashRing};
 pub use cpu_engine::{CpuEngine, CpuModel, CpuModelConfig};
 pub use queue::{BatchPolicy, BucketQueue, PushError, Queued, ShardedQueue};
-pub use router::{Route, Router};
 
 use crate::config::{ServingConfig, Variant};
 use crate::kernels::{gemm, isa, Isa};
@@ -264,7 +266,7 @@ impl ExecBackend {
 /// queue, cache, metrics, cancel token, batch policy — built in one
 /// place so the XLA and CPU start paths cannot diverge.
 struct Scaffold {
-    router: Router,
+    router: BucketRouter,
     queue: Arc<ShardedQueue<Pending>>,
     cache: Option<Arc<EmbeddingCache>>,
     metrics: Arc<ServingMetrics>,
@@ -278,7 +280,7 @@ impl Scaffold {
     fn new(buckets: &[usize], cfg: &ServingConfig) -> Scaffold {
         let shards = cfg.effective_shards();
         Scaffold {
-            router: Router::new(buckets.to_vec()),
+            router: BucketRouter::new(buckets.to_vec()),
             queue: Arc::new(ShardedQueue::new(shards, buckets.len(),
                                               cfg.queue_capacity)),
             cache: match cfg.cache_capacity {
@@ -320,7 +322,7 @@ impl Scaffold {
 /// pulled (and stolen) from a sharded bucket queue; admission is
 /// lock-light and callers receive responses on per-request channels.
 pub struct Coordinator {
-    router: Router,
+    router: BucketRouter,
     queue: Arc<ShardedQueue<Pending>>,
     cache: Option<Arc<EmbeddingCache>>,
     pub metrics: Arc<ServingMetrics>,

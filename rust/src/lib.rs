@@ -11,13 +11,16 @@
 //! * **L2** (`python/compile/model.py`) — a JAX transformer encoder with
 //!   pluggable attention (full / nystrom / ss), AOT-lowered once to HLO
 //!   text artifacts.
-//! * **L3** (this crate) — the serving/training stack: request router,
-//!   dynamic batcher, dual execution backends (PJRT artifacts or the
-//!   in-process multi-layer [`model::EncoderStack`] on the CPU kernel
-//!   core, with every attention variant behind the
-//!   [`model::AttentionOp`] seam), metrics, plus every substrate the
-//!   paper's evaluation needs (dense linear algebra, SPSD model zoo,
-//!   attention baselines, spectrum analysis, workload generation).
+//! * **L3** (this crate) — the serving/training stack: dynamic batcher
+//!   behind a bucketed queue, dual execution backends (PJRT artifacts
+//!   or the in-process multi-layer [`model::EncoderStack`] on the CPU
+//!   kernel core, with every attention variant behind the
+//!   [`model::AttentionOp`] seam), a multi-replica cluster tier (the
+//!   [`coordinator::cluster`] consistent-hash router front-end with
+//!   deterministic fault injection via [`server::FaultPlan`]), metrics,
+//!   plus every substrate the paper's evaluation needs (dense linear
+//!   algebra, SPSD model zoo, attention baselines, spectrum analysis,
+//!   workload generation).
 //!
 //! ## Request lifecycle (one line)
 //!
@@ -26,7 +29,10 @@
 //! → sharded bucket queue, deadline-aware → worker pool (work-stealing)
 //! → `batcher::assemble` → execution backend (XLA artifact **or**
 //! [`kernels`] CPU core) → scatter/pool → cache insert → response
-//! channel. The full walkthrough, with the data-flow diagram, deadline
+//! channel. A `--role router` process optionally fronts N such
+//! replicas ([`coordinator::cluster`]): same wire protocol, consistent-
+//! hash placement, failover (never a silent drop), cross-replica cache.
+//! The full walkthrough, with the data-flow diagram, deadline
 //! semantics, and the paper-symbol → function table, lives in
 //! `ARCHITECTURE.md` at the repo root; the operator's view (knobs,
 //! `STATS` reference, capacity planning) in `OPERATIONS.md`.

@@ -8,7 +8,8 @@
 //!
 //! (hand-rolled arg parsing: the crate cache has no clap.)
 
-use ssaformer::config::{Config, InitPolicy, ServingConfig, Variant};
+use ssaformer::config::{Config, InitPolicy, Role, ServingConfig, Variant};
+use ssaformer::coordinator::cluster::{self, ClusterConfig, ClusterRouter};
 use ssaformer::coordinator::{Coordinator, ExecBackend};
 use ssaformer::runtime::Engine;
 use ssaformer::train::{train, TrainConfig};
@@ -41,6 +42,10 @@ ssaformer — spectral-shifting attention serving/training stack
 USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
 
   serve    --config FILE | --addr HOST:PORT
+           --role replica|router (default replica; router forwards
+                     ENCODE across --replicas, executes nothing)
+           --replicas HOST:PORT,HOST:PORT,... (router role only)
+           --probe-interval-ms MS (router health-probe period, >0)
            --variant full|nystrom|ss|linformer|lsh|sparse
                      (or a per-layer list: --variant ss,ss,full)
            --layers N (1 = seed single-pass model) --ffn-mult N
@@ -140,6 +145,20 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
                 .ok_or(format!("bad kernel {k:?} (auto|scalar|avx2|neon)"))?)
         };
     }
+    if let Some(r) = flags.get("role") {
+        cfg.role = Role::parse(r)
+            .ok_or(format!("bad role {r:?} (replica|router)"))?;
+    }
+    if let Some(r) = flags.get("replicas") {
+        cfg.replicas = r
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+    }
+    if let Some(p) = flags.get("probe-interval-ms") {
+        cfg.probe_interval_ms = p.parse().map_err(|_| "bad probe-interval-ms")?;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
@@ -152,6 +171,9 @@ fn cmd_serve(flags: &Flags) -> i32 {
             return 2;
         }
     };
+    if cfg.role == Role::Router {
+        return cmd_serve_router(&cfg);
+    }
     println!("loading artifacts from {} ...", cfg.artifacts_dir);
     // a bad weights checkpoint (or load-on-XLA) stops startup here —
     // fail closed, never silently serve seeded weights instead
@@ -193,6 +215,47 @@ fn cmd_serve(flags: &Flags) -> i32 {
             println!("serving {} attention on {addr} (backend: {backend_name})",
                      cfg.variant.token());
             println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] <tok...> | STATS | QUIT");
+            // block forever (ctrl-c to stop)
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("bind {}: {e}", cfg.bind_addr);
+            1
+        }
+    }
+}
+
+/// Router-mode serve: no backend, no coordinator — a [`ClusterRouter`]
+/// consistent-hashing ENCODE lines across the configured replicas
+/// (see `coordinator::cluster` for the data flow and invariants).
+fn cmd_serve_router(cfg: &ServingConfig) -> i32 {
+    let ccfg = ClusterConfig {
+        replicas: cfg.replicas.clone(),
+        probe_interval: std::time::Duration::from_millis(cfg.probe_interval_ms),
+        cache_capacity: cfg.cache_capacity,
+        ..Default::default()
+    };
+    println!("router over {} replicas: {}",
+             ccfg.replicas.len(), ccfg.replicas.join(", "));
+    println!("probe interval: {}ms, reply cache: {}",
+             cfg.probe_interval_ms,
+             match cfg.cache_capacity {
+                 0 => "off".to_string(),
+                 n => format!("{n} entries"),
+             });
+    let router = Arc::new(ClusterRouter::new(ccfg));
+    // one synchronous sweep so the first requests see honest membership
+    router.probe_now();
+    let up = router.membership().up_count();
+    println!("initial probe: {up}/{} replicas up",
+             router.membership().len());
+    match cluster::serve_router(router, &cfg.bind_addr, 8) {
+        Ok((addr, _handle)) => {
+            println!("routing on {addr} (role: router)");
+            println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] <tok...> \
+                      | STATS | PING | QUIT");
             // block forever (ctrl-c to stop)
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));

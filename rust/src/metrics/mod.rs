@@ -191,6 +191,68 @@ impl ServingMetrics {
     }
 }
 
+/// Cluster-router metrics bundle — the router front-end's counterpart
+/// to [`ServingMetrics`], surfaced as the `cluster:` lines of a
+/// router-mode `STATS` report. All counters are lock-free; the
+/// accounting invariant is
+/// `forwarded = OK-from-replica + replica_lost` (every accepted request
+/// either reaches a replica and is answered, or is reported lost —
+/// never silently dropped), with `retried` counting the extra replica
+/// attempts hidden inside `forwarded`.
+#[derive(Default)]
+pub struct RouterMetrics {
+    /// ENCODE requests accepted by the router and sent toward a replica
+    /// (cache hits and expired-at-router requests are excluded — they
+    /// never touch a replica).
+    pub forwarded: Counter,
+    /// Additional replica attempts after a first attempt failed
+    /// mid-flight (reconnects and failovers to the next ring
+    /// preference).
+    pub retried: Counter,
+    /// Requests answered `ERR <id> replica-lost`: every ring preference
+    /// failed. Disjoint from successful forwards.
+    pub replica_lost: Counter,
+    /// Requests answered `ERR <id> deadline` at the router because the
+    /// forwarded budget had already reached zero — no replica was
+    /// touched.
+    pub expired_at_router: Counter,
+    /// Router-side embedding-cache hits (short-circuited replies,
+    /// bitwise-equal to a replica recompute).
+    pub cache_hits: Counter,
+    /// Router-side cache misses (the request went to a replica; its OK
+    /// payload is inserted on the way back).
+    pub cache_misses: Counter,
+    /// Health probes that failed (connect error or bad `PING` reply) —
+    /// each marks the probed replica down until a later probe succeeds.
+    pub probe_failures: Counter,
+}
+
+impl RouterMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The `cluster:` counter lines of a router STATS report (membership
+    /// lines are added by the router itself, which owns that state).
+    pub fn report(&self) -> String {
+        let hits = self.cache_hits.get();
+        let lookups = hits + self.cache_misses.get();
+        format!(
+            "cluster:  forwarded={} retried={} replica-lost={} \
+             expired-at-router={} probe-failures={}\n\
+             cluster:  cache hits={} misses={} ({:.0}% hit rate)",
+            self.forwarded.get(),
+            self.retried.get(),
+            self.replica_lost.get(),
+            self.expired_at_router.get(),
+            self.probe_failures.get(),
+            hits,
+            self.cache_misses.get(),
+            100.0 * hits as f64 / lookups.max(1) as f64,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,5 +349,33 @@ mod tests {
         m.requests_expired.inc();
         let r = m.report();
         assert!(r.contains("expired=1"), "{r}");
+    }
+
+    #[test]
+    fn router_metrics_report_contains_fields() {
+        let m = RouterMetrics::new();
+        m.forwarded.add(10);
+        m.retried.add(2);
+        m.replica_lost.inc();
+        m.expired_at_router.add(3);
+        m.probe_failures.add(4);
+        m.cache_hits.add(6);
+        m.cache_misses.add(2);
+        let r = m.report();
+        assert!(r.contains("forwarded=10"), "{r}");
+        assert!(r.contains("retried=2"), "{r}");
+        assert!(r.contains("replica-lost=1"), "{r}");
+        assert!(r.contains("expired-at-router=3"), "{r}");
+        assert!(r.contains("probe-failures=4"), "{r}");
+        assert!(r.contains("hits=6 misses=2 (75% hit rate)"), "{r}");
+        // every line of the block is namespaced for the STATS report
+        assert!(r.lines().all(|l| l.starts_with("cluster:")), "{r}");
+    }
+
+    #[test]
+    fn router_metrics_empty_report_is_well_formed() {
+        let r = RouterMetrics::new().report();
+        assert!(r.contains("forwarded=0"), "{r}");
+        assert!(r.contains("(0% hit rate)"), "{r}");
     }
 }

@@ -12,6 +12,7 @@
 //! ENCODE <id> [DEADLINE_MS=<ms>] <tok1> <tok2> ... \n
 //!                                      encode a token sequence
 //! STATS\n                              metrics + backend report
+//! PING\n                               liveness probe → `OK 0 pong`
 //! QUIT\n                               close this connection
 //! ```
 //!
@@ -50,8 +51,20 @@
 //! | `deadline`              | deadline expired before execution; the       |
 //! |                         | request consumed no batch slot               |
 //! | `shutting-down`         | coordinator is draining; do not retry here   |
-//! | `unknown-command`       | first word not ENCODE/STATS/QUIT             |
+//! | `replica-lost`          | (router front-end only) every replica that   |
+//! |                         | could serve the request failed mid-flight;   |
+//! |                         | the request was accepted, retried on live    |
+//! |                         | replicas, and is reported lost — never       |
+//! |                         | silently dropped. See [`coordinator::cluster`](crate::coordinator::cluster). |
+//! | `unknown-command`       | first word not ENCODE/STATS/PING/QUIT        |
 //! | *anything else*         | execution failure, whitespace dashed         |
+//!
+//! `PING` exists for the cluster tier's health probes: the router
+//! front-end ([`coordinator::cluster`](crate::coordinator::cluster))
+//! marks a replica up/down by round-tripping `PING` on its probe
+//! interval. Router-mode processes speak the same wire protocol and
+//! extend `STATS` with `cluster:` lines (membership, forward/retry
+//! counters) — field reference in `OPERATIONS.md`.
 //!
 //! ## `STATS` report
 //!
@@ -96,11 +109,74 @@ use crate::minirt::ThreadPool;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic fault injection on the replica connection layer — the
+/// test seam behind `rust/tests/integration_cluster.rs`. A plan is
+/// seeded and *purely arithmetic*: which connections it affects depends
+/// only on `(accept order, seed, every_nth)`, never on wall-clock or
+/// thread scheduling, so a failing scenario replays bit-for-bit.
+///
+/// Faults model the three replica failure modes the cluster router must
+/// survive:
+///
+/// * `refuse_accept` — the process is up but not serving: affected
+///   connections are closed at accept before a byte is exchanged
+///   (connection refused, as seen by the router).
+/// * `drop_after_bytes` — a replica dies mid-reply: affected
+///   connections deliver at most this many reply bytes (the last line
+///   may be truncated mid-float) and are then hard-closed. This is the
+///   "kill a replica mid-batch" scenario.
+/// * `response_delay` — a slow replica: every reply on affected
+///   connections is delayed by this much before the first byte, long
+///   enough to blow past `deadline_margin` in the deadline tests.
+///
+/// `every_nth` selects which accepted connections the plan affects:
+/// connection `i` (0-based accept order) is affected iff
+/// `every_nth <= 1` (all of them) or `(i + seed) % every_nth == 0`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// Mixed into connection selection so distinct scenarios affect
+    /// distinct connection subsets without changing `every_nth`.
+    pub seed: u64,
+    /// Close affected connections at accept, before any I/O.
+    pub refuse_accept: bool,
+    /// Hard-close affected connections after this many reply bytes.
+    pub drop_after_bytes: Option<usize>,
+    /// Sleep this long before every reply on affected connections.
+    pub response_delay: Option<Duration>,
+    /// Affect every n-th accepted connection (`<= 1` = all).
+    pub every_nth: u64,
+}
+
+impl FaultPlan {
+    /// Does this plan fire on the `conn_index`-th accepted connection?
+    pub fn affects(&self, conn_index: u64) -> bool {
+        self.every_nth <= 1 || (conn_index + self.seed) % self.every_nth == 0
+    }
+}
+
+/// Per-connection fault state derived from a [`FaultPlan`] at accept
+/// time: the remaining reply-byte budget and the per-reply delay.
+struct ConnFaults {
+    delay: Option<Duration>,
+    budget: Option<usize>,
+}
 
 /// Serve until `coordinator` shuts down or the listener errors.
 /// Returns the bound address (useful with port 0).
 pub fn serve(coordinator: Arc<Coordinator>, bind: &str, pool_size: usize)
              -> std::io::Result<(std::net::SocketAddr, ServerHandle)> {
+    serve_with_faults(coordinator, bind, pool_size, None)
+}
+
+/// [`serve`] with a deterministic [`FaultPlan`] applied to accepted
+/// connections — the replica side of the cluster fault-injection
+/// harness. `None` is exactly [`serve`]; production entry points never
+/// pass a plan.
+pub fn serve_with_faults(coordinator: Arc<Coordinator>, bind: &str,
+                         pool_size: usize, faults: Option<FaultPlan>)
+                         -> std::io::Result<(std::net::SocketAddr, ServerHandle)> {
     let listener = TcpListener::bind(bind)?;
     let addr = listener.local_addr()?;
     let stop = crate::minirt::CancelToken::new();
@@ -114,15 +190,29 @@ pub fn serve(coordinator: Arc<Coordinator>, bind: &str, pool_size: usize)
                 .expect("listener blocking mode");
             // accept loop with a poll-ish stop check via timeout
             listener.set_nonblocking(true).ok();
+            let mut conn_index: u64 = 0;
             loop {
                 if accept_stop.is_cancelled() {
                     break;
                 }
                 match listener.accept() {
                     Ok((stream, _peer)) => {
+                        let fired = faults
+                            .filter(|f| f.affects(conn_index));
+                        conn_index += 1;
+                        if fired.map_or(false, |f| f.refuse_accept) {
+                            drop(stream); // close before any I/O
+                            continue;
+                        }
+                        let conn_faults = fired.map(|f| ConnFaults {
+                            delay: f.response_delay,
+                            budget: f.drop_after_bytes,
+                        });
                         let c = coordinator.clone();
                         let stop = accept_stop.clone();
-                        pool.execute(move || handle_conn(stream, &c, &stop));
+                        pool.execute(move || {
+                            handle_conn(stream, &c, &stop, conn_faults)
+                        });
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(2));
@@ -160,7 +250,8 @@ impl Drop for ServerHandle {
 }
 
 fn handle_conn(stream: TcpStream, coordinator: &Coordinator,
-               stop: &crate::minirt::CancelToken) {
+               stop: &crate::minirt::CancelToken,
+               mut faults: Option<ConnFaults>) {
     let peer = stream.peer_addr().ok();
     // Read timeout so handler threads can observe shutdown instead of
     // blocking forever on an idle connection (ServerHandle::stop joins
@@ -196,6 +287,26 @@ fn handle_conn(stream: TcpStream, coordinator: &Coordinator,
             continue;
         }
         let reply = dispatch(&trimmed, coordinator);
+        // fault seam: delay and/or truncate the reply, deterministically
+        if let Some(f) = faults.as_mut() {
+            if let Some(d) = f.delay {
+                std::thread::sleep(d);
+            }
+            if let Some(budget) = f.budget.as_mut() {
+                let bytes = reply.as_bytes();
+                if bytes.len() >= *budget {
+                    // deliver exactly the remaining budget (possibly
+                    // truncating mid-line) and hard-close: the client
+                    // sees a partial reply then EOF, like a replica
+                    // dying mid-batch
+                    let _ = writer.write_all(&bytes[..*budget]);
+                    let _ = writer.flush();
+                    let _ = writer.shutdown(std::net::Shutdown::Both);
+                    break;
+                }
+                *budget -= bytes.len();
+            }
+        }
         if writer.write_all(reply.as_bytes()).is_err() {
             break;
         }
@@ -265,6 +376,9 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                     cache,
                     coordinator.metrics.report())
         }
+        // liveness probe for the cluster tier's health checks: cheap,
+        // touches no queue or worker, never blocks on the coordinator
+        Some("PING") => "OK 0 pong\n".into(),
         Some("QUIT") => "OK 0 bye\n".into(),
         _ => "ERR 0 unknown-command\n".into(),
     }
@@ -312,6 +426,15 @@ impl Client {
         Ok(line.trim().to_string())
     }
 
+    /// Round-trip a liveness probe; returns the reply line
+    /// (`OK 0 pong` from a healthy server).
+    pub fn ping(&mut self) -> std::io::Result<String> {
+        writeln!(self.writer, "PING")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+
     /// Fetch the metrics report.
     pub fn stats(&mut self) -> std::io::Result<String> {
         writeln!(self.writer, "STATS")?;
@@ -339,6 +462,28 @@ mod tests {
         assert_eq!(sanitize("a b\tc"), "a-b-c");
     }
 
+    #[test]
+    fn fault_plan_selection_is_deterministic_arithmetic() {
+        // every_nth <= 1 affects every connection
+        let all = FaultPlan { every_nth: 0, ..Default::default() };
+        assert!((0..8).all(|i| all.affects(i)));
+        let all = FaultPlan { every_nth: 1, ..Default::default() };
+        assert!((0..8).all(|i| all.affects(i)));
+        // every_nth = 3, seed 0: connections 0, 3, 6, ...
+        let p = FaultPlan { every_nth: 3, ..Default::default() };
+        let hit: Vec<u64> = (0..9).filter(|&i| p.affects(i)).collect();
+        assert_eq!(hit, vec![0, 3, 6]);
+        // the seed shifts the affected subset without changing its size
+        let p = FaultPlan { every_nth: 3, seed: 1, ..Default::default() };
+        let hit: Vec<u64> = (0..9).filter(|&i| p.affects(i)).collect();
+        assert_eq!(hit, vec![2, 5, 8]);
+        // and the same plan always selects the same subset
+        let again: Vec<u64> = (0..9).filter(|&i| p.affects(i)).collect();
+        assert_eq!(hit, again);
+    }
+
     // dispatch() against a live coordinator is covered by
-    // rust/tests/integration_serving.rs (needs artifacts + PJRT).
+    // rust/tests/integration_cpu_serving.rs; the FaultPlan seam
+    // end-to-end (drop/delay/refuse over real sockets) by
+    // rust/tests/integration_cluster.rs.
 }

@@ -1,0 +1,435 @@
+//! Cluster-tier fault-injection suite: router front-end + N replica
+//! serving processes over real loopback sockets, with replica failures
+//! injected deterministically through the
+//! [`FaultPlan`](ssaformer::server::FaultPlan) seam.
+//!
+//! Every scenario is deterministic modulo ephemeral port numbers: the
+//! tests rebuild the router's own [`HashRing`] at runtime to *predict*
+//! request placement instead of hoping traffic spreads, fault selection
+//! is pure arithmetic over accept order, and membership transitions are
+//! driven by explicit `probe_now()` sweeps rather than timers. The
+//! driver runs this suite three times in a row — nothing here may
+//! depend on wall-clock luck.
+//!
+//! The two acceptance pins from the cluster tier:
+//! * a replica killed mid-batch loses **zero** accepted requests (each
+//!   is retried on a live replica or answered `ERR replica-lost`);
+//! * 1 router + 1 replica answers **byte-identically** to today's
+//!   single-process server.
+
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::cluster::{
+    hash_tokens, serve_router, ClusterConfig, ClusterRouter, HashRing,
+    RouterHandle, DEFAULT_VNODES,
+};
+use ssaformer::coordinator::{
+    Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
+};
+use ssaformer::server::{serve_with_faults, Client, FaultPlan, ServerHandle};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn replica_config() -> ServingConfig {
+    ServingConfig {
+        variant: Variant::SpectralShift,
+        max_batch: 4,
+        max_wait_ms: 5,
+        queue_capacity: 64,
+        cache_capacity: 64,
+        ..Default::default()
+    }
+}
+
+fn start_replica_with(cfg: &ServingConfig, bind: &str,
+                      faults: Option<FaultPlan>)
+                      -> (Arc<Coordinator>, SocketAddr, ServerHandle) {
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), cfg.variant)));
+    let c = Arc::new(Coordinator::start(ExecBackend::Cpu(engine), cfg).unwrap());
+    let (addr, h) = serve_with_faults(c.clone(), bind, 4, faults).unwrap();
+    (c, addr, h)
+}
+
+fn start_replica() -> (Arc<Coordinator>, SocketAddr, ServerHandle) {
+    start_replica_with(&replica_config(), "127.0.0.1:0", None)
+}
+
+/// Router over the given replica addresses: long probe interval (tests
+/// drive probes explicitly via `probe_now()`), short connect timeout so
+/// dead-replica scenarios fail over quickly.
+fn router_over(addrs: &[SocketAddr], cache_capacity: usize)
+               -> (Arc<ClusterRouter>, SocketAddr, RouterHandle) {
+    let cfg = ClusterConfig {
+        replicas: addrs.iter().map(|a| a.to_string()).collect(),
+        probe_interval: Duration::from_secs(600),
+        cache_capacity,
+        connect_timeout: Duration::from_millis(500),
+        reply_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    let r = Arc::new(ClusterRouter::new(cfg));
+    let (addr, h) = serve_router(r.clone(), "127.0.0.1:0", 4).unwrap();
+    (r, addr, h)
+}
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 31 + seed) % 2000)).collect()
+}
+
+/// The ring the router itself builds, reconstructed so tests can
+/// predict placement (determinism invariant: same inputs, same ring,
+/// in any process).
+fn ring_for(addrs: &[SocketAddr]) -> HashRing {
+    let names: Vec<String> = addrs.iter().map(|a| a.to_string()).collect();
+    HashRing::build(&names, DEFAULT_VNODES)
+}
+
+/// A token sequence of length `len` that the ring assigns to `target`.
+fn toks_assigned_to(ring: &HashRing, target: usize, len: usize,
+                    salt: i32) -> Vec<i32> {
+    for seed in 0..10_000 {
+        let t = toks(len, salt + seed * 7919);
+        if ring.assign(hash_tokens(&t)) == target {
+            return t;
+        }
+    }
+    panic!("no length-{len} sequence assigned to replica {target}");
+}
+
+#[test]
+fn single_replica_router_is_byte_identical_to_direct_serving() {
+    // the degenerate cluster: 1 router in front of 1 replica must be
+    // observationally today's single-process server, byte for byte
+    let (replica, raddr, rhandle) = start_replica();
+    let (router, addr, handle) = router_over(&[raddr], 64);
+
+    let mut direct = Client::connect(&raddr).unwrap();
+    let mut routed = Client::connect(&addr).unwrap();
+    for (id, len) in [(1u64, 40usize), (2, 100), (3, 128), (4, 300)] {
+        let t = toks(len, len as i32);
+        // ask the replica directly first (computes + caches), then via
+        // the router (forwards; the replica serves its cache hit —
+        // bitwise a recompute, so the strings must match exactly)
+        let want = direct.encode(id, &t).unwrap();
+        let got = routed.encode(id, &t).unwrap();
+        assert_eq!(got, want, "router hop changed bytes for len {len}");
+        assert!(got.starts_with(&format!("OK {id} ")), "{got}");
+    }
+    // and the reverse order: a fresh sequence routed first, direct
+    // second, must also agree (placement-independent determinism)
+    let t = toks(260, 9);
+    let via_router = routed.encode(5, &t).unwrap();
+    let via_direct = direct.encode(5, &t).unwrap();
+    assert_eq!(via_router, via_direct);
+
+    // drain/handoff accounting: everything forwarded, nothing lost
+    assert_eq!(router.metrics.forwarded.get(), 5);
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+    assert_eq!(router.metrics.retried.get(), 0);
+    assert_eq!(replica.metrics.requests_done.get(), 10); // 5 direct + 5 routed
+    handle.stop();
+    rhandle.stop();
+}
+
+#[test]
+fn router_spreads_load_across_replicas_by_ring_assignment() {
+    let (ra, aaddr, ahandle) = start_replica();
+    let (rb, baddr, bhandle) = start_replica();
+    let (router, addr, handle) = router_over(&[aaddr, baddr], 0);
+    let ring = ring_for(&[aaddr, baddr]);
+
+    // 3 sequences pinned to each replica by the ring — placement is
+    // predicted, not hoped for
+    let mut client = Client::connect(&addr).unwrap();
+    let mut id = 0u64;
+    for target in [0usize, 1] {
+        for k in 0..3 {
+            let t = toks_assigned_to(&ring, target, 64 + 4 * k, k as i32);
+            id += 1;
+            let reply = client.encode(id, &t).unwrap();
+            assert!(reply.starts_with(&format!("OK {id} ")), "{reply}");
+        }
+    }
+    // each replica executed exactly its ring share
+    assert_eq!(ra.metrics.requests_in.get(), 3, "replica A share");
+    assert_eq!(rb.metrics.requests_in.get(), 3, "replica B share");
+    assert_eq!(router.metrics.forwarded.get(), 6);
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+
+    // router STATS reports the cluster shape and the counters
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("role:     router"), "{stats}");
+    assert!(stats.contains("replicas=2 up=2 down=0"), "{stats}");
+    assert!(stats.contains("forwarded=6"), "{stats}");
+    assert!(stats.contains(&aaddr.to_string()), "{stats}");
+    handle.stop();
+    ahandle.stop();
+    bhandle.stop();
+}
+
+#[test]
+fn killed_replica_mid_batch_loses_zero_accepted_requests() {
+    // replica B hard-closes every connection after 5 reply bytes — a
+    // replica dying mid-batch, deterministically, on every attempt.
+    // Every request the router accepted must still be answered OK
+    // (failed over to A) — zero lost, zero silently dropped.
+    let (ra, aaddr, ahandle) = start_replica();
+    let kill = FaultPlan {
+        drop_after_bytes: Some(5),
+        every_nth: 0, // every connection
+        ..Default::default()
+    };
+    let (rb, baddr, bhandle) =
+        start_replica_with(&replica_config(), "127.0.0.1:0", Some(kill));
+    let (router, addr, handle) = router_over(&[aaddr, baddr], 0);
+    let ring = ring_for(&[aaddr, baddr]);
+
+    let mut client = Client::connect(&addr).unwrap();
+    let mut oks = 0;
+    for k in 0..4u64 {
+        // all four pinned to the dying replica B — the worst case
+        let t = toks_assigned_to(&ring, 1, 72 + 4 * k as usize, k as i32);
+        let reply = client.encode(k, &t).unwrap();
+        assert!(reply.starts_with(&format!("OK {k} ")),
+                "request {k} was lost: {reply}");
+        oks += 1;
+    }
+    assert_eq!(oks, 4);
+    // accounting identity: accepted = answered + lost, lost = 0
+    assert_eq!(router.metrics.forwarded.get(), 4);
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+    // B's failures forced failovers: at least the first request paid a
+    // retry onto A, and B is marked down afterwards
+    assert!(router.metrics.retried.get() >= 1,
+            "no failover recorded: {}", router.metrics.retried.get());
+    assert!(!router.membership().is_up(1), "dying replica still up");
+    // A answered everything; B may have *executed* requests (its
+    // replies were truncated) — at-least-once is explicitly fine
+    assert_eq!(ra.metrics.requests_done.get(), 4);
+    let _ = rb;
+    handle.stop();
+    ahandle.stop();
+    bhandle.stop();
+}
+
+#[test]
+fn all_replicas_lost_is_err_replica_lost_not_a_hang_or_drop() {
+    let (_ra, aaddr, ahandle) = start_replica();
+    let (_rb, baddr, bhandle) = start_replica();
+    // replicas are gone before the router ever forwards
+    ahandle.stop();
+    bhandle.stop();
+    let (router, addr, handle) = router_over(&[aaddr, baddr], 0);
+
+    let mut client = Client::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    let reply = client.encode(7, &toks(64, 1)).unwrap();
+    assert_eq!(reply, "ERR 7 replica-lost");
+    // fail-fast, not a hang: both replicas refuse connections
+    // immediately on loopback
+    assert!(t0.elapsed() < Duration::from_secs(8), "{:?}", t0.elapsed());
+    assert_eq!(router.metrics.replica_lost.get(), 1);
+    assert_eq!(router.metrics.forwarded.get(), 1);
+    // both replicas were marked down by the failed attempts
+    assert_eq!(router.membership().up_count(), 0);
+    handle.stop();
+}
+
+#[test]
+fn slow_replica_delivers_late_reply_through_the_router() {
+    // a slow replica (300ms before every reply byte) must yield a
+    // *late OK*, never a drop: executing requests are not aborted, and
+    // the router's reply timeout (10s) passes the late answer through
+    let slow = FaultPlan {
+        response_delay: Some(Duration::from_millis(300)),
+        every_nth: 0,
+        ..Default::default()
+    };
+    let (_r, raddr, rhandle) =
+        start_replica_with(&replica_config(), "127.0.0.1:0", Some(slow));
+    let (router, addr, handle) = router_over(&[raddr], 0);
+
+    let mut client = Client::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    let reply = client.encode(3, &toks(100, 2)).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(reply.starts_with("OK 3 "), "{reply}");
+    assert!(elapsed >= Duration::from_millis(300),
+            "delay fault did not fire: {elapsed:?}");
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+
+    // slow replica vs deadline: the budget (100ms) covers admission and
+    // queueing, which succeed long before it expires; the *write* delay
+    // lands after execution, so the contract is a late OK — an
+    // executing request is never aborted, and the router passes the
+    // late answer through instead of fabricating a drop
+    let t0 = Instant::now();
+    let reply = client
+        .encode_with_deadline(4, &toks(80, 5), 100)
+        .unwrap();
+    assert!(reply.starts_with("OK 4 "), "{reply}");
+    assert!(t0.elapsed() >= Duration::from_millis(300));
+    assert_eq!(router.metrics.expired_at_router.get(), 0);
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+    handle.stop();
+    rhandle.stop();
+}
+
+#[test]
+fn deadline_propagates_through_the_router_hop() {
+    // replica that holds requests for batchmates far longer than any
+    // deadline: if the router forwards DEADLINE_MS, the replica's own
+    // deadline machinery fires; if the router dropped the field, the
+    // request would be held ~30s and come back OK
+    let hold = ServingConfig {
+        max_wait_ms: 30_000,
+        deadline_margin_ms: 0,
+        ..replica_config()
+    };
+    let (replica, raddr, rhandle) =
+        start_replica_with(&hold, "127.0.0.1:0", None);
+    let (router, addr, handle) = router_over(&[raddr], 0);
+    let mut client = Client::connect(&addr).unwrap();
+
+    // (a) expired at the router: zero budget never touches a replica
+    let reply = client.encode_with_deadline(11, &toks(64, 3), 0).unwrap();
+    assert_eq!(reply, "ERR 11 deadline");
+    assert_eq!(router.metrics.expired_at_router.get(), 1);
+    assert_eq!(replica.metrics.requests_in.get(), 0,
+               "expired-at-router request reached a replica");
+
+    // (b) live budget is forwarded and expires *at the replica* while
+    // queued — proof the DEADLINE_MS field survived the hop
+    let t0 = Instant::now();
+    let reply = client.encode_with_deadline(12, &toks(64, 3), 300).unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(reply, "ERR 12 deadline");
+    assert_eq!(replica.metrics.requests_expired.get(), 1,
+               "replica never saw the forwarded deadline");
+    assert!(elapsed < Duration::from_secs(20),
+            "deadline did not propagate — request was held: {elapsed:?}");
+    assert_eq!(router.metrics.expired_at_router.get(), 1, "(a) only");
+
+    // (c) a generous budget serves normally end to end
+    let reply = client
+        .encode_with_deadline(13, &toks(128, 3), 60_000)
+        .unwrap();
+    assert!(reply.starts_with("OK 13 "), "{reply}");
+    assert_eq!(router.metrics.forwarded.get(), 2); // (b) and (c)
+    handle.stop();
+    rhandle.stop();
+}
+
+#[test]
+fn router_restart_preserves_placement_and_replies() {
+    let (_replica, raddr, rhandle) = start_replica();
+    let t = toks(200, 4);
+
+    let (_r1, addr1, handle1) = router_over(&[raddr], 64);
+    let before = Client::connect(&addr1).unwrap().encode(21, &t).unwrap();
+    assert!(before.starts_with("OK 21 "), "{before}");
+    handle1.stop(); // router process "crashes"
+
+    // a fresh router over the same replica set rebuilds the identical
+    // ring (deterministic placement) and serves byte-identical replies
+    let (_r2, addr2, handle2) = router_over(&[raddr], 64);
+    let after = Client::connect(&addr2).unwrap().encode(21, &t).unwrap();
+    assert_eq!(after, before, "restart changed served bytes");
+    handle2.stop();
+    rhandle.stop();
+}
+
+#[test]
+fn router_cache_hit_is_bitwise_a_recompute_and_skips_replicas() {
+    let (replica, raddr, rhandle) = start_replica();
+    let (router, addr, handle) = router_over(&[raddr], 64);
+    let mut client = Client::connect(&addr).unwrap();
+
+    let t = toks(128, 8);
+    let first = client.encode(31, &t).unwrap();
+    assert!(first.starts_with("OK 31 "), "{first}");
+    assert_eq!(replica.metrics.requests_in.get(), 1);
+
+    // identical tokens: served from the router cache — byte-equal
+    // payload, and the replica is never consulted
+    let second = client.encode(31, &t).unwrap();
+    assert_eq!(second, first, "cache hit diverged from recompute");
+    assert_eq!(router.metrics.cache_hits.get(), 1);
+    assert_eq!(replica.metrics.requests_in.get(), 1,
+               "cache hit still reached the replica");
+    assert_eq!(router.cache_len(), 1);
+
+    // cross-check against the replica's own serving of the same tokens:
+    // a hit anywhere is bitwise a recompute anywhere
+    let direct = Client::connect(&raddr).unwrap().encode(31, &t).unwrap();
+    assert_eq!(direct, first);
+    handle.stop();
+    rhandle.stop();
+}
+
+#[test]
+fn probes_mark_replicas_down_and_recover_them() {
+    let (_ra, aaddr, ahandle) = start_replica();
+    let (_rb, baddr, bhandle) = start_replica();
+    let (router, addr, handle) = router_over(&[aaddr, baddr], 0);
+
+    router.probe_now();
+    assert_eq!(router.membership().up_count(), 2);
+    assert_eq!(router.metrics.probe_failures.get(), 0);
+
+    // replica B dies; the next sweep notices
+    bhandle.stop();
+    router.probe_now();
+    assert_eq!(router.membership().up_count(), 1);
+    assert!(!router.membership().is_up(1));
+    assert!(router.metrics.probe_failures.get() >= 1);
+
+    // traffic keeps flowing to the survivor — even sequences the ring
+    // assigns to B fail over to A
+    let ring = ring_for(&[aaddr, baddr]);
+    let t = toks_assigned_to(&ring, 1, 64, 5);
+    let mut client = Client::connect(&addr).unwrap();
+    let reply = client.encode(41, &t).unwrap();
+    assert!(reply.starts_with("OK 41 "), "{reply}");
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+
+    // B comes back on its exact old address; a sweep recovers it
+    let cfg = replica_config();
+    let (_rb2, baddr2, bhandle2) =
+        start_replica_with(&cfg, &baddr.to_string(), None);
+    assert_eq!(baddr2, baddr, "rebind must reuse the advertised address");
+    router.probe_now();
+    assert_eq!(router.membership().up_count(), 2);
+    assert!(router.membership().is_up(1));
+    handle.stop();
+    ahandle.stop();
+    bhandle2.stop();
+}
+
+#[test]
+fn refused_accept_fault_fails_over_like_a_dead_replica() {
+    // replica B accepts TCP connections and instantly closes them (up
+    // but not serving) — the router must treat it like any other loss
+    let refuse = FaultPlan {
+        refuse_accept: true,
+        every_nth: 0,
+        ..Default::default()
+    };
+    let (ra, aaddr, ahandle) = start_replica();
+    let (_rb, baddr, bhandle) =
+        start_replica_with(&replica_config(), "127.0.0.1:0", Some(refuse));
+    let (router, addr, handle) = router_over(&[aaddr, baddr], 0);
+    let ring = ring_for(&[aaddr, baddr]);
+
+    let t = toks_assigned_to(&ring, 1, 96, 6);
+    let mut client = Client::connect(&addr).unwrap();
+    let reply = client.encode(51, &t).unwrap();
+    assert!(reply.starts_with("OK 51 "), "{reply}");
+    assert_eq!(ra.metrics.requests_done.get(), 1);
+    assert_eq!(router.metrics.replica_lost.get(), 0);
+    assert!(!router.membership().is_up(1));
+    handle.stop();
+    ahandle.stop();
+    bhandle.stop();
+}
