@@ -33,6 +33,16 @@ cargo test -q --test integration_cluster
 cargo test -q --test integration_cluster
 SSAF_KERNEL=scalar cargo test -q --test integration_cluster
 
+# train lane: the deterministic CPU trainer end to end — train a
+# projected 3-layer encoder (smoke schedule), checkpoint it, serve the
+# checkpoint over TCP through init=load, and sweep every variant's
+# error bound on the trained weights (writes BENCH_error_bound.json at
+# the repo root). The example exits non-zero if the loss curve is not
+# strictly decreasing or the served reply diverges from the in-process
+# forward.
+echo "==> train lane: cargo run --release --example train_tiny -- --smoke"
+cargo run --release --example train_tiny -- --smoke
+
 echo "==> cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets -- -D warnings
 

@@ -1,49 +1,135 @@
-//! E10 end-to-end validation: train the tiny MLM transformer through
-//! the AOT train-step artifact (fwd+bwd+Adam compiled by XLA, driven
-//! entirely from rust) on the synthetic bigram corpus, for both the
-//! exact-attention and spectral-shifting variants, and print the loss
-//! curves recorded in EXPERIMENTS.md.
+//! End-to-end train → checkpoint → serve → error-bound demo, entirely
+//! on the CPU kernel core (no artifacts, no toolchain beyond cargo):
 //!
-//! Run: `make artifacts && cargo run --release --example train_tiny [steps]`
+//! 1. train a ≥2-layer projected encoder deterministically with the
+//!    in-repo trainer (`train::cpu`), printing the per-epoch loss
+//!    curve and failing hard unless it strictly decreases;
+//! 2. save the trained weights as a real `SSAFCKPT` checkpoint;
+//! 3. serve that checkpoint through `weights`/`init = load` twice —
+//!    one coordinator driven in-process, one behind a real TCP server
+//!    — and check the `ENCODE` reply is bitwise what the in-process
+//!    forward implies;
+//! 4. sweep the approximation error of every variant against exact
+//!    softmax on the *trained* weights and write
+//!    `BENCH_error_bound.json`.
+//!
+//! Run: `cargo run --release --example train_tiny [--smoke]`
+//! (`--smoke` or `SSAF_TRAIN_SMOKE=1` shrinks the run for CI lanes;
+//! the legacy XLA-artifact path moved to `tests/integration_train.rs`.)
 
-use ssaformer::config::Variant;
-use ssaformer::runtime::Engine;
-use ssaformer::train::{train, TrainConfig};
+use ssaformer::config::{InitPolicy, ServingConfig, Variant};
+use ssaformer::coordinator::{Coordinator, ExecBackend};
+use ssaformer::coordinator::CpuModel;
+use ssaformer::eval::{default_output_path, error_bound_sweep, ErrorBoundConfig};
+use ssaformer::model::checkpoint;
+use ssaformer::server;
+use ssaformer::train::{train_cpu, CpuTrainConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::Arc;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("SSAF_TRAIN_SMOKE").is_ok_and(|v| v == "1");
+    let cfg = if smoke {
+        CpuTrainConfig {
+            steps_per_epoch: 6,
+            epochs: 2,
+            batch: 4,
+            corpus_lines: 120,
+            ..Default::default()
+        }
+    } else {
+        CpuTrainConfig::default()
+    };
+    println!(
+        "training: d_model={} heads={} layers={} (projected) vocab={} \
+         seq={} batch={} {} epochs x {} steps, {} lr={}{}",
+        cfg.d_model, cfg.n_heads, cfg.layers, cfg.vocab, cfg.seq, cfg.batch,
+        cfg.epochs, cfg.steps_per_epoch, cfg.optimizer.token(), cfg.lr,
+        if smoke { " [smoke]" } else { "" });
+
+    // 1. deterministic CPU training
+    let outcome = train_cpu(&cfg);
+    print!("{}", outcome.report.render());
+    if !outcome.report.epoch_loss_strictly_decreasing() {
+        eprintln!("FAIL: epoch losses {:?} are not strictly decreasing",
+                  outcome.report.epoch_losses);
         std::process::exit(1);
     }
-    let steps: usize = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(120);
+    println!("epoch loss strictly decreasing: ok");
 
-    let engine = Engine::new("artifacts").expect("engine");
-    let m = engine.manifest();
-    println!("model: d_model={} layers={} heads={} vocab={} params={}",
-             m.hyper["d_model"], m.hyper["n_layers"], m.hyper["n_heads"],
-             m.hyper["vocab"], m.param_count);
+    // 2. real SSAFCKPT checkpoint
+    let ckpt_path = std::env::temp_dir().join(format!(
+        "ssaformer-train-tiny-{}.ckpt", std::process::id()));
+    checkpoint::save(&outcome.stack, &ckpt_path).expect("save checkpoint");
+    println!("checkpoint: {} ({} bytes)", ckpt_path.display(),
+             std::fs::metadata(&ckpt_path).map(|m| m.len()).unwrap_or(0));
 
-    for variant in [Variant::SpectralShift, Variant::Full] {
-        println!("\n==== training with {} attention ({} steps) ====",
-                 variant.token(), steps);
-        let cfg = TrainConfig {
-            variant,
-            steps,
-            seed: 0,
-            corpus_lines: 2000,
-            log_every: 10,
-        };
-        match train(&engine, &cfg) {
-            Ok(report) => print!("{}", report.render()),
-            Err(e) => {
-                eprintln!("train {}: {e}", variant.token());
-                std::process::exit(1);
-            }
-        }
+    // 3. serve it through init = load — in-process and over TCP
+    let serving = ServingConfig {
+        artifacts_dir: "no/such/artifacts".into(),
+        variant: Variant::Full,
+        layers: cfg.layers,
+        ffn_mult: cfg.ffn_mult,
+        projections: true,
+        init: InitPolicy::Load,
+        weights: Some(ckpt_path.to_string_lossy().into_owned()),
+        max_batch: 2,
+        max_wait_ms: 2,
+        queue_capacity: 32,
+        workers: 1,
+        cache_capacity: 0,
+        ..Default::default()
+    };
+    serving.validate().expect("serving config");
+    let start = || {
+        Arc::new(Coordinator::start(
+            ExecBackend::auto(&serving).expect("backend"), &serving)
+            .expect("coordinator"))
+    };
+    let tokens: Vec<i32> = (0..60).map(|i| 3 + (i * 23) % 2000).collect();
+
+    let local = start();
+    let reference = local
+        .submit_blocking(tokens.clone())
+        .expect("submit").embedding.expect("embedding");
+    let expect_line = format!(
+        "OK 1 {}",
+        reference.iter().take(8).map(|x| format!("{x:.5}"))
+            .collect::<Vec<_>>().join(" "));
+
+    let remote = start();
+    let (addr, handle) =
+        server::serve(remote.clone(), "127.0.0.1:0", 2).expect("server");
+    let mut conn = std::net::TcpStream::connect(addr).expect("connect");
+    let line = format!(
+        "ENCODE 1 {}\n",
+        tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(" "));
+    conn.write_all(line.as_bytes()).expect("send");
+    let mut reply = String::new();
+    BufReader::new(conn.try_clone().expect("clone"))
+        .read_line(&mut reply).expect("reply");
+    handle.stop();
+    if reply.trim_end() != expect_line {
+        eprintln!("FAIL: TCP ENCODE reply diverges from the in-process \
+                   forward\n  got:  {}\n  want: {}",
+                  reply.trim_end(), expect_line);
+        std::process::exit(1);
     }
-    println!("\n(identical data order per seed: the curves are directly \
-              comparable — see EXPERIMENTS.md §E10)");
+    println!("served via init=load: TCP ENCODE bitwise-equal to the \
+              in-process forward: ok");
+
+    // 4. error-bound sweep on the trained weights
+    let eval_cfg = ErrorBoundConfig {
+        samples: if smoke { 2 } else { 4 },
+        ..Default::default()
+    };
+    let model = CpuModel::new(outcome.model_config, Variant::Full);
+    let report = error_bound_sweep(&model, &outcome.stack, &eval_cfg);
+    print!("{}", report.render());
+    let json_path = default_output_path();
+    std::fs::write(json_path, report.to_json()).expect("write json");
+    println!("wrote {json_path}");
+
+    let _ = std::fs::remove_file(&ckpt_path);
 }

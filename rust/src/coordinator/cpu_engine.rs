@@ -169,6 +169,15 @@ impl CpuModel {
         self.cfg.d_model
     }
 
+    /// The frozen vocab × d_model token-embedding table. The CPU
+    /// trainer's tied MLM head computes logits against these rows (the
+    /// table is drawn from `cfg.seed` and never updated, so a saved
+    /// checkpoint plus the config seed fully determine the trained
+    /// function).
+    pub(crate) fn embed_table(&self) -> &[f32] {
+        &self.embed
+    }
+
     pub fn n_heads(&self) -> usize {
         self.cfg.n_heads
     }

@@ -1,0 +1,462 @@
+//! Per-variant attention error-bound evaluation on trained weights.
+//!
+//! The paper's headline claim — spectral shifting carries a much
+//! stronger error bound than the Nyström approximation — has only ever
+//! been exercised here on seeded Gaussian weights. This module measures
+//! it on a *trained* [`EncoderStack`]: it replays the encoder forward
+//! pass on real tokenized text, and at every attention site (each head
+//! of each layer, the seed block included) computes the exact `full`
+//! softmax output next to each approximate variant's output, sweeping
+//! the landmark count.
+//!
+//! Per attention problem the error is the relative Frobenius distance
+//! `‖O_approx − O_exact‖_F / ‖O_exact‖_F`. Per `(variant, landmarks)`
+//! cell the report carries the mean and max over all problems, a pooled
+//! Frobenius ratio `√(Σ‖ΔO‖² / Σ‖O_exact‖²)`, and a per-layer mean
+//! breakdown. The forward pass always continues on the *exact* path,
+//! so every variant is measured against identical activations.
+//!
+//! Landmark mapping per variant: `ss` and `nystrom` take the swept
+//! value as their landmark count, `linformer` as its projected key
+//! dimension `k`; `sparse` as its local window; `lsh` has no landmark
+//! knob, so its rows are constant across the sweep (kept in the schema
+//! so every variant appears at every swept point).
+//!
+//! The machine-readable output is `BENCH_error_bound.json`
+//! (`ssaf-error-bound/v1`), written next to `BENCH_kernels.json`;
+//! `tests/error_bound_ordering.rs` pins the paper's ss-vs-nystrom
+//! ordering on the in-memory report.
+
+use crate::attention::{
+    FullOp, LinformerOp, LshOp, NystromOp, SparseOp, SpectralShiftConfig,
+    SpectralShiftOp, Tensor2,
+};
+use crate::coordinator::CpuModel;
+use crate::kernels::{gemm_into, KernelCtx, Workspace};
+use crate::model::{AttentionOp, EncoderStack};
+use crate::rngx::Rng;
+use crate::text::{CorpusGenerator, Tokenizer};
+
+/// The variants the sweep covers, in report order. `full` is the
+/// reference, not a row.
+pub const EVAL_VARIANTS: [&str; 5] =
+    ["ss", "nystrom", "linformer", "lsh", "sparse"];
+
+/// Configuration of one error-bound sweep.
+#[derive(Clone, Debug)]
+pub struct ErrorBoundConfig {
+    /// Landmark counts to sweep; every value must divide `seq`.
+    pub landmarks: Vec<usize>,
+    /// Evaluation sequence length.
+    pub seq: usize,
+    /// Number of evaluation sequences.
+    pub samples: usize,
+    /// Seed for the evaluation text stream (independent of the model
+    /// seed so eval data is not the training data).
+    pub seed: u64,
+    /// Newton–Schulz iterations for the pseudo-inverse variants.
+    pub pinv_iters: usize,
+}
+
+impl Default for ErrorBoundConfig {
+    fn default() -> Self {
+        ErrorBoundConfig {
+            landmarks: vec![4, 8, 16],
+            seq: 48,
+            samples: 4,
+            seed: 1009,
+            pinv_iters: 8,
+        }
+    }
+}
+
+/// One `(variant, landmarks)` cell of the report.
+#[derive(Clone, Debug)]
+pub struct ErrorBoundRow {
+    pub variant: &'static str,
+    pub landmarks: usize,
+    /// Mean over problems of `‖ΔO‖_F / ‖O_exact‖_F`.
+    pub mean_rel_err: f64,
+    /// Max over problems of the same.
+    pub max_rel_err: f64,
+    /// Pooled `√(Σ‖ΔO‖² / Σ‖O_exact‖²)`.
+    pub fro_ratio: f64,
+    /// Mean relative error per layer (index 0 = seed block).
+    pub per_layer_mean_rel_err: Vec<f64>,
+}
+
+/// The full sweep result.
+#[derive(Clone, Debug)]
+pub struct ErrorBoundReport {
+    pub seq: usize,
+    pub samples: usize,
+    pub layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub landmarks: Vec<usize>,
+    pub rows: Vec<ErrorBoundRow>,
+}
+
+impl ErrorBoundReport {
+    /// The mean relative error of `variant` at landmark count `c`.
+    pub fn mean_rel_err(&self, variant: &str, c: usize) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.variant == variant && r.landmarks == c)
+            .map(|r| r.mean_rel_err)
+    }
+
+    /// ASCII table for the example / subcommand output.
+    pub fn render(&self) -> String {
+        let mut t = crate::benchkit::Table::new(
+            &["variant", "landmarks", "mean rel err", "max rel err",
+              "fro ratio"]);
+        for r in &self.rows {
+            t.row(&[
+                r.variant.to_string(),
+                r.landmarks.to_string(),
+                format!("{:.6}", r.mean_rel_err),
+                format!("{:.6}", r.max_rel_err),
+                format!("{:.6}", r.fro_ratio),
+            ]);
+        }
+        format!(
+            "{}\n({} layers x {} heads x {} samples at seq {}, exact \
+             reference = full softmax)\n",
+            t.render(), self.layers, self.n_heads, self.samples, self.seq)
+    }
+
+    /// Serialize as `ssaf-error-bound/v1` JSON. Hand-rolled like the
+    /// bench snapshots — flat schema, no dependencies. Panics on
+    /// non-finite metrics: an eval that produced NaN must not write an
+    /// artifact that looks healthy.
+    pub fn to_json(&self) -> String {
+        fn num(x: f64) -> String {
+            assert!(x.is_finite(), "non-finite metric in error-bound report");
+            format!("{x}")
+        }
+        fn num_list(xs: &[f64]) -> String {
+            let inner: Vec<String> = xs.iter().map(|&x| num(x)).collect();
+            format!("[{}]", inner.join(","))
+        }
+        let landmarks: Vec<String> =
+            self.landmarks.iter().map(|c| c.to_string()).collect();
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"ssaf-error-bound/v1\",\n");
+        out.push_str("  \"reference\": \"full\",\n");
+        out.push_str(&format!("  \"seq\": {},\n", self.seq));
+        out.push_str(&format!("  \"samples\": {},\n", self.samples));
+        out.push_str(&format!("  \"layers\": {},\n", self.layers));
+        out.push_str(&format!("  \"n_heads\": {},\n", self.n_heads));
+        out.push_str(&format!("  \"d_model\": {},\n", self.d_model));
+        out.push_str(&format!("  \"landmarks\": [{}],\n", landmarks.join(",")));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"variant\": \"{}\", \"landmarks\": {}, \
+                 \"mean_rel_err\": {}, \"max_rel_err\": {}, \
+                 \"fro_ratio\": {}, \"per_layer_mean_rel_err\": {}}}{}\n",
+                r.variant, r.landmarks, num(r.mean_rel_err),
+                num(r.max_rel_err), num(r.fro_ratio),
+                num_list(&r.per_layer_mean_rel_err),
+                if i + 1 == self.rows.len() { "" } else { "," }));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Where the JSON artifact goes: the repo root when run from `rust/`
+/// (tests, `cargo run`), the current directory otherwise — the same
+/// convention `benches/bench_snapshot.rs` uses for `BENCH_kernels.json`.
+pub fn default_output_path() -> &'static str {
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        "../BENCH_error_bound.json"
+    } else {
+        "BENCH_error_bound.json"
+    }
+}
+
+/// Per-cell accumulator.
+struct Acc {
+    sum_rel: f64,
+    max_rel: f64,
+    count: usize,
+    sum_diff_sq: f64,
+    sum_ref_sq: f64,
+    layer_sum_rel: Vec<f64>,
+    layer_count: Vec<usize>,
+}
+
+impl Acc {
+    fn new(layers: usize) -> Acc {
+        Acc {
+            sum_rel: 0.0,
+            max_rel: 0.0,
+            count: 0,
+            sum_diff_sq: 0.0,
+            sum_ref_sq: 0.0,
+            layer_sum_rel: vec![0.0; layers],
+            layer_count: vec![0; layers],
+        }
+    }
+
+    fn record(&mut self, layer: usize, exact: &Tensor2, approx: &Tensor2) {
+        assert_eq!((exact.rows, exact.cols), (approx.rows, approx.cols));
+        let mut diff_sq = 0.0f64;
+        let mut ref_sq = 0.0f64;
+        for (&a, &e) in approx.data.iter().zip(&exact.data) {
+            let d = (a - e) as f64;
+            diff_sq += d * d;
+            ref_sq += (e as f64) * (e as f64);
+        }
+        let rel = if ref_sq > 0.0 { (diff_sq / ref_sq).sqrt() } else { 0.0 };
+        self.sum_rel += rel;
+        self.max_rel = self.max_rel.max(rel);
+        self.count += 1;
+        self.sum_diff_sq += diff_sq;
+        self.sum_ref_sq += ref_sq;
+        self.layer_sum_rel[layer] += rel;
+        self.layer_count[layer] += 1;
+    }
+}
+
+/// Build the op for `variant` at swept landmark count `c` (see the
+/// module docs for the per-variant mapping).
+fn make_op(variant: &str, c: usize, pinv_iters: usize) -> Box<dyn AttentionOp> {
+    match variant {
+        "ss" => {
+            let mut cfg = SpectralShiftConfig::new(c);
+            cfg.pinv_iters = pinv_iters;
+            Box::new(SpectralShiftOp(cfg))
+        }
+        "nystrom" => Box::new(NystromOp { landmarks: c, pinv_iters }),
+        "linformer" => Box::new(LinformerOp { kdim: c, seed: 7 }),
+        "lsh" => Box::new(LshOp { rounds: 2, bits: None, seed: 7 }),
+        "sparse" => Box::new(SparseOp { window: Some(c), stride: None }),
+        other => panic!("unknown eval variant {other}"),
+    }
+}
+
+/// Run the sweep: replay the stack forward on `samples` tokenized
+/// sequences from an eval-only text stream, measuring every variant at
+/// every attention site against the exact softmax output.
+///
+/// `model` supplies the frozen embedding (and must share d_model /
+/// n_heads with `stack`); `stack` supplies the — typically trained —
+/// block weights.
+pub fn error_bound_sweep(model: &CpuModel, stack: &EncoderStack,
+                         cfg: &ErrorBoundConfig) -> ErrorBoundReport {
+    assert!(!cfg.landmarks.is_empty(), "empty landmark sweep");
+    for &c in &cfg.landmarks {
+        assert!(c >= 1 && cfg.seq % c == 0,
+                "seq {} not divisible by landmark count {c}", cfg.seq);
+    }
+    assert!(cfg.samples >= 1, "need at least one eval sequence");
+    let d = stack.d_model();
+    let heads = stack.n_heads();
+    let dh = d / heads;
+    let layers = stack.layers();
+    let ctx = KernelCtx::sequential();
+    let mut ws = Workspace::new();
+
+    // eval-only token stream (seeded independently of training)
+    let vocab = 512usize;
+    let mut gen = CorpusGenerator::new(cfg.seed, 128, 4);
+    let corpus = gen.corpus(cfg.samples.max(8), cfg.seq / 2, cfg.seq);
+    let tok = Tokenizer::fit(&corpus, vocab);
+    let mut rng = Rng::new(cfg.seed ^ 0x51EB);
+    let sequences: Vec<Vec<i32>> = (0..cfg.samples)
+        .map(|_| {
+            let line = &corpus[rng.below(corpus.len() as u64) as usize];
+            tok.encode(line, cfg.seq)
+        })
+        .collect();
+
+    let cells: Vec<(&'static str, usize)> = EVAL_VARIANTS
+        .iter()
+        .flat_map(|&v| cfg.landmarks.iter().map(move |&c| (v, c)))
+        .collect();
+    let mut accs: Vec<Acc> = cells.iter().map(|_| Acc::new(layers)).collect();
+
+    // one closure measuring every cell at one attention problem, then
+    // handing back the exact output for the forward to continue on
+    let measure = |layer: usize, q: &Tensor2, k: &Tensor2, v: &Tensor2,
+                       accs: &mut [Acc], ws: &mut Workspace| -> Tensor2 {
+        let e = FullOp.attend(&ctx, q, k, v, ws);
+        let exact = Tensor2 { rows: e.rows, cols: e.cols, data: e.data.clone() };
+        ws.put(e.data);
+        for (cell, acc) in cells.iter().zip(accs.iter_mut()) {
+            let op = make_op(cell.0, cell.1, cfg.pinv_iters);
+            let approx = op.attend(&ctx, q, k, v, ws);
+            acc.record(layer, &exact, &approx);
+            ws.put(approx.data);
+        }
+        exact
+    };
+
+    for seq_toks in &sequences {
+        let mut x = model.embed_sequence(seq_toks, cfg.seq);
+        // seed block: bare per-head attention, output replaces x
+        let mut seed_out = Tensor2::zeros(cfg.seq, d);
+        for h in 0..heads {
+            let xs = head_slice(&x, h, dh);
+            let o = measure(0, &xs, &xs, &xs, &mut accs, &mut ws);
+            stitch(&mut seed_out, &o, h, dh);
+        }
+        x = seed_out;
+        // full blocks: x += MHA(LN₁(x)); x += FFN(LN₂(x)), always
+        // continuing on the exact attention output
+        for (b, blk) in stack.blocks().iter().enumerate() {
+            let ln = blk.attn_input(&ctx, &x, &mut ws);
+            let mut att = Tensor2::zeros(cfg.seq, d);
+            match blk.projections() {
+                Some(p) => {
+                    let mut merged = Tensor2::zeros(cfg.seq, d);
+                    for h in 0..heads {
+                        let mut q = Tensor2::zeros(cfg.seq, dh);
+                        let mut k = Tensor2::zeros(cfg.seq, dh);
+                        let mut v = Tensor2::zeros(cfg.seq, dh);
+                        gemm_into(&ctx, &ln.data, p.wq(h), &mut q.data,
+                                  cfg.seq, d, dh);
+                        gemm_into(&ctx, &ln.data, p.wk(h), &mut k.data,
+                                  cfg.seq, d, dh);
+                        gemm_into(&ctx, &ln.data, p.wv(h), &mut v.data,
+                                  cfg.seq, d, dh);
+                        let o = measure(b + 1, &q, &k, &v, &mut accs, &mut ws);
+                        stitch(&mut merged, &o, h, dh);
+                    }
+                    gemm_into(&ctx, &merged.data, p.wo(), &mut att.data,
+                              cfg.seq, d, d);
+                }
+                None => {
+                    for h in 0..heads {
+                        let qs = head_slice(&ln, h, dh);
+                        let o = measure(b + 1, &qs, &qs, &qs, &mut accs,
+                                        &mut ws);
+                        stitch(&mut att, &o, h, dh);
+                    }
+                }
+            }
+            ws.put(ln.data);
+            for (xi, ai) in x.data.iter_mut().zip(&att.data) {
+                *xi += *ai;
+            }
+            blk.ffn_sublayer(&ctx, &mut x, &mut ws);
+        }
+    }
+
+    let rows = cells
+        .iter()
+        .zip(&accs)
+        .map(|(&(variant, landmarks), acc)| ErrorBoundRow {
+            variant,
+            landmarks,
+            mean_rel_err: acc.sum_rel / acc.count as f64,
+            max_rel_err: acc.max_rel,
+            fro_ratio: if acc.sum_ref_sq > 0.0 {
+                (acc.sum_diff_sq / acc.sum_ref_sq).sqrt()
+            } else {
+                0.0
+            },
+            per_layer_mean_rel_err: acc
+                .layer_sum_rel
+                .iter()
+                .zip(&acc.layer_count)
+                .map(|(&s, &n)| if n > 0 { s / n as f64 } else { 0.0 })
+                .collect(),
+        })
+        .collect();
+    ErrorBoundReport {
+        seq: cfg.seq,
+        samples: cfg.samples,
+        layers,
+        n_heads: heads,
+        d_model: d,
+        landmarks: cfg.landmarks.clone(),
+        rows,
+    }
+}
+
+fn head_slice(x: &Tensor2, h: usize, dh: usize) -> Tensor2 {
+    let mut out = Tensor2::zeros(x.rows, dh);
+    for i in 0..x.rows {
+        out.row_mut(i).copy_from_slice(&x.row(i)[h * dh..(h + 1) * dh]);
+    }
+    out
+}
+
+fn stitch(dst: &mut Tensor2, head_out: &Tensor2, h: usize, dh: usize) {
+    for i in 0..dst.rows {
+        dst.row_mut(i)[h * dh..(h + 1) * dh]
+            .copy_from_slice(head_out.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+    use crate::coordinator::CpuModelConfig;
+    use crate::kernels::BatchedVariant;
+
+    fn tiny_setup() -> (CpuModel, EncoderStack) {
+        let mcfg = CpuModelConfig {
+            d_model: 16, n_heads: 2, vocab: 128, seed: 5, layers: 2,
+            ffn_mult: 2, projections: true, ..Default::default()
+        };
+        let model = CpuModel::new(mcfg, Variant::Full);
+        let stack = EncoderStack::new_mixed(
+            vec![BatchedVariant::Full; 2], 16, 2, 2, 5, true);
+        (model, stack)
+    }
+
+    #[test]
+    fn sweep_covers_every_variant_at_every_landmark() {
+        let (model, stack) = tiny_setup();
+        let cfg = ErrorBoundConfig {
+            landmarks: vec![4, 8], seq: 16, samples: 2,
+            ..Default::default()
+        };
+        let rep = error_bound_sweep(&model, &stack, &cfg);
+        assert_eq!(rep.rows.len(), EVAL_VARIANTS.len() * 2);
+        for r in &rep.rows {
+            assert!(r.mean_rel_err.is_finite() && r.mean_rel_err >= 0.0,
+                    "{} c={}", r.variant, r.landmarks);
+            assert!(r.max_rel_err >= r.mean_rel_err || r.max_rel_err == 0.0);
+            assert_eq!(r.per_layer_mean_rel_err.len(), 2);
+        }
+        assert!(rep.mean_rel_err("ss", 4).is_some());
+        assert!(rep.mean_rel_err("ss", 5).is_none());
+    }
+
+    #[test]
+    fn json_is_well_formed_and_carries_the_schema() {
+        let (model, stack) = tiny_setup();
+        let cfg = ErrorBoundConfig {
+            landmarks: vec![4], seq: 16, samples: 1, ..Default::default()
+        };
+        let rep = error_bound_sweep(&model, &stack, &cfg);
+        let json = rep.to_json();
+        assert!(json.contains("\"schema\": \"ssaf-error-bound/v1\""));
+        assert!(json.contains("\"variant\": \"ss\""));
+        assert!(json.contains("\"variant\": \"nystrom\""));
+        assert_eq!(json.matches("\"mean_rel_err\"").count(),
+                   EVAL_VARIANTS.len());
+        // balanced braces/brackets — cheap structural check without a
+        // JSON parser in-tree
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn exact_reference_has_zero_error_against_itself() {
+        // feeding the exact output through the accumulator must give 0
+        let a = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut acc = Acc::new(1);
+        acc.record(0, &a, &a);
+        assert_eq!(acc.sum_rel, 0.0);
+        assert_eq!(acc.max_rel, 0.0);
+    }
+}

@@ -89,6 +89,7 @@ pub mod attention;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;
+pub mod eval;
 pub mod kernels;
 pub mod linalg;
 pub mod metrics;

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   serve    [--config FILE] [--variant V] [--addr A]   start the TCP server
-//!   train    [--variant V] [--steps N] [--seed S]       run MLM training
+//!   train    [--epochs N] [--steps N] [--out CKPT] ...   deterministic CPU
+//!            MLM training (+ optional error-bound sweep); the legacy
+//!            artifact driver runs when --artifacts is passed
 //!   info     [--artifacts DIR]                          inspect artifacts
 //!   spectrum [--n N] [--c C]                            Figure-2 quick look
 //!
@@ -11,8 +13,12 @@
 use ssaformer::config::{Config, InitPolicy, Role, ServingConfig, Variant};
 use ssaformer::coordinator::cluster::{self, ClusterConfig, ClusterRouter};
 use ssaformer::coordinator::{Coordinator, ExecBackend};
+use ssaformer::coordinator::CpuModel;
+use ssaformer::eval::{error_bound_sweep, ErrorBoundConfig};
+use ssaformer::model::checkpoint;
 use ssaformer::runtime::Engine;
-use ssaformer::train::{train, TrainConfig};
+use ssaformer::train::{train, train_cpu, CpuTrainConfig, OptimizerKind,
+                       TrainConfig};
 use std::sync::Arc;
 
 fn main() {
@@ -58,7 +64,17 @@ USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
            --kernel auto|scalar|avx2|neon (micro-kernel arm; the
                      SSAF_KERNEL env var overrides this flag)
            (knob semantics + capacity planning: see OPERATIONS.md)
-  train    --variant full|ss --steps N --seed S --artifacts DIR
+  train    in-repo deterministic CPU trainer (default; no artifacts):
+           --epochs N --steps N (per epoch) --batch N --seq N
+           --layers N (>= 2; layer 0 is the weightless seed block)
+           --d-model N --heads N --ffn-mult N --vocab N
+           --lr F --optimizer sgd|adam --seed S --workers N
+           --out PATH (save the trained SSAFCKPT checkpoint;
+                     serve it back with serve --weights PATH)
+           --error-bound-json PATH (sweep every variant's attention
+                     error vs exact softmax on the trained weights)
+           legacy XLA-artifact driver (only when --artifacts is given):
+           --artifacts DIR --variant full|ss --steps N --seed S
   info     --artifacts DIR
   spectrum --n N --c C  (pure-rust Figure-2 analysis; no artifacts needed)
 ";
@@ -269,6 +285,86 @@ fn cmd_serve_router(cfg: &ServingConfig) -> i32 {
 }
 
 fn cmd_train(flags: &Flags) -> i32 {
+    // legacy path: an explicit --artifacts keeps the XLA train-step
+    // driver reachable; everything else runs the in-repo CPU trainer
+    if flags.contains_key("artifacts") {
+        return cmd_train_artifact(flags);
+    }
+    let mut cfg = CpuTrainConfig::default();
+    macro_rules! knob {
+        ($flag:literal, $field:ident) => {
+            if let Some(v) = flags.get($flag) {
+                match v.parse() {
+                    Ok(parsed) => cfg.$field = parsed,
+                    Err(_) => {
+                        eprintln!("bad {} {v:?}", $flag);
+                        return 2;
+                    }
+                }
+            }
+        };
+    }
+    knob!("steps", steps_per_epoch);
+    knob!("epochs", epochs);
+    knob!("batch", batch);
+    knob!("seq", seq);
+    knob!("layers", layers);
+    knob!("d-model", d_model);
+    knob!("heads", n_heads);
+    knob!("ffn-mult", ffn_mult);
+    knob!("vocab", vocab);
+    knob!("lr", lr);
+    knob!("seed", seed);
+    knob!("workers", workers);
+    if let Some(o) = flags.get("optimizer") {
+        match OptimizerKind::parse(o) {
+            Some(kind) => cfg.optimizer = kind,
+            None => {
+                eprintln!("bad optimizer {o:?} (sgd|adam)");
+                return 2;
+            }
+        }
+    }
+    println!(
+        "training on the CPU kernel core: d_model={} heads={} layers={} \
+         (projected) vocab={} seq={} batch={} {} epochs x {} steps, {} lr={}",
+        cfg.d_model, cfg.n_heads, cfg.layers, cfg.vocab, cfg.seq, cfg.batch,
+        cfg.epochs, cfg.steps_per_epoch, cfg.optimizer.token(), cfg.lr);
+    let outcome = train_cpu(&cfg);
+    print!("{}", outcome.report.render());
+
+    if let Some(path) = flags.get("out") {
+        if let Err(e) = checkpoint::save(&outcome.stack, path) {
+            eprintln!("checkpoint {path}: {e}");
+            return 1;
+        }
+        println!("checkpoint saved to {path} — serve it with: \
+                  ssaformer serve --weights {path} --layers {} \
+                  --ffn-mult {} --projections true",
+                 cfg.layers, cfg.ffn_mult);
+    }
+    if let Some(path) = flags.get("error-bound-json") {
+        let eval_cfg = ErrorBoundConfig { seq: cfg.seq, ..Default::default() };
+        for &c in &eval_cfg.landmarks {
+            if cfg.seq % c != 0 {
+                eprintln!("error-bound sweep needs seq divisible by {c} \
+                           (got {})", cfg.seq);
+                return 2;
+            }
+        }
+        let model = CpuModel::new(outcome.model_config, Variant::Full);
+        let report = error_bound_sweep(&model, &outcome.stack, &eval_cfg);
+        print!("{}", report.render());
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_train_artifact(flags: &Flags) -> i32 {
     let dir = flags.get("artifacts").map(|s| s.as_str()).unwrap_or("artifacts");
     let variant = flags
         .get("variant")

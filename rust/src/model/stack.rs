@@ -191,6 +191,13 @@ impl EncoderStack {
         &self.blocks
     }
 
+    /// Mutable access to the full blocks — the in-repo trainer's weight
+    /// update seam. Crate-internal: external callers go through the
+    /// checkpoint path, which re-validates shapes on load.
+    pub(crate) fn blocks_mut(&mut self) -> &mut [EncoderLayer] {
+        &mut self.blocks
+    }
+
     /// Divisibility constraint inherited from the attention operators
     /// (mixed stacks share one landmark budget, enforced at build).
     pub fn landmark_divisor(&self) -> Option<usize> {

@@ -1,0 +1,464 @@
+//! Hand-derived backward passes for the CPU trainer.
+//!
+//! Mirrors `python/compile/kernels/autodiff.py`'s approach — the
+//! forward runs the production kernels, the backward is the VJP of the
+//! same math written out by hand — except here both directions live in
+//! Rust and the residuals (post-LN activations, per-head attention
+//! probabilities, FFN pre-activations) are recorded by the trainer's
+//! forward pass instead of being rematerialized.
+//!
+//! Every function below is a pure VJP of the matching `kernels::`
+//! forward primitive:
+//!
+//! * GEMM       — `C = A·B` ⇒ `dA = dC·Bᵀ`, `dB = Aᵀ·dC`, computed
+//!                with the same blocked [`gemm_into`] used forward, so
+//!                the backward inherits the thread-count-determinism
+//!                contract for free.
+//! * layernorm  — population-variance form (`var = Σ(x−μ)²/d`,
+//!                matching `kernels::layernorm`):
+//!                `dx = (dŷ − mean(dŷ) − x̂·mean(dŷ⊙x̂)) / σ` with
+//!                `dŷ = dy⊙gain`.
+//! * bias+GELU  — tanh-GELU derivative of `kernels::gelu`'s exact
+//!                constants (`√(2/π) = 0.797_884_56`, `0.044_715`).
+//! * softmax-attention — with `S = softmax(scale·q·kᵀ)`, `O = S·v`:
+//!                `dv = Sᵀ·dO`; `dS = dO·vᵀ`;
+//!                `dz_ij = S_ij·(dS_ij − Σ_{j'} dS_ij'·S_ij')`;
+//!                `dq = scale·dz·k`; `dk = scale·dzᵀ·q`.
+//! * projection seam — the per-head q/k/v projections, the merged
+//!                head concat and the output projection, composed from
+//!                the GEMM and attention rules above.
+//!
+//! Determinism: the GEMM-shaped work rides the deterministic kernel
+//! core; all reductions here (bias column sums, row softmax sums) run
+//! sequentially in index order, so every gradient is bitwise identical
+//! for any worker count — the property `tests/train_e2e.rs` pins on
+//! whole checkpoints. Correctness against f64 central differences is
+//! pinned by `tests/train_gradcheck.rs` at ≤1e-3.
+
+use crate::attention::{default_scale, Tensor2};
+use crate::kernels::{gemm_into, softmax_scores, transpose_into, KernelCtx, Workspace};
+
+/// `dst += src`, elementwise. The one accumulation primitive the
+/// trainer uses, kept sequential so gradient accumulation order is a
+/// function of call order alone.
+pub fn accumulate(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len(), "gradient accumulation length");
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// VJP of `C = A·B` (`A`: m×k, `B`: k×n, `dC`: m×n), **accumulating**
+/// `dA += dC·Bᵀ` and `dB += Aᵀ·dC`. Pass zeroed buffers for overwrite
+/// semantics. Scratch comes from `ws` and is returned before exit.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_backward_acc(ctx: &KernelCtx, a: &[f32], b: &[f32], d_c: &[f32],
+                         m: usize, k: usize, n: usize,
+                         d_a: &mut [f32], d_b: &mut [f32],
+                         ws: &mut Workspace) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(d_c.len(), m * n, "dC shape");
+    assert_eq!(d_a.len(), m * k, "dA shape");
+    assert_eq!(d_b.len(), k * n, "dB shape");
+    // dA = dC · Bᵀ
+    let mut bt = ws.take(n * k);
+    transpose_into(b, &mut bt, k, n);
+    let mut scratch = ws.take(m * k);
+    gemm_into(ctx, d_c, &bt, &mut scratch, m, n, k);
+    accumulate(d_a, &scratch);
+    ws.put(scratch);
+    ws.put(bt);
+    // dB = Aᵀ · dC
+    let mut at = ws.take(k * m);
+    transpose_into(a, &mut at, m, k);
+    let mut scratch = ws.take(k * n);
+    gemm_into(ctx, &at, d_c, &mut scratch, k, m, n);
+    accumulate(d_b, &scratch);
+    ws.put(scratch);
+    ws.put(at);
+}
+
+/// VJP of `kernels::layernorm` (population variance, per-row moments).
+/// Overwrites `d_x`; **accumulates** `d_gain` / `d_bias`.
+pub fn layernorm_backward(x: &Tensor2, gain: &[f32], eps: f32, d_y: &Tensor2,
+                          d_x: &mut Tensor2, d_gain: &mut [f32],
+                          d_bias: &mut [f32]) {
+    let (n, d) = (x.rows, x.cols);
+    assert_eq!((d_y.rows, d_y.cols), (n, d), "dY shape");
+    assert_eq!((d_x.rows, d_x.cols), (n, d), "dX shape");
+    assert_eq!(gain.len(), d, "gain width");
+    assert_eq!(d_gain.len(), d, "dgain width");
+    assert_eq!(d_bias.len(), d, "dbias width");
+    let inv_d = 1.0f32 / d as f32;
+    for i in 0..n {
+        let xr = x.row(i);
+        let dyr = d_y.row(i);
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean *= inv_d;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mean;
+            var += c * c;
+        }
+        var *= inv_d;
+        let inv_sigma = 1.0 / (var + eps).sqrt();
+        // dŷ = dy⊙gain and the two row reductions it feeds
+        let mut sum_dyh = 0.0f32;
+        let mut sum_dyh_xhat = 0.0f32;
+        for j in 0..d {
+            let xhat = (xr[j] - mean) * inv_sigma;
+            let dyh = dyr[j] * gain[j];
+            sum_dyh += dyh;
+            sum_dyh_xhat += dyh * xhat;
+            d_gain[j] += dyr[j] * xhat;
+            d_bias[j] += dyr[j];
+        }
+        let m1 = sum_dyh * inv_d;
+        let m2 = sum_dyh_xhat * inv_d;
+        let dxr = d_x.row_mut(i);
+        for j in 0..d {
+            let xhat = (xr[j] - mean) * inv_sigma;
+            dxr[j] = (dyr[j] * gain[j] - m1 - xhat * m2) * inv_sigma;
+        }
+    }
+}
+
+/// Derivative of `kernels::gelu` (tanh form, same constants):
+/// `g'(z) = ½(1+tanh u) + ½·z·(1−tanh²u)·√(2/π)·(1+3·0.044715·z²)`.
+#[inline]
+pub fn gelu_grad(z: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    let u = SQRT_2_OVER_PI * (z + 0.044_715 * z * z * z);
+    let t = u.tanh();
+    0.5 * (1.0 + t)
+        + 0.5 * z * (1.0 - t * t) * SQRT_2_OVER_PI
+            * (1.0 + 3.0 * 0.044_715 * z * z)
+}
+
+/// VJP of the fused bias+GELU (`a = gelu(x + bias)`), given the
+/// recorded pre-activation `z_pre = x + bias`. Overwrites
+/// `d_pre = d_act ⊙ gelu'(z_pre)` (which is both `dx` and the per-row
+/// bias gradient); **accumulates** the column sums into `d_bias`.
+pub fn bias_gelu_backward(z_pre: &Tensor2, d_act: &Tensor2,
+                          d_pre: &mut Tensor2, d_bias: &mut [f32]) {
+    let (n, d) = (z_pre.rows, z_pre.cols);
+    assert_eq!((d_act.rows, d_act.cols), (n, d), "d_act shape");
+    assert_eq!((d_pre.rows, d_pre.cols), (n, d), "d_pre shape");
+    assert_eq!(d_bias.len(), d, "dbias width");
+    for i in 0..n {
+        let zr = z_pre.row(i);
+        let dar = d_act.row(i);
+        let dpr = d_pre.row_mut(i);
+        for j in 0..d {
+            let g = dar[j] * gelu_grad(zr[j]);
+            dpr[j] = g;
+            d_bias[j] += g;
+        }
+    }
+}
+
+/// VJP of exact softmax attention given the materialized probability
+/// matrix `s = softmax(scale·q·kᵀ)` (n×n) and upstream `d_out` (n×dh).
+/// Returns freshly-allocated `(dq, dk, dv)`.
+pub fn softmax_attention_backward(ctx: &KernelCtx, q: &Tensor2, k: &Tensor2,
+                                  v: &Tensor2, s: &Tensor2, scale: f32,
+                                  d_out: &Tensor2, ws: &mut Workspace)
+                                  -> (Tensor2, Tensor2, Tensor2) {
+    let (n, dh) = (q.rows, q.cols);
+    assert_eq!((k.rows, k.cols), (n, dh), "k shape");
+    assert_eq!((v.rows, v.cols), (n, dh), "v shape");
+    assert_eq!((s.rows, s.cols), (n, n), "s shape");
+    assert_eq!((d_out.rows, d_out.cols), (n, dh), "d_out shape");
+
+    // dv = Sᵀ · dO
+    let mut st = ws.take(n * n);
+    transpose_into(&s.data, &mut st, n, n);
+    let mut dv = Tensor2::zeros(n, dh);
+    gemm_into(ctx, &st, &d_out.data, &mut dv.data, n, n, dh);
+    ws.put(st);
+
+    // dS = dO · vᵀ
+    let mut vt = ws.take(dh * n);
+    transpose_into(&v.data, &mut vt, n, dh);
+    let mut ds = ws.take(n * n);
+    gemm_into(ctx, &d_out.data, &vt, &mut ds, n, dh, n);
+    ws.put(vt);
+
+    // softmax Jacobian, row-wise in place: dz = S ⊙ (dS − ⟨dS, S⟩_row)
+    for i in 0..n {
+        let srow = s.row(i);
+        let dsrow = &mut ds[i * n..(i + 1) * n];
+        let mut dot = 0.0f32;
+        for j in 0..n {
+            dot += dsrow[j] * srow[j];
+        }
+        for j in 0..n {
+            dsrow[j] = srow[j] * (dsrow[j] - dot);
+        }
+    }
+
+    // dq = scale · dz·k ; dk = scale · dzᵀ·q
+    let mut dq = Tensor2::zeros(n, dh);
+    gemm_into(ctx, &ds, &k.data, &mut dq.data, n, n, dh);
+    let mut dzt = ws.take(n * n);
+    transpose_into(&ds, &mut dzt, n, n);
+    let mut dk = Tensor2::zeros(n, dh);
+    gemm_into(ctx, &dzt, &q.data, &mut dk.data, n, n, dh);
+    ws.put(dzt);
+    ws.put(ds);
+    for x in dq.data.iter_mut() {
+        *x *= scale;
+    }
+    for x in dk.data.iter_mut() {
+        *x *= scale;
+    }
+    (dq, dk, dv)
+}
+
+/// Recorded residuals of one projected multi-head attention sublayer:
+/// per-head q/k/v, the materialized probability matrices, and the
+/// merged head concat feeding the output projection.
+pub struct MhaCache {
+    pub q: Vec<Tensor2>,
+    pub k: Vec<Tensor2>,
+    pub v: Vec<Tensor2>,
+    pub s: Vec<Tensor2>,
+    pub merged: Tensor2,
+}
+
+/// Accumulated gradients of one projected attention sublayer. Head-major
+/// layouts match [`Projections`](crate::model::Projections): `wq`/`wk`/
+/// `wv` are `n_heads` concatenated d×dh blocks, `wo` is d×d.
+pub struct MhaGrads {
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+}
+
+impl MhaGrads {
+    pub fn zeros(d: usize, n_heads: usize) -> MhaGrads {
+        let dh = d / n_heads;
+        MhaGrads {
+            wq: vec![0.0; n_heads * d * dh],
+            wk: vec![0.0; n_heads * d * dh],
+            wv: vec![0.0; n_heads * d * dh],
+            wo: vec![0.0; d * d],
+        }
+    }
+}
+
+/// Forward through the projection seam with recording: per head
+/// `q_h = x·Wq_h`, `k_h = x·Wk_h`, `v_h = x·Wv_h`,
+/// `S_h = softmax(scale·q_h·k_hᵀ)` (materialized — this is the
+/// residual the backward needs), `O_h = S_h·v_h`; heads concat into
+/// `merged`; `out = merged·Wo`. Numerically this is the same function
+/// `Projections::mha_batch` serves (flash attention is an exact
+/// softmax, just streamed), with the probabilities kept.
+#[allow(clippy::too_many_arguments)]
+pub fn mha_forward(ctx: &KernelCtx, x: &Tensor2, wq: &[f32], wk: &[f32],
+                   wv: &[f32], wo: &[f32], n_heads: usize,
+                   ws: &mut Workspace) -> (Tensor2, MhaCache) {
+    let (n, d) = (x.rows, x.cols);
+    assert_eq!(d % n_heads, 0, "d_model divisible by heads");
+    let dh = d / n_heads;
+    assert_eq!(wq.len(), n_heads * d * dh, "wq shape");
+    assert_eq!(wk.len(), n_heads * d * dh, "wk shape");
+    assert_eq!(wv.len(), n_heads * d * dh, "wv shape");
+    assert_eq!(wo.len(), d * d, "wo shape");
+    let scale = default_scale(dh);
+
+    let mut cache = MhaCache {
+        q: Vec::with_capacity(n_heads),
+        k: Vec::with_capacity(n_heads),
+        v: Vec::with_capacity(n_heads),
+        s: Vec::with_capacity(n_heads),
+        merged: Tensor2::zeros(n, d),
+    };
+    for h in 0..n_heads {
+        let wslice = h * d * dh..(h + 1) * d * dh;
+        let mut q = Tensor2::zeros(n, dh);
+        let mut k = Tensor2::zeros(n, dh);
+        let mut v = Tensor2::zeros(n, dh);
+        gemm_into(ctx, &x.data, &wq[wslice.clone()], &mut q.data, n, d, dh);
+        gemm_into(ctx, &x.data, &wk[wslice.clone()], &mut k.data, n, d, dh);
+        gemm_into(ctx, &x.data, &wv[wslice], &mut v.data, n, d, dh);
+        let s = softmax_scores(ctx, &q, &k, scale, ws);
+        let mut o = Tensor2::zeros(n, dh);
+        gemm_into(ctx, &s.data, &v.data, &mut o.data, n, n, dh);
+        for i in 0..n {
+            cache.merged.row_mut(i)[h * dh..(h + 1) * dh]
+                .copy_from_slice(o.row(i));
+        }
+        cache.q.push(q);
+        cache.k.push(k);
+        cache.v.push(v);
+        // softmax_scores hands out a ws-backed tensor; keep a trainer-
+        // owned copy so the arena stays balanced across the step
+        let s_owned = Tensor2 { rows: s.rows, cols: s.cols, data: s.data.clone() };
+        ws.put(s.data);
+        cache.s.push(s_owned);
+    }
+    let mut out = Tensor2::zeros(n, d);
+    gemm_into(ctx, &cache.merged.data, wo, &mut out.data, n, d, d);
+    (out, cache)
+}
+
+/// Backward through the projection seam. **Accumulates** into `grads`;
+/// returns `d_x` (the gradient w.r.t. the post-LN input `x`).
+#[allow(clippy::too_many_arguments)]
+pub fn mha_backward(ctx: &KernelCtx, x: &Tensor2, wq: &[f32], wk: &[f32],
+                    wv: &[f32], wo: &[f32], n_heads: usize, cache: &MhaCache,
+                    d_out: &Tensor2, grads: &mut MhaGrads,
+                    ws: &mut Workspace) -> Tensor2 {
+    let (n, d) = (x.rows, x.cols);
+    let dh = d / n_heads;
+    let scale = default_scale(dh);
+    assert_eq!((d_out.rows, d_out.cols), (n, d), "d_out shape");
+
+    // out = merged·Wo  ⇒  d_merged = dO·Woᵀ, dWo += mergedᵀ·dO
+    let mut d_merged = Tensor2::zeros(n, d);
+    gemm_backward_acc(ctx, &cache.merged.data, wo, &d_out.data, n, d, d,
+                      &mut d_merged.data, &mut grads.wo, ws);
+
+    let mut d_x = Tensor2::zeros(n, d);
+    for h in 0..n_heads {
+        let mut d_oh = Tensor2::zeros(n, dh);
+        for i in 0..n {
+            d_oh.row_mut(i)
+                .copy_from_slice(&d_merged.row(i)[h * dh..(h + 1) * dh]);
+        }
+        let (dq, dk, dv) = softmax_attention_backward(
+            ctx, &cache.q[h], &cache.k[h], &cache.v[h], &cache.s[h], scale,
+            &d_oh, ws);
+        // q_h = x·Wq_h (etc.) ⇒ dWq_h += xᵀ·dq, d_x += dq·Wq_hᵀ
+        let wslice = h * d * dh..(h + 1) * d * dh;
+        gemm_backward_acc(ctx, &x.data, &wq[wslice.clone()], &dq.data, n, d,
+                          dh, &mut d_x.data, &mut grads.wq[wslice.clone()], ws);
+        gemm_backward_acc(ctx, &x.data, &wk[wslice.clone()], &dk.data, n, d,
+                          dh, &mut d_x.data, &mut grads.wk[wslice.clone()], ws);
+        gemm_backward_acc(ctx, &x.data, &wv[wslice.clone()], &dv.data, n, d,
+                          dh, &mut d_x.data, &mut grads.wv[wslice], ws);
+    }
+    d_x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    #[test]
+    fn gemm_backward_matches_hand_rolled_small() {
+        // C = A·B with A 2×3, B 3×2; dC = ones ⇒ dA = 1·Bᵀ, dB = Aᵀ·1
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.5f32, -1.0, 2.0, 0.0, 1.0, 3.0];
+        let d_c = [1.0f32; 4];
+        let mut d_a = vec![0.0f32; 6];
+        let mut d_b = vec![0.0f32; 6];
+        let ctx = KernelCtx::sequential();
+        let mut ws = Workspace::new();
+        gemm_backward_acc(&ctx, &a, &b, &d_c, 2, 3, 2, &mut d_a, &mut d_b,
+                          &mut ws);
+        // dA rows are both [b00+b01, b10+b11, b20+b21]
+        let row = [-0.5f32, 2.0, 4.0];
+        assert_eq!(&d_a[..3], &row);
+        assert_eq!(&d_a[3..], &row);
+        // dB rows: col sums of A broadcast over n
+        assert_eq!(d_b, vec![5.0, 5.0, 7.0, 7.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn layernorm_backward_of_uniform_gain_kills_constant_shifts() {
+        // LN is invariant to adding a constant to a row, so dx must sum
+        // to ~0 along each row
+        let mut rng = Rng::new(11);
+        let x = Tensor2::randn(&mut rng, 4, 16, 1.0);
+        let d_y = Tensor2::randn(&mut rng, 4, 16, 1.0);
+        let gain = vec![1.0f32; 16];
+        let mut d_x = Tensor2::zeros(4, 16);
+        let mut d_gain = vec![0.0f32; 16];
+        let mut d_bias = vec![0.0f32; 16];
+        layernorm_backward(&x, &gain, 1e-5, &d_y, &mut d_x, &mut d_gain,
+                           &mut d_bias);
+        for i in 0..4 {
+            let s: f32 = d_x.row(i).iter().sum();
+            assert!(s.abs() < 1e-4, "row {i} dx sum {s}");
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &z in &[-3.0f32, -1.0, -0.1, 0.0, 0.5, 2.0] {
+            let h = 1e-3f32;
+            let fd = (crate::kernels::gelu(z + h) - crate::kernels::gelu(z - h))
+                / (2.0 * h);
+            assert!((gelu_grad(z) - fd).abs() < 1e-3,
+                    "z={z}: {} vs {fd}", gelu_grad(z));
+        }
+    }
+
+    #[test]
+    fn attention_backward_probability_shift_invariance() {
+        // rows of S sum to 1, so dk summed over keys of a rank-1
+        // d_out... cheapest sanity: shapes + finiteness + dv row sums
+        let mut rng = Rng::new(12);
+        let q = Tensor2::randn(&mut rng, 8, 4, 1.0);
+        let k = Tensor2::randn(&mut rng, 8, 4, 1.0);
+        let v = Tensor2::randn(&mut rng, 8, 4, 1.0);
+        let d_out = Tensor2::randn(&mut rng, 8, 4, 1.0);
+        let ctx = KernelCtx::sequential();
+        let mut ws = Workspace::new();
+        let s = softmax_scores(&ctx, &q, &k, default_scale(4), &mut ws);
+        let s = Tensor2 { rows: s.rows, cols: s.cols, data: s.data.clone() };
+        let (dq, dk, dv) = softmax_attention_backward(
+            &ctx, &q, &k, &v, &s, default_scale(4), &d_out, &mut ws);
+        for t in [&dq, &dk, &dv] {
+            assert_eq!((t.rows, t.cols), (8, 4));
+            assert!(t.data.iter().all(|x| x.is_finite()));
+        }
+        // Σ_i dv[i] must equal Σ_i d_out[i] (columns of S sum over
+        // queries weight d_out rows; total mass is preserved because
+        // each S row sums to 1: Σ_j dv[j] = Σ_j Σ_i S_ij d_out[i]
+        //                                  = Σ_i d_out[i])
+        for c in 0..4 {
+            let got: f32 = (0..8).map(|r| dv.row(r)[c]).sum();
+            let want: f32 = (0..8).map(|r| d_out.row(r)[c]).sum();
+            assert!((got - want).abs() < 1e-4, "col {c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mha_roundtrip_shapes_and_determinism_across_thread_counts() {
+        let (n, d, heads) = (16, 8, 2);
+        let dh = d / heads;
+        let mut rng = Rng::new(13);
+        let x = Tensor2::randn(&mut rng, n, d, 1.0);
+        let wq = Tensor2::randn(&mut rng, heads * d, dh, 0.3).data;
+        let wk = Tensor2::randn(&mut rng, heads * d, dh, 0.3).data;
+        let wv = Tensor2::randn(&mut rng, heads * d, dh, 0.3).data;
+        let wo = Tensor2::randn(&mut rng, d, d, 0.3).data;
+        let d_out = Tensor2::randn(&mut rng, n, d, 1.0);
+
+        let run = |ctx: &KernelCtx| {
+            let mut ws = Workspace::new();
+            let (out, cache) =
+                mha_forward(ctx, &x, &wq, &wk, &wv, &wo, heads, &mut ws);
+            let mut grads = MhaGrads::zeros(d, heads);
+            let d_x = mha_backward(ctx, &x, &wq, &wk, &wv, &wo, heads,
+                                   &cache, &d_out, &mut grads, &mut ws);
+            (out, d_x, grads)
+        };
+        let (o1, dx1, g1) = run(&KernelCtx::sequential());
+        let (o2, dx2, g2) = run(&KernelCtx::global());
+        assert_eq!(o1.data, o2.data, "forward thread determinism");
+        assert_eq!(dx1.data, dx2.data, "d_x thread determinism");
+        assert_eq!(g1.wq, g2.wq);
+        assert_eq!(g1.wo, g2.wo);
+        assert_eq!((o1.rows, o1.cols), (n, d));
+    }
+}

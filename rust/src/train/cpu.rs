@@ -1,0 +1,700 @@
+//! Deterministic in-repo CPU trainer.
+//!
+//! Trains the real serving model — [`EncoderStack`] blocks with Q/K/V/
+//! output projections, `full` (exact softmax) attention — on the
+//! synthetic MLM task from [`crate::text`], entirely on the CPU kernel
+//! core, and hands back a stack that saves through
+//! [`crate::model::checkpoint`] and serves through `weights`/`init=load`
+//! unchanged.
+//!
+//! # Shape of the run
+//!
+//! * **Data** — corpus, tokenizer, batch sampling and masking are all
+//!   drawn once from `cfg.seed` ([`CorpusGenerator`] → [`Tokenizer`] →
+//!   [`make_mlm_batch`]), producing a *fixed* list of
+//!   `steps_per_epoch` batches that every epoch replays in order. The
+//!   data stream is a pure function of the config.
+//! * **Model** — the embedding table is the frozen seeded table the
+//!   serving model uses ([`CpuModel::embed_sequence`]); block 0 is the
+//!   weightless seed attention block; only the full blocks' weights
+//!   (LN gains/biases, FFN, projections) train. The MLM head is *tied*
+//!   to the frozen embedding: `logits = X·Eᵀ`, masked cross-entropy
+//!   averaged over the batch's masked positions. A checkpoint plus
+//!   `cfg.seed` therefore reproduces the trained function exactly.
+//! * **Backward** — hand-derived VJPs from [`super::backward`],
+//!   recording residuals on the way forward (post-LN activations,
+//!   per-head attention probabilities, FFN pre-activations). Backprop
+//!   stops at the seed block: it has no weights and its input is the
+//!   frozen embedding.
+//! * **Optimizer** — seeded SGD or bias-corrected Adam, applied
+//!   tensor-by-tensor in a fixed order, after a global-norm clip.
+//!
+//! # Determinism contract
+//!
+//! Two runs with the same config are bitwise identical — including
+//! across `workers` counts — because every GEMM-shaped op rides the
+//! thread-count-deterministic kernel core, every reduction here (loss
+//! sums, bias column sums, grad accumulation, the norm clip) runs
+//! sequentially in index order, and batches replay in a fixed order.
+//! `tests/train_e2e.rs` pins this on whole checkpoint files and loss
+//! curves for `workers ∈ {1, 4}`.
+
+use crate::attention::{default_scale, Tensor2};
+use crate::config::Variant;
+use crate::coordinator::{CpuModel, CpuModelConfig};
+use crate::kernels::{
+    flash_attention, gelu, gemm_into, layernorm, transpose_into,
+    BatchedVariant, KernelCtx, Workspace,
+};
+use crate::minirt::ThreadPool;
+use crate::model::{EncoderLayer, EncoderStack, LN_EPS};
+use crate::rngx::Rng;
+use crate::text::{make_mlm_batch, CorpusGenerator, MlmBatch, Tokenizer};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::backward::{
+    accumulate, bias_gelu_backward, gemm_backward_acc, layernorm_backward,
+    mha_backward, mha_forward, MhaCache, MhaGrads,
+};
+
+/// Gradient steps larger than this global L2 norm are rescaled onto the
+/// sphere — cheap insurance for the first steps of a freshly seeded
+/// stack. Deterministic: one sequential reduction over all gradient
+/// tensors in block/field order.
+const GRAD_CLIP: f32 = 5.0;
+
+/// Optimizer choice for [`CpuTrainConfig`]. Both are elementwise and
+/// order-fixed, so the choice never affects determinism — only the
+/// loss trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    /// Adam, β₁ = 0.9, β₂ = 0.999, ε = 1e-8, bias-corrected.
+    Adam,
+}
+
+impl OptimizerKind {
+    /// Parse a CLI/config token; unknown tokens are `None` so callers
+    /// fail closed.
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s {
+            "sgd" => Some(OptimizerKind::Sgd),
+            "adam" => Some(OptimizerKind::Adam),
+            _ => None,
+        }
+    }
+
+    pub fn token(&self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+}
+
+/// Configuration of one deterministic CPU training run. Everything the
+/// run computes — corpus, masks, weights, loss curve, checkpoint bytes
+/// — is a pure function of this struct.
+#[derive(Clone, Debug)]
+pub struct CpuTrainConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub ffn_mult: usize,
+    /// Stack depth *including* the weightless seed block; must be ≥ 2
+    /// so there is at least one trainable block.
+    pub layers: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub steps_per_epoch: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub optimizer: OptimizerKind,
+    pub seed: u64,
+    /// Synthetic corpus size (sentences).
+    pub corpus_lines: usize,
+    /// Kernel lanes for the GEMM-shaped work. Any value produces
+    /// bitwise-identical results; 1 runs fully sequential.
+    pub workers: usize,
+}
+
+impl Default for CpuTrainConfig {
+    fn default() -> Self {
+        // d_model / n_heads / vocab / seed match the serving defaults
+        // (`CpuModelConfig::default`): `ExecBackend::cpu_from_config`
+        // only exposes layers / ffn_mult / projections as knobs, so a
+        // checkpoint trained at these dims is exactly what
+        // `weights`/`init = load` serves.
+        CpuTrainConfig {
+            d_model: 64,
+            n_heads: 4,
+            ffn_mult: 2,
+            layers: 3,
+            vocab: 2048,
+            seq: 48,
+            batch: 8,
+            steps_per_epoch: 25,
+            epochs: 3,
+            lr: 5e-3,
+            optimizer: OptimizerKind::Adam,
+            seed: 42,
+            corpus_lines: 400,
+            workers: 1,
+        }
+    }
+}
+
+impl CpuTrainConfig {
+    /// The serving-model config this run trains weights for: same
+    /// dims, same seed (→ same frozen embedding), projections on.
+    /// `CpuModel::with_checkpoint` with this config accepts the saved
+    /// stack directly.
+    pub fn model_config(&self) -> CpuModelConfig {
+        CpuModelConfig {
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            vocab: self.vocab,
+            seed: self.seed,
+            layers: self.layers,
+            ffn_mult: self.ffn_mult,
+            projections: true,
+            ..Default::default()
+        }
+    }
+
+    fn validate(&self) {
+        assert!(self.layers >= 2,
+                "training needs layers >= 2 (layer 0 is the weightless \
+                 seed block)");
+        assert!(self.n_heads >= 1 && self.d_model % self.n_heads == 0,
+                "d_model {} must split into {} heads",
+                self.d_model, self.n_heads);
+        assert!(self.d_model % 2 == 0, "sinusoid embedding needs even d_model");
+        assert!(self.vocab > 8, "tokenizer needs vocab > 8");
+        assert!(self.seq >= 8 && self.batch >= 1, "degenerate batch shape");
+        assert!(self.steps_per_epoch >= 1 && self.epochs >= 1,
+                "empty training run");
+        assert!(self.lr > 0.0 && self.lr.is_finite(), "bad learning rate");
+    }
+}
+
+/// Loss curve + throughput of one run. The curves (not the timings)
+/// are part of the determinism contract.
+#[derive(Clone, Debug)]
+pub struct CpuTrainReport {
+    /// Mean masked-CE per optimizer step, in step order.
+    pub step_losses: Vec<f32>,
+    /// Mean of `step_losses` per epoch.
+    pub epoch_losses: Vec<f32>,
+    pub initial_loss: f32,
+    pub final_loss: f32,
+    pub total_time: Duration,
+    pub tokens_per_sec: f64,
+}
+
+impl CpuTrainReport {
+    /// Render the per-epoch curve as an ASCII table.
+    pub fn render(&self) -> String {
+        let mut t = crate::benchkit::Table::new(&["epoch", "mean loss"]);
+        for (e, loss) in self.epoch_losses.iter().enumerate() {
+            t.row(&[(e + 1).to_string(), format!("{loss:.4}")]);
+        }
+        format!(
+            "{}\nstep loss {:.4} -> {:.4} ({} steps, {:.1} tok/s, total {})\n",
+            t.render(),
+            self.initial_loss,
+            self.final_loss,
+            self.step_losses.len(),
+            self.tokens_per_sec,
+            crate::benchkit::fmt_duration(self.total_time),
+        )
+    }
+
+    /// True iff the per-epoch mean loss strictly decreases — the
+    /// train_tiny acceptance gate.
+    pub fn epoch_loss_strictly_decreasing(&self) -> bool {
+        self.epoch_losses.windows(2).all(|w| w[1] < w[0])
+    }
+}
+
+/// A finished run: the trained stack (save it with
+/// [`crate::model::checkpoint::save`]), the serving config it belongs
+/// to, and the loss curve.
+pub struct CpuTrainOutcome {
+    pub stack: EncoderStack,
+    pub model_config: CpuModelConfig,
+    pub report: CpuTrainReport,
+}
+
+/// One block's gradient accumulators, field layout mirroring
+/// [`EncoderLayer`]. Also reused as the Adam moment buffers (same
+/// shapes, same fixed iteration order).
+struct BlockGrads {
+    ln1_gain: Vec<f32>,
+    ln1_bias: Vec<f32>,
+    ln2_gain: Vec<f32>,
+    ln2_bias: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+    mha: MhaGrads,
+}
+
+impl BlockGrads {
+    fn zeros(d: usize, dff: usize, n_heads: usize) -> BlockGrads {
+        BlockGrads {
+            ln1_gain: vec![0.0; d],
+            ln1_bias: vec![0.0; d],
+            ln2_gain: vec![0.0; d],
+            ln2_bias: vec![0.0; d],
+            w1: vec![0.0; d * dff],
+            b1: vec![0.0; dff],
+            w2: vec![0.0; dff * d],
+            b2: vec![0.0; d],
+            mha: MhaGrads::zeros(d, n_heads),
+        }
+    }
+
+    /// The fixed field order every reduction walks.
+    fn tensors(&self) -> [&Vec<f32>; 12] {
+        [&self.ln1_gain, &self.ln1_bias, &self.ln2_gain, &self.ln2_bias,
+         &self.w1, &self.b1, &self.w2, &self.b2,
+         &self.mha.wq, &self.mha.wk, &self.mha.wv, &self.mha.wo]
+    }
+}
+
+/// Residuals recorded by one block's forward pass.
+struct BlockCache {
+    x_in: Tensor2,
+    ln1: Tensor2,
+    mha: MhaCache,
+    x_mid: Tensor2,
+    ln2: Tensor2,
+    /// FFN pre-activation `ln2·W1 + b1`.
+    z_pre: Tensor2,
+    /// `gelu(z_pre)`.
+    a1: Tensor2,
+}
+
+/// Clone a workspace-backed tensor into a trainer-owned one and return
+/// the arena buffer, keeping take/put balanced across the step.
+fn detach(t: Tensor2, ws: &mut Workspace) -> Tensor2 {
+    let owned = Tensor2 { rows: t.rows, cols: t.cols, data: t.data.clone() };
+    ws.put(t.data);
+    owned
+}
+
+fn head_slice(x: &Tensor2, h: usize, dh: usize) -> Tensor2 {
+    let mut out = Tensor2::zeros(x.rows, dh);
+    for i in 0..x.rows {
+        out.row_mut(i).copy_from_slice(&x.row(i)[h * dh..(h + 1) * dh]);
+    }
+    out
+}
+
+/// `out = a + b`, elementwise over equal-shape tensors.
+fn add(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+    let mut out = Tensor2::zeros(a.rows, a.cols);
+    for (o, (x, y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+        *o = x + y;
+    }
+    out
+}
+
+/// The weightless seed block: per-head exact self-attention on raw
+/// column slices, heads concatenated, output *replacing* the input —
+/// the same function `EncoderStack::forward_batch` runs at block 0
+/// with the `full` operator.
+fn seed_block_forward(ctx: &KernelCtx, x: &Tensor2, n_heads: usize,
+                      ws: &mut Workspace) -> Tensor2 {
+    let dh = x.cols / n_heads;
+    let mut out = Tensor2::zeros(x.rows, x.cols);
+    for h in 0..n_heads {
+        let xs = head_slice(x, h, dh);
+        let oh = flash_attention(ctx, &xs, &xs, &xs, default_scale(dh), ws);
+        for i in 0..x.rows {
+            out.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(oh.row(i));
+        }
+        ws.put(oh.data);
+    }
+    out
+}
+
+/// One full pre-LN block, recording:
+/// `x += MHA(LN₁(x)); x += FFN(LN₂(x))`.
+fn block_forward(ctx: &KernelCtx, blk: &EncoderLayer, x_in: Tensor2,
+                 ws: &mut Workspace) -> (Tensor2, BlockCache) {
+    let (n, d) = (x_in.rows, x_in.cols);
+    let dff = blk.b1.len();
+    let proj = blk.proj.as_ref().expect("trainer requires projected blocks");
+    // attention sublayer
+    let ln1 = detach(layernorm(ctx, &x_in, &blk.ln1_gain, &blk.ln1_bias,
+                               LN_EPS, ws), ws);
+    let (att, mha) = mha_forward(ctx, &ln1, &proj.wq, &proj.wk, &proj.wv,
+                                 &proj.wo, proj.n_heads(), ws);
+    let x_mid = add(&x_in, &att);
+    // FFN sublayer
+    let ln2 = detach(layernorm(ctx, &x_mid, &blk.ln2_gain, &blk.ln2_bias,
+                               LN_EPS, ws), ws);
+    let mut z_pre = Tensor2::zeros(n, dff);
+    gemm_into(ctx, &ln2.data, &blk.w1, &mut z_pre.data, n, d, dff);
+    for i in 0..n {
+        for (v, &b) in z_pre.row_mut(i).iter_mut().zip(&blk.b1) {
+            *v += b;
+        }
+    }
+    let mut a1 = Tensor2::zeros(n, dff);
+    for (a, &z) in a1.data.iter_mut().zip(&z_pre.data) {
+        *a = gelu(z);
+    }
+    let mut f2 = Tensor2::zeros(n, d);
+    gemm_into(ctx, &a1.data, &blk.w2, &mut f2.data, n, dff, d);
+    let mut x_out = add(&x_mid, &f2);
+    for i in 0..n {
+        for (v, &b) in x_out.row_mut(i).iter_mut().zip(&blk.b2) {
+            *v += b;
+        }
+    }
+    let cache = BlockCache { x_in, ln1, mha, x_mid, ln2, z_pre, a1 };
+    (x_out, cache)
+}
+
+/// Backward through one block given `d_out` at its output.
+/// Accumulates into `g`; returns the gradient at the block input.
+fn block_backward(ctx: &KernelCtx, blk: &EncoderLayer, cache: &BlockCache,
+                  d_out: &Tensor2, g: &mut BlockGrads,
+                  ws: &mut Workspace) -> Tensor2 {
+    let (n, d) = (cache.x_in.rows, cache.x_in.cols);
+    let dff = cache.z_pre.cols;
+    let proj = blk.proj.as_ref().expect("trainer requires projected blocks");
+
+    // x_out = x_mid + a1·W2 + b2
+    for i in 0..n {
+        accumulate(&mut g.b2, d_out.row(i));
+    }
+    let mut d_a1 = Tensor2::zeros(n, dff);
+    gemm_backward_acc(ctx, &cache.a1.data, &blk.w2, &d_out.data, n, dff, d,
+                      &mut d_a1.data, &mut g.w2, ws);
+    let mut d_z = Tensor2::zeros(n, dff);
+    bias_gelu_backward(&cache.z_pre, &d_a1, &mut d_z, &mut g.b1);
+    let mut d_ln2 = Tensor2::zeros(n, d);
+    gemm_backward_acc(ctx, &cache.ln2.data, &blk.w1, &d_z.data, n, d, dff,
+                      &mut d_ln2.data, &mut g.w1, ws);
+    let mut d_from_ln2 = Tensor2::zeros(n, d);
+    layernorm_backward(&cache.x_mid, &blk.ln2_gain, LN_EPS, &d_ln2,
+                       &mut d_from_ln2, &mut g.ln2_gain, &mut g.ln2_bias);
+    // residual seam: x_out depends on x_mid directly and through the FFN
+    let d_x_mid = add(d_out, &d_from_ln2);
+
+    // x_mid = x_in + MHA(LN₁(x_in))
+    let d_ln1 = mha_backward(ctx, &cache.ln1, &proj.wq, &proj.wk, &proj.wv,
+                             &proj.wo, proj.n_heads(), &cache.mha, &d_x_mid,
+                             &mut g.mha, ws);
+    let mut d_from_ln1 = Tensor2::zeros(n, d);
+    layernorm_backward(&cache.x_in, &blk.ln1_gain, LN_EPS, &d_ln1,
+                       &mut d_from_ln1, &mut g.ln1_gain, &mut g.ln1_bias);
+    add(&d_x_mid, &d_from_ln1)
+}
+
+/// Tied-embedding MLM head for one sequence: masked-position logits
+/// against the frozen table, stable row softmax, cross-entropy summed
+/// (unscaled return) and `d_x` rows filled with
+/// `(p − onehot)·E / total_masked`.
+#[allow(clippy::too_many_arguments)]
+fn mlm_head(ctx: &KernelCtx, x: &Tensor2, embed: &[f32], et: &[f32],
+            vocab: usize, targets: &[i32], loss_mask: &[f32],
+            inv_total_masked: f32, d_x: &mut Tensor2,
+            ws: &mut Workspace) -> f32 {
+    let (n, d) = (x.rows, x.cols);
+    let masked: Vec<usize> = (0..n).filter(|&i| loss_mask[i] > 0.0).collect();
+    if masked.is_empty() {
+        return 0.0;
+    }
+    let nm = masked.len();
+    let mut xm = ws.take(nm * d);
+    for (r, &i) in masked.iter().enumerate() {
+        xm[r * d..(r + 1) * d].copy_from_slice(x.row(i));
+    }
+    let mut logits = ws.take(nm * vocab);
+    gemm_into(ctx, &xm, et, &mut logits, nm, d, vocab);
+    let mut loss = 0.0f32;
+    for (r, &i) in masked.iter().enumerate() {
+        let row = &mut logits[r * vocab..(r + 1) * vocab];
+        let target = targets[i] as usize;
+        debug_assert!(target < vocab, "target id out of vocab");
+        let mut max = f32::NEG_INFINITY;
+        for &v in row.iter() {
+            max = max.max(v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv_sum = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv_sum;
+        }
+        loss -= row[target].max(f32::MIN_POSITIVE).ln();
+        // row now holds p; turn it into scaled dlogits in place
+        row[target] -= 1.0;
+        for v in row.iter_mut() {
+            *v *= inv_total_masked;
+        }
+    }
+    // dX_masked = dlogits · E, scattered back onto the masked rows
+    let mut dxm = ws.take(nm * d);
+    gemm_into(ctx, &logits, embed, &mut dxm, nm, vocab, d);
+    for (r, &i) in masked.iter().enumerate() {
+        d_x.row_mut(i).copy_from_slice(&dxm[r * d..(r + 1) * d]);
+    }
+    ws.put(dxm);
+    ws.put(logits);
+    ws.put(xm);
+    loss
+}
+
+fn update_tensor(kind: OptimizerKind, lr_t: f32, clip: f32, p: &mut [f32],
+                 g: &[f32], m: &mut [f32], v: &mut [f32]) {
+    match kind {
+        OptimizerKind::Sgd => {
+            for (pv, &gv) in p.iter_mut().zip(g) {
+                *pv -= lr_t * (gv * clip);
+            }
+        }
+        OptimizerKind::Adam => {
+            const B1: f32 = 0.9;
+            const B2: f32 = 0.999;
+            const EPS: f32 = 1e-8;
+            for j in 0..p.len() {
+                let gv = g[j] * clip;
+                m[j] = B1 * m[j] + (1.0 - B1) * gv;
+                v[j] = B2 * v[j] + (1.0 - B2) * gv * gv;
+                p[j] -= lr_t * m[j] / (v[j].sqrt() + EPS);
+            }
+        }
+    }
+}
+
+/// Global-norm clip over all blocks, then one optimizer step per
+/// tensor in fixed block/field order.
+fn clip_and_apply(stack: &mut EncoderStack, grads: &[BlockGrads],
+                  adam_m: &mut [BlockGrads], adam_v: &mut [BlockGrads],
+                  kind: OptimizerKind, lr: f32, t_step: i32) {
+    let mut sq = 0.0f32;
+    for g in grads {
+        for t in g.tensors() {
+            for &v in t.iter() {
+                sq += v * v;
+            }
+        }
+    }
+    let norm = sq.sqrt();
+    let clip = if norm > GRAD_CLIP { GRAD_CLIP / norm } else { 1.0 };
+    let lr_t = match kind {
+        OptimizerKind::Sgd => lr,
+        // fold Adam's bias correction into the step size
+        OptimizerKind::Adam => {
+            lr * (1.0 - 0.999f32.powi(t_step)).sqrt()
+                / (1.0 - 0.9f32.powi(t_step))
+        }
+    };
+    for (bi, blk) in stack.blocks_mut().iter_mut().enumerate() {
+        let g = &grads[bi];
+        let (m, v) = (&mut adam_m[bi], &mut adam_v[bi]);
+        update_tensor(kind, lr_t, clip, &mut blk.ln1_gain, &g.ln1_gain,
+                      &mut m.ln1_gain, &mut v.ln1_gain);
+        update_tensor(kind, lr_t, clip, &mut blk.ln1_bias, &g.ln1_bias,
+                      &mut m.ln1_bias, &mut v.ln1_bias);
+        update_tensor(kind, lr_t, clip, &mut blk.ln2_gain, &g.ln2_gain,
+                      &mut m.ln2_gain, &mut v.ln2_gain);
+        update_tensor(kind, lr_t, clip, &mut blk.ln2_bias, &g.ln2_bias,
+                      &mut m.ln2_bias, &mut v.ln2_bias);
+        update_tensor(kind, lr_t, clip, &mut blk.w1, &g.w1, &mut m.w1,
+                      &mut v.w1);
+        update_tensor(kind, lr_t, clip, &mut blk.b1, &g.b1, &mut m.b1,
+                      &mut v.b1);
+        update_tensor(kind, lr_t, clip, &mut blk.w2, &g.w2, &mut m.w2,
+                      &mut v.w2);
+        update_tensor(kind, lr_t, clip, &mut blk.b2, &g.b2, &mut m.b2,
+                      &mut v.b2);
+        let proj = blk.proj.as_mut().expect("projected trainer stack");
+        update_tensor(kind, lr_t, clip, &mut proj.wq, &g.mha.wq,
+                      &mut m.mha.wq, &mut v.mha.wq);
+        update_tensor(kind, lr_t, clip, &mut proj.wk, &g.mha.wk,
+                      &mut m.mha.wk, &mut v.mha.wk);
+        update_tensor(kind, lr_t, clip, &mut proj.wv, &g.mha.wv,
+                      &mut m.mha.wv, &mut v.mha.wv);
+        update_tensor(kind, lr_t, clip, &mut proj.wo, &g.mha.wo,
+                      &mut m.mha.wo, &mut v.mha.wo);
+    }
+}
+
+/// Run one deterministic CPU training job. Panics on invalid configs
+/// (this is an offline tool, not a serving path).
+pub fn train_cpu(cfg: &CpuTrainConfig) -> CpuTrainOutcome {
+    cfg.validate();
+    let (d, heads, layers) = (cfg.d_model, cfg.n_heads, cfg.layers);
+    let dff = d * cfg.ffn_mult;
+    let mcfg = cfg.model_config();
+    let model = CpuModel::new(mcfg, Variant::Full);
+    let mut stack = EncoderStack::new_mixed(
+        vec![BatchedVariant::Full; layers], d, heads, cfg.ffn_mult, cfg.seed,
+        true);
+    let ctx = if cfg.workers <= 1 {
+        KernelCtx::sequential()
+    } else {
+        KernelCtx::with_pool(Arc::new(ThreadPool::new(cfg.workers - 1)))
+    };
+    let mut ws = Workspace::new();
+
+    // fixed data stream: corpus → tokenizer → pre-drawn batches+masks,
+    // replayed in order every epoch
+    let mut gen = CorpusGenerator::new(
+        cfg.seed, cfg.vocab.saturating_sub(64).max(64), 4);
+    let corpus = gen.corpus(cfg.corpus_lines, cfg.seq / 2, cfg.seq);
+    let tok = Tokenizer::fit(&corpus, cfg.vocab);
+    let encoded: Vec<Vec<i32>> =
+        corpus.iter().map(|l| tok.encode(l, cfg.seq)).collect();
+    let mut rng = Rng::new(cfg.seed ^ 0xA5A5);
+    let batches: Vec<MlmBatch> = (0..cfg.steps_per_epoch)
+        .map(|_| {
+            let rows: Vec<Vec<i32>> = (0..cfg.batch)
+                .map(|_| encoded[rng.below(encoded.len() as u64) as usize]
+                    .clone())
+                .collect();
+            make_mlm_batch(&mut rng, &rows, cfg.vocab)
+        })
+        .collect();
+
+    // frozen tied head: E and Eᵀ
+    let embed = model.embed_table().to_vec();
+    let mut et = vec![0.0f32; d * cfg.vocab];
+    transpose_into(&embed, &mut et, cfg.vocab, d);
+
+    let n_blocks = layers - 1;
+    let mut adam_m: Vec<BlockGrads> =
+        (0..n_blocks).map(|_| BlockGrads::zeros(d, dff, heads)).collect();
+    let mut adam_v: Vec<BlockGrads> =
+        (0..n_blocks).map(|_| BlockGrads::zeros(d, dff, heads)).collect();
+
+    let mut step_losses = Vec::with_capacity(cfg.epochs * cfg.steps_per_epoch);
+    let mut epoch_losses = Vec::with_capacity(cfg.epochs);
+    let t0 = Instant::now();
+    let mut t_step = 0i32;
+    for _epoch in 0..cfg.epochs {
+        let mut epoch_sum = 0.0f32;
+        for mlm in &batches {
+            t_step += 1;
+            let total_masked: f32 = mlm.loss_mask.iter().sum();
+            let mut loss = 0.0f32;
+            if total_masked > 0.0 {
+                let inv_total = 1.0 / total_masked;
+                let mut grads: Vec<BlockGrads> = (0..n_blocks)
+                    .map(|_| BlockGrads::zeros(d, dff, heads))
+                    .collect();
+                // sequences run in batch order; gradient accumulation
+                // order is therefore fixed
+                for b in 0..mlm.batch {
+                    let row = b * mlm.seq..(b + 1) * mlm.seq;
+                    let x0 = model.embed_sequence(&mlm.tokens[row.clone()],
+                                                  mlm.seq);
+                    let x1 = seed_block_forward(&ctx, &x0, heads, &mut ws);
+                    let mut caches = Vec::with_capacity(n_blocks);
+                    let mut x = x1;
+                    for blk in stack.blocks() {
+                        let (x_out, cache) =
+                            block_forward(&ctx, blk, x, &mut ws);
+                        caches.push(cache);
+                        x = x_out;
+                    }
+                    let mut d_x = Tensor2::zeros(mlm.seq, d);
+                    loss += mlm_head(&ctx, &x, &embed, &et, cfg.vocab,
+                                     &mlm.targets[row.clone()],
+                                     &mlm.loss_mask[row], inv_total,
+                                     &mut d_x, &mut ws);
+                    for bi in (0..n_blocks).rev() {
+                        d_x = block_backward(&ctx, &stack.blocks()[bi],
+                                             &caches[bi], &d_x,
+                                             &mut grads[bi], &mut ws);
+                    }
+                    // d_x at the seed-block boundary is discarded:
+                    // block 0 is weightless, its input frozen
+                }
+                loss *= inv_total;
+                clip_and_apply(&mut stack, &grads, &mut adam_m, &mut adam_v,
+                               cfg.optimizer, cfg.lr, t_step);
+            }
+            step_losses.push(loss);
+            epoch_sum += loss;
+        }
+        epoch_losses.push(epoch_sum / cfg.steps_per_epoch as f32);
+    }
+    let total_time = t0.elapsed();
+    let tokens = (cfg.epochs * cfg.steps_per_epoch * cfg.batch * cfg.seq) as f64;
+    let report = CpuTrainReport {
+        initial_loss: step_losses.first().copied().unwrap_or(f32::NAN),
+        final_loss: step_losses.last().copied().unwrap_or(f32::NAN),
+        step_losses,
+        epoch_losses,
+        total_time,
+        tokens_per_sec: tokens / total_time.as_secs_f64().max(1e-9),
+    };
+    CpuTrainOutcome { stack, model_config: mcfg, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CpuTrainConfig {
+        CpuTrainConfig {
+            d_model: 16,
+            n_heads: 2,
+            ffn_mult: 2,
+            layers: 2,
+            vocab: 96,
+            seq: 16,
+            batch: 2,
+            steps_per_epoch: 2,
+            epochs: 2,
+            corpus_lines: 60,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tiny_run_losses_finite_and_weights_move() {
+        let out = train_cpu(&tiny());
+        assert!(out.report.step_losses.iter().all(|l| l.is_finite()));
+        assert_eq!(out.report.step_losses.len(), 4);
+        assert_eq!(out.report.epoch_losses.len(), 2);
+        // training must move the weights off the seeded init
+        let seeded = EncoderStack::new_mixed(
+            vec![BatchedVariant::Full; 2], 16, 2, 2, tiny().seed, true);
+        let a = &out.stack.blocks()[0].w1;
+        let b = &seeded.blocks()[0].w1;
+        assert!(a.iter().zip(b).any(|(x, y)| x != y),
+                "w1 unchanged after training");
+    }
+
+    #[test]
+    fn same_config_is_bitwise_reproducible_in_process() {
+        let (a, b) = (train_cpu(&tiny()), train_cpu(&tiny()));
+        let la: Vec<u32> =
+            a.report.step_losses.iter().map(|x| x.to_bits()).collect();
+        let lb: Vec<u32> =
+            b.report.step_losses.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(la, lb, "loss curves must be bitwise identical");
+    }
+
+    #[test]
+    fn optimizer_kind_parses_and_round_trips() {
+        for k in [OptimizerKind::Sgd, OptimizerKind::Adam] {
+            assert_eq!(OptimizerKind::parse(k.token()), Some(k));
+        }
+        assert_eq!(OptimizerKind::parse("adamw"), None);
+    }
+}

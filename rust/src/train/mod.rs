@@ -1,6 +1,21 @@
-//! Training driver (S23): runs the AOT train-step artifact over the
-//! synthetic corpus — the E10 end-to-end validation (paper sec 9's
-//! "reduce training time" claim, exercised with full vs ss variants).
+//! Training drivers.
+//!
+//! Two paths live here:
+//!
+//! * [`cpu`] — the in-repo deterministic CPU trainer: forward through
+//!   the real [`crate::model::EncoderStack`], hand-derived backward
+//!   passes from [`backward`], seeded SGD/Adam, `SSAFCKPT` checkpoints
+//!   that serve through `init=load`. This is the path `train_tiny`,
+//!   the `train` subcommand and the error-bound harness use.
+//! * The artifact driver below (S23, kept intact for
+//!   `tests/integration_train.rs`): runs an AOT train-step artifact
+//!   over the same synthetic corpus.
+
+pub mod backward;
+pub mod cpu;
+
+pub use cpu::{train_cpu, CpuTrainConfig, CpuTrainOutcome, CpuTrainReport,
+              OptimizerKind};
 
 use crate::config::Variant;
 use crate::rngx::Rng;

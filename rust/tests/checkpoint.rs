@@ -144,3 +144,62 @@ fn malformed_checkpoints_fail_closed_end_to_end() {
 
     std::fs::remove_file(&path).unwrap();
 }
+
+#[test]
+fn trained_checkpoints_round_trip_and_fail_closed() {
+    // same contract as the seeded donors above, but on weights the
+    // in-repo trainer actually moved: projections on, multi-layer,
+    // reloaded under a *mixed* per-layer variant assignment (the file
+    // stores weights only — operators are a serving-time choice, so
+    // the re-save must stay byte-identical even across variants)
+    use ssaformer::attention::SpectralShiftConfig;
+    use ssaformer::kernels::BatchedVariant;
+    use ssaformer::train::{train_cpu, CpuTrainConfig};
+
+    let tcfg = CpuTrainConfig {
+        d_model: 16, n_heads: 2, ffn_mult: 2, layers: 3, vocab: 96,
+        seq: 16, batch: 2, steps_per_epoch: 2, epochs: 1, seed: 23,
+        corpus_lines: 60, workers: 1, ..Default::default()
+    };
+    let outcome = train_cpu(&tcfg);
+    let p1 = tmp("trained1");
+    let p2 = tmp("trained2");
+    checkpoint::save(&outcome.stack, &p1).unwrap();
+
+    let ck = checkpoint::load(&p1).unwrap();
+    ck.check_shape(16, 2, 2, 3, true).unwrap();
+    assert!(matches!(ck.check_shape(16, 2, 2, 4, true),
+                     Err(CheckpointError::Mismatch { field: "layers", .. })));
+
+    let mixed = vec![
+        BatchedVariant::Full,
+        BatchedVariant::SpectralShift(SpectralShiftConfig::new(8)),
+        BatchedVariant::Nystrom { landmarks: 8, pinv_iters: 8 },
+    ];
+    let stack = ck.into_stack(mixed).unwrap();
+    checkpoint::save(&stack, &p2).unwrap();
+    let good = std::fs::read(&p1).unwrap();
+    assert_eq!(good, std::fs::read(&p2).unwrap(),
+               "trained save → load → mixed-variant stack → save must be \
+                byte-identical");
+
+    // the trained model also loads whole through the model constructor
+    // under a mixed serving assignment ...
+    let loaded = CpuModel::with_checkpoint(
+        outcome.model_config,
+        &[Variant::Full, Variant::SpectralShift, Variant::Nystrom],
+        checkpoint::load(&p1).unwrap());
+    assert!(loaded.is_ok(), "mixed-variant load of a trained checkpoint");
+
+    // ... and the trained file fails closed exactly like a seeded one
+    std::fs::write(&p1, &good[..good.len() - 3]).unwrap();
+    assert!(matches!(checkpoint::load(&p1),
+                     Err(CheckpointError::Truncated { .. })));
+    let mut corrupt = good.clone();
+    corrupt[2] ^= 0x08; // magic
+    std::fs::write(&p1, &corrupt).unwrap();
+    assert!(matches!(checkpoint::load(&p1), Err(CheckpointError::BadMagic)));
+
+    std::fs::remove_file(&p1).unwrap();
+    std::fs::remove_file(&p2).unwrap();
+}

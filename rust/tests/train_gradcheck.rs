@@ -1,0 +1,330 @@
+//! Finite-difference gradient checks for every trainer backward kernel
+//! (the `train::backward` VJPs): GEMM, layernorm, bias+GELU, softmax
+//! attention, and the full projection seam.
+//!
+//! Method: the forward is re-implemented here as an **f64 twin** of the
+//! f32 production math (same formulas, same literal constants widened
+//! to f64), a scalar loss `L = Σ W ⊙ f(θ)` is differentiated by f64
+//! central differences, and the f32 analytic gradient from
+//! `train::backward` is compared at tolerance ≤ 1e-3. Doing the
+//! differences in f64 is what makes the tolerance reachable: f32
+//! central differences at useful step sizes drown in rounding noise.
+
+use ssaformer::attention::{default_scale, Tensor2};
+use ssaformer::kernels::{softmax_scores, KernelCtx, Workspace};
+use ssaformer::rngx::Rng;
+use ssaformer::train::backward::{
+    bias_gelu_backward, gemm_backward_acc, layernorm_backward, mha_backward,
+    mha_forward, softmax_attention_backward, MhaGrads,
+};
+
+const TOL: f64 = 1e-3;
+const H: f64 = 1e-4;
+
+fn check(name: &str, analytic: f32, fd: f64) {
+    let a = analytic as f64;
+    let denom = fd.abs().max(1.0);
+    assert!(
+        (a - fd).abs() <= TOL * denom,
+        "{name}: analytic {a} vs central-difference {fd} (tol {TOL})"
+    );
+}
+
+fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Tensor2 {
+    Tensor2::randn(rng, rows, cols, std)
+}
+
+fn to64(t: &Tensor2) -> Vec<f64> {
+    t.data.iter().map(|&x| x as f64).collect()
+}
+
+// ---- f64 twin forwards (same formulas/constants as kernels::) -------
+
+fn gemm64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn layernorm64(x: &[f64], gain: &[f64], bias: &[f64], n: usize, d: usize,
+               eps: f64) -> Vec<f64> {
+    let mut y = vec![0.0; n * d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let mean = row.iter().sum::<f64>() / d as f64;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>()
+            / d as f64;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..d {
+            y[i * d + j] = (row[j] - mean) * inv * gain[j] + bias[j];
+        }
+    }
+    y
+}
+
+fn gelu64(z: f64) -> f64 {
+    // literal f32 constants of kernels::gelu, widened
+    let c = 0.797_884_56f32 as f64;
+    let k = 0.044_715f32 as f64;
+    0.5 * z * (1.0 + (c * (z + k * z * z * z)).tanh())
+}
+
+fn softmax_attn64(q: &[f64], k: &[f64], v: &[f64], n: usize, dh: usize,
+                  scale: f64) -> Vec<f64> {
+    let mut s = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut dot = 0.0;
+            for p in 0..dh {
+                dot += q[i * dh + p] * k[j * dh + p];
+            }
+            s[i * n + j] = scale * dot;
+        }
+        let row = &mut s[i * n..(i + 1) * n];
+        let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    gemm64(&s, v, n, n, dh)
+}
+
+fn mha64(x: &[f64], wq: &[f64], wk: &[f64], wv: &[f64], wo: &[f64],
+         n: usize, d: usize, heads: usize) -> Vec<f64> {
+    let dh = d / heads;
+    let scale = default_scale(dh) as f64;
+    let mut merged = vec![0.0; n * d];
+    for h in 0..heads {
+        let ws = h * d * dh..(h + 1) * d * dh;
+        let q = gemm64(x, &wq[ws.clone()], n, d, dh);
+        let k = gemm64(x, &wk[ws.clone()], n, d, dh);
+        let v = gemm64(x, &wv[ws], n, d, dh);
+        let o = softmax_attn64(&q, &k, &v, n, dh, scale);
+        for i in 0..n {
+            merged[i * d + h * dh..i * d + (h + 1) * dh]
+                .copy_from_slice(&o[i * dh..(i + 1) * dh]);
+        }
+    }
+    gemm64(&merged, wo, n, d, d)
+}
+
+fn dot64(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Central difference of `loss(θ)` w.r.t. `theta[idx]`.
+fn central<F: Fn(&[f64]) -> f64>(theta: &[f64], idx: usize, loss: F) -> f64 {
+    let mut plus = theta.to_vec();
+    plus[idx] += H;
+    let mut minus = theta.to_vec();
+    minus[idx] -= H;
+    (loss(&plus) - loss(&minus)) / (2.0 * H)
+}
+
+// ---- the checks -----------------------------------------------------
+
+#[test]
+fn gemm_backward_matches_central_differences() {
+    let (m, k, n) = (3, 4, 2);
+    let mut rng = Rng::new(100);
+    let a = randn(&mut rng, m, k, 1.0);
+    let b = randn(&mut rng, k, n, 1.0);
+    let w = randn(&mut rng, m, n, 1.0); // loss weights: L = Σ W⊙(A·B)
+    let mut d_a = vec![0.0f32; m * k];
+    let mut d_b = vec![0.0f32; k * n];
+    let ctx = KernelCtx::sequential();
+    let mut ws = Workspace::new();
+    gemm_backward_acc(&ctx, &a.data, &b.data, &w.data, m, k, n, &mut d_a,
+                      &mut d_b, &mut ws);
+
+    let (a64, b64, w64) = (to64(&a), to64(&b), to64(&w));
+    for idx in 0..m * k {
+        let fd = central(&a64, idx,
+                         |t| dot64(&gemm64(t, &b64, m, k, n), &w64));
+        check(&format!("gemm dA[{idx}]"), d_a[idx], fd);
+    }
+    for idx in 0..k * n {
+        let fd = central(&b64, idx,
+                         |t| dot64(&gemm64(&a64, t, m, k, n), &w64));
+        check(&format!("gemm dB[{idx}]"), d_b[idx], fd);
+    }
+}
+
+#[test]
+fn layernorm_backward_matches_central_differences() {
+    let (n, d) = (3, 8);
+    let eps = 1e-5f64;
+    let mut rng = Rng::new(101);
+    let x = randn(&mut rng, n, d, 1.0);
+    let gain = randn(&mut rng, 1, d, 0.5);
+    let bias = randn(&mut rng, 1, d, 0.5);
+    let w = randn(&mut rng, n, d, 1.0);
+    let mut d_x = Tensor2::zeros(n, d);
+    let mut d_gain = vec![0.0f32; d];
+    let mut d_bias = vec![0.0f32; d];
+    layernorm_backward(&x, &gain.data, eps as f32, &w, &mut d_x, &mut d_gain,
+                       &mut d_bias);
+
+    let (x64, g64, b64, w64) = (to64(&x), to64(&gain), to64(&bias), to64(&w));
+    for idx in 0..n * d {
+        let fd = central(&x64, idx,
+                         |t| dot64(&layernorm64(t, &g64, &b64, n, d, eps),
+                                   &w64));
+        check(&format!("layernorm dx[{idx}]"), d_x.data[idx], fd);
+    }
+    for idx in 0..d {
+        let fd = central(&g64, idx,
+                         |t| dot64(&layernorm64(&x64, t, &b64, n, d, eps),
+                                   &w64));
+        check(&format!("layernorm dgain[{idx}]"), d_gain[idx], fd);
+        let fd = central(&b64, idx,
+                         |t| dot64(&layernorm64(&x64, &g64, t, n, d, eps),
+                                   &w64));
+        check(&format!("layernorm dbias[{idx}]"), d_bias[idx], fd);
+    }
+}
+
+#[test]
+fn bias_gelu_backward_matches_central_differences() {
+    let (n, d) = (3, 6);
+    let mut rng = Rng::new(102);
+    let x = randn(&mut rng, n, d, 1.5);
+    let bias = randn(&mut rng, 1, d, 0.5);
+    let w = randn(&mut rng, n, d, 1.0);
+    // recorded pre-activation z = x + bias (broadcast over rows)
+    let mut z = Tensor2::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            z.data[i * d + j] = x.data[i * d + j] + bias.data[j];
+        }
+    }
+    let mut d_pre = Tensor2::zeros(n, d);
+    let mut d_bias = vec![0.0f32; d];
+    bias_gelu_backward(&z, &w, &mut d_pre, &mut d_bias);
+
+    let (x64, b64, w64) = (to64(&x), to64(&bias), to64(&w));
+    let loss = |xv: &[f64], bv: &[f64]| -> f64 {
+        let mut l = 0.0;
+        for i in 0..n {
+            for j in 0..d {
+                l += w64[i * d + j] * gelu64(xv[i * d + j] + bv[j]);
+            }
+        }
+        l
+    };
+    for idx in 0..n * d {
+        let fd = central(&x64, idx, |t| loss(t, &b64));
+        check(&format!("bias_gelu dx[{idx}]"), d_pre.data[idx], fd);
+    }
+    for idx in 0..d {
+        let fd = central(&b64, idx, |t| loss(&x64, t));
+        check(&format!("bias_gelu dbias[{idx}]"), d_bias[idx], fd);
+    }
+}
+
+#[test]
+fn softmax_attention_backward_matches_central_differences() {
+    let (n, dh) = (6, 4);
+    let scale = default_scale(dh);
+    let mut rng = Rng::new(103);
+    let q = randn(&mut rng, n, dh, 1.0);
+    let k = randn(&mut rng, n, dh, 1.0);
+    let v = randn(&mut rng, n, dh, 1.0);
+    let w = randn(&mut rng, n, dh, 1.0);
+    let ctx = KernelCtx::sequential();
+    let mut ws = Workspace::new();
+    let s = softmax_scores(&ctx, &q, &k, scale, &mut ws);
+    let s = Tensor2 { rows: s.rows, cols: s.cols, data: s.data.clone() };
+    let (dq, dk, dv) =
+        softmax_attention_backward(&ctx, &q, &k, &v, &s, scale, &w, &mut ws);
+
+    let (q64, k64, v64, w64) = (to64(&q), to64(&k), to64(&v), to64(&w));
+    let s64 = scale as f64;
+    for idx in 0..n * dh {
+        let fd = central(&q64, idx,
+                         |t| dot64(&softmax_attn64(t, &k64, &v64, n, dh, s64),
+                                   &w64));
+        check(&format!("attn dq[{idx}]"), dq.data[idx], fd);
+        let fd = central(&k64, idx,
+                         |t| dot64(&softmax_attn64(&q64, t, &v64, n, dh, s64),
+                                   &w64));
+        check(&format!("attn dk[{idx}]"), dk.data[idx], fd);
+        let fd = central(&v64, idx,
+                         |t| dot64(&softmax_attn64(&q64, &k64, t, n, dh, s64),
+                                   &w64));
+        check(&format!("attn dv[{idx}]"), dv.data[idx], fd);
+    }
+}
+
+#[test]
+fn projection_seam_backward_matches_central_differences() {
+    let (n, d, heads) = (6, 8, 2);
+    let dh = d / heads;
+    let mut rng = Rng::new(104);
+    let x = randn(&mut rng, n, d, 1.0);
+    let wq = randn(&mut rng, heads * d, dh, 0.4).data;
+    let wk = randn(&mut rng, heads * d, dh, 0.4).data;
+    let wv = randn(&mut rng, heads * d, dh, 0.4).data;
+    let wo = randn(&mut rng, d, d, 0.4).data;
+    let w = randn(&mut rng, n, d, 1.0);
+    let ctx = KernelCtx::sequential();
+    let mut ws = Workspace::new();
+    let (out, cache) = mha_forward(&ctx, &x, &wq, &wk, &wv, &wo, heads,
+                                   &mut ws);
+    let mut grads = MhaGrads::zeros(d, heads);
+    let d_x = mha_backward(&ctx, &x, &wq, &wk, &wv, &wo, heads, &cache, &w,
+                           &mut grads, &mut ws);
+
+    // the recorded forward must itself agree with the f64 twin (sanity
+    // that both checks below differentiate the same function)
+    let x64 = to64(&x);
+    let wq64: Vec<f64> = wq.iter().map(|&v| v as f64).collect();
+    let wk64: Vec<f64> = wk.iter().map(|&v| v as f64).collect();
+    let wv64: Vec<f64> = wv.iter().map(|&v| v as f64).collect();
+    let wo64: Vec<f64> = wo.iter().map(|&v| v as f64).collect();
+    let w64 = to64(&w);
+    let twin = mha64(&x64, &wq64, &wk64, &wv64, &wo64, n, d, heads);
+    for (i, (&a, &t)) in out.data.iter().zip(&twin).enumerate() {
+        assert!(((a as f64) - t).abs() < 1e-4,
+                "forward twin diverges at {i}: {a} vs {t}");
+    }
+
+    let loss = |xv: &[f64], q: &[f64], k: &[f64], v: &[f64], o: &[f64]| {
+        dot64(&mha64(xv, q, k, v, o, n, d, heads), &w64)
+    };
+    // spot-check a stride of indices per tensor (full sweeps of the
+    // projection weights would re-run the twin ~1500 times)
+    for idx in (0..n * d).step_by(3) {
+        let fd = central(&x64, idx,
+                         |t| loss(t, &wq64, &wk64, &wv64, &wo64));
+        check(&format!("mha dx[{idx}]"), d_x.data[idx], fd);
+    }
+    for idx in (0..heads * d * dh).step_by(7) {
+        let fd = central(&wq64, idx,
+                         |t| loss(&x64, t, &wk64, &wv64, &wo64));
+        check(&format!("mha dwq[{idx}]"), grads.wq[idx], fd);
+        let fd = central(&wk64, idx,
+                         |t| loss(&x64, &wq64, t, &wv64, &wo64));
+        check(&format!("mha dwk[{idx}]"), grads.wk[idx], fd);
+        let fd = central(&wv64, idx,
+                         |t| loss(&x64, &wq64, &wk64, t, &wo64));
+        check(&format!("mha dwv[{idx}]"), grads.wv[idx], fd);
+    }
+    for idx in (0..d * d).step_by(5) {
+        let fd = central(&wo64, idx,
+                         |t| loss(&x64, &wq64, &wk64, &wv64, t));
+        check(&format!("mha dwo[{idx}]"), grads.wo[idx], fd);
+    }
+}
