@@ -33,6 +33,14 @@ cargo test -q --test integration_cluster
 cargo test -q --test integration_cluster
 SSAF_KERNEL=scalar cargo test -q --test integration_cluster
 
+# long-document lane: chunked ENCODE + prefix-reuse cache, named for
+# the same reason as the cluster lane. The suite pins hit ≡ recompute
+# *bitwise*, so it re-runs on the scalar arm too — the portable
+# fallback must preserve the chunk-exactness invariant.
+echo "==> longdoc lane: cargo test -q --test integration_longdoc (+ scalar)"
+cargo test -q --test integration_longdoc
+SSAF_KERNEL=scalar cargo test -q --test integration_longdoc
+
 # train lane: the deterministic CPU trainer end to end — train a
 # projected 3-layer encoder (smoke schedule), checkpoint it, serve the
 # checkpoint over TCP through init=load, and sweep every variant's

@@ -29,6 +29,14 @@
 //! router cache hit rate over the whole workload — the serving tier's
 //! horizontal-scaling counterpart of the `cpu_encode_rps_*` rows.
 //!
+//! Schema v8 adds the streaming long-document rows under `"longdoc"`:
+//! documents past the largest bucket served over TCP through the
+//! chunked ENCODE path with the prefix-reuse cache on, over a trace
+//! whose documents share a multi-chunk template prefix (≥50% chunk
+//! overlap). Reports the chunk hit rate, per-chunk amortized latency,
+//! client-side p50/p99 per document, and documents/sec — the
+//! trajectory rows for the chunk-granular reuse path.
+//!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
 //! Smoke mode: set BENCH_SMOKE=1 to shrink the problem set (n = 256
@@ -437,8 +445,103 @@ fn main() {
         bhandle.stop();
     }
 
+    // --- streaming long documents (schema v8): chunked ENCODE with the
+    // prefix-reuse cache over one loopback replica. The trace shares a
+    // 4-chunk template prefix across documents (and is replayed once),
+    // so well over half the chunk lookups are reusable — the workload
+    // the prefix cache exists for. Embedding cache off to isolate the
+    // chunk-granular path.
+    let mut longdoc: Vec<(String, f64)> = Vec::new();
+    {
+        let chunk = if smoke() { 64usize } else { 128 };
+        let cfg = ServingConfig {
+            variant: Variant::SpectralShift,
+            max_batch: 4,
+            max_wait_ms: 2,
+            queue_capacity: 256,
+            seq_buckets: vec![chunk, 2 * chunk],
+            workers: 4,
+            queue_shards: 2,
+            cache_capacity: 0,
+            chunk_tokens: chunk,
+            prefix_cache_capacity: 256,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), cfg.variant)));
+        let coordinator = Arc::new(
+            Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+        let (addr, handle) = serve(coordinator.clone(), "127.0.0.1:0", 4)
+            .expect("bind longdoc replica");
+        let mut client = Client::connect(&addr).expect("connect longdoc");
+
+        // documents: shared 4-chunk prefix + distinct 2-chunk tail,
+        // each 6 chunks = 3× the largest bucket
+        let n_docs = if smoke() { 3usize } else { 8 };
+        let prefix: Vec<i32> =
+            (0..4 * chunk).map(|i| 3 + (i as i32 % 1999)).collect();
+        let docs: Vec<Vec<i32>> = (0..n_docs)
+            .map(|s| {
+                let mut doc = prefix.clone();
+                doc.extend((0..2 * chunk)
+                    .map(|i| 11 + ((i * 7 + s * 131) as i32 % 1999)));
+                doc
+            })
+            .collect();
+
+        // warm the kernel arenas off the clock with a short (unchunked)
+        // request, then snapshot the chunk counters
+        assert!(client.encode(0, &docs[0][..chunk]).unwrap()
+            .starts_with("OK "));
+        let m = &coordinator.metrics;
+        let (h0, mi0, ch0) = (m.prefix_hits.get(), m.prefix_misses.get(),
+                              m.chunks_computed.get());
+
+        let start = std::time::Instant::now();
+        let mut lat: Vec<Duration> = Vec::new();
+        for _round in 0..2 {
+            // round 0: cold tails, warm shared prefix after the first
+            // doc; round 1: full replay, every chunk resident
+            for (i, doc) in docs.iter().enumerate() {
+                let t_req = std::time::Instant::now();
+                assert!(client.encode(i as u64, doc).unwrap()
+                    .starts_with("OK "));
+                lat.push(t_req.elapsed());
+            }
+        }
+        let wall = start.elapsed();
+        let hits = m.prefix_hits.get() - h0;
+        let chunk_lookups = hits + (m.prefix_misses.get() - mi0);
+        let computed = m.chunks_computed.get() - ch0;
+        let hit_rate = hits as f64 / chunk_lookups.max(1) as f64;
+        let per_chunk_us =
+            wall.as_micros() as f64 / chunk_lookups.max(1) as f64;
+        let doc_rps = lat.len() as f64 / wall.as_secs_f64();
+        lat.sort();
+        let pct = |q: f64| lat[((q * (lat.len() - 1) as f64).round()) as usize]
+            .as_micros() as f64;
+
+        let mut ltbl = Table::new(&["long documents (chunked)", "value"]);
+        ltbl.row(&["chunk hit rate".into(), format!("{:.0}%", 100.0 * hit_rate)]);
+        ltbl.row(&["per-chunk amortized".into(), format!("{per_chunk_us:.0}us")]);
+        ltbl.row(&["doc p50".into(), format!("{:.0}us", pct(0.5))]);
+        ltbl.row(&["doc p99".into(), format!("{:.0}us", pct(0.99))]);
+        ltbl.row(&["docs/s".into(), format!("{doc_rps:.1}")]);
+        println!("{}", ltbl.render());
+        longdoc.push(("chunk_tokens".into(), chunk as f64));
+        longdoc.push(("docs".into(), lat.len() as f64));
+        longdoc.push(("chunk_lookups".into(), chunk_lookups as f64));
+        longdoc.push(("chunks_computed".into(), computed as f64));
+        longdoc.push(("hit_rate".into(), hit_rate));
+        longdoc.push(("per_chunk_amortized_us".into(), per_chunk_us));
+        longdoc.push(("client_p50_us".into(), pct(0.5)));
+        longdoc.push(("client_p99_us".into(), pct(0.99)));
+        longdoc.push(("doc_rps".into(), doc_rps));
+        handle.stop();
+    }
+
     let json = render_json(threads, c, d, &entries, &speedups, &serving,
-                           &isa_rows, &cluster);
+                           &isa_rows, &cluster, &longdoc);
     // benches run with cwd = rust/; the repo root is one level up
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
         "../BENCH_kernels.json"
@@ -463,14 +566,16 @@ fn push(entries: &mut Vec<Entry>, table: &mut Table, name: &str, n: usize,
                 format!("{:.2}", flops / secs / 1e9), threads.to_string()]);
 }
 
+#[allow(clippy::too_many_arguments)]
 fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                speedups: &[(String, f64)],
                serving: &[(String, f64)],
                isa_rows: &[(String, f64)],
-               cluster: &[(String, f64)]) -> String {
+               cluster: &[(String, f64)],
+               longdoc: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v7\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v8\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"smoke\": {},\n", smoke()));
     out.push_str(&format!("  \"threads\": {threads},\n"));
@@ -516,6 +621,14 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
     out.push_str("  \"cluster\": {\n");
     for (i, (name, x)) in cluster.iter().enumerate() {
         let comma = if i + 1 < cluster.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
+    }
+    out.push_str("  },\n");
+    // long-document rows (v8): chunked ENCODE + prefix-reuse cache
+    // over a high-prefix-overlap trace
+    out.push_str("  \"longdoc\": {\n");
+    for (i, (name, x)) in longdoc.iter().enumerate() {
+        let comma = if i + 1 < longdoc.len() { "," } else { "" };
         out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
     }
     out.push_str("  }\n");

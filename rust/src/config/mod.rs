@@ -375,6 +375,22 @@ pub struct ServingConfig {
     /// Router health-probe sweep period (milliseconds, > 0). Ignored in
     /// replica role.
     pub probe_interval_ms: u64,
+    /// Chunk length (tokens) for the streaming long-document ENCODE
+    /// path: a sequence longer than the largest bucket is split into
+    /// independent chunks of this many tokens, each encoded separately,
+    /// and the pooled chunk embeddings are merged with a
+    /// length-weighted mean. `0` disables chunking (long documents are
+    /// rejected `too-long`, the pre-chunking behaviour). Both backends
+    /// serve the chunked path; must not exceed the largest bucket, and
+    /// the CPU start path additionally snaps it to a landmark-divisor
+    /// multiple via `batcher::aligned_len` so chunks carry no
+    /// alignment padding.
+    pub chunk_tokens: usize,
+    /// Prefix-reuse cache entries (pooled chunk embeddings keyed on
+    /// chunk content hash; 0 disables). Consulted only on the chunked
+    /// long-document path — whole-sequence hits stay with
+    /// `cache_capacity`.
+    pub prefix_cache_capacity: usize,
 }
 
 impl Default for ServingConfig {
@@ -402,6 +418,8 @@ impl Default for ServingConfig {
             role: Role::Replica,
             replicas: Vec::new(),
             probe_interval_ms: 500,
+            chunk_tokens: 256,
+            prefix_cache_capacity: 1024,
         }
     }
 }
@@ -508,6 +526,11 @@ impl ServingConfig {
             replicas,
             probe_interval_ms: unsigned("probe_interval_ms",
                                         d.probe_interval_ms as i64)?,
+            chunk_tokens: unsigned("chunk_tokens",
+                                   d.chunk_tokens as i64)? as usize,
+            prefix_cache_capacity: unsigned("prefix_cache_capacity",
+                                            d.prefix_cache_capacity as i64)?
+                as usize,
         };
         out.validate()?;
         Ok(out)
@@ -571,6 +594,14 @@ impl ServingConfig {
             || self.seq_buckets.windows(2).any(|w| w[0] >= w[1]) {
             return Err(ConfigError::Invalid("serving".into(), "seq_buckets".into(),
                                             "must be ascending, nonempty".into()));
+        }
+        let n_max = *self.seq_buckets.iter().max().unwrap();
+        if self.chunk_tokens > n_max {
+            return Err(ConfigError::Invalid(
+                "serving".into(), "chunk_tokens".into(),
+                format!("{} exceeds the largest bucket {} — each chunk \
+                         must fit an existing bucket", self.chunk_tokens,
+                        n_max)));
         }
         if self.layers == 0 {
             return Err(ConfigError::Invalid("serving".into(), "layers".into(),
@@ -744,7 +775,8 @@ resume = false
     #[test]
     fn negative_serving_values_are_config_errors_not_wraps() {
         for key in ["workers", "cache_capacity", "max_batch",
-                    "default_deadline_ms"] {
+                    "default_deadline_ms", "chunk_tokens",
+                    "prefix_cache_capacity"] {
             let c = Config::parse(&format!("[serving]\n{key} = -1\n")).unwrap();
             assert!(matches!(ServingConfig::from_config(&c),
                              Err(ConfigError::Invalid(..))),
@@ -761,6 +793,33 @@ resume = false
         s.queue_capacity = 15; // < 4 shards × 4 slots
         assert!(s.validate().is_err());
         s.queue_capacity = 16;
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn chunking_knobs_parse_and_validate() {
+        // defaults: chunking on at 256 tokens, 1024 prefix entries
+        let s = ServingConfig::default();
+        assert_eq!(s.chunk_tokens, 256);
+        assert_eq!(s.prefix_cache_capacity, 1024);
+        assert!(s.validate().is_ok());
+
+        let c = Config::parse(
+            "[serving]\nchunk_tokens = 128\nprefix_cache_capacity = 32\n")
+            .unwrap();
+        let s = ServingConfig::from_config(&c).unwrap();
+        assert_eq!(s.chunk_tokens, 128);
+        assert_eq!(s.prefix_cache_capacity, 32);
+
+        // 0 disables chunking — long documents are rejected as before
+        let c = Config::parse("[serving]\nchunk_tokens = 0\n").unwrap();
+        assert_eq!(ServingConfig::from_config(&c).unwrap().chunk_tokens, 0);
+
+        // a chunk larger than the largest bucket can never be planned
+        let mut s = ServingConfig::default();
+        s.chunk_tokens = *s.seq_buckets.iter().max().unwrap() + 1;
+        assert!(s.validate().is_err());
+        s.chunk_tokens = *s.seq_buckets.iter().max().unwrap();
         assert!(s.validate().is_ok());
     }
 

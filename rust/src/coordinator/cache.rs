@@ -31,7 +31,7 @@
 use std::borrow::Borrow;
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Sentinel for "no node" in the intrusive recency list.
 const NIL: usize = usize::MAX;
@@ -222,19 +222,24 @@ impl<K: Hash + Eq + Clone, V> LruCache<K, V> {
 /// in [`ServingMetrics`](crate::metrics::ServingMetrics) (lock-free),
 /// not here: the cache stores state, the metrics layer observes it.
 ///
+/// Entries hold `Arc<[f32]>` embeddings, so a hit is a refcount bump
+/// under the lock — not a `d_model`-sized copy — and the payload can be
+/// shared with the prefix cache and the chunk-merge path without
+/// cloning.
+///
 /// ```
 /// use ssaformer::coordinator::cache::EmbeddingCache;
 /// let cache = EmbeddingCache::new(8);
-/// assert_eq!(cache.get(&[5, 6, 7]), None);
-/// cache.insert(&[5, 6, 7], vec![0.25, -1.5]);
+/// assert!(cache.get(&[5, 6, 7]).is_none());
+/// cache.insert(&[5, 6, 7], &[0.25, -1.5]);
 /// // a hit returns exactly the stored embedding, bitwise
-/// assert_eq!(cache.get(&[5, 6, 7]), Some(vec![0.25, -1.5]));
+/// assert_eq!(cache.get(&[5, 6, 7]).as_deref(), Some(&[0.25_f32, -1.5][..]));
 /// // keyed on full token content: a different sequence is a miss
-/// assert_eq!(cache.get(&[5, 6]), None);
+/// assert!(cache.get(&[5, 6]).is_none());
 /// assert_eq!((cache.len(), cache.capacity()), (1, 8));
 /// ```
 pub struct EmbeddingCache {
-    inner: Mutex<LruCache<Box<[i32]>, Vec<f32>>>,
+    inner: Mutex<LruCache<Box<[i32]>, Arc<[f32]>>>,
 }
 
 impl EmbeddingCache {
@@ -245,20 +250,23 @@ impl EmbeddingCache {
     }
 
     /// The pooled embedding previously served for exactly these tokens,
-    /// if still resident. A hit refreshes the entry's recency.
-    pub fn get(&self, tokens: &[i32]) -> Option<Vec<f32>> {
+    /// if still resident. A hit refreshes the entry's recency and costs
+    /// one refcount bump — the embedding payload is never copied.
+    pub fn get(&self, tokens: &[i32]) -> Option<Arc<[f32]>> {
         self.inner.lock().unwrap().get(tokens).cloned()
     }
 
     /// Record the served embedding for `tokens` (evicting the LRU entry
     /// when full). Inserting an existing key refreshes it — idempotent
     /// under the coherence invariant, since a recompute is bitwise
-    /// identical.
-    pub fn insert(&self, tokens: &[i32], embedding: Vec<f32>) {
+    /// identical. The one copy into the shared `Arc` happens before the
+    /// lock is taken.
+    pub fn insert(&self, tokens: &[i32], embedding: &[f32]) {
+        let shared: Arc<[f32]> = Arc::from(embedding);
         self.inner
             .lock()
             .unwrap()
-            .insert(tokens.to_vec().into_boxed_slice(), embedding);
+            .insert(tokens.to_vec().into_boxed_slice(), shared);
     }
 
     /// Entries currently resident.
@@ -357,22 +365,25 @@ mod tests {
     fn embedding_cache_hit_is_bitwise_and_bounded() {
         let cache = EmbeddingCache::new(2);
         let emb = vec![1.0f32, -0.0, f32::MIN_POSITIVE, 3.5e-8];
-        cache.insert(&[1, 2, 3], emb.clone());
+        cache.insert(&[1, 2, 3], &emb);
         let hit = cache.get(&[1, 2, 3]).unwrap();
         // bitwise, not approximate: compare the raw representations
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&hit), bits(&emb));
+        // a second hit shares the same allocation — refcount bump, not
+        // a payload copy
+        let again = cache.get(&[1, 2, 3]).unwrap();
+        assert!(Arc::ptr_eq(&hit, &again), "hit copied the payload");
         // capacity pressure evicts the LRU key
-        cache.insert(&[4], vec![0.0]);
+        cache.insert(&[4], &[0.0]);
         cache.get(&[1, 2, 3]); // refresh
-        cache.insert(&[5], vec![0.0]); // evicts [4]
-        assert_eq!(cache.get(&[4]), None);
+        cache.insert(&[5], &[0.0]); // evicts [4]
+        assert!(cache.get(&[4]).is_none());
         assert_eq!(cache.len(), 2);
     }
 
     #[test]
     fn embedding_cache_is_shareable_across_threads() {
-        use std::sync::Arc;
         let cache = Arc::new(EmbeddingCache::new(64));
         let mut handles = Vec::new();
         for t in 0..4i32 {
@@ -380,8 +391,9 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for i in 0..50 {
                     let key = [t, i];
-                    cache.insert(&key, vec![t as f32, i as f32]);
-                    assert_eq!(cache.get(&key), Some(vec![t as f32, i as f32]));
+                    cache.insert(&key, &[t as f32, i as f32]);
+                    assert_eq!(cache.get(&key).as_deref(),
+                               Some(&[t as f32, i as f32][..]));
                 }
             }));
         }

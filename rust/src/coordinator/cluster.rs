@@ -45,6 +45,16 @@
 //!   offset/prime — unlike `std`'s randomly keyed SipHash) so the ring
 //!   assigns identically in every process; tests rebuild the ring to
 //!   predict placement, and a router restart preserves it.
+//! * **Backpressure-aware placement.** Replica `PING` replies carry
+//!   the coordinator's instantaneous queue depth (`OK 0 pong q=<n>`);
+//!   each probe sweep records it in the membership table. When the ring
+//!   owner was strictly more loaded than the runner-up at the last
+//!   probe, the router swaps the top two *up* candidates — requests
+//!   shed from a saturated replica to its first failover instead of
+//!   queueing behind it. Only the top-2 order changes: every replica
+//!   stays in the failover list, so the no-silent-drop invariant is
+//!   untouched, and equal loads (including the fresh all-zero state)
+//!   leave ring order intact.
 //! * **Deadline honesty across the hop.** `DEADLINE_MS` is forwarded
 //!   minus the time already spent in the router; a budget that reaches
 //!   zero at the router is answered `ERR <id> deadline` without
@@ -59,7 +69,7 @@ use crate::minirt::{CancelToken, ThreadPool};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -167,6 +177,11 @@ impl HashRing {
 pub struct Membership {
     addrs: Vec<String>,
     up: Vec<AtomicBool>,
+    /// Queue depth each replica reported in its last `PING` reply
+    /// (`q=` suffix) — the backpressure signal placement reads. Zero
+    /// until the first probe parses one, so a fresh router places by
+    /// pure ring order.
+    load: Vec<AtomicU64>,
 }
 
 impl Membership {
@@ -175,7 +190,8 @@ impl Membership {
         // or a forwarding failure says otherwise, so a router can serve
         // before its first probe sweep completes
         let up = addrs.iter().map(|_| AtomicBool::new(true)).collect();
-        Membership { addrs, up }
+        let load = addrs.iter().map(|_| AtomicU64::new(0)).collect();
+        Membership { addrs, up, load }
     }
 
     pub fn len(&self) -> usize {
@@ -204,6 +220,15 @@ impl Membership {
 
     pub fn up_count(&self) -> usize {
         self.up.iter().filter(|u| u.load(Ordering::Relaxed)).count()
+    }
+
+    /// The queue depth replica `i` reported at its last probe.
+    pub fn load(&self, i: usize) -> u64 {
+        self.load[i].load(Ordering::Relaxed)
+    }
+
+    pub fn set_load(&self, i: usize, depth: u64) {
+        self.load[i].store(depth, Ordering::Relaxed);
     }
 
     /// `(addr, up)` snapshot for the STATS membership lines.
@@ -343,18 +368,29 @@ impl ClusterRouter {
     }
 
     /// One synchronous health sweep: round-trip `PING` to every
-    /// replica, flip its up/down flag on the outcome. The background
-    /// prober calls this on its interval; tests call it directly so
-    /// membership transitions are deterministic, not timing-dependent.
+    /// replica, flip its up/down flag on the outcome and record the
+    /// queue depth its pong reported. The background prober calls this
+    /// on its interval; tests call it directly so membership
+    /// transitions are deterministic, not timing-dependent.
     pub fn probe_now(&self) {
         for i in 0..self.membership.len() {
-            let healthy = ReplicaConn::connect(self.membership.addr(i), &self.cfg)
-                .and_then(|mut c| c.roundtrip("PING"))
+            let reply = ReplicaConn::connect(self.membership.addr(i), &self.cfg)
+                .and_then(|mut c| c.roundtrip("PING"));
+            let healthy = reply
+                .as_ref()
                 .map(|r| r.starts_with("OK"))
                 .unwrap_or(false);
             if !healthy {
                 self.metrics.probe_failures.inc();
             }
+            // a pong without the q= suffix (an older replica) or a
+            // failed probe reads as load 0 — placement degrades to pure
+            // ring order, never an error
+            let depth = reply
+                .ok()
+                .and_then(|r| parse_queue_depth(&r))
+                .unwrap_or(0);
+            self.membership.set_load(i, depth);
             self.membership.set_up(i, healthy);
         }
     }
@@ -364,10 +400,23 @@ impl ClusterRouter {
     /// preserved within each group). Down replicas stay as a last
     /// resort — probe state may be stale, and trying them beats
     /// reporting a loss.
+    ///
+    /// Backpressure-aware placement: when the first up candidate was
+    /// *strictly* more loaded than the second at the last probe sweep,
+    /// the two swap — the request sheds to the runner-up instead of
+    /// queueing behind a saturated owner. Strict comparison keeps ties
+    /// (and the fresh all-zero state) in ring order, so placement only
+    /// deviates on a measured imbalance, and only the top-2 order ever
+    /// changes — the failover set is untouched.
     fn candidates(&self, tokens: &[i32]) -> Vec<usize> {
         let prefs = self.ring.preferences(hash_tokens(tokens));
         let (mut up, down): (Vec<usize>, Vec<usize>) =
             prefs.into_iter().partition(|&r| self.membership.is_up(r));
+        if up.len() >= 2
+            && self.membership.load(up[0]) > self.membership.load(up[1])
+        {
+            up.swap(0, 1);
+        }
         up.extend(down);
         up
     }
@@ -398,10 +447,11 @@ impl ClusterRouter {
             snap.len() - up,
             self.cfg.vnodes,
             self.cfg.probe_interval.as_millis());
-        for (addr, alive) in snap {
+        for (i, (addr, alive)) in snap.into_iter().enumerate() {
             out.push_str(&format!(
-                "\ncluster:  member {addr} {}",
-                if alive { "up" } else { "down" }));
+                "\ncluster:  member {addr} {} q={}",
+                if alive { "up" } else { "down" },
+                self.membership.load(i)));
         }
         out
     }
@@ -446,6 +496,16 @@ fn try_replica(router: &ClusterRouter, conns: &mut ConnPool, r: usize,
             }
         }
     }
+}
+
+/// The `q=<depth>` field of a pong reply (`OK 0 pong q=7`), if present
+/// and numeric. Pure — unit-tested directly. `None` for replicas that
+/// predate the suffix; the prober treats that as load 0.
+pub fn parse_queue_depth(reply: &str) -> Option<u64> {
+    reply
+        .split_whitespace()
+        .find_map(|f| f.strip_prefix("q="))
+        .and_then(|v| v.parse().ok())
 }
 
 /// The forwarded budget after `elapsed_ms` spent in the router. Pure —
@@ -866,6 +926,43 @@ mod tests {
     }
 
     #[test]
+    fn parse_queue_depth_reads_the_pong_suffix() {
+        assert_eq!(parse_queue_depth("OK 0 pong q=7"), Some(7));
+        assert_eq!(parse_queue_depth("OK 0 pong q=0"), Some(0));
+        // a replica that predates the suffix
+        assert_eq!(parse_queue_depth("OK 0 pong"), None);
+        // garbage never panics the prober
+        assert_eq!(parse_queue_depth("OK 0 pong q=abc"), None);
+        assert_eq!(parse_queue_depth(""), None);
+    }
+
+    #[test]
+    fn saturated_owner_sheds_to_the_second_ring_choice() {
+        let router = ClusterRouter::new(ClusterConfig {
+            replicas: names(3),
+            ..Default::default()
+        });
+        let toks = vec![5, 6, 7];
+        let prefs = router.ring.preferences(hash_tokens(&toks));
+        // fresh state (all loads 0): placement is pure ring order
+        assert_eq!(router.candidates(&toks), prefs);
+        // owner strictly more loaded than the runner-up: top two swap,
+        // the rest of the failover order is untouched
+        router.membership.set_load(prefs[0], 9);
+        router.membership.set_load(prefs[1], 2);
+        let c = router.candidates(&toks);
+        assert_eq!(c[0], prefs[1], "saturated owner must shed");
+        assert_eq!(c[1], prefs[0], "owner stays as first failover");
+        assert_eq!(c[2], prefs[2]);
+        // equal load is a tie: ring order, no churn
+        router.membership.set_load(prefs[0], 2);
+        assert_eq!(router.candidates(&toks), prefs);
+        // less-loaded owner keeps the request
+        router.membership.set_load(prefs[0], 1);
+        assert_eq!(router.candidates(&toks), prefs);
+    }
+
+    #[test]
     fn router_cache_is_token_keyed_and_bounded() {
         let cfg = ClusterConfig {
             replicas: names(1),
@@ -891,10 +988,11 @@ mod tests {
             ..Default::default()
         });
         router.membership.set_up(1, false);
+        router.membership.set_load(0, 3);
         let rep = router.membership_report();
         assert!(rep.contains("replicas=2 up=1 down=1"), "{rep}");
-        assert!(rep.contains("member 10.0.0.0:4100 up"), "{rep}");
-        assert!(rep.contains("member 10.0.0.1:4100 down"), "{rep}");
+        assert!(rep.contains("member 10.0.0.0:4100 up q=3"), "{rep}");
+        assert!(rep.contains("member 10.0.0.1:4100 down q=0"), "{rep}");
         assert!(rep.lines().all(|l| l.starts_with("cluster:")), "{rep}");
     }
 }

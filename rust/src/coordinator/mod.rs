@@ -83,6 +83,7 @@ pub mod bucket_router;
 pub mod cache;
 pub mod cluster;
 pub mod cpu_engine;
+pub mod prefix_cache;
 pub mod queue;
 
 pub use batcher::{aligned_len, assemble, attention_scatter, scatter, BatchPlan};
@@ -90,6 +91,7 @@ pub use bucket_router::{BucketRouter, Route};
 pub use cache::{EmbeddingCache, LruCache};
 pub use cluster::{ClusterConfig, ClusterRouter, HashRing};
 pub use cpu_engine::{CpuEngine, CpuModel, CpuModelConfig};
+pub use prefix_cache::{merge_chunk_embeddings, PrefixCache};
 pub use queue::{BatchPolicy, BucketQueue, PushError, Queued, ShardedQueue};
 
 use crate::config::{ServingConfig, Variant};
@@ -138,6 +140,13 @@ struct Pending {
     id: u64,
     tokens: Vec<i32>,
     tx: mpsc::Sender<Response>,
+    /// An internally-generated chunk of a long document (see
+    /// `submit_chunked`), not a caller request: workers execute it like
+    /// any other item but skip the request-level accounting
+    /// (`requests_done`, `cache_misses`, e2e latency) and the
+    /// whole-sequence embedding cache — the parent document carries
+    /// those, and chunk reuse belongs to the [`PrefixCache`].
+    internal: bool,
 }
 
 /// Why admission failed.
@@ -269,11 +278,17 @@ struct Scaffold {
     router: BucketRouter,
     queue: Arc<ShardedQueue<Pending>>,
     cache: Option<Arc<EmbeddingCache>>,
+    prefix_cache: Option<Arc<PrefixCache>>,
     metrics: Arc<ServingMetrics>,
     cancel: CancelToken,
     policy: BatchPolicy,
     default_deadline: Option<Duration>,
     n_workers: usize,
+    /// Long-document chunk length (0 = chunking disabled). The start
+    /// paths clamp it to the largest bucket and — on the CPU backend —
+    /// round it up to the landmark divisor before the coordinator is
+    /// built, so every chunk routes to an existing bucket.
+    chunk_tokens: usize,
 }
 
 impl Scaffold {
@@ -287,6 +302,10 @@ impl Scaffold {
                 0 => None,
                 n => Some(Arc::new(EmbeddingCache::new(n))),
             },
+            prefix_cache: match cfg.prefix_cache_capacity {
+                0 => None,
+                n => Some(Arc::new(PrefixCache::new(n))),
+            },
             metrics: Arc::new(ServingMetrics::new()),
             cancel: CancelToken::new(),
             policy: BatchPolicy {
@@ -296,6 +315,7 @@ impl Scaffold {
             },
             default_deadline: cfg.default_deadline(),
             n_workers: cfg.workers.max(1),
+            chunk_tokens: cfg.chunk_tokens,
         }
     }
 
@@ -306,6 +326,7 @@ impl Scaffold {
             router: self.router,
             queue: self.queue,
             cache: self.cache,
+            prefix_cache: self.prefix_cache,
             metrics: self.metrics,
             cancel: self.cancel,
             workers,
@@ -314,6 +335,7 @@ impl Scaffold {
             default_deadline: self.default_deadline,
             model_desc,
             kernel_isa,
+            chunk_tokens: self.chunk_tokens,
         }
     }
 }
@@ -325,6 +347,7 @@ pub struct Coordinator {
     router: BucketRouter,
     queue: Arc<ShardedQueue<Pending>>,
     cache: Option<Arc<EmbeddingCache>>,
+    prefix_cache: Option<Arc<PrefixCache>>,
     pub metrics: Arc<ServingMetrics>,
     cancel: CancelToken,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -337,6 +360,9 @@ pub struct Coordinator {
     /// Micro-kernel arm the execution workers run (resolved once at
     /// startup; CPU backend pins every engine to it).
     kernel_isa: Isa,
+    /// Long-document chunk length, already bucket-clamped and (CPU)
+    /// landmark-aligned; 0 = chunking disabled (`too-long` as before).
+    chunk_tokens: usize,
 }
 
 impl Coordinator {
@@ -358,7 +384,12 @@ impl Coordinator {
                  -> Result<Coordinator, crate::runtime::RuntimeError> {
         let buckets = engine.manifest().encode_buckets(cfg.variant);
         assert!(!buckets.is_empty(), "no encode artifacts for {:?}", cfg.variant);
-        let s = Scaffold::new(&buckets, cfg);
+        let mut s = Scaffold::new(&buckets, cfg);
+        // every chunk must route to an existing bucket; artifact bucket
+        // lists come from the manifest (config validation never saw
+        // them), so clamp here
+        s.chunk_tokens =
+            s.chunk_tokens.min(*buckets.iter().max().expect("nonempty"));
 
         // preload executables + parameters
         engine.warmup(cfg.variant)?;
@@ -407,8 +438,15 @@ impl Coordinator {
                     "seq bucket {bad} not divisible by landmark count {c}")));
             }
         }
-        let s = Scaffold::new(&buckets, cfg);
+        let mut s = Scaffold::new(&buckets, cfg);
         let model_desc = engine.model().describe();
+        // chunk boundaries align to the landmark divisor so a full
+        // chunk executes with zero alignment-padding tail; the largest
+        // bucket is divisor-divisible (checked above), so the aligned
+        // chunk still fits it
+        s.chunk_tokens = aligned_len(
+            s.chunk_tokens.min(*buckets.last().expect("nonempty buckets")),
+            engine.model().landmark_divisor());
 
         // one engine per worker, all sharing the model of the one we
         // were handed; every stage arena is pre-planned for a full batch
@@ -494,6 +532,30 @@ impl Coordinator {
         self.cache.as_ref().map_or(0, |c| c.len())
     }
 
+    /// Effective long-document chunk length (bucket-clamped and, on the
+    /// CPU backend, landmark-aligned). 0 means chunking is disabled and
+    /// sequences past the largest bucket are rejected `too-long`.
+    pub fn chunk_tokens(&self) -> usize {
+        self.chunk_tokens
+    }
+
+    /// Prefix-cache entry bound (0 when disabled).
+    pub fn prefix_cache_capacity(&self) -> usize {
+        self.prefix_cache.as_ref().map_or(0, |c| c.capacity())
+    }
+
+    /// Prefix-cache entries currently resident.
+    pub fn prefix_cache_len(&self) -> usize {
+        self.prefix_cache.as_ref().map_or(0, |c| c.len())
+    }
+
+    /// Requests currently queued across every shard — the backpressure
+    /// signal replicas report in their `PING` reply (`q=<depth>`) so a
+    /// router can prefer the less-loaded of its top ring candidates.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
     /// Submit a request; returns the receiver for its response. The
     /// configured default deadline (if any) applies.
     pub fn submit(&self, tokens: Vec<i32>)
@@ -542,6 +604,12 @@ impl Coordinator {
         let bucket = match self.router.route(tokens.len()) {
             Route::Bucket(b) => b,
             Route::TooLong { len, max } => {
+                // the streaming long-document path: split into
+                // independent chunks, reuse known ones, merge — one
+                // logical request, one response
+                if self.chunk_tokens > 0 {
+                    return self.submit_chunked(tokens, budget);
+                }
                 self.metrics.requests_rejected.inc();
                 return Err(SubmitError::TooLong { len, max });
             }
@@ -563,9 +631,11 @@ impl Coordinator {
                 self.metrics.requests_done.inc();
                 self.metrics.e2e_latency.record(t0.elapsed());
                 let (tx, rx) = mpsc::channel();
+                // the lookup under the lock was a refcount bump; the
+                // response's owned copy is made out here
                 let _ = tx.send(Response {
                     id,
-                    embedding: Ok(emb),
+                    embedding: Ok(emb.to_vec()),
                     queue_time: Duration::ZERO,
                     exec_time: Duration::ZERO,
                 });
@@ -587,9 +657,145 @@ impl Coordinator {
         // cache_misses is counted by the worker when the batch reaches
         // compute — never here, so rejected or queued-then-expired
         // requests cannot deflate the hit rate
-        match self.queue.push(idx, Pending { id, tokens, tx }, deadline) {
+        let item = Pending { id, tokens, tx, internal: false };
+        match self.queue.push(idx, item, deadline) {
             Ok(()) => Ok(rx),
             Err(PushError::Full) => {
+                self.metrics.requests_rejected.inc();
+                Err(SubmitError::QueueFull)
+            }
+            Err(_) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Serve a document longer than the largest bucket by splitting it
+    /// into independent `chunk_tokens`-sized chunks, encoding each as
+    /// its own sequence, and length-weighted-merging the pooled chunk
+    /// embeddings ([`merge_chunk_embeddings`]) into one response.
+    ///
+    /// Chunk independence makes reuse *exact*: each chunk's embedding is
+    /// a pure function of the chunk's tokens, so a [`PrefixCache`] hit
+    /// is bitwise the recompute, and a document sharing its first k
+    /// chunks with prior traffic only computes the tail. Missing chunks
+    /// go through the normal sharded queue as `internal` items — they
+    /// batch with regular traffic and spread across the worker pool —
+    /// while this (caller) thread blocks until every chunk resolves,
+    /// mirroring the blocking `recv` the caller would perform anyway.
+    ///
+    /// Accounting stays request-level: the document is one `requests_in`
+    /// / `requests_done` / e2e-latency unit; per-chunk work is metered
+    /// by `prefix_hits` / `prefix_misses` / `chunks_computed` (and the
+    /// usual token/batch counters, which measure real compute).
+    fn submit_chunked(&self, tokens: Vec<i32>, budget: Option<Duration>)
+                      -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let t0 = Instant::now();
+        let deadline = budget
+            .or(self.default_deadline)
+            .and_then(|b| Instant::now().checked_add(b));
+        if let Some(d) = deadline {
+            if d <= Instant::now() {
+                self.metrics.requests_expired.inc();
+                return Err(SubmitError::DeadlineExpired);
+            }
+        }
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // pass 1: split, consult the prefix cache, enqueue every miss —
+        // all misses are in flight before we wait on any of them
+        let mut parts: Vec<(usize, Option<Arc<[f32]>>)> = Vec::new();
+        let mut waits: Vec<(usize, Vec<i32>, mpsc::Receiver<Response>)> =
+            Vec::new();
+        for chunk in tokens.chunks(self.chunk_tokens) {
+            let slot = parts.len();
+            match self.prefix_cache.as_ref().and_then(|p| p.get(chunk)) {
+                Some(emb) => {
+                    self.metrics.prefix_hits.inc();
+                    parts.push((chunk.len(), Some(emb)));
+                }
+                None => {
+                    self.metrics.prefix_misses.inc();
+                    parts.push((chunk.len(), None));
+                    let rx = self.submit_chunk(chunk.to_vec(), deadline)?;
+                    waits.push((slot, chunk.to_vec(), rx));
+                }
+            }
+        }
+        // pass 2: collect computed chunks, teaching the prefix cache
+        // each one so the next overlapping document reuses it
+        for (slot, chunk, rx) in waits {
+            let resp = rx.recv().map_err(|_| SubmitError::ShuttingDown)?;
+            match resp.embedding {
+                Ok(emb) => {
+                    self.metrics.chunks_computed.inc();
+                    let shared: Arc<[f32]> = Arc::from(&emb[..]);
+                    if let Some(p) = &self.prefix_cache {
+                        p.insert(&chunk, shared.clone());
+                    }
+                    parts[slot].1 = Some(shared);
+                }
+                Err(msg) => {
+                    // a failed chunk fails the document with the same
+                    // wire taxonomy (`deadline`, `execute: …`); expiry
+                    // is counted here — once per document, matching the
+                    // one `requests_in`
+                    if msg == "deadline" {
+                        self.metrics.requests_expired.inc();
+                    }
+                    let (tx, rx) = mpsc::channel();
+                    let _ = tx.send(Response {
+                        id,
+                        embedding: Err(msg),
+                        queue_time: t0.elapsed(),
+                        exec_time: Duration::ZERO,
+                    });
+                    return Ok(rx);
+                }
+            }
+        }
+        let resolved: Vec<(usize, Arc<[f32]>)> = parts
+            .into_iter()
+            .map(|(len, emb)| (len, emb.expect("every chunk resolved")))
+            .collect();
+        let embedding = merge_chunk_embeddings(&resolved);
+        self.metrics.requests_done.inc();
+        self.metrics.e2e_latency.record(t0.elapsed());
+        let (tx, rx) = mpsc::channel();
+        let _ = tx.send(Response {
+            id,
+            embedding: Ok(embedding),
+            queue_time: Duration::ZERO,
+            exec_time: t0.elapsed(),
+        });
+        Ok(rx)
+    }
+
+    /// Enqueue one chunk of a long document as an `internal` item: no
+    /// request-level counters, no whole-sequence cache lookup (chunk
+    /// reuse is the prefix cache's job), the parent document's absolute
+    /// deadline carried through so queued chunks expire exactly when
+    /// the document does.
+    fn submit_chunk(&self, tokens: Vec<i32>, deadline: Option<Instant>)
+                    -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let bucket = match self.router.route(tokens.len()) {
+            Route::Bucket(b) => b,
+            // unreachable by construction — chunk_tokens is clamped to
+            // the largest bucket at startup — but fail closed anyway
+            Route::TooLong { len, max } => {
+                return Err(SubmitError::TooLong { len, max })
+            }
+            Route::Empty => return Err(SubmitError::Empty),
+        };
+        let idx = self.router.bucket_index(bucket).unwrap();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let item = Pending { id, tokens, tx, internal: true };
+        match self.queue.push(idx, item, deadline) {
+            Ok(()) => Ok(rx),
+            Err(PushError::Full) => {
+                // the document is the rejected request, counted once
                 self.metrics.requests_rejected.inc();
                 Err(SubmitError::QueueFull)
             }
@@ -633,7 +839,12 @@ fn split_expired(batch: Vec<Queued<Pending>>,
     let mut live = Vec::with_capacity(batch.len());
     for q in batch {
         if q.deadline.map_or(false, |d| d <= now) {
-            metrics.requests_expired.inc();
+            // internal chunks answer Err("deadline") like any item, but
+            // the expiry counter belongs to the parent document (one
+            // logical request), which counts it on collection
+            if !q.item.internal {
+                metrics.requests_expired.inc();
+            }
             let _ = q.item.tx.send(Response {
                 id: q.item.id,
                 embedding: Err("deadline".to_string()),
@@ -648,12 +859,17 @@ fn split_expired(batch: Vec<Queued<Pending>>,
 }
 
 /// Record the served embedding for each request so an identical token
-/// sequence hits on the next admission.
+/// sequence hits on the next admission. Internal chunk items are
+/// skipped: chunk reuse belongs to the prefix cache (keyed and metered
+/// separately), and letting chunks churn the whole-sequence LRU would
+/// evict real request entries.
 fn cache_batch(cache: Option<&EmbeddingCache>, batch: &[Queued<Pending>],
                rows: &[Vec<f32>]) {
     if let Some(cache) = cache {
         for (q, emb) in batch.iter().zip(rows) {
-            cache.insert(&q.item.tokens, emb.clone());
+            if !q.item.internal {
+                cache.insert(&q.item.tokens, emb);
+            }
         }
     }
 }
@@ -669,9 +885,11 @@ fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
             continue;
         }
         // a cache miss = a looked-up request that reached compute
-        // (expired/rejected ones never count against the hit rate)
+        // (expired/rejected ones never count against the hit rate;
+        // internal chunks never looked the cache up at all)
         if cache.is_some() {
-            metrics.cache_misses.add(batch.len() as u64);
+            metrics.cache_misses.add(
+                batch.iter().filter(|q| !q.item.internal).count() as u64);
         }
         let bucket = buckets[batch[0].bucket];
         let now = Instant::now();
@@ -711,10 +929,14 @@ fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
                 cache_batch(cache, &batch, &rows);
                 let finish = Instant::now();
                 for (q, emb) in batch.into_iter().zip(rows) {
-                    metrics.requests_done.inc();
-                    metrics
-                        .e2e_latency
-                        .record(finish.duration_since(q.enqueued));
+                    // request-level accounting belongs to the parent
+                    // document for internal chunk items
+                    if !q.item.internal {
+                        metrics.requests_done.inc();
+                        metrics
+                            .e2e_latency
+                            .record(finish.duration_since(q.enqueued));
+                    }
                     let _ = q.item.tx.send(Response {
                         id: q.item.id,
                         embedding: Ok(emb),
@@ -744,9 +966,11 @@ fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
             continue;
         }
         // a cache miss = a looked-up request that reached compute
-        // (expired/rejected ones never count against the hit rate)
+        // (expired/rejected ones never count against the hit rate;
+        // internal chunks never looked the cache up at all)
         if cache.is_some() {
-            metrics.cache_misses.add(batch.len() as u64);
+            metrics.cache_misses.add(
+                batch.iter().filter(|q| !q.item.internal).count() as u64);
         }
         let now = Instant::now();
         for q in &batch {
@@ -774,10 +998,14 @@ fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
         cache_batch(cache, &batch, &rows);
         let finish = Instant::now();
         for (q, emb) in batch.into_iter().zip(rows) {
-            metrics.requests_done.inc();
-            metrics
-                .e2e_latency
-                .record(finish.duration_since(q.enqueued));
+            // request-level accounting belongs to the parent document
+            // for internal chunk items
+            if !q.item.internal {
+                metrics.requests_done.inc();
+                metrics
+                    .e2e_latency
+                    .record(finish.duration_since(q.enqueued));
+            }
             let _ = q.item.tx.send(Response {
                 id: q.item.id,
                 embedding: Ok(emb),
@@ -853,7 +1081,8 @@ mod tests {
                 bucket: 0,
                 enqueued: now,
                 deadline,
-                item: Pending { id, tokens: vec![1, 2, 3], tx },
+                item: Pending { id, tokens: vec![1, 2, 3], tx,
+                                internal: false },
             }, rx)
         };
         let (expired, rx_expired) = mk(0, Some(now)); // already past
@@ -885,9 +1114,109 @@ mod tests {
         assert_eq!(c.queue_shards(), 2);
         assert_eq!(c.cache_capacity(), 16);
         assert_eq!(c.cache_len(), 0);
+        // the default chunk length is already divisor-aligned; the
+        // default prefix cache rides along
+        assert_eq!(c.chunk_tokens(), 256);
+        assert_eq!(c.prefix_cache_capacity(), 1024);
+        assert_eq!(c.prefix_cache_len(), 0);
+        assert_eq!(c.queue_depth(), 0);
         assert!(c.model_desc().contains("1 layers"), "{}", c.model_desc());
         assert!(c.model_desc().contains("variant=spectral_shift"),
                 "{}", c.model_desc());
+    }
+
+    #[test]
+    fn chunk_length_is_landmark_aligned_and_bucket_clamped() {
+        // 24 rounds up to the next multiple of the 16 landmarks…
+        let cfg = ServingConfig {
+            seq_buckets: vec![32, 64],
+            chunk_tokens: 24,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        assert_eq!(c.chunk_tokens(), 32);
+        // …0 stays 0 (chunking disabled)…
+        let cfg = ServingConfig {
+            seq_buckets: vec![32, 64],
+            chunk_tokens: 0,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        assert_eq!(c.chunk_tokens(), 0);
+        // …and an oversized chunk clamps to the largest bucket
+        let cfg = ServingConfig {
+            seq_buckets: vec![32, 64],
+            chunk_tokens: 512,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        assert_eq!(c.chunk_tokens(), 64);
+    }
+
+    #[test]
+    fn long_documents_serve_chunked_and_replay_hits_the_prefix_cache() {
+        let cfg = ServingConfig {
+            seq_buckets: vec![32],
+            chunk_tokens: 16,
+            prefix_cache_capacity: 8,
+            cache_capacity: 0, // whole-sequence cache off: every serve
+            // of the document exercises the chunked path
+            workers: 2,
+            queue_capacity: 64,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        // 40 tokens over a 32-token n_max: chunks of 16 + 16 + 8
+        let doc: Vec<i32> = (0..40).map(|i| 5 + (i % 97)).collect();
+        let cold = c.submit_blocking(doc.clone()).unwrap().embedding.unwrap();
+        assert_eq!(c.metrics.prefix_misses.get(), 3);
+        assert_eq!(c.metrics.chunks_computed.get(), 3);
+        assert_eq!(c.metrics.prefix_hits.get(), 0);
+        // one logical request, start to finish
+        assert_eq!(c.metrics.requests_in.get(), 1);
+        assert_eq!(c.metrics.requests_done.get(), 1);
+        assert_eq!(c.prefix_cache_len(), 3);
+
+        // replay: every chunk hits, and the merged embedding is
+        // bitwise the cold serve (chunk reuse is exact)
+        let warm = c.submit_blocking(doc).unwrap().embedding.unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&warm), bits(&cold));
+        assert_eq!(c.metrics.prefix_hits.get(), 3);
+        assert_eq!(c.metrics.chunks_computed.get(), 3, "hits recomputed");
+        assert_eq!(c.metrics.requests_done.get(), 2);
+
+        // a document sharing the first two chunks only computes its tail
+        let mut overlap: Vec<i32> = (0..32).map(|i| 5 + (i % 97)).collect();
+        overlap.extend((0..8).map(|i| 900 + i));
+        let r = c.submit_blocking(overlap).unwrap();
+        assert!(r.embedding.is_ok());
+        assert_eq!(c.metrics.prefix_hits.get(), 5, "shared prefix missed");
+        assert_eq!(c.metrics.chunks_computed.get(), 4, "only the new tail");
+    }
+
+    #[test]
+    fn disabled_chunking_still_rejects_long_documents() {
+        let cfg = ServingConfig {
+            seq_buckets: vec![32],
+            chunk_tokens: 0,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::SpectralShift)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        let doc: Vec<i32> = (0..40).collect();
+        assert_eq!(c.submit(doc).err(),
+                   Some(SubmitError::TooLong { len: 40, max: 32 }));
+        assert_eq!(c.metrics.requests_rejected.get(), 1);
     }
 
     #[test]

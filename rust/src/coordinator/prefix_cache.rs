@@ -1,0 +1,243 @@
+//! Chunk-granular prefix-reuse cache for the streaming long-document
+//! ENCODE path.
+//!
+//! The [`EmbeddingCache`](super::cache::EmbeddingCache) is keyed on
+//! *whole* token sequences, so templated documents that share a long
+//! prefix — chat transcripts with a common system prompt, boilerplate
+//! report headers — recompute every layer from scratch as soon as one
+//! suffix token differs. The chunked long-document path (see
+//! `Coordinator::submit_chunked`) splits a document into fixed-size
+//! independent chunks; [`PrefixCache`] memoizes the *pooled embedding
+//! of each chunk*, keyed on chunk content, so a document sharing its
+//! first k chunks with prior traffic only computes the tail.
+//!
+//! # Why chunk reuse is exact
+//!
+//! A bidirectional encoder's activations for a prefix depend on the
+//! suffix — attention mixes every position with every other — so
+//! reusing *intra-sequence* prefix activations would be approximate.
+//! Chunks sidestep this: each chunk runs through the [`EncoderStack`]
+//! (crate::model::EncoderStack) as its own independent sequence, so its
+//! pooled embedding is a pure function of the chunk's tokens alone.
+//! The document embedding is the length-weighted mean of the chunk
+//! embeddings ([`merge_chunk_embeddings`]), accumulated in fixed chunk
+//! order, so equal token streams merge to bitwise-equal results no
+//! matter which chunks were cache hits. The coherence invariant of the
+//! embedding cache therefore carries over verbatim: **a prefix-cache
+//! hit is bitwise-identical to recomputing the chunk**
+//! (`tests/integration_longdoc.rs` pins this end to end over TCP).
+//!
+//! # Keying
+//!
+//! Entries are keyed on the chunk's FNV-1a content hash
+//! ([`hash_tokens`](super::cluster::hash_tokens) — the same keying the
+//! cluster ring uses, deterministic across processes) with the chunk's
+//! tokens stored alongside and compared on every hit. A 64-bit hash
+//! collision is therefore a *miss*, never a wrong answer — the bitwise
+//! invariant does not rest on hash uniqueness.
+
+use super::cache::LruCache;
+use super::cluster::hash_tokens;
+use std::sync::{Arc, Mutex};
+
+/// Thread-safe bounded LRU of pooled chunk embeddings, keyed on chunk
+/// content. Shared by the admission path (lookups while splitting a
+/// long document) and the chunk-completion path (inserts).
+///
+/// Values are `Arc<[f32]>`: a hit is a refcount bump, and the merge
+/// loop reads the shared payload without copying.
+///
+/// ```
+/// use ssaformer::coordinator::PrefixCache;
+/// use std::sync::Arc;
+/// let cache = PrefixCache::new(8);
+/// let emb: Arc<[f32]> = Arc::from(&[0.5_f32, -2.0][..]);
+/// assert!(cache.get(&[1, 2, 3]).is_none());
+/// cache.insert(&[1, 2, 3], emb.clone());
+/// // a hit shares the stored allocation — bitwise by construction
+/// assert!(Arc::ptr_eq(&cache.get(&[1, 2, 3]).unwrap(), &emb));
+/// assert!(cache.get(&[1, 2]).is_none());
+/// assert_eq!((cache.len(), cache.capacity()), (1, 8));
+/// ```
+pub struct PrefixCache {
+    inner: Mutex<LruCache<u64, (Box<[i32]>, Arc<[f32]>)>>,
+}
+
+impl PrefixCache {
+    /// A cache bounded at `capacity` entries (must be > 0; the
+    /// coordinator expresses `prefix_cache_capacity = 0` as the absence
+    /// of a cache, mirroring the embedding cache).
+    pub fn new(capacity: usize) -> Self {
+        PrefixCache { inner: Mutex::new(LruCache::new(capacity)) }
+    }
+
+    /// The pooled embedding previously computed for exactly this chunk,
+    /// if still resident. A hit refreshes recency and verifies the
+    /// stored tokens — a hash collision reads as a miss.
+    pub fn get(&self, chunk: &[i32]) -> Option<Arc<[f32]>> {
+        let key = hash_tokens(chunk);
+        let mut inner = self.inner.lock().unwrap();
+        match inner.get(&key) {
+            Some((stored, emb)) if stored.as_ref() == chunk => {
+                Some(emb.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Record the pooled embedding for `chunk` (evicting the LRU entry
+    /// when full). Re-inserting an existing chunk refreshes it —
+    /// idempotent, since a recompute is bitwise identical. A colliding
+    /// key is overwritten with the newer chunk: last-writer-wins is
+    /// sound because `get` verifies tokens.
+    pub fn insert(&self, chunk: &[i32], embedding: Arc<[f32]>) {
+        let key = hash_tokens(chunk);
+        let entry = (chunk.to_vec().into_boxed_slice(), embedding);
+        self.inner.lock().unwrap().insert(key, entry);
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The configured entry bound.
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity()
+    }
+}
+
+/// Length-weighted mean of per-chunk pooled embeddings: the document
+/// embedding a single mean-pool over all real tokens would produce if
+/// every chunk had been encoded at its own length.
+///
+/// Each chunk's pooled row is its per-position mean over `len` real
+/// tokens, so weighting by `len` and renormalizing by the total
+/// recovers the whole-document pool of the chunk-staged activations.
+/// Accumulation runs in fixed chunk order with a single f32 reciprocal
+/// multiply at the end (the same rounding shape `CpuEngine::mean_pool`
+/// uses), so the result is a deterministic function of the
+/// `(len, embedding)` list alone — cache hits cannot perturb it.
+///
+/// # Panics
+/// When `parts` is empty or the embeddings disagree on width.
+pub fn merge_chunk_embeddings(parts: &[(usize, Arc<[f32]>)]) -> Vec<f32> {
+    assert!(!parts.is_empty(), "merge of zero chunks");
+    let d = parts[0].1.len();
+    let total: usize = parts.iter().map(|(len, _)| *len).sum();
+    let mut out = vec![0.0f32; d];
+    for (len, emb) in parts {
+        assert_eq!(emb.len(), d, "chunk embedding width mismatch");
+        let w = *len as f32;
+        for (o, v) in out.iter_mut().zip(emb.iter()) {
+            *o += w * *v;
+        }
+    }
+    let inv = 1.0 / total as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arc(v: &[f32]) -> Arc<[f32]> {
+        Arc::from(v)
+    }
+
+    #[test]
+    fn hit_is_the_stored_allocation_and_respects_recency() {
+        let c = PrefixCache::new(2);
+        let a = arc(&[1.0, 2.0]);
+        c.insert(&[10, 11], a.clone());
+        c.insert(&[20, 21], arc(&[3.0, 4.0]));
+        let hit = c.get(&[10, 11]).unwrap(); // refreshes [10,11]
+        assert!(Arc::ptr_eq(&hit, &a), "hit copied the payload");
+        c.insert(&[30, 31], arc(&[5.0, 6.0])); // evicts [20,21]
+        assert!(c.get(&[20, 21]).is_none());
+        assert!(c.get(&[10, 11]).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn keyed_on_content_not_length_or_order() {
+        let c = PrefixCache::new(4);
+        c.insert(&[1, 2, 3], arc(&[0.5]));
+        assert!(c.get(&[1, 2]).is_none());
+        assert!(c.get(&[3, 2, 1]).is_none());
+        assert!(c.get(&[1, 2, 3, 0]).is_none());
+        assert!(c.get(&[1, 2, 3]).is_some());
+    }
+
+    #[test]
+    fn hash_collision_reads_as_miss_not_wrong_answer() {
+        // Force a collision by inserting directly under the other
+        // chunk's key: a real FNV-1a collision is not constructible by
+        // hand, but the guard only sees (key, stored-tokens), so this
+        // exercises the same path.
+        let c = PrefixCache::new(4);
+        let key = hash_tokens(&[7, 8, 9]);
+        c.inner
+            .lock()
+            .unwrap()
+            .insert(key, (vec![1, 1, 1].into_boxed_slice(), arc(&[9.0])));
+        // lookup of [7,8,9] finds the slot but the stored tokens differ
+        assert!(c.get(&[7, 8, 9]).is_none(),
+                "collision must be a miss, never a wrong embedding");
+    }
+
+    #[test]
+    fn reinsert_refreshes_idempotently() {
+        let c = PrefixCache::new(2);
+        c.insert(&[1], arc(&[1.0]));
+        c.insert(&[2], arc(&[2.0]));
+        c.insert(&[1], arc(&[1.0])); // refresh, not a growth
+        assert_eq!(c.len(), 2);
+        c.insert(&[3], arc(&[3.0])); // evicts [2], the LRU
+        assert!(c.get(&[2]).is_none());
+        assert!(c.get(&[1]).is_some());
+    }
+
+    #[test]
+    fn merge_is_the_length_weighted_mean() {
+        // two chunks of equal width: 3 tokens of [1,0], 1 token of [5,4]
+        let parts = vec![(3usize, arc(&[1.0, 0.0])), (1, arc(&[5.0, 4.0]))];
+        let merged = merge_chunk_embeddings(&parts);
+        // (3·1 + 1·5)/4 = 2.0 ; (3·0 + 1·4)/4 = 1.0
+        assert_eq!(merged, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn merge_of_one_chunk_is_bitwise_that_chunk() {
+        // a single full-length chunk must round exactly like the
+        // unchunked path: w·v · (1/w) with w = len both times
+        let emb = arc(&[0.1, -3.25e-7, f32::MIN_POSITIVE, 42.0]);
+        let merged = merge_chunk_embeddings(&[(128, emb.clone())]);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        // 128·v · (1/128) is exact (power-of-two scaling), and odd
+        // lengths also round back: f32 round-trip of w·v/w at w well
+        // inside the mantissa — pin the power-of-two case bitwise
+        assert_eq!(bits(&merged), bits(&emb));
+    }
+
+    #[test]
+    fn merge_is_deterministic_across_hit_patterns() {
+        // the merge sees only (len, embedding) pairs — simulate "chunk
+        // 0 was a hit" by cloning the Arc vs re-wrapping equal bits
+        let a = arc(&[0.25, 0.5, -1.5]);
+        let b = arc(&[1.0, -2.0, 3.0]);
+        let cold = merge_chunk_embeddings(&[(64, a.clone()), (40, b.clone())]);
+        let warm = merge_chunk_embeddings(
+            &[(64, a.clone()), (40, arc(&[1.0, -2.0, 3.0]))]);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&cold), bits(&warm));
+        let _ = b;
+    }
+}

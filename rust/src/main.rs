@@ -60,6 +60,9 @@ USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
                      a --weights path implies --init load)
            --artifacts DIR --max-batch N --max-wait-ms MS
            --workers N --shards N --cache-capacity N (0 = off)
+           --chunk-tokens N (long-document chunk length, 0 = reject
+                     sequences past the largest bucket as before)
+           --prefix-cache-capacity N (chunk-embedding entries, 0 = off)
            --default-deadline-ms MS (0 = none) --deadline-margin-ms MS
            --kernel auto|scalar|avx2|neon (micro-kernel arm; the
                      SSAF_KERNEL env var overrides this flag)
@@ -127,6 +130,13 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
     }
     if let Some(c) = flags.get("cache-capacity") {
         cfg.cache_capacity = c.parse().map_err(|_| "bad cache-capacity")?;
+    }
+    if let Some(c) = flags.get("chunk-tokens") {
+        cfg.chunk_tokens = c.parse().map_err(|_| "bad chunk-tokens")?;
+    }
+    if let Some(c) = flags.get("prefix-cache-capacity") {
+        cfg.prefix_cache_capacity =
+            c.parse().map_err(|_| "bad prefix-cache-capacity")?;
     }
     if let Some(d) = flags.get("default-deadline-ms") {
         cfg.default_deadline_ms = d.parse().map_err(|_| "bad default-deadline-ms")?;

@@ -133,6 +133,18 @@ pub struct ServingMetrics {
     /// configured). Requests rejected at admission or expired while
     /// queued are excluded, so they cannot deflate the hit rate.
     pub cache_misses: Counter,
+    /// Prefix-cache hits on the chunked long-document path: chunks
+    /// whose pooled embedding was reused instead of recomputed. One
+    /// document contributes one count per reused chunk.
+    pub prefix_hits: Counter,
+    /// Prefix-cache lookups that missed (the chunk went through the
+    /// queue and was computed). `prefix_hits + prefix_misses` = chunks
+    /// admitted on the long-document path.
+    pub prefix_misses: Counter,
+    /// Chunks actually executed for long documents (a miss that reached
+    /// compute and returned an embedding). Tracks `prefix_misses` minus
+    /// chunks lost to expiry/rejection mid-document.
+    pub chunks_computed: Counter,
     pub batches_executed: Counter,
     pub tokens_processed: Counter,
     /// Request slots offered across all executed batches (capacity ×
@@ -163,9 +175,12 @@ impl ServingMetrics {
         // cache hits never occupy a batch slot, so fill/occupancy are
         // computed over the batch-executed requests only
         let batched = self.requests_done.get().saturating_sub(hits);
+        let phits = self.prefix_hits.get();
+        let plookups = phits + self.prefix_misses.get();
         format!(
             "requests: in={} done={} rejected={} expired={}\n\
              cache:    hits={} misses={} ({:.0}% hit rate)\n\
+             prefix:   hits={} misses={} chunks={} ({:.0}% hit rate)\n\
              batches:  {} (avg fill {:.2} req/batch, occupancy {:.0}%)\n\
              tokens:   {} (+{} executed padding, {:.0}% waste)\n\
              queue:    {}\n\
@@ -178,6 +193,10 @@ impl ServingMetrics {
             hits,
             self.cache_misses.get(),
             100.0 * hits as f64 / lookups.max(1) as f64,
+            phits,
+            self.prefix_misses.get(),
+            self.chunks_computed.get(),
+            100.0 * phits as f64 / plookups.max(1) as f64,
             self.batches_executed.get(),
             batched as f64 / self.batches_executed.get().max(1) as f64,
             100.0 * batched as f64 / self.batch_slots.get().max(1) as f64,
@@ -339,6 +358,23 @@ mod tests {
         // occupancy counts only the batch-served half
         assert!(r.contains("avg fill 2.00"), "{r}");
         assert!(r.contains("occupancy 50%"), "{r}");
+    }
+
+    #[test]
+    fn prefix_cache_line_reports_chunk_accounting() {
+        let m = ServingMetrics::new();
+        // a 3-chunk document replayed once: 3 cold misses computed,
+        // then 3 warm hits — 50% hit rate over 6 chunk lookups
+        m.prefix_misses.add(3);
+        m.chunks_computed.add(3);
+        m.prefix_hits.add(3);
+        let r = m.report();
+        assert!(
+            r.contains("prefix:   hits=3 misses=3 chunks=3 (50% hit rate)"),
+            "{r}"
+        );
+        // the prefix line is independent of the embedding-cache line
+        assert!(r.contains("cache:    hits=0 misses=0 (0% hit rate)"), "{r}");
     }
 
     #[test]

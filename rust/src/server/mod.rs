@@ -12,7 +12,7 @@
 //! ENCODE <id> [DEADLINE_MS=<ms>] <tok1> <tok2> ... \n
 //!                                      encode a token sequence
 //! STATS\n                              metrics + backend report
-//! PING\n                               liveness probe → `OK 0 pong`
+//! PING\n                               liveness probe → `OK 0 pong q=<depth>`
 //! QUIT\n                               close this connection
 //! ```
 //!
@@ -32,6 +32,14 @@
 //! that fail to parse as `i32` are skipped; out-of-vocabulary ids are
 //! accepted (the CPU model wraps them into range).
 //!
+//! A sequence longer than the largest bucket is **chunked** when the
+//! server runs with `chunk_tokens > 0`: the coordinator splits it into
+//! fixed-size chunks, encodes each as an independent sequence (reusing
+//! prefix-cache hits where prior traffic shared chunks), merges the
+//! pooled chunk embeddings length-weighted, and answers with a single
+//! `OK` reply — the wire shape is identical to a short request. With
+//! `chunk_tokens = 0` such requests are rejected `too-long` as before.
+//!
 //! ## Responses
 //!
 //! ```text
@@ -47,6 +55,7 @@
 //! | `bad-deadline`          | `DEADLINE_MS=` value not a `u64`             |
 //! | `empty`                 | no valid tokens in the request               |
 //! | `too-long-<n>-max-<m>`  | length n exceeds the largest bucket m        |
+//! |                         | (only when chunking is off: `chunk_tokens=0`)|
 //! | `queue-full`            | admission backpressure; retry later          |
 //! | `deadline`              | deadline expired before execution; the       |
 //! |                         | request consumed no batch slot               |
@@ -62,9 +71,13 @@
 //! `PING` exists for the cluster tier's health probes: the router
 //! front-end ([`coordinator::cluster`](crate::coordinator::cluster))
 //! marks a replica up/down by round-tripping `PING` on its probe
-//! interval. Router-mode processes speak the same wire protocol and
-//! extend `STATS` with `cluster:` lines (membership, forward/retry
-//! counters) — field reference in `OPERATIONS.md`.
+//! interval. The reply carries the replica's instantaneous queue depth
+//! as a ` q=<depth>` suffix — the backpressure signal the router's
+//! placement uses to shed load from a saturated first ring choice to
+//! the runner-up. Probes only require the `OK` prefix, so old routers
+//! interoperate with new replicas. Router-mode processes speak the same
+//! wire protocol and extend `STATS` with `cluster:` lines (membership,
+//! forward/retry counters) — field reference in `OPERATIONS.md`.
 //!
 //! ## `STATS` report
 //!
@@ -78,6 +91,7 @@
 //! workers:  N (S queue shards, cache L/C)   worker pool + cache shape
 //! requests: in=N done=N rejected=N expired=N   admission counters
 //! cache:    hits=N misses=N (H% hit rate)
+//! prefix:   hits=N misses=N chunks=N (H% hit rate)   chunked long-doc path
 //! batches:  N (avg fill F req/batch, occupancy P%)
 //! tokens:   N (+P executed padding, W% waste)
 //! queue:    n=.. mean=..us p50=..us p99=..us max=..us
@@ -98,7 +112,11 @@
 //! padding positions the backend actually computed (dense remainder on
 //! XLA, landmark-alignment tails on CPU) — the padding-waste signal for
 //! batcher tuning. `expired` counts deadline misses, which appear in
-//! neither `done` nor `rejected`.
+//! neither `done` nor `rejected`. The `prefix:` line meters the chunked
+//! long-document path: `hits`/`misses` are per-chunk prefix-cache
+//! lookups, `chunks` counts chunk executions — a chunked document is
+//! one logical request in the `requests:` line (admitted once, done
+//! once) while its per-chunk compute shows up here.
 //!
 //! Deliberately minimal — the protocol exists so the serving stack can
 //! be exercised end-to-end over a real socket (examples/serve_attention,
@@ -377,8 +395,9 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                     coordinator.metrics.report())
         }
         // liveness probe for the cluster tier's health checks: cheap,
-        // touches no queue or worker, never blocks on the coordinator
-        Some("PING") => "OK 0 pong\n".into(),
+        // never blocks on a worker. The queue-depth suffix is the
+        // backpressure signal the router's placement reads at probe time.
+        Some("PING") => format!("OK 0 pong q={}\n", coordinator.queue_depth()),
         Some("QUIT") => "OK 0 bye\n".into(),
         _ => "ERR 0 unknown-command\n".into(),
     }
@@ -427,7 +446,8 @@ impl Client {
     }
 
     /// Round-trip a liveness probe; returns the reply line
-    /// (`OK 0 pong` from a healthy server).
+    /// (`OK 0 pong q=<depth>` from a healthy server, where `q=` is the
+    /// instantaneous coordinator queue depth).
     pub fn ping(&mut self) -> std::io::Result<String> {
         writeln!(self.writer, "PING")?;
         let mut line = String::new();

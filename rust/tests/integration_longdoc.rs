@@ -1,0 +1,197 @@
+//! Streaming long-document ENCODE end-to-end: documents past the
+//! largest bucket served over TCP through the chunked path, the
+//! prefix-reuse cache (hit ≡ recompute **bitwise**, pinned against a
+//! cold identically-configured server), per-document request
+//! accounting, and the chunking-is-the-identity property for
+//! sequences that fit a bucket.
+//!
+//! Runs unconditionally on the CPU backend (no artifacts needed) —
+//! the same stack `tests/integration_cpu_serving.rs` exercises, plus
+//! the `chunk_tokens` / `prefix_cache_capacity` knobs.
+
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::{
+    merge_chunk_embeddings, Coordinator, CpuEngine, CpuModel,
+    CpuModelConfig, ExecBackend,
+};
+use ssaformer::proptest_mini::{prop_assert, run};
+use ssaformer::server::{serve, Client};
+use std::sync::Arc;
+
+/// Buckets [32, 64] with 32-token chunks: documents past 64 tokens
+/// take the chunked path. Embedding cache off so every counter below
+/// meters the prefix cache alone.
+fn longdoc_config(chunk_tokens: usize, prefix_capacity: usize) -> ServingConfig {
+    ServingConfig {
+        variant: Variant::SpectralShift,
+        max_batch: 4,
+        max_wait_ms: 5,
+        queue_capacity: 64,
+        seq_buckets: vec![32, 64],
+        workers: 2,
+        cache_capacity: 0,
+        chunk_tokens,
+        prefix_cache_capacity: prefix_capacity,
+        ..Default::default()
+    }
+}
+
+fn start(cfg: &ServingConfig) -> Arc<Coordinator> {
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), cfg.variant)));
+    Arc::new(Coordinator::start(ExecBackend::Cpu(engine), cfg).unwrap())
+}
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 31 + seed) % 2000)).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn long_document_serves_over_tcp_and_equals_the_merged_chunks() {
+    let c = start(&longdoc_config(32, 16));
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // 160 tokens = 5 chunks of 32, 2.5× the largest bucket
+    let doc = toks(160, 3);
+    let reply = client.encode(7, &doc).unwrap();
+    assert!(reply.starts_with("OK 7 "), "{reply}");
+    let parts: Vec<&str> = reply.split_whitespace().collect();
+    assert_eq!(parts.len(), 2 + 8, "{reply}");
+
+    // cross-check against a chunking-free coordinator: encode each
+    // 32-token chunk as a plain request (the identical compute path
+    // the chunked coordinator uses internally) and merge
+    let plain = start(&longdoc_config(0, 0));
+    let chunk_parts: Vec<(usize, Arc<[f32]>)> = doc
+        .chunks(32)
+        .map(|ch| {
+            let emb = plain.submit_blocking(ch.to_vec()).unwrap()
+                .embedding.unwrap();
+            (ch.len(), Arc::from(&emb[..]))
+        })
+        .collect();
+    let want = merge_chunk_embeddings(&chunk_parts);
+    for (j, p) in parts[2..].iter().enumerate() {
+        assert_eq!(*p, format!("{:.5}", want[j]),
+                   "dim {j} of the chunked reply diverged: {reply}");
+    }
+
+    // per-document accounting: one logical request, chunk work metered
+    // on the prefix: line
+    let m = &c.metrics;
+    assert_eq!(m.requests_in.get(), 1);
+    assert_eq!(m.requests_done.get(), 1);
+    assert_eq!(m.prefix_misses.get(), 5);
+    assert_eq!(m.chunks_computed.get(), 5);
+    assert_eq!(m.prefix_hits.get(), 0);
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("prefix:   hits=0 misses=5 chunks=5"), "{stats}");
+    handle.stop();
+}
+
+#[test]
+fn prefix_hits_are_bitwise_identical_to_a_cold_recompute() {
+    // warm server: sees the template document, then a second document
+    // sharing its first 4 chunks (4/5 = 80% chunk overlap)
+    let warm = start(&longdoc_config(32, 16));
+    let (waddr, whandle) = serve(warm.clone(), "127.0.0.1:0", 2).unwrap();
+    // cold server: identically configured, sees only the second
+    // document — every chunk computed from scratch
+    let cold = start(&longdoc_config(32, 16));
+    let (caddr, chandle) = serve(cold.clone(), "127.0.0.1:0", 2).unwrap();
+
+    let template = toks(160, 11);
+    let mut shared_tail = template[..128].to_vec();
+    shared_tail.extend(toks(32, 999)); // distinct last chunk
+
+    let mut wclient = Client::connect(&waddr).unwrap();
+    let first = wclient.encode(1, &template).unwrap();
+    assert!(first.starts_with("OK 1 "), "{first}");
+    assert_eq!(warm.metrics.prefix_hits.get(), 0);
+
+    // exact replay: every chunk a hit, reply byte-identical
+    let replay = wclient.encode(1, &template).unwrap();
+    assert_eq!(replay, first, "replayed document reply must be byte-equal");
+    assert_eq!(warm.metrics.prefix_hits.get(), 5);
+    assert_eq!(warm.metrics.chunks_computed.get(), 5, "hits recompute nothing");
+
+    // overlapping document on the warm server vs the cold server:
+    // 4 prefix hits + 1 computed tail must be byte-equal on the wire …
+    let warm_reply = wclient.encode(2, &shared_tail).unwrap();
+    let mut cclient = Client::connect(&caddr).unwrap();
+    let cold_reply = cclient.encode(2, &shared_tail).unwrap();
+    assert!(warm_reply.starts_with("OK 2 "), "{warm_reply}");
+    assert_eq!(warm_reply, cold_reply,
+               "prefix-cache hits changed the served embedding");
+    assert_eq!(warm.metrics.prefix_hits.get(), 9); // 5 replay + 4 shared
+    assert_eq!(warm.metrics.chunks_computed.get(), 6);
+
+    // … and bitwise-identical at full precision, past the %.5f wire
+    // (this in-process resubmit is fully resident: 5 more warm hits)
+    let warm_emb = warm.submit_blocking(shared_tail.clone()).unwrap()
+        .embedding.unwrap();
+    let cold_emb = cold.submit_blocking(shared_tail).unwrap()
+        .embedding.unwrap();
+    assert_eq!(bits(&warm_emb), bits(&cold_emb),
+               "hit must equal recompute bitwise");
+
+    // 20 chunk lookups total, 14 hits — well past the ≥50%-overlap
+    // workload the STATS line must surface
+    let stats = wclient.stats().unwrap();
+    assert!(stats.contains("prefix:   hits=14 misses=6 chunks=6 (70% hit rate)"),
+            "{stats}");
+    whandle.stop();
+    chandle.stop();
+}
+
+#[test]
+fn property_chunking_is_the_identity_for_sequences_that_fit() {
+    // a sequence ≤ n_max with chunk_tokens ≥ len never takes the
+    // chunked path, so enabling chunking must be bitwise invisible
+    let chunked = start(&longdoc_config(64, 16));
+    let plain = start(&longdoc_config(0, 0));
+    run(12, |g| {
+        let len = g.usize_in(1, 64);
+        let seed = g.usize_in(0, 5000) as i32;
+        let t = toks(len, seed);
+        let a = chunked.submit_blocking(t.clone()).unwrap()
+            .embedding.unwrap();
+        let b = plain.submit_blocking(t).unwrap().embedding.unwrap();
+        prop_assert(bits(&a) == bits(&b),
+                    format!("len {len} seed {seed}: chunk-capable \
+                             coordinator diverged from the plain path"))
+    });
+    assert_eq!(chunked.metrics.prefix_misses.get(), 0,
+               "short sequences must never touch the prefix cache");
+}
+
+#[test]
+fn disabled_chunking_still_rejects_and_expired_documents_count_once() {
+    // chunk_tokens = 0 keeps the pre-chunking contract over the wire
+    let c = start(&longdoc_config(0, 0));
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let reply = client.encode(3, &toks(160, 3)).unwrap();
+    assert_eq!(reply, "ERR 3 too-long-160-max-64");
+    handle.stop();
+
+    // an already-expired deadline on a chunkable document: one expiry
+    // for the whole document, no chunk ever admitted
+    let c = start(&longdoc_config(32, 16));
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let reply = client.encode_with_deadline(4, &toks(160, 3), 0).unwrap();
+    assert_eq!(reply, "ERR 4 deadline");
+    assert_eq!(c.metrics.requests_expired.get(), 1);
+    assert_eq!(c.metrics.prefix_misses.get() + c.metrics.prefix_hits.get(), 0);
+    // the same document with a generous budget then serves normally
+    let reply = client.encode_with_deadline(5, &toks(160, 3), 60_000).unwrap();
+    assert!(reply.starts_with("OK 5 "), "{reply}");
+    assert_eq!(c.metrics.requests_done.get(), 1);
+    handle.stop();
+}
