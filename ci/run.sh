@@ -41,6 +41,22 @@ echo "==> longdoc lane: cargo test -q --test integration_longdoc (+ scalar)"
 cargo test -q --test integration_longdoc
 SSAF_KERNEL=scalar cargo test -q --test integration_longdoc
 
+# admission lane: accuracy-aware admission + quantized tiers. The
+# quant kernel unit tests, the wire-level routing suite (on both kernel
+# arms — the full-f32 bitwise pin must hold on the portable fallback
+# too), then the env-override check once per tier: SSAF_ADMISSION
+# outranks the [serving] admission knob, so only the override-aware
+# test runs under the forced env (the rest of the suite asserts
+# auto-policy replies and would be meaningless there).
+echo "==> admission lane: cargo test -q --test integration_admission (+ scalar + forced tiers)"
+cargo test -q --lib quant
+cargo test -q --test integration_admission
+SSAF_KERNEL=scalar cargo test -q --test integration_admission
+for tier in full-f32 ss-f32 ss-bf16 ss-int8; do
+    SSAF_ADMISSION="$tier" cargo test -q --test integration_admission \
+        env_override
+done
+
 # train lane: the deterministic CPU trainer end to end — train a
 # projected 3-layer encoder (smoke schedule), checkpoint it, serve the
 # checkpoint over TCP through init=load, and sweep every variant's

@@ -37,6 +37,15 @@
 //! client-side p50/p99 per document, and documents/sec — the
 //! trajectory rows for the chunk-granular reuse path.
 //!
+//! Schema v9 adds the precision-tier rows under `"quant"`:
+//! `gemm_gflops_n{N}_<tier>` (the GEMM shape through
+//! `gemm_quant_into` with the weights quantized to each tier, f32 as
+//! the baseline row) and `serving_rps_n{N}_l1_<tier>` (layers=1
+//! coordinator throughput with the `[serving] admission` knob forcing
+//! every request onto each tier) — the perf half of the accuracy/perf
+//! trade the admission policy sells, next to the error half in
+//! `BENCH_error_bound.json`.
+//!
 //! Run: cargo bench --bench bench_snapshot
 //! Threads: set SSAFORMER_THREADS to pin the pool size.
 //! Smoke mode: set BENCH_SMOKE=1 to shrink the problem set (n = 256
@@ -55,11 +64,13 @@ use ssaformer::coordinator::cluster::{
     serve_router, ClusterConfig, ClusterRouter,
 };
 use ssaformer::coordinator::{
-    Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
+    Coordinator, CpuEngine, CpuModel, CpuModelConfig, EncodeRequest,
+    ExecBackend, TierKind,
 };
 use ssaformer::server::{serve, Client};
 use ssaformer::kernels::{
-    active_isa, gemm_f32, global_pool, Isa, KernelCtx, Workspace,
+    active_isa, gemm_f32, gemm_quant_into, global_pool, Isa, KernelCtx,
+    Precision, QuantMatrix, Workspace,
 };
 use ssaformer::rngx::Rng;
 use std::sync::Arc;
@@ -95,6 +106,9 @@ fn main() {
     let mut speedups: Vec<(String, f64)> = Vec::new();
     // per-ISA dispatch rows (schema v6): keyed by arm token
     let mut isa_rows: Vec<(String, f64)> = Vec::new();
+    // precision-tier rows (schema v9): quantized GEMM GF/s and
+    // forced-admission serving rps, keyed by tier token
+    let mut quant: Vec<(String, f64)> = Vec::new();
 
     let mut table = Table::new(&["kernel", "n", "median", "GF/s", "threads"]);
     for &n in sizes {
@@ -130,6 +144,7 @@ fn main() {
         push(&mut entries, &mut table, "gemm/fast_tN", n, &s, gemm_flops, threads);
         speedups.push((format!("gemm_n{n}_fast_tN_vs_ref"),
                        ref_gemm / s.median.as_secs_f64()));
+        let f32_gemm_gflops = gemm_flops / s.median.as_secs_f64() / 1e9;
 
         // --- per-ISA GEMM rows: the same shape with the kernel core
         // pinned to each arm this host can run (scalar is always one)
@@ -144,6 +159,25 @@ fn main() {
             push(&mut entries, &mut table, &name, n, &s, gemm_flops, threads);
             isa_rows.push((format!("gemm_gflops_n{n}_{}", isa.token()),
                            gemm_flops / s.median.as_secs_f64() / 1e9));
+        }
+
+        // --- precision-tier GEMM rows (schema v9): the same shape
+        // through `gemm_quant_into` with B held at each quantized tier;
+        // the f32 baseline row repeats the fast_tN number so the three
+        // rows diff against each other directly
+        quant.push((format!("gemm_gflops_n{n}_f32"), f32_gemm_gflops));
+        for p in [Precision::Bf16, Precision::Int8] {
+            let bq = QuantMatrix::quantize(&b.data, d, d, p);
+            let mut out = vec![0.0f32; n * d];
+            let s = bench(|| {
+                gemm_quant_into(&par, &q.data, &bq, &mut out, n, d, d,
+                                &mut ws);
+                std::hint::black_box(&out);
+            }, budget, 60);
+            let name = format!("gemm/quant_{}", p.token());
+            push(&mut entries, &mut table, &name, n, &s, gemm_flops, threads);
+            quant.push((format!("gemm_gflops_n{n}_{}", p.token()),
+                        gemm_flops / s.median.as_secs_f64() / 1e9));
         }
 
         // --- spectral shifting end-to-end, seed scalar vs kernel core
@@ -276,6 +310,44 @@ fn main() {
             isa_rows.push((format!("serving_rps_n{n}_l1_{}", isa.token()), rps));
         }
     }
+    // per-tier serving rows (schema v9): layers=1 at the smallest bucket
+    // with the `[serving] admission` knob forcing every request onto
+    // each tier — the end-to-end counterpart of the quant GEMM rows and
+    // the perf half of the trade priced in BENCH_error_bound.json
+    {
+        let n = sizes[0];
+        for tier in TierKind::ALL {
+            let cfg = ServingConfig {
+                variant: Variant::SpectralShift,
+                layers: 1,
+                max_batch: 4,
+                max_wait_ms: 2,
+                queue_capacity: 256,
+                seq_buckets: sizes.to_vec(),
+                cache_capacity: 0,
+                admission: Some(tier),
+                ..Default::default()
+            };
+            let engine = Box::new(CpuEngine::new(CpuModel::new(
+                CpuModelConfig::default(), cfg.variant)));
+            let coordinator = Arc::new(
+                Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap());
+            let toks: Vec<i32> = (0..n).map(|i| 3 + (i as i32 % 2000)).collect();
+            coordinator.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
+            let reqs = if smoke() { 8 } else { 24 };
+            let start = std::time::Instant::now();
+            let rxs: Vec<_> = (0..reqs)
+                .map(|_| coordinator.submit(toks.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().embedding.unwrap();
+            }
+            let rps = reqs as f64 / start.elapsed().as_secs_f64();
+            stbl.row(&[format!("encode_rps[{}]", tier.token()), "1".into(),
+                       n.to_string(), format!("{rps:.1}")]);
+            quant.push((format!("serving_rps_n{n}_l1_{}", tier.token()), rps));
+        }
+    }
     println!("{}", stbl.render());
 
     // --- mixed-deadline workload over the sharded worker pool + cache
@@ -315,8 +387,9 @@ fn main() {
             let c = coordinator.clone();
             joins.push(std::thread::spawn(move || {
                 // expired on arrival: must cost nothing but a counter
-                let _ = c.submit_with_deadline(
-                    vec![1, 2, 3], Some(Duration::ZERO));
+                let _ = c.submit(
+                    EncodeRequest::new(vec![1, 2, 3])
+                        .deadline(Duration::ZERO));
                 let mut lat: Vec<Duration> = Vec::new();
                 for _round in 0..3 {
                     for s in 0..4 {
@@ -325,8 +398,10 @@ fn main() {
                             .map(|i| 3 + ((i * 13 + t * 7 + s) as i32 % 2000))
                             .collect();
                         let t_req = std::time::Instant::now();
-                        let rx = c.submit_with_deadline(
-                            toks, Some(Duration::from_secs(30))).unwrap();
+                        let rx = c.submit(
+                            EncodeRequest::new(toks)
+                                .deadline(Duration::from_secs(30)))
+                            .unwrap();
                         rx.recv().unwrap().embedding.unwrap();
                         lat.push(t_req.elapsed());
                     }
@@ -541,7 +616,7 @@ fn main() {
     }
 
     let json = render_json(threads, c, d, &entries, &speedups, &serving,
-                           &isa_rows, &cluster, &longdoc);
+                           &isa_rows, &quant, &cluster, &longdoc);
     // benches run with cwd = rust/; the repo root is one level up
     let path = if std::path::Path::new("../ROADMAP.md").exists() {
         "../BENCH_kernels.json"
@@ -571,11 +646,12 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
                speedups: &[(String, f64)],
                serving: &[(String, f64)],
                isa_rows: &[(String, f64)],
+               quant: &[(String, f64)],
                cluster: &[(String, f64)],
                longdoc: &[(String, f64)]) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v8\",\n");
+    out.push_str("  \"schema\": \"ssaformer/bench_kernels/v9\",\n");
     out.push_str("  \"generated_by\": \"cargo bench --bench bench_snapshot\",\n");
     out.push_str(&format!("  \"smoke\": {},\n", smoke()));
     out.push_str(&format!("  \"threads\": {threads},\n"));
@@ -614,6 +690,14 @@ fn render_json(threads: usize, c: usize, d: usize, entries: &[Entry],
     out.push_str("  \"isa\": {\n");
     for (i, (name, x)) in isa_rows.iter().enumerate() {
         let comma = if i + 1 < isa_rows.len() { "," } else { "" };
+        out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
+    }
+    out.push_str("  },\n");
+    // precision-tier rows (v9): quantized GEMM GF/s per tier and
+    // layers=1 serving rps with the admission knob forcing each tier
+    out.push_str("  \"quant\": {\n");
+    for (i, (name, x)) in quant.iter().enumerate() {
+        let comma = if i + 1 < quant.len() { "," } else { "" };
         out.push_str(&format!("    \"{name}\": {x:.3}{comma}\n"));
     }
     out.push_str("  },\n");

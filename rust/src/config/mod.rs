@@ -5,6 +5,7 @@
 //! Supported TOML subset: `[section]` headers, `key = value` with
 //! string ("…"), integer, float, and boolean values, `#` comments.
 
+use crate::coordinator::admission::TierKind;
 use crate::kernels::Isa;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -365,6 +366,13 @@ pub struct ServingConfig {
     /// arm at startup. The `SSAF_KERNEL` environment variable overrides
     /// this knob either way.
     pub kernel: Option<Isa>,
+    /// Admission tier to force for *every* request (`full-f32` |
+    /// `ss-f32` | `ss-bf16` | `ss-int8`); `None` (config token `auto`,
+    /// the default) routes per request by accuracy budget. The
+    /// `SSAF_ADMISSION` environment variable overrides this knob either
+    /// way. CPU backend only — the artifact backend has no tier
+    /// lattice and serves the configured path regardless.
+    pub admission: Option<TierKind>,
     /// `replica` (default) serves requests locally; `router` forwards
     /// them across `replicas` (see `coordinator::cluster`).
     pub role: Role,
@@ -415,6 +423,7 @@ impl Default for ServingConfig {
             weights: None,
             init: InitPolicy::Seeded,
             kernel: None,
+            admission: None,
             role: Role::Replica,
             replicas: Vec::new(),
             probe_interval_ms: 500,
@@ -470,6 +479,18 @@ impl ServingConfig {
             }
             None => None,
         };
+        let admission = match cfg.get("serving", "admission") {
+            Some(Value::Str(s)) if s.trim().eq_ignore_ascii_case("auto") => None,
+            Some(Value::Str(s)) => Some(TierKind::parse(s).ok_or_else(|| {
+                ConfigError::Invalid("serving".into(), "admission".into(),
+                                     s.clone())
+            })?),
+            Some(_) => {
+                return Err(ConfigError::Type("serving".into(),
+                                             "admission".into(), "string"))
+            }
+            None => None,
+        };
         let role = match cfg.get("serving", "role") {
             Some(Value::Str(s)) => Role::parse(s).ok_or_else(|| {
                 ConfigError::Invalid("serving".into(), "role".into(), s.clone())
@@ -522,6 +543,7 @@ impl ServingConfig {
             weights,
             init,
             kernel,
+            admission,
             role,
             replicas,
             probe_interval_ms: unsigned("probe_interval_ms",
@@ -838,6 +860,29 @@ resume = false
         assert!(matches!(ServingConfig::from_config(&c),
                          Err(ConfigError::Invalid(..))));
         let c = Config::parse("[serving]\nkernel = 2\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Type(..))));
+    }
+
+    #[test]
+    fn admission_knob_parses_and_rejects_garbage() {
+        // default: auto (per-request routing, no forced tier)
+        assert_eq!(ServingConfig::default().admission, None);
+        let c = Config::parse("[serving]\nadmission = \"ss-int8\"\n").unwrap();
+        assert_eq!(ServingConfig::from_config(&c).unwrap().admission,
+                   Some(TierKind::SsInt8));
+        // "full" is accepted shorthand for the reference tier
+        let c = Config::parse("[serving]\nadmission = \"full\"\n").unwrap();
+        assert_eq!(ServingConfig::from_config(&c).unwrap().admission,
+                   Some(TierKind::FullF32));
+        // "auto" is the explicit spelling of the default
+        let c = Config::parse("[serving]\nadmission = \"auto\"\n").unwrap();
+        assert_eq!(ServingConfig::from_config(&c).unwrap().admission, None);
+        // unknown tiers and wrong types are errors, not silent fallbacks
+        let c = Config::parse("[serving]\nadmission = \"fp4\"\n").unwrap();
+        assert!(matches!(ServingConfig::from_config(&c),
+                         Err(ConfigError::Invalid(..))));
+        let c = Config::parse("[serving]\nadmission = 8\n").unwrap();
         assert!(matches!(ServingConfig::from_config(&c),
                          Err(ConfigError::Type(..))));
     }

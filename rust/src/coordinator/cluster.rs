@@ -40,7 +40,13 @@
 //!   the full parsed token sequence — and stores the replica's `OK`
 //!   payload text. Because the wire format (`%.5f`) is itself a
 //!   deterministic function of the embedding, replaying the cached
-//!   payload is byte-identical to re-asking any replica.
+//!   payload is byte-identical to re-asking any replica. Requests
+//!   carrying non-deadline options (e.g. `ACCURACY=`) bypass the
+//!   router cache in both directions — a tier-routed reply is *not* a
+//!   recompute of the default tier — and their options are forwarded
+//!   verbatim ([`WireOptions::render_extras`](crate::server::options::WireOptions::render_extras)),
+//!   so the replica's admission policy, not the router, decides the
+//!   tier.
 //! * **Deterministic placement.** Keys are FNV-1a 64 hashes (fixed
 //!   offset/prime — unlike `std`'s randomly keyed SipHash) so the ring
 //!   assigns identically in every process; tests rebuild the ring to
@@ -66,6 +72,7 @@
 
 use crate::metrics::RouterMetrics;
 use crate::minirt::{CancelToken, ThreadPool};
+use crate::server::options::parse_options;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -514,13 +521,25 @@ pub fn remaining_budget_ms(orig_ms: u64, elapsed_ms: u64) -> u64 {
     orig_ms.saturating_sub(elapsed_ms)
 }
 
-/// Serialize the forward line for a replica attempt.
-fn forward_line(id: u64, deadline_ms: Option<u64>, tokens: &[i32]) -> String {
+/// Serialize the forward line for a replica attempt. `extras` is the
+/// client's non-deadline option prefix, re-rendered verbatim
+/// (`WireOptions::render_extras`) so the replica parses exactly the
+/// options the client sent; empty when none. The deadline is *not*
+/// verbatim — it is rebuilt from the remaining budget per attempt.
+fn forward_line(id: u64, deadline_ms: Option<u64>, extras: &str,
+                tokens: &[i32]) -> String {
     let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
-    match deadline_ms {
-        Some(ms) => format!("ENCODE {id} DEADLINE_MS={ms} {}", toks.join(" ")),
-        None => format!("ENCODE {id} {}", toks.join(" ")),
+    let mut line = format!("ENCODE {id}");
+    if let Some(ms) = deadline_ms {
+        line.push_str(&format!(" DEADLINE_MS={ms}"));
     }
+    if !extras.is_empty() {
+        line.push(' ');
+        line.push_str(extras);
+    }
+    line.push(' ');
+    line.push_str(&toks.join(" "));
+    line
 }
 
 /// Parse + execute one protocol line against the cluster (the router
@@ -535,23 +554,25 @@ pub fn dispatch_router(line: &str, router: &ClusterRouter,
             let Some(id) = parts.next().and_then(|s| s.parse::<u64>().ok()) else {
                 return "ERR 0 bad-id\n".into();
             };
-            let mut deadline_ms = None;
-            if let Some(field) = parts.peek().copied()
-                .and_then(|p| p.strip_prefix("DEADLINE_MS=")) {
-                let Ok(ms) = field.parse::<u64>() else {
-                    return format!("ERR {id} bad-deadline\n");
-                };
-                deadline_ms = Some(ms);
-                parts.next();
-            }
+            // same option grammar as the replica (server::options) —
+            // the router rejects exactly the lines a replica would
+            let opts = match parse_options(&mut parts) {
+                Ok(o) => o,
+                Err(e) => return format!("ERR {id} {}\n", e.err_token()),
+            };
+            let deadline_ms = opts.deadline_ms;
             // parse exactly as the replica would, so the cache key the
             // router uses is the key any replica's cache uses
             let tokens: Vec<i32> = parts.filter_map(|t| t.parse().ok()).collect();
             // cache fast path first, mirroring the coordinator: a hit
-            // costs nothing, so it is served even under a blown deadline
-            if let Some(payload) = router.cache_get(&tokens) {
-                router.metrics.cache_hits.inc();
-                return format!("OK {id} {payload}\n");
+            // costs nothing, so it is served even under a blown
+            // deadline. Requests with non-deadline options bypass the
+            // cache entirely — its entries are default-tier payloads.
+            if !opts.has_extras() {
+                if let Some(payload) = router.cache_get(&tokens) {
+                    router.metrics.cache_hits.inc();
+                    return format!("OK {id} {payload}\n");
+                }
             }
             // deadline gate: a budget that is already zero never
             // touches a replica (DEADLINE_MS=0 is the replica's own
@@ -565,11 +586,13 @@ pub fn dispatch_router(line: &str, router: &ClusterRouter,
             }
             // a miss = a looked-up request that goes toward a replica
             // (expired-at-router requests never deflate the hit rate,
-            // mirroring the coordinator's accounting)
-            if router.cache.is_some() {
+            // mirroring the coordinator's accounting; option-carrying
+            // requests were never looked up, so they meter nothing)
+            if router.cache.is_some() && !opts.has_extras() {
                 router.metrics.cache_misses.inc();
             }
             router.metrics.forwarded.inc();
+            let extras = opts.render_extras();
             let mut first = true;
             for r in router.candidates(&tokens) {
                 if !first {
@@ -591,11 +614,13 @@ pub fn dispatch_router(line: &str, router: &ClusterRouter,
                     }
                     None => None,
                 };
-                let fwd = forward_line(id, fwd_deadline, &tokens);
+                let fwd = forward_line(id, fwd_deadline, &extras, &tokens);
                 if let Ok(reply) = try_replica(router, conns, r, &fwd) {
-                    if let Some(payload) =
-                        reply.strip_prefix(&format!("OK {id} ")) {
-                        router.cache_put(&tokens, payload.to_string());
+                    if !opts.has_extras() {
+                        if let Some(payload) =
+                            reply.strip_prefix(&format!("OK {id} ")) {
+                            router.cache_put(&tokens, payload.to_string());
+                        }
                     }
                     return format!("{reply}\n");
                 }
@@ -822,10 +847,22 @@ mod tests {
 
     #[test]
     fn forward_line_round_trips_the_wire_grammar() {
-        assert_eq!(forward_line(7, None, &[5, 6, 7]), "ENCODE 7 5 6 7");
-        assert_eq!(forward_line(7, Some(250), &[5]),
+        assert_eq!(forward_line(7, None, "", &[5, 6, 7]), "ENCODE 7 5 6 7");
+        assert_eq!(forward_line(7, Some(250), "", &[5]),
                    "ENCODE 7 DEADLINE_MS=250 5");
-        assert_eq!(forward_line(1, None, &[]), "ENCODE 1 ");
+        assert_eq!(forward_line(1, None, "", &[]), "ENCODE 1 ");
+        // non-deadline options forward verbatim, after the rebuilt
+        // deadline, and parse back through the shared grammar
+        assert_eq!(forward_line(7, Some(250), "ACCURACY=budget", &[5]),
+                   "ENCODE 7 DEADLINE_MS=250 ACCURACY=budget 5");
+        assert_eq!(forward_line(2, None, "ACCURACY=0.050", &[1, 2]),
+                   "ENCODE 2 ACCURACY=0.050 1 2");
+        let fwd = forward_line(9, Some(9), "ACCURACY=high", &[3]);
+        let (opts, rest) = crate::server::options::parse_option_str(
+            fwd.strip_prefix("ENCODE 9 ").unwrap()).unwrap();
+        assert_eq!(opts.deadline_ms, Some(9));
+        assert_eq!(opts.render_extras(), "ACCURACY=high");
+        assert_eq!(rest, vec!["3"]);
     }
 
     // ---- satellite: consistent-hash ring property tests ----

@@ -32,11 +32,13 @@
 //! past `padded_len` and slots past `plan.fill` are never touched, and
 //! pooled outputs only average real rows.
 
+use super::admission::TierKind;
 use super::batcher::{aligned_len, BatchPlan};
 use crate::attention::Tensor2;
 use crate::config::Variant;
 use crate::kernels::{BatchedAttention, BatchedVariant, KernelCtx, Workspace};
-use crate::model::{AttentionOp, Checkpoint, CheckpointError, EncoderStack};
+use crate::model::{quantize_stack, AttentionOp, Checkpoint, CheckpointError,
+                   EncoderStack};
 use crate::rngx::Rng;
 use std::sync::Arc;
 
@@ -93,6 +95,10 @@ pub struct CpuModel {
     cfg: CpuModelConfig,
     serving_variants: Vec<Variant>,
     stack: EncoderStack,
+    /// Admission tier stacks ([`CpuModel::build_tiers`]) — empty until
+    /// a serving coordinator asks for them, so trainer/test models pay
+    /// nothing for the admission lattice.
+    tiers: Vec<(TierKind, EncoderStack)>,
     /// vocab × d_model Gaussian embedding table (seeded).
     embed: Vec<f32>,
     /// sinusoid frequency per even dimension (d_model/2 entries),
@@ -162,7 +168,58 @@ impl CpuModel {
         let pos_freqs = (0..cfg.d_model / 2)
             .map(|h| 10_000f32.powf(-((2 * h) as f32) / cfg.d_model as f32))
             .collect();
-        CpuModel { cfg, serving_variants, stack, embed, pos_freqs }
+        CpuModel { cfg, serving_variants, stack, tiers: Vec::new(), embed,
+                   pos_freqs }
+    }
+
+    /// Build the admission tier stacks from the loaded weights — the
+    /// "quantize once at load" half of the precision-tier contract.
+    /// Every [`TierKind`] gets a stack: `full-f32` re-bases every block
+    /// on exact attention at f32, and the `ss-*` tiers run spectral
+    /// shifting (model landmarks / pinv iters) at f32 / bf16 / int8.
+    /// Idempotent; serving coordinators call it once before the model
+    /// is shared, and non-serving paths never pay for it. Which tiers
+    /// are *admissible* (bucket divisibility) is the coordinator's
+    /// call, not the model's.
+    pub fn build_tiers(&mut self) {
+        if !self.tiers.is_empty() {
+            return;
+        }
+        let full = vec![
+            BatchedVariant::from_config(Variant::Full, self.cfg.landmarks,
+                                        self.cfg.pinv_iters);
+            self.cfg.layers
+        ];
+        let ss = vec![
+            BatchedVariant::from_config(Variant::SpectralShift,
+                                        self.cfg.landmarks,
+                                        self.cfg.pinv_iters);
+            self.cfg.layers
+        ];
+        for tier in TierKind::ALL {
+            let variants = if tier.is_ss() { ss.clone() } else { full.clone() };
+            let stack = quantize_stack(&self.stack, variants,
+                                       tier.precision());
+            self.tiers.push((tier, stack));
+        }
+    }
+
+    /// Whether [`CpuModel::build_tiers`] has run.
+    pub fn tiers_built(&self) -> bool {
+        !self.tiers.is_empty()
+    }
+
+    /// The encoder stack serving `tier`, if tiers are built.
+    pub fn tier_stack(&self, tier: TierKind) -> Option<&EncoderStack> {
+        self.tiers.iter().find(|(t, _)| *t == tier).map(|(_, s)| s)
+    }
+
+    /// [`CpuModel::padded_len`] under `tier`'s operator instead of the
+    /// configured one (full tiers never pad; ss tiers align to the
+    /// landmark count). Panics if tiers were never built.
+    pub fn tier_padded_len(&self, tier: TierKind, len: usize) -> usize {
+        let stack = self.tier_stack(tier).expect("tier stacks not built");
+        aligned_len(len, stack.landmark_divisor())
     }
 
     pub fn d_model(&self) -> usize {
@@ -349,6 +406,19 @@ impl CpuEngine {
         &self.model
     }
 
+    /// Build the model's admission tier stacks
+    /// ([`CpuModel::build_tiers`]) if this engine still *uniquely* owns
+    /// the model — i.e. before any [`CpuEngine::fork`]. Returns whether
+    /// tier stacks are available afterwards; a shared, never-tiered
+    /// model stays untiered (the coordinator then admits full-f32
+    /// only).
+    pub fn ensure_tiers(&mut self) -> bool {
+        if let Some(m) = Arc::get_mut(&mut self.model) {
+            m.build_tiers();
+        }
+        self.model.tiers_built()
+    }
+
     /// Pre-plan the staging arena for batches of `capacity` requests at
     /// up to `max_seq` positions ([`EncoderStack::plan_sizes`] →
     /// [`Workspace::plan`]), so even the first batch at the largest
@@ -367,6 +437,20 @@ impl CpuEngine {
         lens.iter().map(|&l| (self.model.padded_len(l) - l) as u64).sum()
     }
 
+    /// [`CpuEngine::padded_positions`] under an admission tier: `None`
+    /// is the configured operator, `Some(t)` pads to tier `t`'s
+    /// alignment instead.
+    pub fn padded_positions_for(&self, tier: Option<TierKind>,
+                                lens: &[usize]) -> u64 {
+        match tier {
+            None => self.padded_positions(lens),
+            Some(t) => lens
+                .iter()
+                .map(|&l| (self.model.tier_padded_len(t, l) - l) as u64)
+                .sum(),
+        }
+    }
+
     /// Execute one assembled batch: embed every real request, forward
     /// the batch through the encoder stack (heads × requests in
     /// parallel on the kernel pool), and mean-pool each request's real
@@ -374,7 +458,23 @@ impl CpuEngine {
     /// caller handed `assemble`. Returns one `d_model` embedding per
     /// real request, in order.
     pub fn encode_batch(&mut self, plan: &BatchPlan, lens: &[usize]) -> Vec<Vec<f32>> {
+        self.encode_batch_with(plan, lens, None)
+    }
+
+    /// [`CpuEngine::encode_batch`] through an admission tier's stack:
+    /// `None` serves the configured model (bitwise the pre-admission
+    /// path — same stack, same padding), `Some(tier)` swaps in the
+    /// load-time tier stack and pads to *its* landmark alignment. The
+    /// staging arena needs no tier-specific planning: tier stacks share
+    /// `plan_sizes` with the source (pinned in `model::quantized`).
+    pub fn encode_batch_with(&mut self, plan: &BatchPlan, lens: &[usize],
+                             tier: Option<TierKind>) -> Vec<Vec<f32>> {
         assert_eq!(lens.len(), plan.fill, "one length per real request");
+        let stack = match tier {
+            None => &self.model.stack,
+            Some(t) => self.model.tier_stack(t).expect(
+                "tier-routed batch on a model without built tier stacks"),
+        };
         let d = self.model.cfg.d_model;
         // stage one activation tensor per real request — a 1-request
         // batch in a capacity-4 plan stages exactly one tensor
@@ -382,7 +482,7 @@ impl CpuEngine {
         for (r, &len) in lens.iter().enumerate() {
             assert!(len > 0 && len <= plan.seq,
                     "request {r} length {len} outside 1..={}", plan.seq);
-            let plen = self.model.padded_len(len).min(plan.seq);
+            let plen = aligned_len(len, stack.landmark_divisor()).min(plan.seq);
             // assemble() already PAD-filled the row tail, so the slice
             // covers the landmark-alignment padding tokens too
             let toks = &plan.tokens[r * plan.seq..r * plan.seq + plen];
@@ -394,9 +494,7 @@ impl CpuEngine {
             self.model.embed_into(toks, &mut x.data);
             xs.push(x);
         }
-        self.model
-            .stack
-            .forward_batch(&mut self.exec, &mut xs, &mut self.stage);
+        stack.forward_batch(&mut self.exec, &mut xs, &mut self.stage);
         let outs = xs
             .iter()
             .zip(lens)
@@ -679,5 +777,102 @@ mod tests {
             CpuModel::new(CpuModelConfig::default(), Variant::SpectralShift));
         // 100 → 112 (+12), 128 → 128 (+0), 40 → 48 (+8)
         assert_eq!(engine.padded_positions(&[100, 128, 40]), 20);
+    }
+
+    #[test]
+    fn tier_stacks_cover_every_tier_and_build_once() {
+        use crate::coordinator::admission::TierKind;
+        let mut m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
+        assert!(!m.tiers_built(), "trainer/test models skip the lattice");
+        assert!(m.tier_stack(TierKind::SsInt8).is_none());
+        m.build_tiers();
+        assert!(m.tiers_built());
+        for tier in TierKind::ALL {
+            let s = m.tier_stack(tier).expect("tier stack missing");
+            assert_eq!(s.landmark_divisor(),
+                       if tier.is_ss() { Some(16) } else { None });
+        }
+        // idempotent — a second call must not duplicate the lattice
+        let before = m.tiers.len();
+        m.build_tiers();
+        assert_eq!(m.tiers.len(), before);
+        // 100 pads to 112 under ss tiers, stays exact under full-f32
+        assert_eq!(m.tier_padded_len(TierKind::SsInt8, 100), 112);
+        assert_eq!(m.tier_padded_len(TierKind::FullF32, 100), 100);
+        let e = CpuEngine::new(m);
+        assert_eq!(e.padded_positions_for(Some(TierKind::SsBf16),
+                                          &[100, 128, 40]), 20);
+        assert_eq!(e.padded_positions_for(Some(TierKind::FullF32),
+                                          &[100, 128, 40]), 0);
+        assert_eq!(e.padded_positions_for(None, &[100, 128, 40]), 0);
+    }
+
+    #[test]
+    fn full_f32_tier_serves_bitwise_the_configured_full_model() {
+        use crate::coordinator::admission::TierKind;
+        // configured variant = full, so the full-f32 tier is the same
+        // operator over a bitwise weight copy: encode must be identical
+        let mut m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
+        m.build_tiers();
+        let mut engine = CpuEngine::new(m);
+        let t = toks(100, 21);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let base = engine.encode_batch(&plan, &[t.len()]);
+        let tiered = engine.encode_batch_with(&plan, &[t.len()],
+                                              Some(TierKind::FullF32));
+        assert_eq!(base, tiered, "full-f32 tier must be the f32 reference");
+    }
+
+    #[test]
+    fn quantized_tiers_diverge_boundedly_and_deterministically() {
+        use crate::coordinator::admission::TierKind;
+        let mut m = CpuModel::new(
+            CpuModelConfig { layers: 2, ffn_mult: 2, ..Default::default() },
+            Variant::Full);
+        m.build_tiers();
+        let mut engine = CpuEngine::new(m);
+        let t = toks(96, 5);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let base = engine.encode_batch(&plan, &[t.len()]);
+        // quantization error is judged against the same operator at f32,
+        // so the bound matches the model::quantized forward pin instead
+        // of also absorbing the full-vs-ss operator gap
+        let ss_f32 = engine.encode_batch_with(&plan, &[t.len()],
+                                              Some(TierKind::SsF32));
+        assert_ne!(ss_f32, base, "ss tier must swap the operator");
+        for tier in [TierKind::SsF32, TierKind::SsBf16, TierKind::SsInt8] {
+            let a = engine.encode_batch_with(&plan, &[t.len()], Some(tier));
+            let b = engine.encode_batch_with(&plan, &[t.len()], Some(tier));
+            assert_eq!(a, b, "{tier:?} must be deterministic");
+            let (mut num, mut den) = (0f64, 0f64);
+            for (x, y) in a[0].iter().zip(&ss_f32[0]) {
+                num += ((x - y) as f64).powi(2);
+                den += (*y as f64).powi(2);
+            }
+            let rel = (num / den.max(1e-30)).sqrt();
+            let bound = match tier {
+                TierKind::SsF32 => {
+                    assert_eq!(rel, 0.0, "ss-f32 is its own reference");
+                    continue;
+                }
+                _ => 0.2,
+            };
+            assert!(rel > 0.0 && rel < bound,
+                    "{tier:?} rel err {rel} outside (0, {bound})");
+        }
+    }
+
+    #[test]
+    fn forked_engines_agree_on_tier_routed_batches() {
+        use crate::coordinator::admission::TierKind;
+        let mut m = CpuModel::new(CpuModelConfig::default(), Variant::Full);
+        m.build_tiers();
+        let mut a = CpuEngine::new(m);
+        let mut b = a.fork();
+        let t = toks(64, 30);
+        let plan = assemble(&[t.as_slice()], 4, 128);
+        let ea = a.encode_batch_with(&plan, &[t.len()], Some(TierKind::SsInt8));
+        let eb = b.encode_batch_with(&plan, &[t.len()], Some(TierKind::SsInt8));
+        assert_eq!(ea, eb, "tier stacks are shared through the model Arc");
     }
 }

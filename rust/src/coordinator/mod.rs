@@ -78,6 +78,7 @@
 //! variant (full / nystrom / ss) while this coordinator stays fixed —
 //! see the serving_throughput bench (E8).
 
+pub mod admission;
 pub mod batcher;
 pub mod bucket_router;
 pub mod cache;
@@ -86,6 +87,7 @@ pub mod cpu_engine;
 pub mod prefix_cache;
 pub mod queue;
 
+pub use admission::{Accuracy, AdmissionPolicy, TierKind};
 pub use batcher::{aligned_len, assemble, attention_scatter, scatter, BatchPlan};
 pub use bucket_router::{BucketRouter, Route};
 pub use cache::{EmbeddingCache, LruCache};
@@ -94,6 +96,7 @@ pub use cpu_engine::{CpuEngine, CpuModel, CpuModelConfig};
 pub use prefix_cache::{merge_chunk_embeddings, PrefixCache};
 pub use queue::{BatchPolicy, BucketQueue, PushError, Queued, ShardedQueue};
 
+use admission::resolve_admission;
 use crate::config::{ServingConfig, Variant};
 use crate::kernels::{gemm, isa, Isa};
 use crate::metrics::ServingMetrics;
@@ -134,6 +137,82 @@ pub struct Response {
     /// queue wait + execution time
     pub queue_time: Duration,
     pub exec_time: Duration,
+    /// The admission tier that served this request; `None` on the
+    /// configured (untagged, unforced) path — which serves bitwise what
+    /// a build without admission routing would.
+    pub tier: Option<TierKind>,
+}
+
+/// One encode request — the argument of the single admission entry
+/// point [`Coordinator::submit`]. A bare `Vec<i32>` converts via
+/// `From`, so `submit(tokens)` keeps reading naturally; deadline and
+/// accuracy budgets ride the builder:
+///
+/// ```
+/// use ssaformer::coordinator::{Accuracy, EncodeRequest};
+/// use std::time::Duration;
+/// let req = EncodeRequest::new(vec![5, 6, 7])
+///     .deadline(Duration::from_millis(250))
+///     .accuracy(Accuracy::Budget);
+/// # let _ = req;
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct EncodeRequest {
+    tokens: Vec<i32>,
+    deadline: Option<Duration>,
+    accuracy: Option<Accuracy>,
+    internal: bool,
+}
+
+impl EncodeRequest {
+    pub fn new(tokens: Vec<i32>) -> EncodeRequest {
+        EncodeRequest { tokens, ..Default::default() }
+    }
+
+    /// Deadline *budget*: time from submission until the response is
+    /// useless to the caller. Unset falls back to the configured
+    /// default deadline.
+    pub fn deadline(mut self, budget: Duration) -> EncodeRequest {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// [`EncodeRequest::deadline`] from an `Option` — the wire path
+    /// threads its already-optional `DEADLINE_MS` through unchanged.
+    pub fn deadline_opt(mut self, budget: Option<Duration>) -> EncodeRequest {
+        self.deadline = budget;
+        self
+    }
+
+    /// Accuracy budget for admission routing. Unset means "the
+    /// configured path": no tier routing at all (unless the operator
+    /// forced a tier).
+    pub fn accuracy(mut self, accuracy: Accuracy) -> EncodeRequest {
+        self.accuracy = Some(accuracy);
+        self
+    }
+
+    /// [`EncodeRequest::accuracy`] from an `Option`, for wire plumbing.
+    pub fn accuracy_opt(mut self, accuracy: Option<Accuracy>) -> EncodeRequest {
+        self.accuracy = accuracy;
+        self
+    }
+
+    /// Mark this request as internally-generated work (not caller
+    /// traffic): it skips request-level accounting (`requests_in`,
+    /// `requests_done`, e2e latency, admission counters) and the
+    /// whole-sequence embedding cache. Long-document chunks are the
+    /// in-tree example; external callers should not set this.
+    pub fn internal(mut self) -> EncodeRequest {
+        self.internal = true;
+        self
+    }
+}
+
+impl From<Vec<i32>> for EncodeRequest {
+    fn from(tokens: Vec<i32>) -> EncodeRequest {
+        EncodeRequest::new(tokens)
+    }
 }
 
 struct Pending {
@@ -147,6 +226,10 @@ struct Pending {
     /// whole-sequence embedding cache — the parent document carries
     /// those, and chunk reuse belongs to the [`PrefixCache`].
     internal: bool,
+    /// The admission tier this item executes on (`None` = configured
+    /// path). Decided once at admission; workers split batches into
+    /// tier-homogeneous sub-batches on it.
+    tier: Option<TierKind>,
 }
 
 /// Why admission failed.
@@ -321,7 +404,8 @@ impl Scaffold {
 
     fn into_coordinator(self, workers: Vec<std::thread::JoinHandle<()>>,
                         kind: BackendKind, model_desc: String,
-                        kernel_isa: Isa) -> Coordinator {
+                        kernel_isa: Isa,
+                        admission: Option<AdmissionPolicy>) -> Coordinator {
         Coordinator {
             router: self.router,
             queue: self.queue,
@@ -336,6 +420,7 @@ impl Scaffold {
             model_desc,
             kernel_isa,
             chunk_tokens: self.chunk_tokens,
+            admission,
         }
     }
 }
@@ -363,6 +448,11 @@ pub struct Coordinator {
     /// Long-document chunk length, already bucket-clamped and (CPU)
     /// landmark-aligned; 0 = chunking disabled (`too-long` as before).
     chunk_tokens: usize,
+    /// The accuracy-aware admission policy ([`admission`]); `None` on
+    /// the artifact backend, which serves only the configured variant
+    /// (accuracy-tagged requests there fall back to the configured
+    /// path).
+    admission: Option<AdmissionPolicy>,
 }
 
 impl Coordinator {
@@ -423,7 +513,11 @@ impl Coordinator {
         // same either way (cache/admission helpers stay scalar-free)
         let kernel_isa = resolve_kernel_isa(cfg);
         report_kernel_dispatch(kernel_isa);
-        Ok(s.into_coordinator(workers, BackendKind::Xla, desc, kernel_isa))
+        // artifact encoders serve exactly one compiled (variant, f32)
+        // function — there is no tier lattice to route across, so
+        // accuracy-tagged requests fall back to the configured path
+        Ok(s.into_coordinator(workers, BackendKind::Xla, desc, kernel_isa,
+                              None))
     }
 
     fn start_cpu(engine: Box<CpuEngine>, cfg: &ServingConfig)
@@ -452,6 +546,24 @@ impl Coordinator {
         // were handed; every stage arena is pre-planned for a full batch
         // at the largest bucket so first batches allocate nothing
         let mut engine = *engine;
+        // quantize the admission tier lattice once, while the model is
+        // still uniquely owned (pre-fork). A tier is admissible only if
+        // its stacks exist and its alignment divides every bucket —
+        // everything else falls back toward full-f32 at decide time.
+        let tiers_built = engine.ensure_tiers();
+        let mut available = vec![TierKind::FullF32];
+        if tiers_built {
+            for tier in [TierKind::SsF32, TierKind::SsBf16, TierKind::SsInt8] {
+                let div = engine.model().tier_stack(tier)
+                    .and_then(|st| st.landmark_divisor());
+                if div.map_or(true, |c| buckets.iter().all(|&b| b % c == 0)) {
+                    available.push(tier);
+                }
+            }
+        }
+        let admission = AdmissionPolicy::new(
+            resolve_admission(cfg.admission), available,
+            *buckets.first().expect("nonempty buckets"));
         let kernel_isa = resolve_kernel_isa(cfg);
         report_kernel_dispatch(kernel_isa);
         engine.set_kernel_isa(kernel_isa);
@@ -483,7 +595,8 @@ impl Coordinator {
                     })
                     .expect("spawn coordinator worker"));
         }
-        Ok(s.into_coordinator(workers, BackendKind::Cpu, model_desc, kernel_isa))
+        Ok(s.into_coordinator(workers, BackendKind::Cpu, model_desc,
+                              kernel_isa, Some(admission)))
     }
 
     /// The execution backend serving this coordinator's requests.
@@ -549,6 +662,22 @@ impl Coordinator {
         self.prefix_cache.as_ref().map_or(0, |c| c.len())
     }
 
+    /// The admission policy this coordinator routes with — `None` on
+    /// the artifact backend (no tier lattice; accuracy tags fall back
+    /// to the configured path).
+    pub fn admission(&self) -> Option<&AdmissionPolicy> {
+        self.admission.as_ref()
+    }
+
+    /// One-line admission-policy description — the STATS `admission:`
+    /// header's policy half ([`AdmissionPolicy::describe`]).
+    pub fn admission_desc(&self) -> String {
+        match &self.admission {
+            Some(p) => p.describe(),
+            None => "policy=unavailable (artifact backend)".to_string(),
+        }
+    }
+
     /// Requests currently queued across every shard — the backpressure
     /// signal replicas report in their `PING` reply (`q=<depth>`) so a
     /// router can prefer the less-loaded of its top ring candidates.
@@ -556,16 +685,11 @@ impl Coordinator {
         self.queue.len()
     }
 
-    /// Submit a request; returns the receiver for its response. The
-    /// configured default deadline (if any) applies.
-    pub fn submit(&self, tokens: Vec<i32>)
-                  -> Result<mpsc::Receiver<Response>, SubmitError> {
-        self.submit_with_deadline(tokens, None)
-    }
-
-    /// Submit a request with an optional deadline *budget* (time from
-    /// now until the response is useless to the caller). `None` falls
-    /// back to the configured default deadline.
+    /// Submit a request; returns the receiver for its response. This is
+    /// the single admission entry point: anything convertible into an
+    /// [`EncodeRequest`] goes through here, so `submit(tokens)` (a bare
+    /// `Vec<i32>` uses the configured default deadline and no accuracy
+    /// budget) and the full builder form are the same code path.
     ///
     /// Deadline semantics: an already-expired deadline is rejected here
     /// with [`SubmitError::DeadlineExpired`] (never occupying a batch
@@ -574,11 +698,18 @@ impl Coordinator {
     /// before batch assembly. A cache hit is served even under an
     /// expired deadline — it costs nothing.
     ///
+    /// Admission semantics: a request carrying an accuracy budget (or
+    /// any request, when the operator forced a tier) is routed to a
+    /// (variant, precision) tier by the [`AdmissionPolicy`]; the serving
+    /// tier comes back in [`Response::tier`]. Untagged, unforced
+    /// requests serve on the configured path — byte-identical to a
+    /// build without admission routing.
+    ///
     /// ```
     /// use ssaformer::config::{ServingConfig, Variant};
     /// use ssaformer::coordinator::{
-    ///     Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
-    ///     SubmitError,
+    ///     Coordinator, CpuEngine, CpuModel, CpuModelConfig, EncodeRequest,
+    ///     ExecBackend, SubmitError,
     /// };
     /// use std::time::Duration;
     /// let cfg = ServingConfig::default();
@@ -586,21 +717,31 @@ impl Coordinator {
     ///     CpuModelConfig::default(), Variant::SpectralShift)));
     /// let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
     /// // a zero budget has always already expired at admission
-    /// assert_eq!(c.submit_with_deadline(vec![5, 6, 7], Some(Duration::ZERO))
+    /// assert_eq!(c.submit(EncodeRequest::new(vec![5, 6, 7])
+    ///                .deadline(Duration::ZERO))
     ///                .err(),
     ///            Some(SubmitError::DeadlineExpired));
     /// assert_eq!(c.metrics.requests_expired.get(), 1);
     /// // a generous budget serves normally
-    /// let rx = c.submit_with_deadline(vec![5, 6, 7],
-    ///                                 Some(Duration::from_secs(30))).unwrap();
+    /// let rx = c.submit(EncodeRequest::new(vec![5, 6, 7])
+    ///               .deadline(Duration::from_secs(30))).unwrap();
     /// assert!(rx.recv().unwrap().embedding.is_ok());
     /// ```
-    pub fn submit_with_deadline(&self, tokens: Vec<i32>, budget: Option<Duration>)
-                                -> Result<mpsc::Receiver<Response>, SubmitError> {
+    pub fn submit(&self, req: impl Into<EncodeRequest>)
+                  -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let req = req.into();
         if self.cancel.is_cancelled() {
             return Err(SubmitError::ShuttingDown);
         }
-        self.metrics.requests_in.inc();
+        if !req.internal {
+            self.metrics.requests_in.inc();
+        }
+        // the admission decision: None = configured path. Decided once,
+        // up front, so the cache policy and the long-document chunker
+        // below both see the same tier.
+        let tier = self.admission.as_ref()
+            .and_then(|p| p.decide(req.tokens.len(), req.accuracy));
+        let EncodeRequest { tokens, deadline: budget, internal, .. } = req;
         let bucket = match self.router.route(tokens.len()) {
             Route::Bucket(b) => b,
             Route::TooLong { len, max } => {
@@ -608,7 +749,7 @@ impl Coordinator {
                 // independent chunks, reuse known ones, merge — one
                 // logical request, one response
                 if self.chunk_tokens > 0 {
-                    return self.submit_chunked(tokens, budget);
+                    return self.submit_chunked(tokens, budget, tier);
                 }
                 self.metrics.requests_rejected.inc();
                 return Err(SubmitError::TooLong { len, max });
@@ -623,23 +764,29 @@ impl Coordinator {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         // cache fast path: serve a known embedding instantly (even a
-        // tight deadline is met by a hit)
-        if let Some(cache) = &self.cache {
-            let t0 = Instant::now();
-            if let Some(emb) = cache.get(&tokens) {
-                self.metrics.cache_hits.inc();
-                self.metrics.requests_done.inc();
-                self.metrics.e2e_latency.record(t0.elapsed());
-                let (tx, rx) = mpsc::channel();
-                // the lookup under the lock was a refcount bump; the
-                // response's owned copy is made out here
-                let _ = tx.send(Response {
-                    id,
-                    embedding: Ok(emb.to_vec()),
-                    queue_time: Duration::ZERO,
-                    exec_time: Duration::ZERO,
-                });
-                return Ok(rx);
+        // tight deadline is met by a hit). Tier-routed requests skip
+        // the cache entirely — its entries are configured-path
+        // embeddings and a tier serves a different function.
+        if tier.is_none() && !internal {
+            if let Some(cache) = &self.cache {
+                let t0 = Instant::now();
+                if let Some(emb) = cache.get(&tokens) {
+                    self.metrics.cache_hits.inc();
+                    self.metrics.requests_done.inc();
+                    self.metrics.admission_configured.inc();
+                    self.metrics.e2e_latency.record(t0.elapsed());
+                    let (tx, rx) = mpsc::channel();
+                    // the lookup under the lock was a refcount bump; the
+                    // response's owned copy is made out here
+                    let _ = tx.send(Response {
+                        id,
+                        embedding: Ok(emb.to_vec()),
+                        queue_time: Duration::ZERO,
+                        exec_time: Duration::ZERO,
+                        tier: None,
+                    });
+                    return Ok(rx);
+                }
             }
         }
         // checked: an absurd budget that overflows Instant (e.g. a wire
@@ -657,15 +804,37 @@ impl Coordinator {
         // cache_misses is counted by the worker when the batch reaches
         // compute — never here, so rejected or queued-then-expired
         // requests cannot deflate the hit rate
-        let item = Pending { id, tokens, tx, internal: false };
+        let item = Pending { id, tokens, tx, internal, tier };
         match self.queue.push(idx, item, deadline) {
-            Ok(()) => Ok(rx),
+            Ok(()) => {
+                if !internal {
+                    self.count_admission(tier);
+                }
+                Ok(rx)
+            }
             Err(PushError::Full) => {
                 self.metrics.requests_rejected.inc();
                 Err(SubmitError::QueueFull)
             }
             Err(_) => Err(SubmitError::ShuttingDown),
         }
+    }
+
+    /// Meter one admitted caller request on the STATS `admission:` line.
+    fn count_admission(&self, tier: Option<TierKind>) {
+        match tier {
+            None => self.metrics.admission_configured.inc(),
+            Some(t) => self.metrics.admission_served[t.index()].inc(),
+        }
+    }
+
+    /// Deprecated: deadline budgets ride the [`EncodeRequest`] builder
+    /// now — `submit(EncodeRequest::new(tokens).deadline(budget))`.
+    #[deprecated(note = "use submit(EncodeRequest::new(tokens)\
+                         .deadline_opt(budget))")]
+    pub fn submit_with_deadline(&self, tokens: Vec<i32>, budget: Option<Duration>)
+                                -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit(EncodeRequest::new(tokens).deadline_opt(budget))
     }
 
     /// Serve a document longer than the largest bucket by splitting it
@@ -686,7 +855,13 @@ impl Coordinator {
     /// / `requests_done` / e2e-latency unit; per-chunk work is metered
     /// by `prefix_hits` / `prefix_misses` / `chunks_computed` (and the
     /// usual token/batch counters, which measure real compute).
-    fn submit_chunked(&self, tokens: Vec<i32>, budget: Option<Duration>)
+    ///
+    /// A tier-routed document propagates its tier to every chunk and
+    /// skips the prefix cache in both directions — its entries are
+    /// configured-path chunk embeddings, which a tier must neither
+    /// serve nor pollute.
+    fn submit_chunked(&self, tokens: Vec<i32>, budget: Option<Duration>,
+                      tier: Option<TierKind>)
                       -> Result<mpsc::Receiver<Response>, SubmitError> {
         let t0 = Instant::now();
         let deadline = budget
@@ -701,6 +876,7 @@ impl Coordinator {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.count_admission(tier);
         // pass 1: split, consult the prefix cache, enqueue every miss —
         // all misses are in flight before we wait on any of them
         let mut parts: Vec<(usize, Option<Arc<[f32]>>)> = Vec::new();
@@ -708,15 +884,23 @@ impl Coordinator {
             Vec::new();
         for chunk in tokens.chunks(self.chunk_tokens) {
             let slot = parts.len();
-            match self.prefix_cache.as_ref().and_then(|p| p.get(chunk)) {
+            let cached = if tier.is_none() {
+                self.prefix_cache.as_ref().and_then(|p| p.get(chunk))
+            } else {
+                None
+            };
+            match cached {
                 Some(emb) => {
                     self.metrics.prefix_hits.inc();
                     parts.push((chunk.len(), Some(emb)));
                 }
                 None => {
-                    self.metrics.prefix_misses.inc();
+                    if tier.is_none() {
+                        self.metrics.prefix_misses.inc();
+                    }
                     parts.push((chunk.len(), None));
-                    let rx = self.submit_chunk(chunk.to_vec(), deadline)?;
+                    let rx = self.submit_chunk(chunk.to_vec(), deadline,
+                                               tier)?;
                     waits.push((slot, chunk.to_vec(), rx));
                 }
             }
@@ -729,8 +913,10 @@ impl Coordinator {
                 Ok(emb) => {
                     self.metrics.chunks_computed.inc();
                     let shared: Arc<[f32]> = Arc::from(&emb[..]);
-                    if let Some(p) = &self.prefix_cache {
-                        p.insert(&chunk, shared.clone());
+                    if tier.is_none() {
+                        if let Some(p) = &self.prefix_cache {
+                            p.insert(&chunk, shared.clone());
+                        }
                     }
                     parts[slot].1 = Some(shared);
                 }
@@ -748,6 +934,7 @@ impl Coordinator {
                         embedding: Err(msg),
                         queue_time: t0.elapsed(),
                         exec_time: Duration::ZERO,
+                        tier,
                     });
                     return Ok(rx);
                 }
@@ -766,6 +953,7 @@ impl Coordinator {
             embedding: Ok(embedding),
             queue_time: Duration::ZERO,
             exec_time: t0.elapsed(),
+            tier,
         });
         Ok(rx)
     }
@@ -775,7 +963,8 @@ impl Coordinator {
     /// reuse is the prefix cache's job), the parent document's absolute
     /// deadline carried through so queued chunks expire exactly when
     /// the document does.
-    fn submit_chunk(&self, tokens: Vec<i32>, deadline: Option<Instant>)
+    fn submit_chunk(&self, tokens: Vec<i32>, deadline: Option<Instant>,
+                    tier: Option<TierKind>)
                     -> Result<mpsc::Receiver<Response>, SubmitError> {
         let bucket = match self.router.route(tokens.len()) {
             Route::Bucket(b) => b,
@@ -791,7 +980,7 @@ impl Coordinator {
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let item = Pending { id, tokens, tx, internal: true };
+        let item = Pending { id, tokens, tx, internal: true, tier };
         match self.queue.push(idx, item, deadline) {
             Ok(()) => Ok(rx),
             Err(PushError::Full) => {
@@ -803,9 +992,11 @@ impl Coordinator {
         }
     }
 
-    /// Convenience: submit and block for the response.
-    pub fn submit_blocking(&self, tokens: Vec<i32>) -> Result<Response, SubmitError> {
-        let rx = self.submit(tokens)?;
+    /// Convenience: submit and block for the response. Takes the same
+    /// `impl Into<EncodeRequest>` as [`Coordinator::submit`].
+    pub fn submit_blocking(&self, req: impl Into<EncodeRequest>)
+                           -> Result<Response, SubmitError> {
+        let rx = self.submit(req)?;
         rx.recv().map_err(|_| SubmitError::ShuttingDown)
     }
 
@@ -850,6 +1041,7 @@ fn split_expired(batch: Vec<Queued<Pending>>,
                 embedding: Err("deadline".to_string()),
                 queue_time: now.duration_since(q.enqueued),
                 exec_time: Duration::ZERO,
+                tier: q.item.tier,
             });
         } else {
             live.push(q);
@@ -862,12 +1054,14 @@ fn split_expired(batch: Vec<Queued<Pending>>,
 /// sequence hits on the next admission. Internal chunk items are
 /// skipped: chunk reuse belongs to the prefix cache (keyed and metered
 /// separately), and letting chunks churn the whole-sequence LRU would
-/// evict real request entries.
+/// evict real request entries. Tier-routed items are skipped too — the
+/// cache-coherence invariant ("a hit is bitwise a recompute") is stated
+/// over the configured function, and a tier serves a different one.
 fn cache_batch(cache: Option<&EmbeddingCache>, batch: &[Queued<Pending>],
                rows: &[Vec<f32>]) {
     if let Some(cache) = cache {
         for (q, emb) in batch.iter().zip(rows) {
-            if !q.item.internal {
+            if !q.item.internal && q.item.tier.is_none() {
                 cache.insert(&q.item.tokens, emb);
             }
         }
@@ -942,6 +1136,7 @@ fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
                         embedding: Ok(emb),
                         queue_time: now.duration_since(q.enqueued),
                         exec_time,
+                        tier: q.item.tier,
                     });
                 }
             }
@@ -952,10 +1147,15 @@ fn worker_loop_xla(engine: &Engine, variant: Variant, buckets: &[usize],
 
 /// The CPU twin of [`worker_loop_xla`]: same pop/steal → expire →
 /// assemble → execute → respond cycle, but the "artifact" is
-/// [`CpuEngine::encode_batch`] running on the in-process kernel core.
-/// Batch capacity is the configured `max_batch` (there is no artifact
-/// batch dimension to match). Every worker in the pool runs this loop
-/// with its own forked engine.
+/// [`CpuEngine::encode_batch_with`] running on the in-process kernel
+/// core. Batch capacity is the configured `max_batch` (there is no
+/// artifact batch dimension to match). Every worker in the pool runs
+/// this loop with its own forked engine.
+///
+/// Popped batches are bucket-homogeneous but may mix admission tiers;
+/// the loop splits each into tier-homogeneous sub-batches (order
+/// preserved within a tier) since one kernel execution serves exactly
+/// one (variant, precision) stack.
 fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
                    queue: &ShardedQueue<Pending>, home: usize,
                    policy: BatchPolicy, metrics: &ServingMetrics,
@@ -967,10 +1167,13 @@ fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
         }
         // a cache miss = a looked-up request that reached compute
         // (expired/rejected ones never count against the hit rate;
-        // internal chunks never looked the cache up at all)
+        // internal chunks and tier-routed requests never looked the
+        // cache up at all)
         if cache.is_some() {
             metrics.cache_misses.add(
-                batch.iter().filter(|q| !q.item.internal).count() as u64);
+                batch.iter()
+                    .filter(|q| !q.item.internal && q.item.tier.is_none())
+                    .count() as u64);
         }
         let now = Instant::now();
         for q in &batch {
@@ -979,39 +1182,53 @@ fn worker_loop_cpu(engine: &mut CpuEngine, capacity: usize, buckets: &[usize],
                 .record(now.duration_since(q.enqueued));
         }
         let bucket = buckets[batch[0].bucket];
-        let token_refs: Vec<&[i32]> =
-            batch.iter().map(|q| q.item.tokens.as_slice()).collect();
-        let lens: Vec<usize> = token_refs.iter().map(|t| t.len()).collect();
-        let plan = assemble(&token_refs, capacity, bucket);
-        metrics
-            .tokens_processed
-            .add(lens.iter().map(|&l| l as u64).sum());
-        metrics.batch_slots.add(capacity as u64);
-        // CPU path skips padding rows entirely; only the
-        // landmark-alignment tails are executed padding
-        metrics.padded_tokens.add(engine.padded_positions(&lens));
-        let t_exec = Instant::now();
-        let rows = engine.encode_batch(&plan, &lens);
-        let exec_time = t_exec.elapsed();
-        metrics.exec_latency.record(exec_time);
-        metrics.batches_executed.inc();
-        cache_batch(cache, &batch, &rows);
-        let finish = Instant::now();
-        for (q, emb) in batch.into_iter().zip(rows) {
-            // request-level accounting belongs to the parent document
-            // for internal chunk items
-            if !q.item.internal {
-                metrics.requests_done.inc();
-                metrics
-                    .e2e_latency
-                    .record(finish.duration_since(q.enqueued));
+        // tier-homogeneous sub-batches, first-seen tier order
+        let mut groups: Vec<(Option<TierKind>, Vec<Queued<Pending>>)> =
+            Vec::new();
+        for q in batch {
+            match groups.iter_mut().find(|(t, _)| *t == q.item.tier) {
+                Some((_, g)) => g.push(q),
+                None => groups.push((q.item.tier, vec![q])),
             }
-            let _ = q.item.tx.send(Response {
-                id: q.item.id,
-                embedding: Ok(emb),
-                queue_time: now.duration_since(q.enqueued),
-                exec_time,
-            });
+        }
+        for (tier, group) in groups {
+            let token_refs: Vec<&[i32]> =
+                group.iter().map(|q| q.item.tokens.as_slice()).collect();
+            let lens: Vec<usize> = token_refs.iter().map(|t| t.len()).collect();
+            let plan = assemble(&token_refs, capacity, bucket);
+            metrics
+                .tokens_processed
+                .add(lens.iter().map(|&l| l as u64).sum());
+            metrics.batch_slots.add(capacity as u64);
+            // CPU path skips padding rows entirely; only the
+            // landmark-alignment tails (of the executing tier's
+            // operator) are executed padding
+            metrics.padded_tokens.add(
+                engine.padded_positions_for(tier, &lens));
+            let t_exec = Instant::now();
+            let rows = engine.encode_batch_with(&plan, &lens, tier);
+            let exec_time = t_exec.elapsed();
+            metrics.exec_latency.record(exec_time);
+            metrics.batches_executed.inc();
+            cache_batch(cache, &group, &rows);
+            let finish = Instant::now();
+            for (q, emb) in group.into_iter().zip(rows) {
+                // request-level accounting belongs to the parent
+                // document for internal chunk items
+                if !q.item.internal {
+                    metrics.requests_done.inc();
+                    metrics
+                        .e2e_latency
+                        .record(finish.duration_since(q.enqueued));
+                }
+                let _ = q.item.tx.send(Response {
+                    id: q.item.id,
+                    embedding: Ok(emb),
+                    queue_time: now.duration_since(q.enqueued),
+                    exec_time,
+                    tier: q.item.tier,
+                });
+            }
         }
     }
 }
@@ -1023,6 +1240,7 @@ fn fail_batch(batch: Vec<Queued<Pending>>, msg: &str) {
             embedding: Err(msg.to_string()),
             queue_time: Duration::ZERO,
             exec_time: Duration::ZERO,
+            tier: q.item.tier,
         });
     }
 }
@@ -1082,7 +1300,7 @@ mod tests {
                 enqueued: now,
                 deadline,
                 item: Pending { id, tokens: vec![1, 2, 3], tx,
-                                internal: false },
+                                internal: false, tier: None },
             }, rx)
         };
         let (expired, rx_expired) = mk(0, Some(now)); // already past
@@ -1217,6 +1435,140 @@ mod tests {
         assert_eq!(c.submit(doc).err(),
                    Some(SubmitError::TooLong { len: 40, max: 32 }));
         assert_eq!(c.metrics.requests_rejected.get(), 1);
+    }
+
+    #[test]
+    fn accuracy_routes_tiers_and_untagged_stays_configured() {
+        let cfg = ServingConfig::default();
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::Full)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        let pol = c.admission().expect("cpu backend builds a policy");
+        assert_eq!(pol.available(), TierKind::ALL, "default buckets admit \
+                   every tier (all divisible by 16 landmarks)");
+        assert!(c.admission_desc().starts_with("policy=auto"),
+                "{}", c.admission_desc());
+        let toks: Vec<i32> = (0..40).map(|i| 5 + (i % 97)).collect();
+        // untagged: configured path, no tier in the response
+        let r = c.submit_blocking(toks.clone()).unwrap();
+        assert_eq!(r.tier, None);
+        assert!(r.embedding.is_ok());
+        // budget accuracy: the cheapest tier serves and is echoed
+        let r = c.submit_blocking(
+            EncodeRequest::new(toks.clone()).accuracy(Accuracy::Budget))
+            .unwrap();
+        assert_eq!(r.tier, Some(TierKind::SsInt8));
+        assert!(r.embedding.is_ok());
+        // high accuracy: the f32 reference tier
+        let r = c.submit_blocking(
+            EncodeRequest::new(toks.clone()).accuracy(Accuracy::High))
+            .unwrap();
+        assert_eq!(r.tier, Some(TierKind::FullF32));
+        // the admission line saw one configured and two tiered requests
+        assert_eq!(c.metrics.admission_configured.get(), 1);
+        assert_eq!(c.metrics.admission_served[TierKind::SsInt8.index()].get(),
+                   1);
+        assert_eq!(c.metrics.admission_served[TierKind::FullF32.index()].get(),
+                   1);
+        // the deprecated deadline shim still lands on the same path
+        #[allow(deprecated)]
+        let rx = c.submit_with_deadline(
+            toks, Some(Duration::from_secs(30))).unwrap();
+        assert!(rx.recv().unwrap().embedding.is_ok());
+    }
+
+    #[test]
+    fn tier_routed_requests_bypass_the_embedding_cache() {
+        let cfg = ServingConfig { cache_capacity: 16, ..Default::default() };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::Full)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        let toks: Vec<i32> = (0..32).map(|i| 7 + (i % 89)).collect();
+        // seed the cache on the configured path
+        let cold = c.submit_blocking(toks.clone()).unwrap().embedding.unwrap();
+        assert_eq!(c.cache_len(), 1);
+        // a tiered serve of the same tokens must compute, not hit, and
+        // must not overwrite the configured entry
+        let tiered = c.submit_blocking(
+            EncodeRequest::new(toks.clone()).accuracy(Accuracy::Budget))
+            .unwrap().embedding.unwrap();
+        assert_eq!(c.metrics.cache_hits.get(), 0);
+        assert_eq!(c.cache_len(), 1);
+        assert_ne!(cold, tiered, "int8 ss tier serves a different function");
+        // and the configured path still hits its own (untainted) entry
+        let warm = c.submit_blocking(toks).unwrap().embedding.unwrap();
+        assert_eq!(c.metrics.cache_hits.get(), 1);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&warm), bits(&cold));
+    }
+
+    #[test]
+    fn forced_admission_routes_untagged_requests() {
+        // the [serving] admission knob (here via the config field)
+        // forces every request onto one tier
+        let cfg = ServingConfig { admission: Some(TierKind::SsBf16),
+                                  ..Default::default() };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::Full)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        assert!(c.admission_desc().starts_with("policy=forced-ss-bf16"),
+                "{}", c.admission_desc());
+        let r = c.submit_blocking(vec![5, 6, 7]).unwrap();
+        assert_eq!(r.tier, Some(TierKind::SsBf16));
+        assert!(r.embedding.is_ok());
+    }
+
+    #[test]
+    fn misaligned_buckets_fall_back_to_the_f32_tier() {
+        // bucket 100 is not divisible by the 16 landmarks, so no ss
+        // tier is admissible; a full-variant model still starts (its
+        // configured path needs no alignment) and budget requests fall
+        // back to full-f32
+        let cfg = ServingConfig { seq_buckets: vec![100],
+                                  ..Default::default() };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::Full)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        assert_eq!(c.admission().unwrap().available(),
+                   &[TierKind::FullF32]);
+        let r = c.submit_blocking(
+            EncodeRequest::new(vec![5, 6, 7]).accuracy(Accuracy::Budget))
+            .unwrap();
+        assert_eq!(r.tier, Some(TierKind::FullF32));
+    }
+
+    #[test]
+    fn tiered_long_documents_chunk_with_the_tier_and_skip_prefix_reuse() {
+        let cfg = ServingConfig {
+            seq_buckets: vec![32],
+            chunk_tokens: 16,
+            prefix_cache_capacity: 8,
+            cache_capacity: 0,
+            queue_capacity: 64,
+            ..Default::default()
+        };
+        let engine = Box::new(CpuEngine::new(CpuModel::new(
+            CpuModelConfig::default(), Variant::Full)));
+        let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
+        let doc: Vec<i32> = (0..40).map(|i| 5 + (i % 97)).collect();
+        let r = c.submit_blocking(
+            EncodeRequest::new(doc.clone()).accuracy(Accuracy::Budget))
+            .unwrap();
+        assert_eq!(r.tier, Some(TierKind::SsInt8));
+        assert!(r.embedding.is_ok());
+        // tier-routed chunks neither consult nor teach the prefix cache
+        assert_eq!(c.metrics.prefix_hits.get(), 0);
+        assert_eq!(c.metrics.prefix_misses.get(), 0);
+        assert_eq!(c.metrics.chunks_computed.get(), 3);
+        assert_eq!(c.prefix_cache_len(), 0);
+        assert_eq!(c.metrics.admission_served[TierKind::SsInt8.index()].get(),
+                   1, "the document is one admission unit");
+        // an untagged replay of the same document takes the configured
+        // chunked path and fills the cache as before
+        let r = c.submit_blocking(doc).unwrap();
+        assert_eq!(r.tier, None);
+        assert_eq!(c.metrics.prefix_misses.get(), 3);
+        assert_eq!(c.prefix_cache_len(), 3);
     }
 
     #[test]

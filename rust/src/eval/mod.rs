@@ -22,8 +22,24 @@
 //! knob, so its rows are constant across the sweep (kept in the schema
 //! so every variant appears at every swept point).
 //!
+//! # Precision axis
+//!
+//! Each `(variant, landmarks)` cell is additionally swept across the
+//! serving precision tiers ([`Precision`]): the f32 row is the
+//! classic measurement, and the `bf16`/`int8` rows snap the attention
+//! inputs `Q, K, V` onto that tier's weight lattice
+//! ([`QuantMatrix`] quantize→expand round trip) before running the
+//! approximate operator — the site-local analogue of the quantized
+//! projection GEMMs a tier-routed request runs through
+//! ([`kernels::quant`](crate::kernels::quant)), and the one that
+//! applies uniformly to projected and weightless blocks alike. The
+//! reference is always the exact f32 `full` softmax, so a row reads
+//! directly as "what a `(variant × precision)` admission tier costs in
+//! relative Frobenius error" — the measured numbers behind
+//! `coordinator::admission`'s tier table.
+//!
 //! The machine-readable output is `BENCH_error_bound.json`
-//! (`ssaf-error-bound/v1`), written next to `BENCH_kernels.json`;
+//! (`ssaf-error-bound/v2`), written next to `BENCH_kernels.json`;
 //! `tests/error_bound_ordering.rs` pins the paper's ss-vs-nystrom
 //! ordering on the in-memory report.
 
@@ -32,7 +48,7 @@ use crate::attention::{
     SpectralShiftOp, Tensor2,
 };
 use crate::coordinator::CpuModel;
-use crate::kernels::{gemm_into, KernelCtx, Workspace};
+use crate::kernels::{gemm_into, KernelCtx, Precision, QuantMatrix, Workspace};
 use crate::model::{AttentionOp, EncoderStack};
 use crate::rngx::Rng;
 use crate::text::{CorpusGenerator, Tokenizer};
@@ -56,6 +72,9 @@ pub struct ErrorBoundConfig {
     pub seed: u64,
     /// Newton–Schulz iterations for the pseudo-inverse variants.
     pub pinv_iters: usize,
+    /// Precision tiers to sweep (`f32` is the classic measurement; the
+    /// quantized tiers snap `Q, K, V` onto their weight lattice first).
+    pub precisions: Vec<Precision>,
 }
 
 impl Default for ErrorBoundConfig {
@@ -66,15 +85,18 @@ impl Default for ErrorBoundConfig {
             samples: 4,
             seed: 1009,
             pinv_iters: 8,
+            precisions: Precision::ALL.to_vec(),
         }
     }
 }
 
-/// One `(variant, landmarks)` cell of the report.
+/// One `(variant, landmarks, precision)` cell of the report.
 #[derive(Clone, Debug)]
 pub struct ErrorBoundRow {
     pub variant: &'static str,
     pub landmarks: usize,
+    /// Precision tier token (`f32`, `bf16`, `int8`).
+    pub precision: &'static str,
     /// Mean over problems of `‖ΔO‖_F / ‖O_exact‖_F`.
     pub mean_rel_err: f64,
     /// Max over problems of the same.
@@ -94,27 +116,39 @@ pub struct ErrorBoundReport {
     pub n_heads: usize,
     pub d_model: usize,
     pub landmarks: Vec<usize>,
+    pub precisions: Vec<Precision>,
     pub rows: Vec<ErrorBoundRow>,
 }
 
 impl ErrorBoundReport {
-    /// The mean relative error of `variant` at landmark count `c`.
+    /// The mean relative error of `variant` at landmark count `c` on
+    /// the f32 tier — the classic (pre-precision-axis) lookup the
+    /// ordering tests pin.
     pub fn mean_rel_err(&self, variant: &str, c: usize) -> Option<f64> {
+        self.mean_rel_err_at(variant, c, Precision::F32)
+    }
+
+    /// The mean relative error of one `(variant, landmarks, precision)`
+    /// tier cell.
+    pub fn mean_rel_err_at(&self, variant: &str, c: usize,
+                           p: Precision) -> Option<f64> {
         self.rows
             .iter()
-            .find(|r| r.variant == variant && r.landmarks == c)
+            .find(|r| r.variant == variant && r.landmarks == c
+                  && r.precision == p.token())
             .map(|r| r.mean_rel_err)
     }
 
     /// ASCII table for the example / subcommand output.
     pub fn render(&self) -> String {
         let mut t = crate::benchkit::Table::new(
-            &["variant", "landmarks", "mean rel err", "max rel err",
-              "fro ratio"]);
+            &["variant", "landmarks", "precision", "mean rel err",
+              "max rel err", "fro ratio"]);
         for r in &self.rows {
             t.row(&[
                 r.variant.to_string(),
                 r.landmarks.to_string(),
+                r.precision.to_string(),
                 format!("{:.6}", r.mean_rel_err),
                 format!("{:.6}", r.max_rel_err),
                 format!("{:.6}", r.fro_ratio),
@@ -126,7 +160,9 @@ impl ErrorBoundReport {
             t.render(), self.layers, self.n_heads, self.samples, self.seq)
     }
 
-    /// Serialize as `ssaf-error-bound/v1` JSON. Hand-rolled like the
+    /// Serialize as `ssaf-error-bound/v2` JSON (v1 plus the precision
+    /// axis: a `precisions` list and a `precision` field per row).
+    /// Hand-rolled like the
     /// bench snapshots — flat schema, no dependencies. Panics on
     /// non-finite metrics: an eval that produced NaN must not write an
     /// artifact that looks healthy.
@@ -141,9 +177,14 @@ impl ErrorBoundReport {
         }
         let landmarks: Vec<String> =
             self.landmarks.iter().map(|c| c.to_string()).collect();
+        let precisions: Vec<String> = self
+            .precisions
+            .iter()
+            .map(|p| format!("\"{}\"", p.token()))
+            .collect();
         let mut out = String::new();
         out.push_str("{\n");
-        out.push_str("  \"schema\": \"ssaf-error-bound/v1\",\n");
+        out.push_str("  \"schema\": \"ssaf-error-bound/v2\",\n");
         out.push_str("  \"reference\": \"full\",\n");
         out.push_str(&format!("  \"seq\": {},\n", self.seq));
         out.push_str(&format!("  \"samples\": {},\n", self.samples));
@@ -151,13 +192,16 @@ impl ErrorBoundReport {
         out.push_str(&format!("  \"n_heads\": {},\n", self.n_heads));
         out.push_str(&format!("  \"d_model\": {},\n", self.d_model));
         out.push_str(&format!("  \"landmarks\": [{}],\n", landmarks.join(",")));
+        out.push_str(&format!("  \"precisions\": [{}],\n",
+                              precisions.join(",")));
         out.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
                 "    {{\"variant\": \"{}\", \"landmarks\": {}, \
+                 \"precision\": \"{}\", \
                  \"mean_rel_err\": {}, \"max_rel_err\": {}, \
                  \"fro_ratio\": {}, \"per_layer_mean_rel_err\": {}}}{}\n",
-                r.variant, r.landmarks, num(r.mean_rel_err),
+                r.variant, r.landmarks, r.precision, num(r.mean_rel_err),
                 num(r.max_rel_err), num(r.fro_ratio),
                 num_list(&r.per_layer_mean_rel_err),
                 if i + 1 == self.rows.len() { "" } else { "," }));
@@ -254,6 +298,7 @@ pub fn error_bound_sweep(model: &CpuModel, stack: &EncoderStack,
                 "seq {} not divisible by landmark count {c}", cfg.seq);
     }
     assert!(cfg.samples >= 1, "need at least one eval sequence");
+    assert!(!cfg.precisions.is_empty(), "empty precision sweep");
     let d = stack.d_model();
     let heads = stack.n_heads();
     let dh = d / heads;
@@ -274,22 +319,50 @@ pub fn error_bound_sweep(model: &CpuModel, stack: &EncoderStack,
         })
         .collect();
 
-    let cells: Vec<(&'static str, usize)> = EVAL_VARIANTS
+    let cells: Vec<(&'static str, usize, Precision)> = EVAL_VARIANTS
         .iter()
-        .flat_map(|&v| cfg.landmarks.iter().map(move |&c| (v, c)))
+        .flat_map(|&v| cfg.landmarks.iter().flat_map(move |&c| {
+            cfg.precisions.iter().map(move |&p| (v, c, p))
+        }))
         .collect();
     let mut accs: Vec<Acc> = cells.iter().map(|_| Acc::new(layers)).collect();
 
+    // snap a tensor onto a precision tier's weight lattice (identity
+    // for f32): the site-local analogue of the tier's quantized GEMMs
+    fn snap(t: &Tensor2, p: Precision) -> Tensor2 {
+        let mut out = Tensor2 {
+            rows: t.rows,
+            cols: t.cols,
+            data: t.data.clone(),
+        };
+        if p != Precision::F32 {
+            let qm = QuantMatrix::quantize(&t.data, t.rows, t.cols, p);
+            qm.dequantize_into(&mut out.data);
+        }
+        out
+    }
+
     // one closure measuring every cell at one attention problem, then
-    // handing back the exact output for the forward to continue on
+    // handing back the exact output for the forward to continue on.
+    // The reference is always the exact f32 full softmax — quantized
+    // cells are charged their full tier cost, not a same-tier delta.
     let measure = |layer: usize, q: &Tensor2, k: &Tensor2, v: &Tensor2,
                        accs: &mut [Acc], ws: &mut Workspace| -> Tensor2 {
         let e = FullOp.attend(&ctx, q, k, v, ws);
         let exact = Tensor2 { rows: e.rows, cols: e.cols, data: e.data.clone() };
         ws.put(e.data);
+        let snapped: Vec<(Precision, Tensor2, Tensor2, Tensor2)> = cfg
+            .precisions
+            .iter()
+            .map(|&p| (p, snap(q, p), snap(k, p), snap(v, p)))
+            .collect();
         for (cell, acc) in cells.iter().zip(accs.iter_mut()) {
             let op = make_op(cell.0, cell.1, cfg.pinv_iters);
-            let approx = op.attend(&ctx, q, k, v, ws);
+            let (_, qp, kp, vp) = snapped
+                .iter()
+                .find(|(p, _, _, _)| *p == cell.2)
+                .expect("every cell precision was snapped");
+            let approx = op.attend(&ctx, qp, kp, vp, ws);
             acc.record(layer, &exact, &approx);
             ws.put(approx.data);
         }
@@ -350,9 +423,10 @@ pub fn error_bound_sweep(model: &CpuModel, stack: &EncoderStack,
     let rows = cells
         .iter()
         .zip(&accs)
-        .map(|(&(variant, landmarks), acc)| ErrorBoundRow {
+        .map(|(&(variant, landmarks, precision), acc)| ErrorBoundRow {
             variant,
             landmarks,
+            precision: precision.token(),
             mean_rel_err: acc.sum_rel / acc.count as f64,
             max_rel_err: acc.max_rel,
             fro_ratio: if acc.sum_ref_sq > 0.0 {
@@ -375,6 +449,7 @@ pub fn error_bound_sweep(model: &CpuModel, stack: &EncoderStack,
         n_heads: heads,
         d_model: d,
         landmarks: cfg.landmarks.clone(),
+        precisions: cfg.precisions.clone(),
         rows,
     }
 }
@@ -413,22 +488,33 @@ mod tests {
     }
 
     #[test]
-    fn sweep_covers_every_variant_at_every_landmark() {
+    fn sweep_covers_every_variant_at_every_landmark_and_precision() {
         let (model, stack) = tiny_setup();
         let cfg = ErrorBoundConfig {
             landmarks: vec![4, 8], seq: 16, samples: 2,
             ..Default::default()
         };
         let rep = error_bound_sweep(&model, &stack, &cfg);
-        assert_eq!(rep.rows.len(), EVAL_VARIANTS.len() * 2);
+        assert_eq!(rep.rows.len(),
+                   EVAL_VARIANTS.len() * 2 * Precision::ALL.len());
         for r in &rep.rows {
             assert!(r.mean_rel_err.is_finite() && r.mean_rel_err >= 0.0,
-                    "{} c={}", r.variant, r.landmarks);
+                    "{} c={} {}", r.variant, r.landmarks, r.precision);
             assert!(r.max_rel_err >= r.mean_rel_err || r.max_rel_err == 0.0);
             assert_eq!(r.per_layer_mean_rel_err.len(), 2);
         }
         assert!(rep.mean_rel_err("ss", 4).is_some());
         assert!(rep.mean_rel_err("ss", 5).is_none());
+        // the classic lookup IS the f32 tier cell
+        assert_eq!(rep.mean_rel_err("ss", 4),
+                   rep.mean_rel_err_at("ss", 4, Precision::F32));
+        // every tier has a measured row, and the quantized ss tiers
+        // carry real (nonzero) error against the exact f32 reference
+        for p in Precision::ALL {
+            let e = rep.mean_rel_err_at("ss", 4, p)
+                .expect("tier row present");
+            assert!(e.is_finite() && e > 0.0, "{}: {e}", p.token());
+        }
     }
 
     #[test]
@@ -439,15 +525,45 @@ mod tests {
         };
         let rep = error_bound_sweep(&model, &stack, &cfg);
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": \"ssaf-error-bound/v1\""));
+        assert!(json.contains("\"schema\": \"ssaf-error-bound/v2\""));
         assert!(json.contains("\"variant\": \"ss\""));
         assert!(json.contains("\"variant\": \"nystrom\""));
+        assert!(json.contains("\"precisions\": [\"f32\",\"bf16\",\"int8\"]"));
+        assert!(json.contains("\"precision\": \"int8\""));
         assert_eq!(json.matches("\"mean_rel_err\"").count(),
-                   EVAL_VARIANTS.len());
+                   EVAL_VARIANTS.len() * Precision::ALL.len());
         // balanced braces/brackets — cheap structural check without a
         // JSON parser in-tree
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn precision_snap_is_identity_at_f32_and_lossy_below() {
+        // a single-precision sweep at f32 must reproduce the classic
+        // rows exactly (the snap is the identity there)
+        let (model, stack) = tiny_setup();
+        let f32_only = ErrorBoundConfig {
+            landmarks: vec![4], seq: 16, samples: 1,
+            precisions: vec![Precision::F32], ..Default::default()
+        };
+        let all = ErrorBoundConfig {
+            landmarks: vec![4], seq: 16, samples: 1, ..Default::default()
+        };
+        let rep_f32 = error_bound_sweep(&model, &stack, &f32_only);
+        let rep_all = error_bound_sweep(&model, &stack, &all);
+        assert_eq!(rep_f32.rows.len(), EVAL_VARIANTS.len());
+        for r in &rep_f32.rows {
+            assert_eq!(Some(r.mean_rel_err),
+                       rep_all.mean_rel_err_at(r.variant, r.landmarks,
+                                               Precision::F32),
+                       "{} c={}", r.variant, r.landmarks);
+        }
+        // int8-snapped inputs genuinely move the ss output — the tier
+        // rows are measurements, not copies of the f32 row
+        let f = rep_all.mean_rel_err_at("ss", 4, Precision::F32).unwrap();
+        let i = rep_all.mean_rel_err_at("ss", 4, Precision::Int8).unwrap();
+        assert_ne!(f, i, "int8 row must differ from the f32 row");
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //!   softmax streamed over key blocks, row-parallel.
 //! * [`batched::BatchedAttention`] — multi-head / multi-request fan-out
 //!   over the pool, one workspace slot per in-flight task.
+//! * [`quant::gemm_quant_into`] — bf16/int8 weight tiers (quantized
+//!   once at load) expanded into workspace scratch and run through the
+//!   same blocked GEMM with f32 accumulation, so precision is a
+//!   serving-policy knob rather than a separate kernel family.
 //!
 //! Threading runs on the crate's own [`crate::minirt::ThreadPool`]
 //! (shared process-wide handle, see [`global_pool`]); work is split into
@@ -68,6 +72,7 @@ pub mod batched;
 pub mod fused;
 pub mod gemm;
 pub mod isa;
+pub mod quant;
 pub(crate) mod simd;
 pub mod workspace;
 
@@ -80,6 +85,7 @@ pub use fused::{
 };
 pub use gemm::{gemm_f32, gemm_into, transpose_into};
 pub use isa::{active_isa, Isa};
+pub use quant::{gemm_quant_into, Precision, QuantMatrix};
 pub use workspace::Workspace;
 
 use crate::minirt::ThreadPool;

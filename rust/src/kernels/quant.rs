@@ -1,0 +1,360 @@
+//! Quantized-weight GEMM tiers: bf16 and int8 paths for the serving
+//! admission policy (`coordinator::admission`).
+//!
+//! The paper's framing makes accuracy a budgeted resource — spectral
+//! shifting buys a stronger error bound at the same O(n) cost — and
+//! this module extends that budget axis *below* f32: weights are
+//! quantized **once** (at checkpoint/engine load, never per request)
+//! into a [`QuantMatrix`], and [`gemm_quant_into`] runs the product
+//! with **f32 accumulation** through the exact same packed-panel
+//! blocking and [`KernelCtx`] ISA dispatch as the f32 path — the
+//! quantized weights are expanded into workspace scratch and handed to
+//! [`gemm_into`], so blocking constants, block boundaries, and the
+//! per-arm micro-kernels are literally shared, not re-implemented.
+//!
+//! Formats:
+//!
+//! * **bf16** — truncation of the f32 high half (round-toward-zero on
+//!   the 8-bit mantissa). Expansion is exact: `(h as u32) << 16`
+//!   reproduces an f32 whose low mantissa bits are zero.
+//! * **int8** — per-row absmax scaling: row `r` stores
+//!   `scale_r = absmax_r / 127` and `q = round(w / scale_r)` clamped to
+//!   `[-127, 127]`; expansion is `q as f32 * scale_r`. A zero row has
+//!   `scale_r = 0` and expands to exact zeros.
+//!
+//! # Invariants
+//!
+//! * **Deterministic within an arm** — quantization is a pure
+//!   elementwise function of the weights, and the product runs on
+//!   [`gemm_into`], so the fixed-block thread-count-determinism
+//!   contract of the f32 path carries over bitwise (tested below and
+//!   in the per-arm suite).
+//! * **Documented error envelopes** — against the f32 reference on
+//!   unit-scale Gaussian weights, the relative Frobenius error of a
+//!   quantized product stays under `1e-2` for bf16 and `5e-2` for
+//!   int8 (the envelopes `tests` pin and `coordinator::admission`'s
+//!   default tier table is calibrated against; the *measured* per-tier
+//!   numbers on trained weights live in `BENCH_error_bound.json`).
+//! * **Quantize-once** — a [`QuantMatrix`] never rescales after
+//!   construction; serving the same tier twice is bitwise identical.
+
+use super::gemm::gemm_into;
+use super::workspace::Workspace;
+use super::KernelCtx;
+
+/// A weight-precision tier. `F32` is the identity tier (no
+/// [`QuantMatrix`] exists for it — full-precision weights never leave
+/// their original buffers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    Bf16,
+    Int8,
+}
+
+impl Precision {
+    /// Every tier, in decreasing-precision order (report order).
+    pub const ALL: [Precision; 3] =
+        [Precision::F32, Precision::Bf16, Precision::Int8];
+
+    /// Parse a precision token (config/wire casing-insensitive).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            "int8" | "i8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical token (inverse of [`Precision::parse`]).
+    pub fn token(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// Storage of one quantized weight matrix (row-major `rows × cols`,
+/// same layout as the f32 weight it was built from).
+enum QuantData {
+    /// f32 high halves; expansion shifts them back up exactly.
+    Bf16(Vec<u16>),
+    /// Row-quantized values plus one f32 scale per row.
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+/// A weight matrix quantized once at load time. Holds everything
+/// [`gemm_quant_into`] needs to expand the weights into scratch;
+/// construction is the only place scales are computed.
+pub struct QuantMatrix {
+    rows: usize,
+    cols: usize,
+    data: QuantData,
+}
+
+/// Truncate one f32 to its bf16 bit pattern (high half).
+#[inline]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    (x.to_bits() >> 16) as u16
+}
+
+/// Expand one bf16 bit pattern back to f32 (exact).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major `rows × cols` f32 weight. Panics on
+    /// `Precision::F32` — the identity tier has no quantized form —
+    /// and on a length mismatch.
+    pub fn quantize(w: &[f32], rows: usize, cols: usize,
+                    precision: Precision) -> QuantMatrix {
+        assert_eq!(w.len(), rows * cols, "quantize: weight is not rows×cols");
+        let data = match precision {
+            Precision::F32 => {
+                panic!("f32 is the identity tier; nothing to quantize")
+            }
+            Precision::Bf16 => {
+                QuantData::Bf16(w.iter().map(|&x| bf16_from_f32(x)).collect())
+            }
+            Precision::Int8 => {
+                let mut q = Vec::with_capacity(w.len());
+                let mut scales = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let row = &w[r * cols..(r + 1) * cols];
+                    let absmax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                    let scale = absmax / 127.0;
+                    scales.push(scale);
+                    if scale == 0.0 {
+                        q.extend(std::iter::repeat(0i8).take(cols));
+                    } else {
+                        q.extend(row.iter().map(|&x| {
+                            (x / scale).round().clamp(-127.0, 127.0) as i8
+                        }));
+                    }
+                }
+                QuantData::Int8 { q, scales }
+            }
+        };
+        QuantMatrix { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The tier this matrix was quantized to.
+    pub fn precision(&self) -> Precision {
+        match self.data {
+            QuantData::Bf16(_) => Precision::Bf16,
+            QuantData::Int8 { .. } => Precision::Int8,
+        }
+    }
+
+    /// Expand into `out` (length `rows × cols`). Pure and exact: the
+    /// expanded values ARE the tier's weight lattice, so expanding
+    /// twice is bitwise identical.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols,
+                   "dequantize: out is not rows×cols");
+        match &self.data {
+            QuantData::Bf16(h) => {
+                for (o, &b) in out.iter_mut().zip(h) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+            QuantData::Int8 { q, scales } => {
+                for r in 0..self.rows {
+                    let s = scales[r];
+                    let src = &q[r * self.cols..(r + 1) * self.cols];
+                    let dst = &mut out[r * self.cols..(r + 1) * self.cols];
+                    for (o, &v) in dst.iter_mut().zip(src) {
+                        *o = v as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Expand into a workspace buffer (caller returns it with
+    /// `ws.put`). Zero steady-state allocation once the arena is warm.
+    pub fn dequantize(&self, ws: &mut Workspace) -> Vec<f32> {
+        let mut buf = ws.take(self.rows * self.cols);
+        self.dequantize_into(&mut buf);
+        buf
+    }
+}
+
+/// `C = A · B̃` where `B̃` is the quantized weight expanded to its
+/// tier lattice: f32 accumulation, identical packed-panel blocking and
+/// ISA dispatch to [`gemm_into`] (which this literally calls). `a` is
+/// `m × k` f32, `bq` must be `k × n`, `c` is `m × n`.
+pub fn gemm_quant_into(ctx: &KernelCtx, a: &[f32], bq: &QuantMatrix,
+                       c: &mut [f32], m: usize, k: usize, n: usize,
+                       ws: &mut Workspace) {
+    assert_eq!((bq.rows, bq.cols), (k, n), "gemm_quant: B is not k×n");
+    let b = bq.dequantize(ws);
+    gemm_into(ctx, a, &b, c, m, k, n);
+    ws.put(b);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Isa;
+    use crate::rngx::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn rel_fro(a: &[f32], b: &[f32]) -> f64 {
+        let mut d = 0.0f64;
+        let mut r = 0.0f64;
+        for (&x, &y) in a.iter().zip(b) {
+            d += ((x - y) as f64).powi(2);
+            r += (y as f64).powi(2);
+        }
+        (d / r.max(1e-30)).sqrt()
+    }
+
+    #[test]
+    fn precision_tokens_round_trip() {
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.token()), Some(p));
+        }
+        assert_eq!(Precision::parse(" BF16 "), Some(Precision::Bf16));
+        assert_eq!(Precision::parse("i8"), Some(Precision::Int8));
+        assert!(Precision::parse("fp8").is_none());
+        assert!(Precision::parse("").is_none());
+    }
+
+    #[test]
+    fn bf16_truncation_is_exact_on_8bit_mantissas() {
+        // values with ≤8 mantissa bits survive the round trip bitwise
+        for x in [0.0f32, 1.0, -1.0, 0.5, -2.75, 1024.0, -0.015625] {
+            assert_eq!(bf16_to_f32(bf16_from_f32(x)), x, "{x}");
+        }
+        // a value needing more mantissa keeps its high half only
+        let x = 1.0 + f32::EPSILON;
+        assert_eq!(bf16_to_f32(bf16_from_f32(x)), 1.0);
+    }
+
+    #[test]
+    fn int8_scales_are_per_row_absmax() {
+        // row 0 absmax 4 → scale 4/127; row 1 all zero → scale 0
+        let w = vec![2.0f32, -4.0, 1.0, 0.0, 0.0, 0.0];
+        let q = QuantMatrix::quantize(&w, 2, 3, Precision::Int8);
+        let mut out = vec![0.0f32; 6];
+        q.dequantize_into(&mut out);
+        let s = 4.0f32 / 127.0;
+        // absmax element is exact; others land on the row lattice
+        assert_eq!(out[1], -127.0 * s);
+        assert_eq!(out[0], (2.0f32 / s).round() * s);
+        assert_eq!(&out[3..], &[0.0, 0.0, 0.0], "zero row stays exact zero");
+        assert_eq!(q.precision(), Precision::Int8);
+    }
+
+    #[test]
+    fn dequantize_is_bitwise_repeatable() {
+        let mut rng = Rng::new(31);
+        let w = randn(&mut rng, 24 * 16);
+        for p in [Precision::Bf16, Precision::Int8] {
+            let q = QuantMatrix::quantize(&w, 24, 16, p);
+            let mut a = vec![0.0f32; w.len()];
+            let mut b = vec![1.0f32; w.len()];
+            q.dequantize_into(&mut a);
+            q.dequantize_into(&mut b);
+            assert_eq!(a, b, "{p:?} expansion must be pure");
+        }
+    }
+
+    #[test]
+    fn quant_gemm_is_bitwise_the_f32_gemm_on_the_expanded_weights() {
+        // the load-bearing equivalence: the quantized path IS the f32
+        // path on the tier's weight lattice — same blocking, same arm,
+        // same accumulation order
+        let (m, k, n) = (33, 40, 17);
+        let mut rng = Rng::new(7);
+        let a = randn(&mut rng, m * k);
+        let w = randn(&mut rng, k * n);
+        let mut ws = Workspace::new();
+        for p in [Precision::Bf16, Precision::Int8] {
+            let q = QuantMatrix::quantize(&w, k, n, p);
+            let mut expanded = vec![0.0f32; k * n];
+            q.dequantize_into(&mut expanded);
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm_into(&KernelCtx::global(), &a, &expanded, &mut c_ref,
+                      m, k, n);
+            let mut c_q = vec![0.0f32; m * n];
+            gemm_quant_into(&KernelCtx::global(), &a, &q, &mut c_q,
+                            m, k, n, &mut ws);
+            assert_eq!(c_q, c_ref, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn per_arm_parity_stays_inside_the_documented_envelopes() {
+        // bf16 ≤ 1e-2, int8 ≤ 5e-2 relative Frobenius error vs the f32
+        // product — the envelopes the admission tier table trusts
+        let (m, k, n) = (48, 64, 32);
+        let mut rng = Rng::new(91);
+        let a = randn(&mut rng, m * k);
+        let w = randn(&mut rng, k * n);
+        let mut ws = Workspace::new();
+        for isa in Isa::available() {
+            let ctx = KernelCtx::sequential().with_isa(isa);
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm_into(&ctx, &a, &w, &mut c_ref, m, k, n);
+            for (p, envelope) in
+                [(Precision::Bf16, 1e-2), (Precision::Int8, 5e-2)]
+            {
+                let q = QuantMatrix::quantize(&w, k, n, p);
+                let mut c_q = vec![0.0f32; m * n];
+                gemm_quant_into(&ctx, &a, &q, &mut c_q, m, k, n, &mut ws);
+                let err = rel_fro(&c_q, &c_ref);
+                assert!(err > 0.0, "{p:?}/{}: suspicious exact match \
+                                    on Gaussian weights", isa.token());
+                assert!(err < envelope,
+                        "{p:?}/{}: rel err {err} breaks envelope {envelope}",
+                        isa.token());
+            }
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bitwise_identical_within_a_tier() {
+        let (m, k, n) = (70, 33, 19);
+        let mut rng = Rng::new(17);
+        let a = randn(&mut rng, m * k);
+        let w = randn(&mut rng, k * n);
+        let mut ws = Workspace::new();
+        for p in [Precision::Bf16, Precision::Int8] {
+            let q = QuantMatrix::quantize(&w, k, n, p);
+            let mut seq = vec![0.0f32; m * n];
+            let mut par = vec![0.0f32; m * n];
+            gemm_quant_into(&KernelCtx::sequential(), &a, &q, &mut seq,
+                            m, k, n, &mut ws);
+            gemm_quant_into(&KernelCtx::global(), &a, &q, &mut par,
+                            m, k, n, &mut ws);
+            assert_eq!(seq, par, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_do_not_panic() {
+        let mut ws = Workspace::new();
+        let q = QuantMatrix::quantize(&[], 0, 4, Precision::Int8);
+        let mut c = vec![0.0f32; 0];
+        gemm_quant_into(&KernelCtx::sequential(), &[], &q, &mut c,
+                        0, 0, 4, &mut ws);
+    }
+}

@@ -66,6 +66,10 @@ USAGE: ssaformer <serve|train|info|spectrum|help> [flags]
            --default-deadline-ms MS (0 = none) --deadline-margin-ms MS
            --kernel auto|scalar|avx2|neon (micro-kernel arm; the
                      SSAF_KERNEL env var overrides this flag)
+           --admission auto|full-f32|ss-f32|ss-bf16|ss-int8 (force
+                     every request onto one (variant, precision) tier;
+                     auto routes by ACCURACY= tags; the SSAF_ADMISSION
+                     env var overrides this flag)
            (knob semantics + capacity planning: see OPERATIONS.md)
   train    in-repo deterministic CPU trainer (default; no artifacts):
            --epochs N --steps N (per epoch) --batch N --seq N
@@ -171,6 +175,16 @@ fn serving_config(flags: &Flags) -> Result<ServingConfig, String> {
                 .ok_or(format!("bad kernel {k:?} (auto|scalar|avx2|neon)"))?)
         };
     }
+    if let Some(a) = flags.get("admission") {
+        cfg.admission = if a.trim().eq_ignore_ascii_case("auto") {
+            None
+        } else {
+            Some(ssaformer::coordinator::TierKind::parse(a)
+                .ok_or(format!(
+                    "bad admission {a:?} \
+                     (auto|full-f32|ss-f32|ss-bf16|ss-int8)"))?)
+        };
+    }
     if let Some(r) = flags.get("role") {
         cfg.role = Role::parse(r)
             .ok_or(format!("bad role {r:?} (replica|router)"))?;
@@ -236,11 +250,14 @@ fn cmd_serve(flags: &Flags) -> i32 {
                  0 => "off".to_string(),
                  n => format!("{n} entries"),
              });
+    println!("admission: {}", coordinator.admission_desc());
     match ssaformer::server::serve(coordinator, &cfg.bind_addr, 8) {
         Ok((addr, _handle)) => {
             println!("serving {} attention on {addr} (backend: {backend_name})",
                      cfg.variant.token());
-            println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] <tok...> | STATS | QUIT");
+            println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] \
+                      [ACCURACY=<high|balanced|budget|err>] <tok...> \
+                      | STATS | QUIT");
             // block forever (ctrl-c to stop)
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -280,7 +297,8 @@ fn cmd_serve_router(cfg: &ServingConfig) -> i32 {
     match cluster::serve_router(router, &cfg.bind_addr, 8) {
         Ok((addr, _handle)) => {
             println!("routing on {addr} (role: router)");
-            println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] <tok...> \
+            println!("protocol: ENCODE <id> [DEADLINE_MS=<ms>] \
+                      [ACCURACY=<high|balanced|budget|err>] <tok...> \
                       | STATS | PING | QUIT");
             // block forever (ctrl-c to stop)
             loop {

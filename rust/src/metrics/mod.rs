@@ -145,6 +145,14 @@ pub struct ServingMetrics {
     /// compute and returned an embedding). Tracks `prefix_misses` minus
     /// chunks lost to expiry/rejection mid-document.
     pub chunks_computed: Counter,
+    /// Requests served on the configured path — untagged and with no
+    /// forced tier, so admission routing never touched them (the
+    /// byte-identical legacy behavior).
+    pub admission_configured: Counter,
+    /// Requests routed to each admission tier, indexed by
+    /// `TierKind::index()` (`coordinator::admission`): full-f32,
+    /// ss-f32, ss-bf16, ss-int8 — the STATS `admission:` line.
+    pub admission_served: [Counter; 4],
     pub batches_executed: Counter,
     pub tokens_processed: Counter,
     /// Request slots offered across all executed batches (capacity ×
@@ -181,6 +189,8 @@ impl ServingMetrics {
             "requests: in={} done={} rejected={} expired={}\n\
              cache:    hits={} misses={} ({:.0}% hit rate)\n\
              prefix:   hits={} misses={} chunks={} ({:.0}% hit rate)\n\
+             admission: configured={} full-f32={} ss-f32={} ss-bf16={} \
+             ss-int8={}\n\
              batches:  {} (avg fill {:.2} req/batch, occupancy {:.0}%)\n\
              tokens:   {} (+{} executed padding, {:.0}% waste)\n\
              queue:    {}\n\
@@ -197,6 +207,11 @@ impl ServingMetrics {
             self.prefix_misses.get(),
             self.chunks_computed.get(),
             100.0 * phits as f64 / plookups.max(1) as f64,
+            self.admission_configured.get(),
+            self.admission_served[0].get(),
+            self.admission_served[1].get(),
+            self.admission_served[2].get(),
+            self.admission_served[3].get(),
             self.batches_executed.get(),
             batched as f64 / self.batches_executed.get().max(1) as f64,
             100.0 * batched as f64 / self.batch_slots.get().max(1) as f64,
@@ -375,6 +390,21 @@ mod tests {
         );
         // the prefix line is independent of the embedding-cache line
         assert!(r.contains("cache:    hits=0 misses=0 (0% hit rate)"), "{r}");
+    }
+
+    #[test]
+    fn admission_line_counts_every_tier() {
+        let m = ServingMetrics::new();
+        m.admission_configured.add(7);
+        m.admission_served[0].add(1); // full-f32
+        m.admission_served[3].add(2); // ss-int8
+        let r = m.report();
+        assert!(
+            r.contains(
+                "admission: configured=7 full-f32=1 ss-f32=0 ss-bf16=0 \
+                 ss-int8=2"),
+            "{r}"
+        );
     }
 
     #[test]

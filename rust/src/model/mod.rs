@@ -26,6 +26,11 @@
 //!   trained weights (`init = load`) instead of only seeded draws.
 //! * [`reference`] — the scalar multi-layer forward the kernel stack is
 //!   parity-tested against (`tests/model_parity.rs`).
+//! * [`quantized`] — load-time precision tiers: [`quantize_stack`]
+//!   snaps a stack's GEMM weights onto a bf16/int8 lattice *once*, so
+//!   the admission policy serves quantized tiers through the unchanged
+//!   f32 forward (bitwise the per-product quantized kernel, paid at
+//!   load instead of per request).
 //!
 //! `coordinator::cpu_engine` owns embedding and pooling and routes all
 //! compute through [`EncoderStack::forward_batch`]; nothing in the
@@ -49,10 +54,12 @@
 pub mod checkpoint;
 pub mod layer;
 pub mod op;
+pub mod quantized;
 pub mod reference;
 pub mod stack;
 
 pub use checkpoint::{Checkpoint, CheckpointError};
 pub use layer::{EncoderLayer, Projections, LN_EPS};
 pub use op::AttentionOp;
+pub use quantized::quantize_stack;
 pub use stack::{EncoderStack, WeightInit};

@@ -1,0 +1,187 @@
+//! Load-time quantized weight tiers for the admission policy.
+//!
+//! A precision tier is not a new serving path — it is the *same*
+//! [`EncoderStack`] forward over weights snapped onto a tier's lattice.
+//! [`quantize_stack`] rebuilds a stack whose GEMM weights (`w1`, `w2`
+//! and, with projections, `wq`/`wk`/`wv`/`wo`) were round-tripped
+//! through [`QuantMatrix`] **once** at engine load; biases and
+//! layernorm parameters stay f32 (they are O(d) additions, not
+//! products — quantizing them buys nothing and costs accuracy).
+//!
+//! Serving a quantized tier then runs the ordinary f32 kernels over
+//! the expanded weights, which is *bitwise* the same arithmetic as
+//! calling [`gemm_quant_into`](crate::kernels::gemm_quant_into) per
+//! product (pinned by `quant_gemm_is_bitwise_the_f32_gemm_on_the_
+//! expanded_weights` in `kernels::quant`) — but pays the expansion
+//! cost once per load instead of once per request. Determinism is
+//! inherited unchanged: a tier stack is a pure function of
+//! (weights, precision), so hit ≡ recompute and thread-count
+//! invariants hold within every tier.
+
+use super::layer::{EncoderLayer, Projections};
+use super::stack::EncoderStack;
+use crate::kernels::{BatchedVariant, Precision, QuantMatrix};
+
+/// Round-trip one GEMM weight through its tier lattice. `F32` is the
+/// identity (bitwise copy) so a tier stack can always be built
+/// uniformly.
+fn requantize(w: &[f32], rows: usize, cols: usize, p: Precision) -> Vec<f32> {
+    match p {
+        Precision::F32 => w.to_vec(),
+        _ => {
+            let q = QuantMatrix::quantize(w, rows, cols, p);
+            let mut out = vec![0.0f32; w.len()];
+            q.dequantize_into(&mut out);
+            out
+        }
+    }
+}
+
+/// Build the serving stack of one (variant list × precision) tier from
+/// a source stack: same depth and shapes, `variants` swapped in (the
+/// admission policy may route a tier to different operators), GEMM
+/// weights snapped to `precision`. The seed block is weightless, so
+/// only the `layers − 1` full blocks carry quantized payload.
+///
+/// Panics when `variants` does not match the stack depth — tier lists
+/// are built by the engine from its own config, so a mismatch is a
+/// construction bug, not an input error.
+pub fn quantize_stack(stack: &EncoderStack, variants: Vec<BatchedVariant>,
+                      precision: Precision) -> EncoderStack {
+    assert_eq!(variants.len(), stack.layers(),
+               "tier variant list must match the stack depth");
+    let d = stack.d_model();
+    let dff = stack.dff();
+    let heads = stack.n_heads();
+    let dh = d / heads;
+    let blocks = stack
+        .blocks()
+        .iter()
+        .map(|blk| EncoderLayer {
+            d,
+            dff,
+            ln1_gain: blk.ln1_gain.clone(),
+            ln1_bias: blk.ln1_bias.clone(),
+            ln2_gain: blk.ln2_gain.clone(),
+            ln2_bias: blk.ln2_bias.clone(),
+            w1: requantize(&blk.w1, d, dff, precision),
+            b1: blk.b1.clone(),
+            w2: requantize(&blk.w2, dff, d, precision),
+            b2: blk.b2.clone(),
+            proj: blk.projections().map(|p| {
+                // head-major concatenated QKV maps: head h owns rows
+                // h·d..(h+1)·d, so per-row scales stay per-head-row
+                Projections::from_parts(
+                    d, heads,
+                    requantize(&p.wq, heads * d, dh, precision),
+                    requantize(&p.wk, heads * d, dh, precision),
+                    requantize(&p.wv, heads * d, dh, precision),
+                    requantize(&p.wo, d, d, precision))
+            }),
+        })
+        .collect();
+    EncoderStack::from_blocks(variants, d, heads, dff, blocks,
+                              stack.projections(), stack.init())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::SpectralShiftConfig;
+    use crate::attention::Tensor2;
+    use crate::kernels::{BatchedAttention, KernelCtx, Workspace};
+    use crate::model::WeightInit;
+    use crate::rngx::Rng;
+
+    fn source(layers: usize, projections: bool) -> EncoderStack {
+        EncoderStack::new_mixed(vec![BatchedVariant::Full; layers],
+                                16, 2, 2, 7, projections)
+    }
+
+    fn ss_variants(layers: usize) -> Vec<BatchedVariant> {
+        vec![BatchedVariant::SpectralShift(SpectralShiftConfig::new(8));
+             layers]
+    }
+
+    #[test]
+    fn f32_tier_is_a_bitwise_copy_with_swapped_variants() {
+        let s = source(3, true);
+        let t = quantize_stack(&s, ss_variants(3), Precision::F32);
+        assert_eq!(t.layers(), 3);
+        assert_eq!(t.init(), WeightInit::Seeded);
+        assert!(t.landmark_divisor().is_some(),
+                "ss tier must carry the landmark divisor");
+        for (a, b) in s.blocks().iter().zip(t.blocks()) {
+            assert_eq!(a.w1, b.w1);
+            assert_eq!(a.w2, b.w2);
+            let (pa, pb) = (a.projections().unwrap(),
+                            b.projections().unwrap());
+            assert_eq!(pa.wq, pb.wq);
+            assert_eq!(pa.wo, pb.wo);
+        }
+    }
+
+    #[test]
+    fn quantized_tiers_move_weights_onto_the_lattice_only() {
+        let s = source(2, true);
+        for p in [Precision::Bf16, Precision::Int8] {
+            let t = quantize_stack(&s, ss_variants(2), p);
+            let (a, b) = (&s.blocks()[0], &t.blocks()[0]);
+            // weights change (Gaussian draws are off-lattice) …
+            assert_ne!(a.w1, b.w1, "{p:?}");
+            // … but stay close, and LN/bias vectors are untouched
+            let err: f32 = a.w1.iter().zip(&b.w1)
+                .map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+            assert!(err < 0.1, "{p:?}: max weight shift {err}");
+            assert_eq!(a.ln1_gain, b.ln1_gain);
+            assert_eq!(a.b1, b.b1);
+            assert_eq!(a.b2, b.b2);
+            // requantizing the tier is a fixed point: the lattice is
+            // quantize-once stable
+            let tt = quantize_stack(&t, ss_variants(2), p);
+            assert_eq!(b.w1, tt.blocks()[0].w1, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn tier_forward_diverges_boundedly_from_f32() {
+        let s = source(3, true);
+        let full = vec![BatchedVariant::Full; 3];
+        let mut exec = BatchedAttention::new(KernelCtx::global());
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(3);
+        let x = Tensor2::randn(&mut rng, 32, 16, 1.0);
+        let mut x_ref = vec![x.clone()];
+        s.forward_batch(&mut exec, &mut x_ref, &mut ws);
+        for p in [Precision::Bf16, Precision::Int8] {
+            let t = quantize_stack(&s, full.clone(), p);
+            let mut x_q = vec![x.clone()];
+            t.forward_batch(&mut exec, &mut x_q, &mut ws);
+            let mut d2 = 0.0f64;
+            let mut r2 = 0.0f64;
+            for (a, b) in x_q[0].data.iter().zip(&x_ref[0].data) {
+                d2 += ((a - b) as f64).powi(2);
+                r2 += (*b as f64).powi(2);
+            }
+            let rel = (d2 / r2).sqrt();
+            assert!(rel > 0.0 && rel < 0.2,
+                    "{p:?}: end-to-end rel err {rel} out of range");
+        }
+    }
+
+    #[test]
+    fn tier_stacks_share_plan_sizes_with_the_source() {
+        // workspace planning depends only on shapes, so tier stacks
+        // never change the engine's memory plan
+        let s = source(3, true);
+        let t = quantize_stack(&s, ss_variants(3), Precision::Int8);
+        assert_eq!(s.plan_sizes(4, 64), t.plan_sizes(4, 64));
+    }
+
+    #[test]
+    #[should_panic(expected = "tier variant list")]
+    fn depth_mismatch_is_a_construction_bug() {
+        let s = source(2, false);
+        quantize_stack(&s, ss_variants(3), Precision::Bf16);
+    }
+}

@@ -9,7 +9,7 @@
 //! ## Requests
 //!
 //! ```text
-//! ENCODE <id> [DEADLINE_MS=<ms>] <tok1> <tok2> ... \n
+//! ENCODE <id> [KEY=VALUE ...] <tok1> <tok2> ... \n
 //!                                      encode a token sequence
 //! STATS\n                              metrics + backend report
 //! PING\n                               liveness probe → `OK 0 pong q=<depth>`
@@ -17,8 +17,22 @@
 //! ```
 //!
 //! `<id>` is an arbitrary non-negative integer echoed back verbatim —
-//! correlation only, no server-side meaning. The optional
-//! `DEADLINE_MS=<ms>` field (immediately after the id) gives the
+//! correlation only, no server-side meaning. Any `KEY=VALUE` tokens
+//! (key: `[A-Z_]+`) between the id and the first bare token are
+//! request **options**, parsed by the [`options`] grammar shared with
+//! the cluster router. Recognized keys:
+//!
+//! * `DEADLINE_MS=<ms>` — deadline budget, as before.
+//! * `ACCURACY=<high|balanced|budget|float>` — accuracy budget for the
+//!   admission policy ([`coordinator::admission`](crate::coordinator::admission)):
+//!   named tiers or a numeric relative-error bound. The policy maps it
+//!   to a `(variant, precision)` tier; the served tier is echoed in the
+//!   `OK` reply and metered on the `admission:` STATS line.
+//!
+//! Unknown keys, duplicate keys, empty or oversized values are
+//! answered `ERR <id> bad-option` — an option must never silently
+//! degrade to a skipped payload token. The
+//! `DEADLINE_MS=<ms>` option gives the
 //! request a deadline budget. A request whose deadline expires
 //! **before its batch is formed** is answered `ERR <id> deadline`
 //! instead of being served late, and never occupies a batch slot;
@@ -43,9 +57,14 @@
 //! ## Responses
 //!
 //! ```text
-//! OK <id> <f1> ... <f8>\n             first 8 embedding dims, %.5f
+//! OK <id> <f1> ... <f8>[ tier=<t>]\n  first 8 embedding dims, %.5f
 //! ERR <id> <reason>\n                 request failed, see taxonomy
 //! ```
+//!
+//! The ` tier=<t>` suffix appears only on replies the admission policy
+//! routed to a non-default tier (`full-f32`, `ss-f32`, `ss-bf16`,
+//! `ss-int8`); untagged requests under an `auto` policy reply exactly
+//! as before — byte-identical to pre-admission servers.
 //!
 //! ## `ERR` taxonomy
 //!
@@ -53,6 +72,8 @@
 //! |-------------------------|----------------------------------------------|
 //! | `bad-id`                | `ENCODE` id missing or not a `u64`           |
 //! | `bad-deadline`          | `DEADLINE_MS=` value not a `u64`             |
+//! | `bad-option`            | unknown/duplicate option key, empty or       |
+//! |                         | oversized value, bad `ACCURACY` value        |
 //! | `empty`                 | no valid tokens in the request               |
 //! | `too-long-<n>-max-<m>`  | length n exceeds the largest bucket m        |
 //! |                         | (only when chunking is off: `chunk_tokens=0`)|
@@ -89,9 +110,11 @@
 //! model:    L layers, variant=<op[,op…]>, d_model=D, heads=H, ffn_mult=M, projections=<on|off>, weights=<seeded|loaded>
 //! kernel:   <arm> (detected <arm>, gemm KC=.. NC=..)   active micro-kernel arm
 //! workers:  N (S queue shards, cache L/C)   worker pool + cache shape
+//! policy:   policy=<auto|forced-<tier>> tiers=<t1,...>   admission policy
 //! requests: in=N done=N rejected=N expired=N   admission counters
 //! cache:    hits=N misses=N (H% hit rate)
 //! prefix:   hits=N misses=N chunks=N (H% hit rate)   chunked long-doc path
+//! admission: configured=N full-f32=N ss-f32=N ss-bf16=N ss-int8=N
 //! batches:  N (avg fill F req/batch, occupancy P%)
 //! tokens:   N (+P executed padding, W% waste)
 //! queue:    n=.. mean=..us p50=..us p99=..us max=..us
@@ -116,14 +139,22 @@
 //! long-document path: `hits`/`misses` are per-chunk prefix-cache
 //! lookups, `chunks` counts chunk executions — a chunked document is
 //! one logical request in the `requests:` line (admitted once, done
-//! once) while its per-chunk compute shows up here.
+//! once) while its per-chunk compute shows up here. The `policy:` line
+//! is the live admission policy (forced via the `[serving] admission`
+//! knob or `SSAF_ADMISSION`; `policy=unavailable` on the artifact
+//! backend) and the `admission:` line counts where requests actually
+//! landed: `configured` is the untagged/default path, the per-tier
+//! fields count tier-routed requests (a chunked document counts once).
 //!
 //! Deliberately minimal — the protocol exists so the serving stack can
 //! be exercised end-to-end over a real socket (examples/serve_attention,
 //! tests/integration_cpu_serving.rs and the E8 bench drive it).
 
-use crate::coordinator::{Coordinator, SubmitError};
+pub mod options;
+
+use crate::coordinator::{Coordinator, EncodeRequest, SubmitError};
 use crate::minirt::ThreadPool;
+use options::parse_options;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
@@ -344,19 +375,20 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
             let Some(id) = parts.next().and_then(|s| s.parse::<u64>().ok()) else {
                 return "ERR 0 bad-id\n".into();
             };
-            // optional deadline field, directly after the id
-            let mut deadline = None;
-            if let Some(field) = parts.peek().copied()
-                .and_then(|p| p.strip_prefix("DEADLINE_MS=")) {
-                let Ok(ms) = field.parse::<u64>() else {
-                    return format!("ERR {id} bad-deadline\n");
-                };
-                deadline = Some(std::time::Duration::from_millis(ms));
-                parts.next();
-            }
+            // option prefix, directly after the id — the one shared
+            // grammar (options::parse_options), never an ad-hoc peek
+            let opts = match parse_options(&mut parts) {
+                Ok(o) => o,
+                Err(e) => return format!("ERR {id} {}\n", e.err_token()),
+            };
+            let deadline = opts.deadline_ms
+                .map(std::time::Duration::from_millis);
             let tokens: Vec<i32> = parts.filter_map(|t| t.parse().ok()).collect();
+            let req = EncodeRequest::new(tokens)
+                .deadline_opt(deadline)
+                .accuracy_opt(opts.accuracy);
             let submitted = coordinator
-                .submit_with_deadline(tokens, deadline)
+                .submit(req)
                 .and_then(|rx| rx.recv().map_err(|_| SubmitError::ShuttingDown));
             match submitted {
                 Ok(resp) => match resp.embedding {
@@ -366,7 +398,11 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                             .take(8)
                             .map(|x| format!("{x:.5}"))
                             .collect();
-                        format!("OK {id} {}\n", head.join(" "))
+                        match resp.tier {
+                            Some(t) => format!("OK {id} {} tier={}\n",
+                                               head.join(" "), t.token()),
+                            None => format!("OK {id} {}\n", head.join(" ")),
+                        }
                     }
                     Err(e) => format!("ERR {id} {}\n", sanitize(&e)),
                 },
@@ -385,13 +421,14 @@ pub fn dispatch(line: &str, coordinator: &Coordinator) -> String {
                 cap => format!("{}/{}", coordinator.cache_len(), cap),
             };
             format!("backend:  {}\nmodel:    {}\nkernel:   {}\nworkers:  {} \
-                     ({} queue shards, cache {})\n{}\n.\n",
+                     ({} queue shards, cache {})\npolicy:   {}\n{}\n.\n",
                     coordinator.backend().name(),
                     coordinator.model_desc(),
                     coordinator.kernel_desc(),
                     coordinator.workers(),
                     coordinator.queue_shards(),
                     cache,
+                    coordinator.admission_desc(),
                     coordinator.metrics.report())
         }
         // liveness probe for the cluster tier's health checks: cheap,
@@ -440,6 +477,22 @@ impl Client {
         let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
         writeln!(self.writer, "ENCODE {id} DEADLINE_MS={deadline_ms} {}",
                  toks.join(" "))?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+
+    /// Send ENCODE with an arbitrary pre-rendered option prefix (e.g.
+    /// `"ACCURACY=budget DEADLINE_MS=50"`) and wait for the reply line.
+    /// An empty `opts` degrades to [`Client::encode`]'s wire shape.
+    pub fn encode_with(&mut self, id: u64, opts: &str, tokens: &[i32])
+                       -> std::io::Result<String> {
+        let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+        if opts.is_empty() {
+            writeln!(self.writer, "ENCODE {id} {}", toks.join(" "))?;
+        } else {
+            writeln!(self.writer, "ENCODE {id} {opts} {}", toks.join(" "))?;
+        }
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())

@@ -1,0 +1,322 @@
+//! The ENCODE option grammar — ONE parser for every wire entry point.
+//!
+//! `ENCODE <id> [KEY=VALUE ...] <tok> <tok> ...`: any `KEY=VALUE`
+//! tokens (key: one or more of `[A-Z_]`) before the first bare token
+//! are request options; the first token that is not of that shape ends
+//! the option prefix and starts the payload. Both the replica
+//! ([`dispatch`](super::dispatch)) and the cluster router
+//! (`coordinator::cluster::dispatch_router`) parse through this module,
+//! so the grammar cannot drift between tiers — the PR-9 era hardcoded
+//! a single `DEADLINE_MS=` peek in two places.
+//!
+//! Recognized keys:
+//!
+//! * `DEADLINE_MS=<ms>` — end-to-end deadline budget. A non-numeric
+//!   value keeps its historical error token `bad-deadline`.
+//! * `ACCURACY=<high|balanced|budget|float>` — accuracy budget for the
+//!   admission policy (`coordinator::admission`).
+//!
+//! Fail-closed rules (all answered `ERR <id> bad-option`):
+//!
+//! * unknown keys — a typo'd option must not silently become a dropped
+//!   token;
+//! * duplicate keys — two values for one knob have no right answer;
+//! * empty values (`KEY=`);
+//! * oversized lists (> [`MAX_OPTIONS`]) or values
+//!   (> [`MAX_VALUE_LEN`] bytes) — wire hygiene against hostile lines.
+//!
+//! An option-shaped token *after* the first bare token is payload, not
+//! an option; like any non-numeric payload token it is skipped by the
+//! token parse (unchanged from the pre-grammar behavior).
+//!
+//! Options round-trip: [`WireOptions::render_extras`] re-serializes
+//! the non-deadline options from their original spellings, which is
+//! what lets the router forward them verbatim (property-tested below).
+
+use crate::coordinator::admission::Accuracy;
+
+/// Most options one line may carry.
+pub const MAX_OPTIONS: usize = 8;
+/// Longest accepted option value, in bytes.
+pub const MAX_VALUE_LEN: usize = 64;
+
+/// Why an option prefix was rejected. [`OptionError::err_token`] is
+/// the wire error token (see the taxonomy in [`super`]'s docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptionError {
+    /// Unknown key, duplicate key, empty value, oversized list/value,
+    /// or an unparsable `ACCURACY` value.
+    BadOption,
+    /// `DEADLINE_MS` with a non-numeric value — kept on its historical
+    /// error token so pre-grammar clients see unchanged replies.
+    BadDeadline,
+}
+
+impl OptionError {
+    pub fn err_token(self) -> &'static str {
+        match self {
+            OptionError::BadOption => "bad-option",
+            OptionError::BadDeadline => "bad-deadline",
+        }
+    }
+}
+
+/// The parsed option prefix of one ENCODE line.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireOptions {
+    /// `DEADLINE_MS=` value, if present.
+    pub deadline_ms: Option<u64>,
+    /// `ACCURACY=` value, if present (parsed form).
+    pub accuracy: Option<Accuracy>,
+    /// Every accepted `(key, value)` pair in wire order, original
+    /// spellings — the verbatim-forwarding source.
+    raw: Vec<(String, String)>,
+}
+
+impl WireOptions {
+    /// Whether any option beyond `DEADLINE_MS` is present — the
+    /// routing caches key on tokens alone, so such requests must
+    /// bypass them (`coordinator` cache-coherence invariant).
+    pub fn has_extras(&self) -> bool {
+        self.raw.iter().any(|(k, _)| k != "DEADLINE_MS")
+    }
+
+    /// Re-serialize the non-deadline options (wire order, original
+    /// spellings), e.g. `"ACCURACY=budget"`. Empty string when none.
+    /// The deadline is excluded because the router re-derives it from
+    /// the remaining budget.
+    pub fn render_extras(&self) -> String {
+        let parts: Vec<String> = self
+            .raw
+            .iter()
+            .filter(|(k, _)| k != "DEADLINE_MS")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        parts.join(" ")
+    }
+}
+
+/// Whether a token has the option shape `[A-Z_]+=...`.
+fn is_option_token(tok: &str) -> bool {
+    match tok.split_once('=') {
+        Some((key, _)) => {
+            !key.is_empty()
+                && key.bytes().all(|b| b == b'_' || b.is_ascii_uppercase())
+        }
+        None => false,
+    }
+}
+
+/// Consume the option prefix from `parts`, leaving the payload tokens
+/// unconsumed. The single grammar implementation — both wire
+/// dispatchers call exactly this.
+pub fn parse_options<'a, I>(parts: &mut std::iter::Peekable<I>)
+                            -> Result<WireOptions, OptionError>
+where
+    I: Iterator<Item = &'a str>,
+{
+    let mut opts = WireOptions::default();
+    while let Some(&tok) = parts.peek() {
+        if !is_option_token(tok) {
+            break;
+        }
+        parts.next();
+        if opts.raw.len() == MAX_OPTIONS {
+            return Err(OptionError::BadOption);
+        }
+        let (key, value) = tok.split_once('=').expect("option shape");
+        if value.is_empty() || value.len() > MAX_VALUE_LEN {
+            return Err(OptionError::BadOption);
+        }
+        if opts.raw.iter().any(|(k, _)| k == key) {
+            return Err(OptionError::BadOption);
+        }
+        match key {
+            "DEADLINE_MS" => {
+                let ms = value.parse::<u64>()
+                    .map_err(|_| OptionError::BadDeadline)?;
+                opts.deadline_ms = Some(ms);
+            }
+            "ACCURACY" => {
+                opts.accuracy = Some(
+                    Accuracy::parse(value).ok_or(OptionError::BadOption)?);
+            }
+            _ => return Err(OptionError::BadOption),
+        }
+        opts.raw.push((key.to_string(), value.to_string()));
+    }
+    Ok(opts)
+}
+
+/// Parse an option prefix from a whole string (testing / router
+/// convenience): returns the options and the remaining payload slice
+/// of tokens.
+pub fn parse_option_str(s: &str)
+                        -> Result<(WireOptions, Vec<&str>), OptionError> {
+    let mut parts = s.split_whitespace().peekable();
+    let opts = parse_options(&mut parts)?;
+    Ok((opts, parts.collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_mini::{prop_assert, run};
+
+    #[test]
+    fn empty_prefix_parses_to_defaults() {
+        let (o, rest) = parse_option_str("1 2 3").unwrap();
+        assert_eq!(o, WireOptions::default());
+        assert_eq!(rest, vec!["1", "2", "3"]);
+        assert!(!o.has_extras());
+        assert_eq!(o.render_extras(), "");
+    }
+
+    #[test]
+    fn recognized_keys_parse_in_any_order() {
+        let (o, rest) =
+            parse_option_str("DEADLINE_MS=250 ACCURACY=budget 5 6").unwrap();
+        assert_eq!(o.deadline_ms, Some(250));
+        assert_eq!(o.accuracy, Some(Accuracy::Budget));
+        assert_eq!(rest, vec!["5", "6"]);
+        let (o2, _) =
+            parse_option_str("ACCURACY=0.05 DEADLINE_MS=9 7").unwrap();
+        assert_eq!(o2.accuracy, Some(Accuracy::Bound(0.05)));
+        assert_eq!(o2.deadline_ms, Some(9));
+    }
+
+    #[test]
+    fn extras_exclude_the_deadline_and_keep_spelling() {
+        let (o, _) =
+            parse_option_str("DEADLINE_MS=250 ACCURACY=0.050 1").unwrap();
+        assert!(o.has_extras());
+        // original spelling "0.050" survives for verbatim forwarding
+        assert_eq!(o.render_extras(), "ACCURACY=0.050");
+        let (d, _) = parse_option_str("DEADLINE_MS=250 1").unwrap();
+        assert!(!d.has_extras());
+        assert_eq!(d.render_extras(), "");
+    }
+
+    #[test]
+    fn unknown_duplicate_empty_and_oversized_fail_closed() {
+        assert_eq!(parse_option_str("PRIORITY=3 1").unwrap_err(),
+                   OptionError::BadOption);
+        assert_eq!(parse_option_str("ACCURACY=high ACCURACY=budget 1")
+                       .unwrap_err(),
+                   OptionError::BadOption);
+        assert_eq!(parse_option_str("DEADLINE_MS=5 DEADLINE_MS=5 1")
+                       .unwrap_err(),
+                   OptionError::BadOption);
+        assert_eq!(parse_option_str("ACCURACY= 1").unwrap_err(),
+                   OptionError::BadOption);
+        let huge = format!("ACCURACY={} 1", "9".repeat(MAX_VALUE_LEN + 1));
+        assert_eq!(parse_option_str(&huge).unwrap_err(),
+                   OptionError::BadOption);
+        // a long hostile option list dies on its first bad key (the
+        // MAX_OPTIONS bound guards the day more keys are recognized)
+        let many: String = (0..=MAX_OPTIONS)
+            .map(|i| format!("K{}=1 ", "E".repeat(i + 1)))
+            .collect();
+        assert_eq!(parse_option_str(&format!("{many}1")).unwrap_err(),
+                   OptionError::BadOption);
+    }
+
+    #[test]
+    fn bad_deadline_keeps_its_historical_error_token() {
+        assert_eq!(parse_option_str("DEADLINE_MS=abc 1").unwrap_err(),
+                   OptionError::BadDeadline);
+        assert_eq!(parse_option_str("DEADLINE_MS=-1 1").unwrap_err(),
+                   OptionError::BadDeadline);
+        assert_eq!(OptionError::BadDeadline.err_token(), "bad-deadline");
+        assert_eq!(OptionError::BadOption.err_token(), "bad-option");
+    }
+
+    #[test]
+    fn accuracy_values_validate_at_parse_time() {
+        assert!(parse_option_str("ACCURACY=high 1").is_ok());
+        assert!(parse_option_str("ACCURACY=0.03 1").is_ok());
+        assert_eq!(parse_option_str("ACCURACY=speedy 1").unwrap_err(),
+                   OptionError::BadOption);
+        assert_eq!(parse_option_str("ACCURACY=-0.5 1").unwrap_err(),
+                   OptionError::BadOption);
+    }
+
+    #[test]
+    fn option_shaped_tokens_after_payload_are_payload() {
+        // the prefix ends at the first bare token; later option-shaped
+        // tokens are (non-numeric, skipped) payload — unchanged from
+        // the pre-grammar parse
+        let (o, rest) = parse_option_str("5 ACCURACY=budget 6").unwrap();
+        assert_eq!(o, WireOptions::default());
+        assert_eq!(rest, vec!["5", "ACCURACY=budget", "6"]);
+        // lowercase keys never look like options
+        let (o2, rest2) = parse_option_str("accuracy=high 1").unwrap();
+        assert_eq!(o2, WireOptions::default());
+        assert_eq!(rest2, vec!["accuracy=high", "1"]);
+    }
+
+    #[test]
+    fn property_options_round_trip_through_render() {
+        // any accepted prefix re-serializes (deadline re-attached) to a
+        // line that parses back to the same options
+        run(100, |g| {
+            let mut line = String::new();
+            let deadline = g.usize_in(0, 2) > 0;
+            if deadline {
+                line.push_str(&format!("DEADLINE_MS={} ",
+                                       g.usize_in(0, 10_000)));
+            }
+            let acc = match g.usize_in(0, 4) {
+                0 => None,
+                1 => Some("high".to_string()),
+                2 => Some("balanced".to_string()),
+                3 => Some("budget".to_string()),
+                _ => Some(format!("0.{:03}", g.usize_in(1, 999))),
+            };
+            if let Some(a) = &acc {
+                line.push_str(&format!("ACCURACY={a} "));
+            }
+            line.push_str("1 2 3");
+            let (o, rest) = parse_option_str(&line)
+                .map_err(|e| format!("{line:?} rejected: {e:?}"))?;
+            prop_assert(rest == vec!["1", "2", "3"], "payload survived")?;
+            // rebuild from the parsed form and re-parse: fixed point
+            let mut rebuilt = String::new();
+            if let Some(ms) = o.deadline_ms {
+                rebuilt.push_str(&format!("DEADLINE_MS={ms} "));
+            }
+            let extras = o.render_extras();
+            if !extras.is_empty() {
+                rebuilt.push_str(&extras);
+                rebuilt.push(' ');
+            }
+            rebuilt.push_str("1 2 3");
+            let (o2, _) = parse_option_str(&rebuilt)
+                .map_err(|e| format!("{rebuilt:?} rejected: {e:?}"))?;
+            prop_assert(o2 == o, format!("{line:?} → {rebuilt:?} drifted"))
+        });
+    }
+
+    #[test]
+    fn property_duplicates_and_unknowns_always_reject() {
+        run(100, |g| {
+            let key = match g.usize_in(0, 2) {
+                0 => "DEADLINE_MS".to_string(),
+                1 => "ACCURACY".to_string(),
+                // unknown key of random length
+                _ => "X".repeat(g.usize_in(1, 12)),
+            };
+            let known = key == "DEADLINE_MS" || key == "ACCURACY";
+            let value = if key == "ACCURACY" { "high" } else { "5" };
+            let dup = format!("{key}={value} {key}={value} 1");
+            let r = parse_option_str(&dup);
+            prop_assert(r.is_err(), format!("{dup:?} accepted"))?;
+            if !known {
+                let single = format!("{key}={value} 1");
+                prop_assert(parse_option_str(&single).is_err(),
+                            format!("{single:?} accepted"))?;
+            }
+            Ok(())
+        });
+    }
+}

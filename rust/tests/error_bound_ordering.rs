@@ -13,6 +13,7 @@
 use ssaformer::config::Variant;
 use ssaformer::coordinator::CpuModel;
 use ssaformer::eval::{error_bound_sweep, ErrorBoundConfig, EVAL_VARIANTS};
+use ssaformer::kernels::Precision;
 use ssaformer::train::{train_cpu, CpuTrainConfig};
 
 /// Relative slack on `ss ≤ nystrom`: ss may exceed nystrom by at most 5%.
@@ -50,13 +51,28 @@ fn spectral_shift_beats_nystrom_on_trained_weights() {
     let model = CpuModel::new(outcome.model_config, Variant::Full);
     let report = error_bound_sweep(&model, &outcome.stack, &eval_cfg);
 
-    // every cell of the sweep must be present and finite
-    assert_eq!(report.rows.len(), EVAL_VARIANTS.len() * 3,
-               "one row per variant per landmark count");
+    // every cell of the sweep must be present and finite — including
+    // the serving precision tiers (f32, bf16, int8)
+    assert_eq!(report.rows.len(),
+               EVAL_VARIANTS.len() * 3 * Precision::ALL.len(),
+               "one row per variant per landmark count per precision");
     for row in &report.rows {
         assert!(row.mean_rel_err.is_finite() && row.max_rel_err.is_finite()
                 && row.fro_ratio.is_finite(),
-                "non-finite error for {} at c={}", row.variant, row.landmarks);
+                "non-finite error for {} at c={} {}",
+                row.variant, row.landmarks, row.precision);
+    }
+
+    // the quantized ss tiers are real measurements on trained weights:
+    // present, nonzero, and distinct from the f32 row — the numbers the
+    // admission tier table is calibrated against
+    for p in [Precision::Bf16, Precision::Int8] {
+        let q = report.mean_rel_err_at("ss", 16, p)
+            .expect("quantized ss tier row present");
+        let f = report.mean_rel_err_at("ss", 16, Precision::F32).unwrap();
+        assert!(q.is_finite() && q > 0.0, "{}: {q}", p.token());
+        assert_ne!(q, f, "{} row must be a measurement, not the f32 copy",
+                   p.token());
     }
 
     for &c in &eval_cfg.landmarks {

@@ -1,0 +1,198 @@
+//! End-to-end accuracy-aware admission over TCP: the `ACCURACY=` wire
+//! option must demonstrably route a request onto a different
+//! `(variant, precision)` tier than an untagged request — visible in
+//! the `OK` reply's ` tier=` metadata and on the STATS `admission:`
+//! line — while `ACCURACY=high` on a full-variant server stays
+//! byte-identical to the no-option wire reply. Also pins the
+//! `bad-option` error taxonomy of the shared option grammar
+//! ([`ssaformer::server::options`]).
+
+use ssaformer::config::{ServingConfig, Variant};
+use ssaformer::coordinator::{
+    Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend, TierKind,
+};
+use ssaformer::server::{serve, Client};
+use std::sync::Arc;
+
+fn cpu_coordinator(variant: Variant,
+                   admission: Option<TierKind>) -> Arc<Coordinator> {
+    let cfg = ServingConfig {
+        variant,
+        max_batch: 4,
+        max_wait_ms: 5,
+        queue_capacity: 64,
+        admission,
+        ..Default::default()
+    };
+    let engine = Box::new(CpuEngine::new(CpuModel::new(
+        CpuModelConfig::default(), variant)));
+    Arc::new(Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap())
+}
+
+fn toks(n: usize, seed: i32) -> Vec<i32> {
+    (0..n).map(|i| 3 + ((i as i32 * 31 + seed) % 2000)).collect()
+}
+
+/// Split an `OK <id> <f1..f8>[ tier=<t>]` reply into the 8 float
+/// fields and the optional tier token.
+fn split_ok(reply: &str, id: u64) -> (Vec<String>, Option<String>) {
+    let parts: Vec<&str> = reply.split_whitespace().collect();
+    assert_eq!(parts[0], "OK", "{reply}");
+    assert_eq!(parts[1], id.to_string(), "{reply}");
+    let tier = parts.last().and_then(|p| p.strip_prefix("tier="));
+    match tier {
+        Some(t) => {
+            assert_eq!(parts.len(), 2 + 8 + 1, "{reply}");
+            (parts[2..10].iter().map(|s| s.to_string()).collect(),
+             Some(t.to_string()))
+        }
+        None => {
+            assert_eq!(parts.len(), 2 + 8, "{reply}");
+            (parts[2..].iter().map(|s| s.to_string()).collect(), None)
+        }
+    }
+}
+
+#[test]
+fn accuracy_tags_route_tiers_and_meter_the_stats_line() {
+    let c = cpu_coordinator(Variant::SpectralShift, None);
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // untagged: the configured path, no tier metadata on the wire
+    let (_, tier) = split_ok(&client.encode(1, &toks(100, 1)).unwrap(), 1);
+    assert_eq!(tier, None, "untagged requests must not grow a suffix");
+
+    // a budget tag must land on the quantized tier and say so
+    let reply = client.encode_with(2, "ACCURACY=budget", &toks(100, 1))
+        .unwrap();
+    let (_, tier) = split_ok(&reply, 2);
+    assert_eq!(tier.as_deref(), Some("ss-int8"), "{reply}");
+
+    // a high tag forces exact attention at f32 even on an ss server
+    let reply = client.encode_with(3, "ACCURACY=high", &toks(100, 1))
+        .unwrap();
+    let (_, tier) = split_ok(&reply, 3);
+    assert_eq!(tier.as_deref(), Some("full-f32"), "{reply}");
+
+    // options compose: a deadline rides along with the accuracy tag
+    let reply = client
+        .encode_with(4, "DEADLINE_MS=60000 ACCURACY=budget", &toks(100, 1))
+        .unwrap();
+    let (_, tier) = split_ok(&reply, 4);
+    assert_eq!(tier.as_deref(), Some("ss-int8"), "{reply}");
+
+    // STATS: the policy header names every available tier and the
+    // admission line shows where the four requests actually landed
+    let stats = client.stats().unwrap();
+    let policy = stats.lines().find(|l| l.starts_with("policy:"))
+        .unwrap_or_else(|| panic!("no policy line in {stats}"));
+    assert!(policy.contains("policy=auto"), "{policy}");
+    for t in TierKind::ALL {
+        assert!(policy.contains(t.token()), "{policy} missing {}", t.token());
+    }
+    let admission = stats.lines().find(|l| l.starts_with("admission:"))
+        .unwrap_or_else(|| panic!("no admission line in {stats}"));
+    assert!(admission.contains("configured=1"), "{admission}");
+    assert!(admission.contains("ss-int8=2"), "{admission}");
+    assert!(admission.contains("full-f32=1"), "{admission}");
+    assert!(admission.contains("ss-bf16=0"), "{admission}");
+    handle.stop();
+}
+
+#[test]
+fn accuracy_high_is_bitwise_the_untagged_reply_on_a_full_server() {
+    // on a full-variant server the high tier IS the configured model
+    // (a bitwise weight copy), so the 8 wire floats must match the
+    // untagged reply byte for byte — only the tier suffix differs
+    let c = cpu_coordinator(Variant::Full, None);
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let t = toks(90, 7);
+    let (plain, tier) = split_ok(&client.encode(1, &t).unwrap(), 1);
+    assert_eq!(tier, None);
+    let (tagged, tier) =
+        split_ok(&client.encode_with(2, "ACCURACY=high", &t).unwrap(), 2);
+    assert_eq!(tier.as_deref(), Some("full-f32"));
+    assert_eq!(plain, tagged,
+               "the full-f32 tier must be byte-identical to the \
+                configured full path");
+    handle.stop();
+}
+
+#[test]
+fn forced_admission_knob_routes_untagged_requests() {
+    // [serving] admission = "ss-bf16": every request lands on the
+    // forced tier without any wire tag, and the policy line says so
+    let c = cpu_coordinator(Variant::SpectralShift, Some(TierKind::SsBf16));
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let (_, tier) = split_ok(&client.encode(1, &toks(64, 2)).unwrap(), 1);
+    assert_eq!(tier.as_deref(), Some("ss-bf16"));
+    let stats = client.stats().unwrap();
+    let policy = stats.lines().find(|l| l.starts_with("policy:"))
+        .unwrap_or_else(|| panic!("no policy line in {stats}"));
+    assert!(policy.contains("policy=forced-ss-bf16"), "{policy}");
+    let admission = stats.lines().find(|l| l.starts_with("admission:"))
+        .unwrap_or_else(|| panic!("no admission line in {stats}"));
+    assert!(admission.contains("ss-bf16=1"), "{admission}");
+    assert!(admission.contains("configured=0"), "{admission}");
+    handle.stop();
+}
+
+#[test]
+fn env_override_forces_every_untagged_request() {
+    // meaningful only under the CI admission lane, which runs this test
+    // once per tier with SSAF_ADMISSION set; a plain `cargo test` run
+    // (env unset, or explicitly `auto`) exits without asserting
+    let Ok(raw) = std::env::var("SSAF_ADMISSION") else { return };
+    if raw.trim().eq_ignore_ascii_case("auto") {
+        return;
+    }
+    let want = TierKind::parse(&raw).expect("lane sets a valid tier");
+    let c = cpu_coordinator(Variant::SpectralShift, None);
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let (_, tier) = split_ok(&client.encode(1, &toks(64, 3)).unwrap(), 1);
+    assert_eq!(tier.as_deref(), Some(want.token()),
+               "SSAF_ADMISSION={raw} must route untagged traffic");
+    let stats = client.stats().unwrap();
+    assert!(stats.contains(&format!("policy=forced-{}", want.token())),
+            "{stats}");
+    handle.stop();
+}
+
+#[test]
+fn bad_options_fail_closed_over_the_wire() {
+    let c = cpu_coordinator(Variant::SpectralShift, None);
+    let (addr, handle) = serve(c.clone(), "127.0.0.1:0", 2).unwrap();
+    let mut client = Client::connect(&addr).unwrap();
+    let t = toks(16, 1);
+
+    // unknown key: a typo must not silently become a skipped token
+    assert_eq!(client.encode_with(7, "PRIORITY=3", &t).unwrap(),
+               "ERR 7 bad-option");
+    // duplicate keys have no right answer
+    assert_eq!(client.encode_with(8, "ACCURACY=high ACCURACY=budget", &t)
+                   .unwrap(),
+               "ERR 8 bad-option");
+    // unparsable accuracy value
+    assert_eq!(client.encode_with(9, "ACCURACY=speedy", &t).unwrap(),
+               "ERR 9 bad-option");
+    // empty value
+    assert_eq!(client.encode_with(10, "ACCURACY=", &t).unwrap(),
+               "ERR 10 bad-option");
+    // the deadline keeps its historical error token
+    assert_eq!(client.encode_with(11, "DEADLINE_MS=abc", &t).unwrap(),
+               "ERR 11 bad-deadline");
+    // a rejected option never consumed a queue slot or a counter
+    assert_eq!(c.metrics.requests_in.get(), 0, "rejected lines must not \
+                count as admitted requests");
+    // and a good line still works on the same connection
+    let (_, tier) =
+        split_ok(&client.encode_with(12, "ACCURACY=0.05", &t).unwrap(), 12);
+    assert!(tier.is_some(), "numeric bound routes to a tier");
+    handle.stop();
+}

@@ -11,7 +11,8 @@ use ssaformer::attention::spectral_shift::{reference, SpectralShiftConfig};
 use ssaformer::attention::{softmax_attention, Tensor2};
 use ssaformer::config::{ServingConfig, Variant};
 use ssaformer::coordinator::{
-    Coordinator, CpuEngine, CpuModel, CpuModelConfig, ExecBackend,
+    Coordinator, CpuEngine, CpuModel, CpuModelConfig, EncodeRequest,
+    ExecBackend,
 };
 use ssaformer::runtime::BackendKind;
 use ssaformer::server::{serve, Client};
@@ -353,8 +354,8 @@ fn deadline_pressure_closes_partial_batch_early() {
         CpuModelConfig::default(), cfg.variant)));
     let c = Coordinator::start(ExecBackend::Cpu(engine), &cfg).unwrap();
     let t0 = std::time::Instant::now();
-    let rx = c.submit_with_deadline(
-        toks(100, 5), Some(std::time::Duration::from_millis(2000))).unwrap();
+    let rx = c.submit(EncodeRequest::new(toks(100, 5))
+        .deadline(std::time::Duration::from_millis(2000))).unwrap();
     let resp = rx.recv().unwrap();
     let waited = t0.elapsed();
     assert!(resp.embedding.is_ok(), "{:?}", resp.embedding);

@@ -2,7 +2,8 @@
 //! artifacts. Skips when artifacts/ is missing.
 
 use ssaformer::config::{ServingConfig, Variant};
-use ssaformer::coordinator::{Coordinator, ExecBackend, SubmitError};
+use ssaformer::coordinator::{Coordinator, EncodeRequest, ExecBackend,
+                             SubmitError};
 use ssaformer::runtime::Engine;
 use ssaformer::server::{serve, Client};
 use std::sync::Arc;
@@ -124,8 +125,8 @@ fn xla_backend_caches_and_honors_deadlines() {
     assert!(c.metrics.cache_hits.get() >= 1);
     // an already-expired deadline is rejected without a batch slot
     let slots = c.metrics.batch_slots.get();
-    let err = c.submit_with_deadline(toks(91, 9),
-                                     Some(std::time::Duration::ZERO));
+    let err = c.submit(EncodeRequest::new(toks(91, 9))
+        .deadline(std::time::Duration::ZERO));
     assert!(matches!(err, Err(SubmitError::DeadlineExpired)));
     assert_eq!(c.metrics.batch_slots.get(), slots);
     assert_eq!(c.metrics.requests_expired.get(), 1);
